@@ -1,0 +1,156 @@
+//! End-to-end driver (DESIGN.md §4, EXPERIMENTS.md §E2E): the full
+//! three-party workflow of paper Fig. 2(b) on a real (synthetic-vision)
+//! workload, with loss curves logged at every stage.
+//!
+//!   client:   pre-train ResNet-Mini on the confidential dataset
+//!   designer: privacy-preserving ADMM pattern-pruning at 8x using ONLY
+//!             uniform-random pixels (never sees the dataset)
+//!   client:   masked retraining, recovers accuracy
+//!   deploy:   compile for mobile; sparse vs dense execution
+//!
+//! Run: `cargo run --release --example privacy_pipeline [--preset quick]`
+//! Writes runs/privacy_pipeline.log with the loss curves.
+
+use std::fmt::Write as _;
+
+use anyhow::Result;
+use repro::admm::{prune_layerwise, DataSource};
+use repro::config::{AdmmConfig, Preset, TrainConfig};
+use repro::coordinator::Ctx;
+use repro::mobile::engine::{self, EngineKind, Fmap};
+use repro::mobile::ir::ModelIR;
+use repro::pruning::Scheme;
+use repro::rng::Pcg32;
+use repro::train;
+
+const MODEL: &str = "res_sv10";
+
+fn main() -> Result<()> {
+    let preset = std::env::args()
+        .skip_while(|a| a != "--preset")
+        .nth(1)
+        .map(|p| Preset::parse(&p))
+        .transpose()?
+        .unwrap_or(Preset::Quick);
+    let ctx = Ctx::new("artifacts", preset)?;
+    let mut log = String::new();
+
+    // -- stage 1: client pre-training --------------------------------------
+    let (tr, te) = ctx.data(MODEL)?;
+    let spec = ctx.rt.model(MODEL)?.clone();
+    let mut params = train::params::init_params(&spec, 0xBA5E);
+    let cfg = TrainConfig::pretrain(preset);
+    println!("[1/4] client pre-trains {MODEL} ({} steps) ...", cfg.steps);
+    let t0 = std::time::Instant::now();
+    let trace = train::pretrain(&ctx.rt, MODEL, &mut params, &tr, &te, &cfg)?;
+    let base = trace.final_acc();
+    let _ = writeln!(log, "# pretrain loss curve (step, loss)");
+    for (i, l) in trace.losses.iter().enumerate() {
+        let _ = writeln!(log, "{i} {l}");
+    }
+    let _ = writeln!(log, "# pretrain acc curve (step, acc)");
+    for (s, a) in &trace.accs {
+        let _ = writeln!(log, "{s} {a}");
+        println!("      step {s:4}  test acc {a:.3}");
+    }
+    println!("      base accuracy {base:.3} ({:.0}s)", t0.elapsed().as_secs_f64());
+
+    // -- stage 2: designer prunes on synthetic data ------------------------
+    let admm_cfg = AdmmConfig::preset(preset);
+    println!(
+        "[2/4] system designer runs privacy-preserving ADMM (pattern 8x), \
+         {} iterations on uniform-random pixels ...",
+        admm_cfg.rhos.len() * admm_cfg.iters_per_rho
+    );
+    let t1 = std::time::Instant::now();
+    let out = prune_layerwise(
+        &ctx.rt,
+        MODEL,
+        &params,
+        Scheme::Pattern,
+        1.0 / 8.0,
+        &admm_cfg,
+        DataSource::Synthetic,
+    )?;
+    let _ = writeln!(log, "# admm primal loss per iteration");
+    for (i, l) in out.trace.primal_loss.iter().enumerate() {
+        let _ = writeln!(log, "{i} {l}");
+    }
+    let _ = writeln!(log, "# admm residual per iteration");
+    for (i, r) in out.trace.residual.iter().enumerate() {
+        let _ = writeln!(log, "{i} {r}");
+    }
+    println!(
+        "      compression {:.1}x, residual {:.2e} -> {:.2e} ({:.0}s)",
+        out.comp_rate,
+        out.trace.residual.first().copied().unwrap_or(0.0),
+        out.trace.residual.last().copied().unwrap_or(0.0),
+        t1.elapsed().as_secs_f64()
+    );
+
+    // accuracy before retraining (pruned, no recovery yet)
+    let acc_no_retrain =
+        train::evaluate(&ctx.rt, MODEL, &out.params, &te)?;
+    println!("      pruned accuracy before retraining: {acc_no_retrain:.3}");
+
+    // -- stage 3: client retrains with the mask ----------------------------
+    let rcfg = TrainConfig::retrain(preset);
+    println!("[3/4] client retrains with mask function ({} steps) ...", rcfg.steps);
+    let mut pruned = out.params.clone();
+    let t2 = std::time::Instant::now();
+    let rtr = train::retrain_masked(
+        &ctx.rt, MODEL, &mut pruned, &out.masks, &tr, &te, &rcfg,
+    )?;
+    let _ = writeln!(log, "# retrain loss curve (step, loss)");
+    for (i, l) in rtr.losses.iter().enumerate() {
+        let _ = writeln!(log, "{i} {l}");
+    }
+    println!(
+        "      retrained accuracy {:.3} (base {base:.3}, loss {:+.3}) ({:.0}s)",
+        rtr.final_acc(),
+        base - rtr.final_acc(),
+        t2.elapsed().as_secs_f64()
+    );
+
+    // -- stage 4: mobile deployment ----------------------------------------
+    println!("[4/4] compiling for mobile ...");
+    let compiled = engine::compile(ModelIR::build(&spec, &pruned)?);
+    let rep = &compiled.report;
+    println!(
+        "      MACs {:.2}x down, weights {:.2}x down, LRE {:.2}x, reorder {:.2}x",
+        rep.total_dense_macs() as f64 / rep.total_sparse_macs().max(1) as f64,
+        rep.total_dense_bytes() as f64
+            / rep.total_compressed_bytes().max(1) as f64,
+        rep.lre_gain(),
+        rep.reorder_gain()
+    );
+    let mut rng = Pcg32::seeded(3);
+    let img = Fmap {
+        c: 3,
+        hw: spec.in_hw,
+        data: (0..3 * spec.in_hw * spec.in_hw).map(|_| rng.uniform()).collect(),
+    };
+    for kind in [EngineKind::Dense, EngineKind::Sparse] {
+        for _ in 0..3 {
+            engine::infer(&compiled, &img, kind);
+        }
+        let t = std::time::Instant::now();
+        for _ in 0..30 {
+            std::hint::black_box(engine::infer(&compiled, &img, kind));
+        }
+        println!(
+            "      host {kind:?}: {:.3} ms/frame",
+            t.elapsed().as_secs_f64() * 1e3 / 30.0
+        );
+    }
+
+    std::fs::create_dir_all("runs")?;
+    std::fs::write("runs/privacy_pipeline.log", log)?;
+    println!("\nloss curves -> runs/privacy_pipeline.log");
+    let stats = ctx.rt.stats();
+    println!(
+        "PJRT: {} executions, {:.1}s exec, {:.1}s compile, {:.1}s marshal",
+        stats.executions, stats.exec_secs, stats.compile_secs, stats.marshal_secs
+    );
+    Ok(())
+}

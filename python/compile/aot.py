@@ -1,0 +1,219 @@
+"""AOT lowering: every L2 graph -> HLO *text* artifact + manifest.json.
+
+HLO text (NOT ``lowered.compiler_ir().serialize()``): the Rust side links
+xla_extension 0.5.1 whose proto importer rejects the 64-bit instruction ids
+emitted by jax >= 0.5; the HLO text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (what `make
+artifacts` does). Python is build-time only: after this completes, the Rust
+binary is self-contained.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import arch, model
+
+F32 = "float32"
+
+
+# model-id -> (arch, classes, in_hw). SynthVision-10/20 stand in for
+# CIFAR-10/100 and ImageNet (DESIGN.md §2); res32 is the 32x32 "ImageNet"
+# variant used by exp table3.
+CONFIGS = {
+    "lenet_sv10": ("lenet_micro", 10, 16),
+    "vgg_sv10": ("vgg_mini", 10, 16),
+    "res_sv10": ("resnet_mini", 10, 16),
+    "vgg_sv20": ("vgg_mini", 20, 16),
+    "res_sv20": ("resnet_mini", 20, 16),
+    "resdeep_sv20": ("resnet_deep", 20, 16),
+    "res32_sv20": ("resnet_mini", 20, 32),
+}
+
+BATCHES = {"train": 64, "admm": 32, "eval": 100}
+
+
+def sds(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jax.numpy.float32)
+
+
+def to_hlo_text(fn, in_specs):
+    lowered = jax.jit(fn).lower(*in_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def graph_catalog(spec):
+    """Name -> (fn, [(input-name, shape)]). Output shapes are derived with
+    jax.eval_shape at lowering time."""
+    np_ = model.n_params(spec)
+    pconvs = model.prunable_convs(spec)
+    hw, cls = spec["in_hw"], spec["classes"]
+    p_ins = [(p["name"], p["shape"]) for p in spec["params"]]
+
+    def x_in(b):
+        return ("x", [b, 3, hw, hw])
+
+    def y_in(b):
+        return ("y1h", [b, cls])
+
+    cat = {}
+    cat["fwd_eval"] = (
+        model.make_fwd_eval(spec),
+        p_ins + [x_in(BATCHES["eval"])],
+    )
+    cat["fwd_acts"] = (
+        model.make_fwd_acts(spec),
+        p_ins + [x_in(BATCHES["admm"])],
+    )
+    cat["train_step"] = (
+        model.make_train_step(spec),
+        p_ins + [x_in(BATCHES["train"]), y_in(BATCHES["train"]), ("lr", [])],
+    )
+    mask_ins = [
+        (f"mask{j}", list(model.gemm_shape(op)))
+        for j, (_, op) in enumerate(pconvs)
+    ]
+    cat["masked_train_step"] = (
+        model.make_masked_train_step(spec),
+        p_ins
+        + mask_ins
+        + [x_in(BATCHES["train"]), y_in(BATCHES["train"]), ("lr", [])],
+    )
+    b = BATCHES["admm"]
+    for j, (oi, op) in enumerate(pconvs):
+        a, q = model.gemm_shape(op)
+        ins = [
+            ("w", [op["A"], op["C"], op["kh"], op["kw"]]),
+            ("b", [op["A"]]),
+            ("act_in", [b, op["C"], op["in_hw"], op["in_hw"]]),
+            ("target", [b, op["A"], op["out_hw"], op["out_hw"]]),
+            ("z", [a, q]),
+            ("u", [a, q]),
+            ("rho", []),
+            ("lr", []),
+        ]
+        cat[f"layer_primal_{j}"] = (model.make_layer_primal_step(spec, oi), ins)
+    z_ins = [
+        (f"z{j}", list(model.gemm_shape(op)))
+        for j, (_, op) in enumerate(pconvs)
+    ]
+    u_ins = [
+        (f"u{j}", list(model.gemm_shape(op)))
+        for j, (_, op) in enumerate(pconvs)
+    ]
+    cat["whole_primal_step"] = (
+        model.make_whole_primal_step(spec),
+        p_ins
+        + [x_in(b), ("tlogits", [b, cls])]
+        + z_ins
+        + u_ins
+        + [("rho", []), ("lr", [])],
+    )
+    bt = BATCHES["train"]
+    cat["admm_train_primal_step"] = (
+        model.make_admm_train_primal_step(spec),
+        p_ins
+        + [x_in(bt), y_in(bt)]
+        + z_ins
+        + u_ins
+        + [("rho", []), ("lr", [])],
+    )
+    return cat
+
+
+def build_model(model_id, out_dir, only_graph=None, force=False):
+    arch_name, classes, in_hw = CONFIGS[model_id]
+    spec = arch.build(arch_name, classes, in_hw)
+    cat = graph_catalog(spec)
+    artifacts = {}
+    for name, (fn, ins) in sorted(cat.items()):
+        if only_graph and name != only_graph:
+            continue
+        in_specs = [sds(s) for _, s in ins]
+        out_info = jax.eval_shape(fn, *in_specs)
+        outs = [list(o.shape) for o in jax.tree_util.tree_leaves(out_info)]
+        fname = f"{model_id}_{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        from . import kernels
+
+        key = hashlib.sha256(
+            json.dumps(
+                [ins, outs, name, model_id, kernels.BLOCK_M,
+                 kernels.BLOCK_N, kernels.BLOCK_K, kernels.use_pallas()]
+            ).encode()
+        ).hexdigest()[:16]
+        keypath = path + ".key"
+        if (
+            not force
+            and os.path.exists(path)
+            and os.path.exists(keypath)
+            and open(keypath).read() == key
+        ):
+            pass  # up to date
+        else:
+            text = to_hlo_text(fn, in_specs)
+            with open(path, "w") as f:
+                f.write(text)
+            with open(keypath, "w") as f:
+                f.write(key)
+            print(f"  lowered {fname} ({len(text)} chars)", flush=True)
+        artifacts[name] = {
+            "file": fname,
+            "inputs": [{"name": n, "shape": s} for n, s in ins],
+            "outputs": outs,
+        }
+    return {
+        "arch": arch_name,
+        "classes": classes,
+        "in_hw": in_hw,
+        "ops": spec["ops"],
+        "params": spec["params"],
+        "prunable": spec["prunable"],
+        "batches": BATCHES,
+        "artifacts": artifacts,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default=",".join(CONFIGS))
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    manifest = {"models": {}, "batches": BATCHES}
+    if os.path.exists(manifest_path):
+        try:
+            manifest = json.load(open(manifest_path))
+        except Exception:
+            pass
+    for model_id in args.models.split(","):
+        model_id = model_id.strip()
+        if not model_id:
+            continue
+        print(f"[aot] {model_id}", flush=True)
+        manifest["models"][model_id] = build_model(
+            model_id, args.out_dir, force=args.force
+        )
+    manifest["batches"] = BATCHES
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    n_art = sum(len(m["artifacts"]) for m in manifest["models"].values())
+    print(f"[aot] manifest: {len(manifest['models'])} models, "
+          f"{n_art} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,178 @@
+"""Model zoo: architecture builders producing a JSON-serializable op list.
+
+The op list is the single source of truth for model semantics. It is
+interpreted twice:
+  * here in Python (model.py) to build the L2 JAX graphs that get lowered
+    to HLO artifacts, and
+  * in Rust (``rust/src/mobile/``) by the mobile execution engine, which
+    runs the same ops directly on host buffers.
+The op list is embedded verbatim in ``artifacts/manifest.json``.
+
+Op vocabulary (all shapes NCHW):
+  {"op":"conv", "w":i, "b":i, "stride":s, "act":"relu"|"none",
+   "prunable":bool, "A":out_ch, "C":in_ch, "kh":k, "kw":k,
+   "in_hw":h, "out_hw":h'}                      3x3 (or 1x1) convolution
+  {"op":"pool"}                                 2x2 max pool, stride 2
+  {"op":"save", "tag":t}                        stash current tensor
+  {"op":"proj", "tag":t, "w":i, "b":i, ...}     1x1 conv applied to stash
+  {"op":"add", "tag":t}                         residual add from stash
+  {"op":"relu"}                                 standalone activation
+  {"op":"gap"}                                  global average pool -> (B,C)
+  {"op":"fc", "w":i, "b":i, "A":cls, "C":ch}    classifier GEMM
+
+The models are scaled-down analogues of the paper's VGG-16 / ResNet-18 /
+ResNet-50 (DESIGN.md §2): same layer types and pruning-relevant structure,
+sized for a CPU-only reproduction.
+"""
+
+
+class ArchBuilder:
+    def __init__(self, in_ch, in_hw):
+        self.ops = []
+        self.params = []
+        self.ch = in_ch
+        self.hw = in_hw
+        self._tag = 0
+
+    def _add_param(self, name, shape):
+        self.params.append({"name": name, "shape": list(shape)})
+        return len(self.params) - 1
+
+    def conv(self, out_ch, stride=1, act="relu", k=3, prunable=None):
+        n = sum(1 for o in self.ops if o["op"] in ("conv", "proj"))
+        wi = self._add_param(f"conv{n}_w", (out_ch, self.ch, k, k))
+        bi = self._add_param(f"conv{n}_b", (out_ch,))
+        out_hw = self.hw // stride
+        self.ops.append(
+            {
+                "op": "conv",
+                "w": wi,
+                "b": bi,
+                "stride": stride,
+                "act": act,
+                # pattern pruning needs 3x3 kernels (paper §IV-D.4)
+                "prunable": (k == 3) if prunable is None else prunable,
+                "A": out_ch,
+                "C": self.ch,
+                "kh": k,
+                "kw": k,
+                "in_hw": self.hw,
+                "out_hw": out_hw,
+            }
+        )
+        self.ch, self.hw = out_ch, out_hw
+        return self
+
+    def pool(self):
+        self.ops.append({"op": "pool"})
+        self.hw //= 2
+        return self
+
+    def res_block(self, out_ch, stride=1):
+        """Two 3x3 convs + identity/projection skip (ResNet basic block)."""
+        tag = f"r{self._tag}"
+        self._tag += 1
+        in_ch, in_hw = self.ch, self.hw
+        self.ops.append({"op": "save", "tag": tag})
+        self.conv(out_ch, stride=stride, act="relu")
+        self.conv(out_ch, stride=1, act="none")
+        if stride != 1 or in_ch != out_ch:
+            n = sum(1 for o in self.ops if o["op"] in ("conv", "proj"))
+            wi = self._add_param(f"conv{n}_w", (out_ch, in_ch, 1, 1))
+            bi = self._add_param(f"conv{n}_b", (out_ch,))
+            self.ops.append(
+                {
+                    "op": "proj",
+                    "tag": tag,
+                    "w": wi,
+                    "b": bi,
+                    "stride": stride,
+                    "act": "none",
+                    "prunable": False,
+                    "A": out_ch,
+                    "C": in_ch,
+                    "kh": 1,
+                    "kw": 1,
+                    "in_hw": in_hw,
+                    "out_hw": in_hw // stride,
+                }
+            )
+        self.ops.append({"op": "add", "tag": tag})
+        self.ops.append({"op": "relu"})
+        return self
+
+    def head(self, classes):
+        wi = self._add_param("fc_w", (classes, self.ch))
+        bi = self._add_param("fc_b", (self.ch,))  # placeholder, fixed below
+        self.params[bi]["shape"] = [classes]
+        self.ops.append({"op": "gap"})
+        self.ops.append(
+            {"op": "fc", "w": wi, "b": bi, "A": classes, "C": self.ch}
+        )
+        return self
+
+
+def vgg_mini(classes, in_hw=16):
+    """VGG-16 analogue: 8 stacked 3x3 convs with interleaved max pools."""
+    b = ArchBuilder(3, in_hw)
+    b.conv(16).conv(16).pool()
+    b.conv(32).conv(32).pool()
+    b.conv(64).conv(64).pool()
+    b.conv(128).conv(128)
+    b.head(classes)
+    return b
+
+
+def resnet_mini(classes, in_hw=16):
+    """ResNet-18 analogue: stem + 3 basic blocks (7 prunable 3x3 convs)."""
+    b = ArchBuilder(3, in_hw)
+    b.conv(16)
+    b.res_block(16, stride=1)
+    b.res_block(32, stride=2)
+    b.res_block(64, stride=2)
+    b.head(classes)
+    return b
+
+
+def resnet_deep(classes, in_hw=16):
+    """ResNet-50 analogue: stem + 4 basic blocks (9 prunable 3x3 convs)."""
+    b = ArchBuilder(3, in_hw)
+    b.conv(16)
+    b.res_block(16, stride=1)
+    b.res_block(32, stride=2)
+    b.res_block(64, stride=2)
+    b.res_block(64, stride=1)
+    b.head(classes)
+    return b
+
+
+def lenet_micro(classes, in_hw=16):
+    """Tiny 2-conv net used by fast integration tests and the quickstart."""
+    b = ArchBuilder(3, in_hw)
+    b.conv(8).pool()
+    b.conv(16).pool()
+    b.head(classes)
+    return b
+
+
+ARCHS = {
+    "vgg_mini": vgg_mini,
+    "resnet_mini": resnet_mini,
+    "resnet_deep": resnet_deep,
+    "lenet_micro": lenet_micro,
+}
+
+
+def build(arch, classes, in_hw):
+    b = ARCHS[arch](classes, in_hw)
+    return {
+        "arch": arch,
+        "classes": classes,
+        "in_hw": in_hw,
+        "ops": b.ops,
+        "params": b.params,
+        "prunable": [
+            i for i, o in enumerate(b.ops)
+            if o["op"] == "conv" and o["prunable"]
+        ],
+    }

@@ -1,0 +1,9 @@
+from .matmul import (  # noqa: F401
+    matmul,
+    matmul_bias_act,
+    masked_matmul_bias_act,
+    use_pallas,
+    BLOCK_M,
+    BLOCK_N,
+    BLOCK_K,
+)

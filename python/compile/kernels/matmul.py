@@ -1,0 +1,283 @@
+"""L1: Pallas GEMM kernel family — the compute hot-spot of the framework.
+
+Every convolution in the model zoo is executed as an im2col GEMM routed
+through these kernels, so the whole pipeline (pre-training, ADMM primal
+steps, masked retraining, inference) shares one hot path.
+
+Kernels:
+  * ``matmul``                — tiled ``C = A @ B`` (f32 accumulate)
+  * ``matmul_bias_act``       — fused ``act(A @ B + bias)``
+  * ``masked_matmul_bias_act``— fused ``act((W ⊙ M) @ X + bias)``; this is
+    the *mask function* hot path (paper §III-B observation (iii)): the mask
+    is applied inside the kernel on the VMEM-resident LHS tile rather than
+    materialised in HBM — the TPU analogue of the paper's load-redundancy
+    elimination (DESIGN.md §8).
+
+All public entry points carry a ``jax.custom_vjp`` whose backward GEMMs are
+routed through the same Pallas kernel, so ``jax.grad`` of any L2 graph
+(train steps, ADMM primal steps) stays on the hot path.
+
+``interpret=True`` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret-mode lowers the kernel to plain HLO which the Rust
+runtime runs unchanged. Real-TPU block-shape reasoning lives in DESIGN.md §8.
+
+Set ``REPRO_NO_PALLAS=1`` to fall back to pure-jnp contractions (used for
+the L2 ablation and as an escape hatch when profiling the lowering itself).
+"""
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU PJRT cannot run Mosaic custom-calls; see module doc.
+
+# Default tile shapes. Chosen MXU-style (multiples of (8, 128)) so the same
+# BlockSpecs are sensible on a real TPU; see DESIGN.md §8 and §Perf for the
+# block sweep that picked these (overridable for the sweep itself).
+BLOCK_M = int(os.environ.get("REPRO_BLOCK_M", 64))
+BLOCK_N = int(os.environ.get("REPRO_BLOCK_N", 4096))
+BLOCK_K = int(os.environ.get("REPRO_BLOCK_K", 1152))
+
+
+def use_pallas() -> bool:
+    return os.environ.get("REPRO_NO_PALLAS", "0") != "1"
+
+
+def _act_fn(name, x):
+    if name == "relu":
+        return jnp.maximum(x, 0.0)
+    if name == "none":
+        return x
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pad2(x, m0, m1):
+    p0 = _round_up(x.shape[0], m0) - x.shape[0]
+    p1 = _round_up(x.shape[1], m1) - x.shape[1]
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def _blocks(m, k, n):
+    """Pick tile shapes: cap at the defaults, align small dims to the
+    hardware-friendly minimum (8 sublanes / 128 lanes) instead of padding a
+    16-row LHS up to 64."""
+    bm = min(BLOCK_M, _round_up(m, 8))
+    bn = min(BLOCK_N, _round_up(n, 128))
+    bk = min(BLOCK_K, _round_up(k, 8))
+    return bm, bk, bn
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, *, nk, act):
+    """Tiled GEMM, k-innermost grid, accumulate into the output tile."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    if act != "none":
+
+        @pl.when(pl.program_id(2) == nk - 1)
+        def _epilogue():
+            o_ref[...] = _act_fn(act, o_ref[...])
+
+
+def _mm_bias_kernel(a_ref, b_ref, bias_ref, o_ref, *, nk, act):
+    """Tiled GEMM with fused bias + activation epilogue."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _epilogue():
+        o_ref[...] = _act_fn(act, o_ref[...] + bias_ref[...])
+
+
+def _mm_masked_bias_kernel(a_ref, m_ref, b_ref, bias_ref, o_ref, *, nk, act):
+    """Tiled GEMM with the pruning mask fused into the LHS tile load."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...] * m_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _epilogue():
+        o_ref[...] = _act_fn(act, o_ref[...] + bias_ref[...])
+
+
+def _pl_gemm(a, b, bias=None, mask=None, act="none"):
+    """Dispatch one padded, tiled pallas_call. Inputs are upcast to f32."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    bm, bk, bn = _blocks(m, k, n)
+    ap = _pad2(a, bm, bk)
+    bp = _pad2(b, bk, bn)
+    mp, kp = ap.shape
+    np_ = bp.shape[1]
+    grid = (mp // bm, np_ // bn, kp // bk)
+    nk = grid[2]
+
+    a_spec = pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))
+    b_spec = pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
+    o_spec = pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
+    bias_spec = pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0))
+
+    if mask is not None:
+        maskp = _pad2(mask.astype(jnp.float32), bm, bk)
+        biasp = _pad2(bias.astype(jnp.float32).reshape(-1, 1), bm, 1)
+        out = pl.pallas_call(
+            functools.partial(_mm_masked_bias_kernel, nk=nk, act=act),
+            out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            grid=grid,
+            in_specs=[a_spec, a_spec, b_spec, bias_spec],
+            out_specs=o_spec,
+            interpret=INTERPRET,
+        )(ap, maskp, bp, biasp)
+    elif bias is not None:
+        biasp = _pad2(bias.astype(jnp.float32).reshape(-1, 1), bm, 1)
+        out = pl.pallas_call(
+            functools.partial(_mm_bias_kernel, nk=nk, act=act),
+            out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            grid=grid,
+            in_specs=[a_spec, b_spec, bias_spec],
+            out_specs=o_spec,
+            interpret=INTERPRET,
+        )(ap, bp, biasp)
+    else:
+        out = pl.pallas_call(
+            functools.partial(_mm_kernel, nk=nk, act=act),
+            out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            grid=grid,
+            in_specs=[a_spec, b_spec],
+            out_specs=o_spec,
+            interpret=INTERPRET,
+        )(ap, bp)
+    return out[:m, :n]
+
+
+def _jnp_gemm(a, b, bias=None, mask=None, act="none"):
+    a = a.astype(jnp.float32)
+    if mask is not None:
+        a = a * mask.astype(jnp.float32)
+    y = a @ b.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32).reshape(-1, 1)
+    return _act_fn(act, y)
+
+
+def _gemm(a, b, bias=None, mask=None, act="none"):
+    if use_pallas():
+        return _pl_gemm(a, b, bias=bias, mask=mask, act=act)
+    return _jnp_gemm(a, b, bias=bias, mask=mask, act=act)
+
+
+# --------------------------------------------------------------------------
+# Public ops with custom VJPs (backward GEMMs also run on the Pallas kernel).
+# --------------------------------------------------------------------------
+
+
+def matmul(a, b):
+    """``a @ b`` on the Pallas hot path (f32 accumulate). Differentiable."""
+    return _matmul(a, b)
+
+
+@jax.custom_vjp
+def _matmul(a, b):
+    return _gemm(a, b)
+
+
+def _matmul_fwd(a, b):
+    return _gemm(a, b), (a, b)
+
+
+def _matmul_bwd(res, g):
+    a, b = res
+    da = _gemm(g, b.T)
+    db = _gemm(a.T, g)
+    return da.astype(a.dtype), db.astype(b.dtype)
+
+
+_matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def matmul_bias_act(a, b, bias, act="relu"):
+    """Fused ``act(a @ b + bias[:, None])`` — the per-layer forward."""
+    return _gemm(a, b, bias=bias, act=act)
+
+
+def _mba_fwd(a, b, bias, act):
+    y = _gemm(a, b, bias=bias, act=act)
+    return y, (a, b, y)
+
+
+def _mba_bwd(act, res, g):
+    a, b, y = res
+    if act == "relu":
+        g = g * (y > 0).astype(g.dtype)
+    da = _gemm(g, b.T)
+    db = _gemm(a.T, g)
+    dbias = jnp.sum(g, axis=1)
+    return da.astype(a.dtype), db.astype(b.dtype), dbias.astype(g.dtype)
+
+
+matmul_bias_act.defvjp(_mba_fwd, _mba_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def masked_matmul_bias_act(w, mask, x, bias, act="relu"):
+    """Fused ``act((w ⊙ mask) @ x + bias[:, None])``.
+
+    The mask-function op: gradients w.r.t. ``w`` are zero at pruned
+    coordinates by construction (∂/∂w = (g @ xᵀ) ⊙ mask), which implements
+    the paper's retraining rule "the mask function sets corresponding
+    gradients as zeros for pruned weights".
+    """
+    return _gemm(w, x, bias=bias, mask=mask, act=act)
+
+
+def _mmba_fwd(w, mask, x, bias, act):
+    y = _gemm(w, x, bias=bias, mask=mask, act=act)
+    return y, (w, mask, x, y)
+
+
+def _mmba_bwd(act, res, g):
+    w, mask, x, y = res
+    if act == "relu":
+        g = g * (y > 0).astype(g.dtype)
+    dw = _gemm(g, x.T) * mask
+    dx = _gemm((w * mask).T, g)
+    dbias = jnp.sum(g, axis=1)
+    return (
+        dw.astype(w.dtype),
+        jnp.zeros_like(mask),
+        dx.astype(x.dtype),
+        dbias.astype(g.dtype),
+    )
+
+
+masked_matmul_bias_act.defvjp(_mmba_fwd, _mmba_bwd)

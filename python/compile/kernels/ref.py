@@ -1,0 +1,29 @@
+# Pure-jnp correctness oracle for the Pallas kernels.
+#
+# Every public op in matmul.py has an entry here with identical semantics
+# expressed with plain jnp contractions; pytest (test_kernel.py) asserts
+# allclose between the two over hypothesis-driven shape/dtype sweeps.
+import jax.numpy as jnp
+
+
+def _act(name, x):
+    if name == "relu":
+        return jnp.maximum(x, 0.0)
+    if name == "none":
+        return x
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def matmul(a, b):
+    return a.astype(jnp.float32) @ b.astype(jnp.float32)
+
+
+def matmul_bias_act(a, b, bias, act="relu"):
+    y = matmul(a, b) + bias.astype(jnp.float32).reshape(-1, 1)
+    return _act(act, y)
+
+
+def masked_matmul_bias_act(w, mask, x, bias, act="relu"):
+    wm = w.astype(jnp.float32) * mask.astype(jnp.float32)
+    y = matmul(wm, x) + bias.astype(jnp.float32).reshape(-1, 1)
+    return _act(act, y)

@@ -1,0 +1,290 @@
+"""L2: JAX compute graphs for the framework, all routed through the L1
+Pallas GEMM kernels (kernels.*).
+
+Every function here is built as a *flat positional* closure over a model
+spec (arch.build(...)) so it lowers to an HLO module whose parameter order
+is exactly the order recorded in artifacts/manifest.json — the Rust runtime
+marshals Literals by that order.
+
+Graphs produced per model (see aot.py):
+  fwd_eval            (params..., x)                      -> logits
+  fwd_acts            (params..., x)                      -> logits, conv
+                      inputs and post-activation outputs of every prunable
+                      conv layer (the F_{:n-1}(X) / F'_{:n}(X) tensors of
+                      paper Eqn. (3))
+  train_step          (params..., x, y1h, lr)             -> params', loss
+  masked_train_step   (params..., masks..., x, y1h, lr)   -> params', loss
+                      — the client retraining step: the mask function zeroes
+                      gradients of pruned weights (paper observation (iii))
+  layer_primal_step_n (w, b, act_in, target, z, u, rho, lr) -> w', b', loss
+                      — one SGD step on the ADMM primal of Eqn. (8)/(9)
+  whole_primal_step   (params..., x, tlogits, z..., u..., rho, lr)
+                      -> params', loss — the problem-(2) primal step
+
+ρ and lr are *runtime inputs* (f32 scalars), so one compiled executable
+serves the paper's entire ρ-schedule with no recompiles on the Rust side.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import kernels
+
+
+# --------------------------------------------------------------------------
+# Core ops
+# --------------------------------------------------------------------------
+
+
+def im2col(x, kh, kw, stride):
+    """NCHW -> (C*kh*kw, B*Ho*Wo) patch matrix; ordering matches an OIHW
+    weight reshape (verified by test_model.py against lax conv)."""
+    patches = lax.conv_general_dilated_patches(
+        x,
+        (kh, kw),
+        (stride, stride),
+        padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    b, q, h, w = patches.shape
+    return patches.transpose(1, 0, 2, 3).reshape(q, b * h * w), (b, h, w)
+
+
+def conv_apply(x, w4, bias, stride, act, mask=None):
+    """Convolution as im2col GEMM on the Pallas hot path."""
+    a, c, kh, kw = w4.shape
+    xcol, (b, h, w) = im2col(x, kh, kw, stride)
+    wg = w4.reshape(a, c * kh * kw)
+    if mask is None:
+        y = kernels.matmul_bias_act(wg, xcol, bias, act=act)
+    else:
+        y = kernels.masked_matmul_bias_act(wg, mask, xcol, bias, act=act)
+    return y.reshape(a, b, h, w).transpose(1, 0, 2, 3)
+
+
+def max_pool2(x):
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+    )
+
+
+def forward(spec, params, x, masks=None, collect=False):
+    """Interpret the op list. ``masks`` maps op-index -> (A, C*kh*kw) mask
+    for prunable convs. With ``collect``, also returns the input and
+    post-activation output of every prunable conv (paper Eqn. (3) tensors).
+    """
+    saved = {}
+    conv_in, conv_out = [], []
+    t = x
+    logits = None
+    for oi, op in enumerate(spec["ops"]):
+        kind = op["op"]
+        if kind == "conv":
+            mask = masks.get(oi) if masks else None
+            if collect and op["prunable"]:
+                conv_in.append(t)
+            t = conv_apply(
+                t, params[op["w"]], params[op["b"]], op["stride"],
+                op["act"], mask=mask,
+            )
+            if collect and op["prunable"]:
+                conv_out.append(t)
+        elif kind == "pool":
+            t = max_pool2(t)
+        elif kind == "save":
+            saved[op["tag"]] = t
+        elif kind == "proj":
+            saved[op["tag"]] = conv_apply(
+                saved[op["tag"]], params[op["w"]], params[op["b"]],
+                op["stride"], op["act"],
+            )
+        elif kind == "add":
+            t = t + saved[op["tag"]]
+        elif kind == "relu":
+            t = jnp.maximum(t, 0.0)
+        elif kind == "gap":
+            t = t.mean(axis=(2, 3))  # (B, C)
+        elif kind == "fc":
+            logits = kernels.matmul_bias_act(
+                params[op["w"]], t.T, params[op["b"]], act="none"
+            ).T
+        else:
+            raise ValueError(f"unknown op {kind!r}")
+    assert logits is not None
+    if collect:
+        return logits, conv_in, conv_out
+    return logits
+
+
+def ce_loss(spec, params, x, y1h):
+    logits = forward(spec, params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(y1h * logp, axis=-1))
+
+
+# --------------------------------------------------------------------------
+# Graph builders (flat positional signatures for AOT lowering)
+# --------------------------------------------------------------------------
+
+
+def n_params(spec):
+    return len(spec["params"])
+
+
+def prunable_convs(spec):
+    """[(op_index, op_dict)] of prunable conv layers, in network order."""
+    return [(i, spec["ops"][i]) for i in spec["prunable"]]
+
+
+def gemm_shape(op):
+    return (op["A"], op["C"] * op["kh"] * op["kw"])
+
+
+def make_fwd_eval(spec):
+    np_ = n_params(spec)
+
+    def f(*args):
+        params, x = list(args[:np_]), args[np_]
+        return (forward(spec, params, x),)
+
+    return f
+
+
+def make_fwd_acts(spec):
+    np_ = n_params(spec)
+
+    def f(*args):
+        params, x = list(args[:np_]), args[np_]
+        logits, cin, cout = forward(spec, params, x, collect=True)
+        return tuple([logits] + cin + cout)
+
+    return f
+
+
+def make_train_step(spec):
+    np_ = n_params(spec)
+
+    def f(*args):
+        params = list(args[:np_])
+        x, y1h, lr = args[np_], args[np_ + 1], args[np_ + 2]
+        loss, grads = jax.value_and_grad(
+            lambda ps: ce_loss(spec, ps, x, y1h)
+        )(params)
+        new = [p - lr * g for p, g in zip(params, grads)]
+        return tuple(new + [loss])
+
+    return f
+
+
+def make_masked_train_step(spec):
+    np_ = n_params(spec)
+    pconvs = prunable_convs(spec)
+    nm = len(pconvs)
+
+    def f(*args):
+        params = list(args[:np_])
+        masks_flat = args[np_:np_ + nm]
+        x, y1h, lr = args[np_ + nm], args[np_ + nm + 1], args[np_ + nm + 2]
+        masks = {oi: m for (oi, _), m in zip(pconvs, masks_flat)}
+
+        def loss_fn(ps):
+            logits = forward(spec, ps, x, masks=masks)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            return -jnp.mean(jnp.sum(y1h * logp, axis=-1))
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        new = [p - lr * g for p, g in zip(params, grads)]
+        # keep stored weights clean: zero the pruned coordinates on export
+        for (oi, op), m in zip(pconvs, masks_flat):
+            wi = op["w"]
+            new[wi] = new[wi] * m.reshape(new[wi].shape)
+        return tuple(new + [loss])
+
+    return f
+
+
+def make_layer_primal_step(spec, oi):
+    """One SGD step on Eqn. (8)+(9): distillation term (per-sample squared
+    Frobenius norm) + ρ/2‖W − Z + U‖²_F, differentiated w.r.t. (W, b)."""
+    op = spec["ops"][oi]
+
+    def f(w4, bias, act_in, target, z, u, rho, lr):
+        a, c, kh, kw = w4.shape
+
+        def loss_fn(wb):
+            w4_, b_ = wb
+            out = conv_apply(act_in, w4_, b_, op["stride"], op["act"])
+            bsz = act_in.shape[0]
+            dist = jnp.sum((out - target) ** 2) / bsz
+            wg = w4_.reshape(a, c * kh * kw)
+            pen = 0.5 * rho * jnp.sum((wg - z + u) ** 2)
+            return dist + pen
+
+        loss, (dw, db) = jax.value_and_grad(loss_fn)((w4, bias))
+        return w4 - lr * dw, bias - lr * db, loss
+
+    return f
+
+
+def make_admm_train_primal_step(spec):
+    """Primal step of the *traditional* ADMM pruning baseline (ADMM†,
+    Zhang et al. [9]): cross-entropy on the client's real training data +
+    the ADMM penalty — this is the no-privacy comparator in Tables I-III."""
+    np_ = n_params(spec)
+    pconvs = prunable_convs(spec)
+    nz = len(pconvs)
+
+    def f(*args):
+        params = list(args[:np_])
+        x, y1h = args[np_], args[np_ + 1]
+        zs = args[np_ + 2:np_ + 2 + nz]
+        us = args[np_ + 2 + nz:np_ + 2 + 2 * nz]
+        rho, lr = args[np_ + 2 + 2 * nz], args[np_ + 3 + 2 * nz]
+
+        def loss_fn(ps):
+            logits = forward(spec, ps, x)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            ce = -jnp.mean(jnp.sum(y1h * logp, axis=-1))
+            pen = 0.0
+            for (oi_, op), z, u in zip(pconvs, zs, us):
+                wg = ps[op["w"]].reshape(z.shape)
+                pen = pen + 0.5 * rho * jnp.sum((wg - z + u) ** 2)
+            return ce + pen
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        new = [p - lr * g for p, g in zip(params, grads)]
+        return tuple(new + [loss])
+
+    return f
+
+
+def make_whole_primal_step(spec):
+    """One SGD step on Eqn. (2) + the ADMM penalty over all prunable convs
+    (problem-(2) formulation, Table IV)."""
+    np_ = n_params(spec)
+    pconvs = prunable_convs(spec)
+    nz = len(pconvs)
+
+    def f(*args):
+        params = list(args[:np_])
+        x, tlogits = args[np_], args[np_ + 1]
+        zs = args[np_ + 2:np_ + 2 + nz]
+        us = args[np_ + 2 + nz:np_ + 2 + 2 * nz]
+        rho, lr = args[np_ + 2 + 2 * nz], args[np_ + 3 + 2 * nz]
+
+        def loss_fn(ps):
+            logits = forward(spec, ps, x)
+            bsz = x.shape[0]
+            dist = jnp.sum((logits - tlogits) ** 2) / bsz
+            pen = 0.0
+            for (oi_, op), z, u in zip(pconvs, zs, us):
+                wg = ps[op["w"]].reshape(z.shape)
+                pen = pen + 0.5 * rho * jnp.sum((wg - z + u) ** 2)
+            return dist + pen
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        new = [p - lr * g for p, g in zip(params, grads)]
+        return tuple(new + [loss])
+
+    return f

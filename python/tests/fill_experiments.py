@@ -1,0 +1,101 @@
+"""Splice the generated runs/tables/*.md into EXPERIMENTS.md placeholders.
+
+Also (fallback) assembles partial tables directly from runs/results/*.json
+row caches for any table whose driver did not finish — every cached row is
+still real pipeline output.
+
+Usage: python tests/fill_experiments.py   (run from python/, like the rest)
+"""
+
+import json
+import os
+import re
+
+ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "..")
+TABLES = os.path.join(ROOT, "runs", "tables")
+RESULTS = os.path.join(ROOT, "runs", "results")
+
+SLOT_FILES = {
+    "TABLE1": "table1.md",
+    "TABLE2": "table2.md",
+    "TABLE3": "table3.md",
+    "TABLE4": "table4.md",
+    "TABLE5": "table5.md",
+    "FIG3A": "fig3_measured.md",
+    "FIG3B": "fig3_estimated.md",
+}
+
+
+def rows_from_cache(prefix_filter):
+    out = []
+    if not os.path.isdir(RESULTS):
+        return out
+    for f in sorted(os.listdir(RESULTS)):
+        if not f.endswith(".json"):
+            continue
+        m = re.match(
+            r"(.+)_(irregular|filter|column|pattern)_"
+            r"(privacy|whole|admm|uniform|oneshot|iterative)_"
+            r"([\d.]+)_(\w+)\.json",
+            f,
+        )
+        if not m or not prefix_filter(m):
+            continue
+        d = json.load(open(os.path.join(RESULTS, f)))
+        out.append(
+            (m.group(1), m.group(2), m.group(3), float(m.group(4)), d)
+        )
+    return out
+
+
+def assemble_partial(name, prefix_filter):
+    rows = rows_from_cache(prefix_filter)
+    if not rows:
+        return None
+    lines = [
+        f"### {name} (assembled from cached rows)",
+        "",
+        "| Network | Scheme | Method | Comp. Rate | Base Acc | Pruned Acc | Loss |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for model, scheme, method, rate, d in rows:
+        lines.append(
+            "| {} | {} | {} | {:.1f}x | {:.1%} | {:.1%} | {:+.1%} |".format(
+                model, scheme, method, d["comp_rate"], d["base_acc"],
+                d["prune_acc"], d["base_acc"] - d["prune_acc"],
+            )
+        )
+    return "\n".join(lines) + "\n"
+
+
+def main():
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    text = open(path).read()
+    for slot, fname in SLOT_FILES.items():
+        full = os.path.join(TABLES, fname)
+        if os.path.exists(full):
+            content = open(full).read()
+        else:
+            # fallback: partial assembly from the row cache
+            flt = {
+                "TABLE1": lambda m: m.group(1).endswith("sv10")
+                and m.group(3) in ("privacy", "admm", "oneshot", "iterative"),
+                "TABLE2": lambda m: m.group(1).endswith("sv20")
+                and m.group(2) == "pattern" and m.group(3) == "privacy",
+                "TABLE3": lambda m: m.group(1).startswith("res")
+                and m.group(4) in (4.0, 6.0) and m.group(2) == "pattern",
+                "TABLE5": lambda m: m.group(1).endswith("sv10")
+                and m.group(3) in ("uniform", "privacy"),
+                "TABLE4": lambda m: m.group(3) in ("privacy", "whole")
+                and m.group(1) == "vgg_sv10" and m.group(2) == "irregular",
+            }.get(slot)
+            content = assemble_partial(slot, flt) if flt else None
+            if content is None:
+                content = f"*(not generated in this run — see runs/ or rerun `repro exp {slot.lower()}`)*\n"
+        text = text.replace(f"<!-- {slot} -->", content.strip())
+    open(path, "w").write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Generate cross-language numeric fixtures for the Rust integration tests.
+
+Parameters and inputs are filled by closed-form formulas that both sides
+implement independently (sin/cos ramps), so no weight files need to cross
+the boundary. The fixture records the expected logits / losses computed by
+the L2 JAX graphs; rust/tests/runtime_integration.rs replays the same
+artifacts through PJRT and asserts allclose.
+
+Usage: python tests/make_fixtures.py  (writes ../artifacts/fixtures.json)
+"""
+
+import json
+import math
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import arch, model
+from compile.aot import BATCHES
+
+
+def formula_param(shape, scale=0.1):
+    n = int(np.prod(shape)) if shape else 1
+    v = np.array(
+        [math.sin(0.1 * i) * scale for i in range(n)], dtype=np.float32
+    )
+    return jnp.asarray(v.reshape(shape))
+
+
+def formula_input(shape):
+    n = int(np.prod(shape))
+    v = np.array(
+        [math.cos(0.05 * i) * 0.5 + 0.5 for i in range(n)],
+        dtype=np.float32,
+    )
+    return jnp.asarray(v.reshape(shape))
+
+
+def main():
+    out_path = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "..",
+        "artifacts",
+        "fixtures.json",
+    )
+    spec = arch.build("lenet_micro", 10, 16)
+    params = [formula_param(p["shape"]) for p in spec["params"]]
+
+    fix = {"model": "lenet_sv10"}
+
+    # fwd_eval logits for the formula input
+    x = formula_input([BATCHES["eval"], 3, 16, 16])
+    logits = model.forward(spec, params, x)
+    fix["fwd_eval_logits_row0"] = [float(v) for v in np.asarray(logits)[0]]
+    fix["fwd_eval_logits_row7"] = [float(v) for v in np.asarray(logits)[7]]
+
+    # one train step: loss + a weight checksum
+    xt = formula_input([BATCHES["train"], 3, 16, 16])
+    yt = jnp.eye(10)[jnp.arange(BATCHES["train"]) % 10]
+    step = model.make_train_step(spec)
+    out = step(*(params + [xt, yt, jnp.float32(0.05)]))
+    fix["train_step_loss"] = float(out[-1])
+    fix["train_step_w0_sum"] = float(jnp.sum(out[0]))
+
+    # one layer primal step on conv 0
+    oi = spec["prunable"][0]
+    op = spec["ops"][oi]
+    b_admm = BATCHES["admm"]
+    act_in = formula_input([b_admm, op["C"], op["in_hw"], op["in_hw"]])
+    target = formula_input(
+        [b_admm, op["A"], op["out_hw"], op["out_hw"]]
+    )
+    a, q = model.gemm_shape(op)
+    z = formula_param([a, q], scale=0.05)
+    u = formula_param([a, q], scale=0.01)
+    pstep = model.make_layer_primal_step(spec, oi)
+    w2, b2, loss = pstep(
+        params[op["w"]], params[op["b"]], act_in, target, z, u,
+        jnp.float32(1e-2), jnp.float32(1e-3),
+    )
+    fix["layer_primal_loss"] = float(loss)
+    fix["layer_primal_w_sum"] = float(jnp.sum(w2))
+
+    with open(out_path, "w") as f:
+        json.dump(fix, f, indent=1)
+    print(f"wrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+# pytest: AOT lowering machinery — catalog completeness, HLO-text format,
+# manifest consistency, and incremental rebuild keys.
+import json
+import os
+import tempfile
+
+import jax
+import pytest
+
+from compile import aot, arch, model
+
+
+def test_graph_catalog_covers_every_prunable_layer():
+    spec = arch.build("resnet_mini", 10, 16)
+    cat = aot.graph_catalog(spec)
+    n = len(spec["prunable"])
+    for j in range(n):
+        assert f"layer_primal_{j}" in cat
+    for name in [
+        "fwd_eval",
+        "fwd_acts",
+        "train_step",
+        "masked_train_step",
+        "whole_primal_step",
+        "admm_train_primal_step",
+    ]:
+        assert name in cat
+
+
+def test_catalog_input_shapes_lower_and_eval():
+    spec = arch.build("lenet_micro", 10, 16)
+    cat = aot.graph_catalog(spec)
+    fn, ins = cat["fwd_eval"]
+    out = jax.eval_shape(fn, *[aot.sds(s) for _, s in ins])
+    leaves = jax.tree_util.tree_leaves(out)
+    assert leaves[0].shape == (aot.BATCHES["eval"], 10)
+
+
+def test_hlo_text_is_parseable_format():
+    spec = arch.build("lenet_micro", 10, 16)
+    cat = aot.graph_catalog(spec)
+    fn, ins = cat["fwd_eval"]
+    text = aot.to_hlo_text(fn, [aot.sds(s) for _, s in ins])
+    # HLO text modules start with the module header and declare ENTRY
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # tuple return (the rust side unpacks with to_tuple)
+    assert "tuple(" in text or "(f32[" in text
+
+
+def test_build_model_writes_manifest_and_is_incremental():
+    with tempfile.TemporaryDirectory() as d:
+        entry = aot.build_model("lenet_sv10", d, only_graph="fwd_eval")
+        f = os.path.join(d, entry["artifacts"]["fwd_eval"]["file"])
+        assert os.path.exists(f)
+        mtime = os.path.getmtime(f)
+        # second build skips (key file matches)
+        aot.build_model("lenet_sv10", d, only_graph="fwd_eval")
+        assert os.path.getmtime(f) == mtime
+        # force rewrites
+        aot.build_model(
+            "lenet_sv10", d, only_graph="fwd_eval", force=True
+        )
+        assert os.path.getmtime(f) >= mtime
+
+
+def test_manifest_on_disk_matches_specs():
+    # the committed artifacts/manifest.json (built by `make artifacts`)
+    # must agree with a fresh arch.build for every model
+    path = os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json"
+    )
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    man = json.load(open(path))
+    for mid, entry in man["models"].items():
+        spec = arch.build(entry["arch"], entry["classes"], entry["in_hw"])
+        assert entry["ops"] == spec["ops"], mid
+        assert entry["params"] == spec["params"], mid
+        assert entry["prunable"] == spec["prunable"], mid
+
+
+@pytest.mark.parametrize("mid", list(aot.CONFIGS))
+def test_all_configs_build_specs(mid):
+    a, cls, hw = aot.CONFIGS[mid]
+    spec = arch.build(a, cls, hw)
+    assert spec["prunable"], f"{mid} has no prunable layers"
+    # every prunable layer is a 3x3 conv (pattern-prunable)
+    for oi in spec["prunable"]:
+        op = spec["ops"][oi]
+        assert op["op"] == "conv" and op["kh"] == 3 and op["kw"] == 3
+
+
+def test_gemm_shapes_consistent():
+    spec = arch.build("vgg_mini", 10, 16)
+    for oi, op in model.prunable_convs(spec):
+        a, q = model.gemm_shape(op)
+        wshape = spec["params"][op["w"]]["shape"]
+        assert a == wshape[0]
+        assert q == wshape[1] * wshape[2] * wshape[3]

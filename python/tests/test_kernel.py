@@ -1,0 +1,150 @@
+# pytest: Pallas kernels vs the pure-jnp oracle (ref.py) — the CORE
+# correctness signal for L1. Hypothesis sweeps shapes/dtypes; fixed cases
+# pin the tile-boundary edge cases (dims below/at/above block sizes).
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+DIM = st.integers(min_value=1, max_value=300)
+SMALL = st.integers(min_value=1, max_value=48)
+DTYPES = st.sampled_from([jnp.float32, jnp.bfloat16])
+ACTS = st.sampled_from(["relu", "none"])
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(key, shape, dtype=jnp.float32).astype(dtype)
+
+
+def keys(n, seed=0):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIM, k=DIM, n=DIM, dtype=DTYPES)
+def test_matmul_matches_ref(m, k, n, dtype):
+    k1, k2 = keys(2)
+    a, b = rand(k1, (m, k), dtype), rand(k2, (k, n), dtype)
+    got = kernels.matmul(a, b)
+    want = ref.matmul(a, b)
+    assert got.shape == (m, n)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIM, k=SMALL, n=DIM, act=ACTS, dtype=DTYPES)
+def test_matmul_bias_act_matches_ref(m, k, n, act, dtype):
+    k1, k2, k3 = keys(3, seed=1)
+    a, b = rand(k1, (m, k), dtype), rand(k2, (k, n), dtype)
+    bias = rand(k3, (m,), jnp.float32)
+    got = kernels.matmul_bias_act(a, b, bias, act=act)
+    want = ref.matmul_bias_act(a, b, bias, act=act)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=SMALL, k=SMALL, n=DIM, act=ACTS)
+def test_masked_matmul_matches_ref(m, k, n, act):
+    k1, k2, k3, k4 = keys(4, seed=2)
+    w, x = rand(k1, (m, k), jnp.float32), rand(k2, (k, n), jnp.float32)
+    bias = rand(k3, (m,), jnp.float32)
+    mask = (jax.random.uniform(k4, (m, k)) > 0.5).astype(jnp.float32)
+    got = kernels.masked_matmul_bias_act(w, mask, x, bias, act=act)
+    want = ref.masked_matmul_bias_act(w, mask, x, bias, act=act)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (1, 1, 1),
+        (8, 8, 128),                      # exactly one tile
+        (64, 256, 256),                   # exactly the default blocks
+        (65, 257, 257),                   # one past the block boundary
+        (16, 27, 8192),                   # vgg first conv GEMM shape
+        (128, 1152, 512),                 # vgg last conv GEMM shape
+    ],
+)
+def test_matmul_tile_boundaries(m, k, n):
+    k1, k2 = keys(2, seed=3)
+    a, b = rand(k1, (m, k), jnp.float32), rand(k2, (k, n), jnp.float32)
+    np.testing.assert_allclose(
+        kernels.matmul(a, b), ref.matmul(a, b), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_vjp_matmul_matches_jax_grad_of_ref():
+    k1, k2 = keys(2, seed=4)
+    a, b = rand(k1, (17, 33), jnp.float32), rand(k2, (33, 65), jnp.float32)
+
+    def f_ker(a, b):
+        return jnp.sum(kernels.matmul(a, b) ** 2)
+
+    def f_ref(a, b):
+        return jnp.sum(ref.matmul(a, b) ** 2)
+
+    ga, gb = jax.grad(f_ker, argnums=(0, 1))(a, b)
+    ra, rb = jax.grad(f_ref, argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(ga, ra, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gb, rb, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("act", ["relu", "none"])
+def test_vjp_bias_act_matches_jax_grad_of_ref(act):
+    k1, k2, k3 = keys(3, seed=5)
+    a, b = rand(k1, (9, 20), jnp.float32), rand(k2, (20, 31), jnp.float32)
+    bias = rand(k3, (9,), jnp.float32)
+
+    def f(mod):
+        def g(a, b, bias):
+            return jnp.sum(mod.matmul_bias_act(a, b, bias, act=act) ** 3)
+
+        return g
+
+    got = jax.grad(f(kernels), argnums=(0, 1, 2))(a, b, bias)
+    want = jax.grad(f(ref), argnums=(0, 1, 2))(a, b, bias)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("act", ["relu", "none"])
+def test_vjp_masked_grad_is_zero_on_pruned_coords(act):
+    """The mask-function property (paper observation (iii)): gradients of
+    pruned weights are exactly zero."""
+    k1, k2, k3, k4 = keys(4, seed=6)
+    w, x = rand(k1, (12, 18), jnp.float32), rand(k2, (18, 40), jnp.float32)
+    bias = rand(k3, (12,), jnp.float32)
+    mask = (jax.random.uniform(k4, (12, 18)) > 0.6).astype(jnp.float32)
+
+    def loss(w):
+        return jnp.sum(
+            kernels.masked_matmul_bias_act(w, mask, x, bias, act=act) ** 2
+        )
+
+    dw = jax.grad(loss)(w)
+    assert np.all(np.asarray(dw)[np.asarray(mask) == 0] == 0.0)
+
+    def loss_ref(w):
+        return jnp.sum(
+            ref.masked_matmul_bias_act(w, mask, x, bias, act=act) ** 2
+        )
+
+    np.testing.assert_allclose(
+        dw, jax.grad(loss_ref)(w) * mask, rtol=1e-4, atol=1e-4
+    )
+
+
+def test_jnp_fallback_matches_pallas(monkeypatch):
+    monkeypatch.setenv("REPRO_NO_PALLAS", "1")
+    k1, k2 = keys(2, seed=7)
+    a, b = rand(k1, (13, 29), jnp.float32), rand(k2, (29, 57), jnp.float32)
+    fallback = kernels.matmul(a, b)
+    monkeypatch.setenv("REPRO_NO_PALLAS", "0")
+    pallas = kernels.matmul(a, b)
+    np.testing.assert_allclose(fallback, pallas, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,164 @@
+# pytest: L2 model graphs — conv-as-GEMM correctness vs lax.conv, op-list
+# interpretation, shapes, and training-step semantics (incl. the mask rule).
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import arch, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def init_params(spec, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), len(spec["params"]))
+    out = []
+    for k, p in zip(ks, spec["params"]):
+        shape = tuple(p["shape"])
+        if len(shape) > 1:
+            fan_in = int(np.prod(shape[1:]))
+            out.append(
+                jax.random.normal(k, shape) * np.sqrt(2.0 / fan_in)
+            )
+        else:
+            out.append(jnp.zeros(shape))
+    return out
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("k", [1, 3])
+def test_conv_apply_matches_lax_conv(stride, k):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 5, 8, 8))
+    w = jax.random.normal(jax.random.PRNGKey(1), (7, 5, k, k))
+    b = jax.random.normal(jax.random.PRNGKey(2), (7,))
+    got = model.conv_apply(x, w, b, stride, "none")
+    want = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    ) + b.reshape(1, -1, 1, 1)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_masked_conv_equals_conv_of_masked_weights():
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (2, 4, 8, 8))
+    w = jax.random.normal(jax.random.PRNGKey(4), (6, 4, 3, 3))
+    b = jnp.zeros((6,))
+    mask = (jax.random.uniform(jax.random.PRNGKey(5), (6, 36)) > 0.5).astype(
+        jnp.float32
+    )
+    got = model.conv_apply(x, w, b, 1, "relu", mask=mask)
+    want = model.conv_apply(x, w * mask.reshape(w.shape), b, 1, "relu")
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize(
+    "a", ["lenet_micro", "vgg_mini", "resnet_mini", "resnet_deep"]
+)
+def test_forward_shapes(a):
+    spec = arch.build(a, 10, 16)
+    params = init_params(spec)
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 3, 16, 16))
+    logits = model.forward(spec, params, x)
+    assert logits.shape == (3, 10)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_fwd_acts_consistent_with_fwd():
+    spec = arch.build("resnet_mini", 10, 16)
+    params = init_params(spec)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 16, 16))
+    logits, cin, cout = model.forward(spec, params, x, collect=True)
+    assert len(cin) == len(spec["prunable"]) == len(cout)
+    np.testing.assert_allclose(
+        logits, model.forward(spec, params, x), rtol=1e-5
+    )
+    # each collected output is the conv of its collected input
+    for (oi, op), ti, to in zip(model.prunable_convs(spec), cin, cout):
+        y = model.conv_apply(
+            ti, params[op["w"]], params[op["b"]], op["stride"], op["act"]
+        )
+        np.testing.assert_allclose(to, y, rtol=1e-4, atol=1e-4)
+
+
+def test_train_step_decreases_loss():
+    spec = arch.build("lenet_micro", 10, 16)
+    params = init_params(spec)
+    step = model.make_train_step(spec)
+    x = jax.random.normal(jax.random.PRNGKey(2), (16, 3, 16, 16))
+    y = jax.nn.one_hot(jnp.arange(16) % 10, 10)
+    lr = jnp.float32(0.05)
+    args = params + [x, y, lr]
+    losses = []
+    for _ in range(8):
+        out = step(*args)
+        losses.append(float(out[-1]))
+        args = list(out[:-1]) + [x, y, lr]
+    assert losses[-1] < losses[0]
+
+
+def test_masked_train_step_preserves_zeros():
+    spec = arch.build("lenet_micro", 10, 16)
+    params = init_params(spec)
+    pconvs = model.prunable_convs(spec)
+    masks = []
+    for _, op in pconvs:
+        a, q = model.gemm_shape(op)
+        m = (jax.random.uniform(jax.random.PRNGKey(a), (a, q)) > 0.5).astype(
+            jnp.float32
+        )
+        masks.append(m)
+    # zero out the masked coords first (as the pruned model would be)
+    for (_, op), m in zip(pconvs, masks):
+        params[op["w"]] = params[op["w"]] * m.reshape(params[op["w"]].shape)
+    step = model.make_masked_train_step(spec)
+    x = jax.random.normal(jax.random.PRNGKey(6), (8, 3, 16, 16))
+    y = jax.nn.one_hot(jnp.arange(8) % 10, 10)
+    out = step(*(params + masks + [x, y, jnp.float32(0.05)]))
+    new_params = out[:-1]
+    for (_, op), m in zip(pconvs, masks):
+        w = np.asarray(new_params[op["w"]]).reshape(m.shape)
+        assert np.all(w[np.asarray(m) == 0] == 0.0)
+
+
+def test_layer_primal_step_reduces_objective():
+    spec = arch.build("lenet_micro", 10, 16)
+    params = init_params(spec)
+    oi = spec["prunable"][0]
+    op = spec["ops"][oi]
+    step = model.make_layer_primal_step(spec, oi)
+    x = jax.random.normal(jax.random.PRNGKey(7), (4, op["C"], 16, 16))
+    target = jax.random.normal(
+        jax.random.PRNGKey(8), (4, op["A"], op["out_hw"], op["out_hw"])
+    )
+    a, q = model.gemm_shape(op)
+    z = jnp.zeros((a, q))
+    u = jnp.zeros((a, q))
+    w, b = params[op["w"]], params[op["b"]]
+    rho, lr = jnp.float32(1e-3), jnp.float32(1e-3)
+    losses = []
+    for _ in range(5):
+        w, b, loss = step(w, b, x, target, z, u, rho, lr)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0]
+
+
+def test_whole_primal_step_runs_and_updates():
+    spec = arch.build("lenet_micro", 10, 16)
+    params = init_params(spec)
+    pconvs = model.prunable_convs(spec)
+    step = model.make_whole_primal_step(spec)
+    x = jax.random.normal(jax.random.PRNGKey(9), (4, 3, 16, 16))
+    tlogits = jax.random.normal(jax.random.PRNGKey(10), (4, 10))
+    zs = [jnp.zeros(model.gemm_shape(op)) for _, op in pconvs]
+    us = [jnp.zeros(model.gemm_shape(op)) for _, op in pconvs]
+    out = step(*(params + [x, tlogits] + zs + us
+                 + [jnp.float32(1e-3), jnp.float32(1e-3)]))
+    assert len(out) == len(params) + 1
+    assert np.isfinite(float(out[-1]))
+    changed = any(
+        not np.allclose(np.asarray(o), np.asarray(p))
+        for o, p in zip(out[:-1], params)
+    )
+    assert changed

@@ -1,0 +1,68 @@
+//! Bench (Tables I-III context): per-iteration cost of the
+//! privacy-preserving ADMM pruning loop per scheme, on the lenet model —
+//! isolates the L3 orchestration + primal/proximal split from the
+//! experiment-scale training noise.
+
+use repro::admm::{prune_layerwise, DataSource};
+use repro::bench_harness::{bench, section};
+use repro::config::AdmmConfig;
+use repro::pruning::Scheme;
+use repro::runtime::Runtime;
+use repro::train::params::init_params;
+
+fn main() {
+    let rt = Runtime::new("artifacts").expect("run `make artifacts`");
+    let model = rt.model("lenet_sv10").unwrap().clone();
+    let params = init_params(&model, 1);
+    // one-iteration config: the bench times a single full ADMM iteration
+    // (synthetic batch + target acts + per-layer primal/proximal/dual)
+    let cfg = AdmmConfig {
+        rhos: vec![1e-3],
+        iters_per_rho: 1,
+        primal_steps: 3,
+        lr: 1e-3,
+        lr_layer: 1e-3,
+        gauss_seidel: true,
+        seed: 1,
+    };
+    for a in ["fwd_acts", "layer_primal_0", "layer_primal_1"] {
+        rt.warm("lenet_sv10", a).unwrap();
+    }
+    section("one ADMM iteration (lenet, layer-wise problem (3))");
+    for scheme in Scheme::all() {
+        bench(&format!("admm iter {}", scheme.name()), 1, 5, || {
+            std::hint::black_box(
+                prune_layerwise(
+                    &rt,
+                    "lenet_sv10",
+                    &params,
+                    scheme,
+                    1.0 / 8.0,
+                    &cfg,
+                    DataSource::Synthetic,
+                )
+                .unwrap(),
+            );
+        });
+    }
+
+    section("Gauss-Seidel vs Jacobi activation refresh (ablation)");
+    for (name, gs) in [("gauss-seidel", true), ("jacobi", false)] {
+        let mut c = cfg.clone();
+        c.gauss_seidel = gs;
+        bench(&format!("admm iter irregular {name}"), 1, 5, || {
+            std::hint::black_box(
+                prune_layerwise(
+                    &rt,
+                    "lenet_sv10",
+                    &params,
+                    Scheme::Irregular,
+                    1.0 / 8.0,
+                    &c,
+                    DataSource::Synthetic,
+                )
+                .unwrap(),
+            );
+        });
+    }
+}

@@ -1,0 +1,92 @@
+//! Bench (Fig. 3): mobile engine latency — real host execution of dense vs
+//! compiled-sparse inference at several compression rates, plus the
+//! Galaxy-S10 cost-model estimates for every framework at paper scale.
+
+use repro::bench_harness::{bench, section};
+use repro::mobile::costmodel::{
+    self, latency_ms, AnalyticModel, Device, ALL_ENGINES, GALAXY_S10,
+};
+use repro::mobile::engine::{self, EngineKind, Fmap};
+use repro::mobile::ir::ModelIR;
+use repro::pruning::{project, LayerShape, Scheme};
+use repro::rng::Pcg32;
+use repro::runtime::Runtime;
+use repro::train::params::init_params;
+
+fn main() {
+    let rt = Runtime::new("artifacts").expect("run `make artifacts`");
+    let spec = rt.model("vgg_sv20").unwrap().clone();
+
+    section("host engine latency vs compression (vgg_sv20, pattern)");
+    for rate in [4.0, 8.0, 12.0, 16.0] {
+        let mut params = init_params(&spec, 9);
+        for (_, op) in spec.prunable_convs() {
+            let shape = LayerShape::from_conv(op);
+            let wg = params[op.w]
+                .clone()
+                .reshape(&[shape.p, shape.q()])
+                .unwrap();
+            let pr =
+                project(Scheme::Pattern, &wg, &shape, 1.0 / rate).unwrap();
+            let s4 = params[op.w].shape().to_vec();
+            params[op.w] = pr.w.clone().reshape(&s4).unwrap();
+        }
+        let compiled =
+            engine::compile(ModelIR::build(&spec, &params).unwrap());
+        let mut rng = Pcg32::seeded(2);
+        let img = Fmap {
+            c: 3,
+            hw: spec.in_hw,
+            data: (0..3 * spec.in_hw * spec.in_hw)
+                .map(|_| rng.uniform())
+                .collect(),
+        };
+        if rate == 4.0 {
+            bench("dense engine (rate-independent)", 3, 15, || {
+                std::hint::black_box(engine::infer(
+                    &compiled,
+                    &img,
+                    EngineKind::Dense,
+                ));
+            });
+        }
+        bench(&format!("sparse engine @ {rate}x"), 3, 15, || {
+            std::hint::black_box(engine::infer(
+                &compiled,
+                &img,
+                EngineKind::Sparse,
+            ));
+        });
+    }
+
+    section("Galaxy S10 cost model, paper-scale (Fig. 3 estimates)");
+    let models = [
+        AnalyticModel::paper_scale(
+            "VGG-16 CIFAR-100 12x",
+            &costmodel::vgg16_cifar(),
+            12.0,
+            1.8,
+            2.0,
+        ),
+        AnalyticModel::paper_scale(
+            "ResNet-18 ImageNet 6x",
+            &costmodel::resnet18_imagenet(),
+            6.0,
+            1.8,
+            2.0,
+        ),
+    ];
+    for m in &models {
+        for dev in [Device::Cpu, Device::Gpu] {
+            for e in &ALL_ENGINES {
+                println!(
+                    "estimate {:24} {:?} {:8} {:>8.1} ms",
+                    m.name,
+                    dev,
+                    e.name,
+                    latency_ms(m, e, &GALAXY_S10, dev)
+                );
+            }
+        }
+    }
+}

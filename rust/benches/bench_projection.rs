@@ -1,0 +1,43 @@
+//! Bench: Π_Sₙ projection throughput for all four pruning schemes (the
+//! proximal step of every ADMM iteration) at the layer sizes of the model
+//! zoo and at paper-scale (512×4608, ResNet-18's largest 3x3 layer).
+
+use repro::bench_harness::{bench, section};
+use repro::pruning::{project, LayerShape, Scheme};
+use repro::rng::Pcg32;
+use repro::tensor::Tensor;
+
+fn randw(p: usize, q: usize, seed: u64) -> Tensor {
+    let mut r = Pcg32::seeded(seed);
+    Tensor::from_vec(&[p, q], (0..p * q).map(|_| r.normal()).collect()).unwrap()
+}
+
+fn main() {
+    section("projection throughput (proximal step, Eqn. 11)");
+    let shapes = [
+        ("vgg-mini conv2 (32x288)", 32usize, 32usize),
+        ("vgg-mini conv7 (128x1152)", 128, 128),
+        ("resnet18 conv (512x4608)", 512, 512),
+    ];
+    for (name, p, c) in shapes {
+        let shape = LayerShape {
+            p,
+            c,
+            kh: 3,
+            kw: 3,
+        };
+        let w = randw(shape.p, shape.q(), 42);
+        for scheme in Scheme::all() {
+            bench(
+                &format!("{name} {}", scheme.name()),
+                2,
+                10,
+                || {
+                    std::hint::black_box(
+                        project(scheme, &w, &shape, 1.0 / 8.0).unwrap(),
+                    );
+                },
+            );
+        }
+    }
+}

@@ -1,0 +1,50 @@
+//! Bench: PJRT execute overhead + Literal marshalling — the L3↔XLA
+//! boundary cost that the perf pass drives down (EXPERIMENTS.md §Perf).
+
+use repro::bench_harness::{bench, section};
+use repro::runtime::Runtime;
+use repro::tensor::Tensor;
+use repro::train::params::init_params;
+
+fn main() {
+    let rt = Runtime::new("artifacts").expect("run `make artifacts`");
+    section("PJRT execute (lenet fwd_eval, batch 100)");
+    let model = rt.model("lenet_sv10").unwrap().clone();
+    let params = init_params(&model, 1);
+    let x = Tensor::zeros(&[rt.manifest.batches.eval, 3, 16, 16]);
+    rt.warm("lenet_sv10", "fwd_eval").unwrap();
+    bench("lenet fwd_eval end-to-end", 3, 20, || {
+        let mut inputs: Vec<&Tensor> = params.iter().collect();
+        inputs.push(&x);
+        std::hint::black_box(
+            rt.exec("lenet_sv10", "fwd_eval", &inputs).unwrap(),
+        );
+    });
+
+    section("PJRT execute (vgg train_step, batch 64)");
+    let vgg = rt.model("vgg_sv10").unwrap().clone();
+    let vp = init_params(&vgg, 1);
+    let xb = Tensor::zeros(&[rt.manifest.batches.train, 3, 16, 16]);
+    let yb = Tensor::zeros(&[rt.manifest.batches.train, 10]);
+    let lr = Tensor::scalar(0.01);
+    rt.warm("vgg_sv10", "train_step").unwrap();
+    bench("vgg train_step end-to-end", 2, 10, || {
+        let mut inputs: Vec<&Tensor> = vp.iter().collect();
+        inputs.push(&xb);
+        inputs.push(&yb);
+        inputs.push(&lr);
+        std::hint::black_box(
+            rt.exec("vgg_sv10", "train_step", &inputs).unwrap(),
+        );
+    });
+
+    let s = rt.stats();
+    println!(
+        "\ncumulative: {} execs, exec {:.3}s, marshal {:.3}s \
+         (marshal share {:.1}%)",
+        s.executions,
+        s.exec_secs,
+        s.marshal_secs,
+        100.0 * s.marshal_secs / (s.exec_secs + s.marshal_secs)
+    );
+}

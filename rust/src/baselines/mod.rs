@@ -1,0 +1,100 @@
+//! Pruning baselines the paper compares against.
+//!
+//! * [`greedy_uniform`] — the "Uniform" greedy method of Table V: project
+//!   every layer's pre-trained weights directly onto Sₙ by magnitude (no
+//!   ADMM, no data) and hand the mask to the client for retraining. With
+//!   privacy this is the natural strawman; the paper shows ADMM beats it.
+//! * [`one_shot_magnitude`] — one-shot irregular magnitude pruning (Liu et
+//!   al. [6], Table I); identical machinery with Scheme::Irregular.
+//! * [`iterative_magnitude`] — iterative magnitude pruning [6]: T stages of
+//!   geometric sparsity ramp, retraining between stages (uses the client's
+//!   data, so it is *not* privacy-preserving — matching the paper's row).
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::data::SynthVision;
+use crate::pruning::{project, LayerShape, Projected, Scheme};
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+pub struct BaselineOutcome {
+    pub params: Vec<Tensor>,
+    pub masks: Vec<Tensor>,
+    pub comp_rate: f64,
+}
+
+/// Magnitude-project every prunable layer of `pretrained` onto Sₙ(α).
+pub fn greedy_uniform(
+    rt: &Runtime,
+    model_id: &str,
+    pretrained: &[Tensor],
+    scheme: Scheme,
+    alpha: f64,
+) -> Result<BaselineOutcome> {
+    let model = rt.model(model_id)?;
+    let mut params = pretrained.to_vec();
+    let mut masks = Vec::new();
+    let mut prs: Vec<Projected> = Vec::new();
+    for (_, op) in model.prunable_convs() {
+        let shape = LayerShape::from_conv(op);
+        let wg = params[op.w]
+            .clone()
+            .reshape(&[shape.p, shape.q()])?;
+        let pr = project(scheme, &wg, &shape, alpha)?;
+        let shape4 = params[op.w].shape().to_vec();
+        params[op.w] = pr.w.clone().reshape(&shape4)?;
+        masks.push(pr.mask.clone());
+        prs.push(pr);
+    }
+    let comp_rate = crate::pruning::compression_rate(&prs);
+    Ok(BaselineOutcome {
+        params,
+        masks,
+        comp_rate,
+    })
+}
+
+/// One-shot magnitude pruning [6]: greedy projection + a single retraining
+/// run (driven by the caller).
+pub fn one_shot_magnitude(
+    rt: &Runtime,
+    model_id: &str,
+    pretrained: &[Tensor],
+    alpha: f64,
+) -> Result<BaselineOutcome> {
+    greedy_uniform(rt, model_id, pretrained, Scheme::Irregular, alpha)
+}
+
+/// Iterative magnitude pruning [6]: `stages` rounds of
+/// project(α_t) → masked retrain, with α_t on a geometric ramp from 1 to α.
+pub fn iterative_magnitude(
+    rt: &Runtime,
+    model_id: &str,
+    pretrained: &[Tensor],
+    alpha: f64,
+    stages: usize,
+    train: &SynthVision,
+    test: &SynthVision,
+    retrain_cfg: &TrainConfig,
+) -> Result<BaselineOutcome> {
+    let mut params = pretrained.to_vec();
+    let mut outcome = None;
+    for t in 1..=stages {
+        let alpha_t = alpha.powf(t as f64 / stages as f64);
+        let o = greedy_uniform(rt, model_id, &params, Scheme::Irregular, alpha_t)?;
+        params = o.params.clone();
+        let mut cfg = retrain_cfg.clone();
+        cfg.steps = retrain_cfg.steps / stages;
+        cfg.log_every = 0;
+        crate::train::retrain_masked(
+            rt, model_id, &mut params, &o.masks, train, test, &cfg,
+        )?;
+        outcome = Some(BaselineOutcome {
+            params: params.clone(),
+            masks: o.masks,
+            comp_rate: o.comp_rate,
+        });
+    }
+    Ok(outcome.expect("stages >= 1"))
+}

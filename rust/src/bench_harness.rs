@@ -1,0 +1,68 @@
+//! Minimal criterion-replacement bench harness (criterion is unavailable
+//! offline). Provides warmup, repeated timing, and mean ± stddev reporting
+//! in a stable, grep-friendly format shared by all `rust/benches/*.rs`.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub mean_ms: f64,
+    pub std_ms: f64,
+    pub reps: usize,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "bench {:44} {:>10.4} ms ± {:>8.4} (n={})",
+            self.name, self.mean_ms, self.std_ms, self.reps
+        );
+    }
+}
+
+/// Time `f` for `reps` repetitions after `warmup` calls.
+pub fn bench(name: &str, warmup: usize, reps: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    let mean = samples.iter().sum::<f64>() / reps as f64;
+    let var = samples
+        .iter()
+        .map(|s| (s - mean).powi(2))
+        .sum::<f64>()
+        / reps as f64;
+    let r = BenchResult {
+        name: name.into(),
+        mean_ms: mean,
+        std_ms: var.sqrt(),
+        reps,
+    };
+    r.print();
+    r
+}
+
+/// Section header for grouping bench output.
+pub fn section(title: &str) {
+    println!("\n### {title}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let r = bench("sleep-free", 1, 5, || {
+            std::hint::black_box((0..1000).sum::<usize>());
+        });
+        assert!(r.mean_ms >= 0.0);
+        assert!(r.std_ms >= 0.0);
+        assert_eq!(r.reps, 5);
+    }
+}

@@ -1,0 +1,298 @@
+//! Command-line interface (hand-rolled; clap is unavailable offline).
+//!
+//! ```text
+//! repro pretrain --model vgg_sv10 [--preset quick]
+//! repro prune    --model vgg_sv10 --scheme pattern --rate 8
+//!                [--method privacy] [--preset quick]
+//! repro retrain  --model ... --scheme ... --rate ...   (prune+retrain row)
+//! repro eval     --model vgg_sv10
+//! repro deploy   --model vgg_sv20 --rate 12            (compile + report)
+//! repro exp      table1|table2|table3|table4|table5|fig3|all [--preset ..]
+//! repro pipeline --model res_sv10 --scheme pattern --rate 8  (end-to-end)
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::Preset;
+use crate::mobile::engine::{self, EngineKind, Fmap};
+use crate::mobile::ir::ModelIR;
+use crate::pruning::Scheme;
+use crate::rng::Pcg32;
+
+use super::{experiments, Ctx, Method};
+
+struct Args {
+    cmd: String,
+    flags: std::collections::BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+fn parse_args() -> Result<Args> {
+    let mut it = std::env::args().skip(1);
+    let Some(cmd) = it.next() else {
+        bail!("usage: repro <command> [--flags]; see `repro help`");
+    };
+    let mut flags = std::collections::BTreeMap::new();
+    let mut positional = Vec::new();
+    while let Some(a) = it.next() {
+        if let Some(name) = a.strip_prefix("--") {
+            let val = it
+                .next()
+                .with_context(|| format!("flag --{name} needs a value"))?;
+            flags.insert(name.to_string(), val);
+        } else {
+            positional.push(a);
+        }
+    }
+    Ok(Args {
+        cmd,
+        flags,
+        positional,
+    })
+}
+
+impl Args {
+    fn model(&self) -> Result<&str> {
+        self.flags
+            .get("model")
+            .map(|s| s.as_str())
+            .context("--model <id> required (see artifacts/manifest.json)")
+    }
+
+    fn preset(&self) -> Result<Preset> {
+        match self.flags.get("preset") {
+            Some(p) => Preset::parse(p),
+            None => Ok(Preset::Quick),
+        }
+    }
+
+    fn scheme(&self) -> Result<Scheme> {
+        Scheme::parse(
+            self.flags
+                .get("scheme")
+                .map(|s| s.as_str())
+                .unwrap_or("pattern"),
+        )
+    }
+
+    fn rate(&self) -> Result<f64> {
+        self.flags
+            .get("rate")
+            .map(|s| s.parse::<f64>().context("--rate must be a number"))
+            .unwrap_or(Ok(8.0))
+    }
+
+    fn method(&self) -> Result<Method> {
+        Method::parse(
+            self.flags
+                .get("method")
+                .map(|s| s.as_str())
+                .unwrap_or("privacy"),
+        )
+    }
+
+    fn artifacts(&self) -> String {
+        self.flags
+            .get("artifacts")
+            .cloned()
+            .unwrap_or_else(|| "artifacts".into())
+    }
+}
+
+const HELP: &str = "\
+privacy-preserving DNN pruning + mobile acceleration (Zhan et al. 2020)
+
+commands:
+  pretrain  --model <id> [--preset smoke|quick|full]
+  prune     --model <id> [--scheme irregular|filter|column|pattern]
+            [--rate N] [--method privacy|whole|admm|uniform|oneshot|iterative]
+  retrain   --model <id> --scheme .. --rate ..      full prune+retrain row
+  eval      --model <id>                            pre-trained accuracy
+  deploy    --model <id> [--rate N]                 compile + mobile report
+  exp       <table1|table2|table3|table4|table5|fig3|all> [--preset ..]
+  pipeline  --model <id> [--scheme ..] [--rate N]   end-to-end demo
+  models                                            list models in manifest
+  help
+common flags: --artifacts <dir> (default ./artifacts), --preset (default quick)
+";
+
+pub fn main() -> Result<()> {
+    let args = parse_args().inspect_err(|_| {
+        eprintln!("{HELP}");
+    })?;
+    match args.cmd.as_str() {
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        "models" => {
+            let ctx = Ctx::new(args.artifacts(), Preset::Quick)?;
+            for (id, m) in &ctx.rt.manifest.models {
+                println!(
+                    "{id:16} arch={:12} classes={:3} in={}x{} prunable convs={}",
+                    m.arch,
+                    m.classes,
+                    m.in_hw,
+                    m.in_hw,
+                    m.prunable.len()
+                );
+            }
+            Ok(())
+        }
+        "pretrain" => {
+            let ctx = Ctx::new(args.artifacts(), args.preset()?)?;
+            let (_, acc) = ctx.pretrained(args.model()?)?;
+            println!("base accuracy: {acc:.4}");
+            Ok(())
+        }
+        "eval" => {
+            let ctx = Ctx::new(args.artifacts(), args.preset()?)?;
+            let model = args.model()?;
+            let (params, _) = ctx.pretrained(model)?;
+            let (_, te) = ctx.data(model)?;
+            let acc = crate::train::evaluate(&ctx.rt, model, &params, &te)?;
+            println!("accuracy: {acc:.4}");
+            Ok(())
+        }
+        "prune" => {
+            let ctx = Ctx::new(args.artifacts(), args.preset()?)?;
+            let model = args.model()?;
+            let (_, masks, comp, secs, _) = ctx.prune(
+                model,
+                args.method()?,
+                args.scheme()?,
+                args.rate()?,
+            )?;
+            println!(
+                "pruned {model}: comp rate {comp:.2}x, {} masks, {secs:.1}s",
+                masks.len()
+            );
+            Ok(())
+        }
+        "retrain" => {
+            let ctx = Ctx::new(args.artifacts(), args.preset()?)?;
+            let row = ctx.prune_retrain(
+                args.model()?,
+                args.method()?,
+                args.scheme()?,
+                args.rate()?,
+            )?;
+            println!(
+                "comp {:.1}x  base {:.3}  pruned {:.3}  loss {:+.3}",
+                row.comp_rate,
+                row.base_acc,
+                row.prune_acc,
+                row.base_acc - row.prune_acc
+            );
+            Ok(())
+        }
+        "deploy" => {
+            let ctx = Ctx::new(args.artifacts(), args.preset()?)?;
+            let model = args.model()?;
+            let (params, _, comp, _, _) = ctx.prune(
+                model,
+                args.method()?,
+                Scheme::Pattern,
+                args.rate()?,
+            )?;
+            let spec = ctx.rt.model(model)?.clone();
+            let compiled = engine::compile(ModelIR::build(&spec, &params)?);
+            let rep = &compiled.report;
+            println!("compiled {model} @ {comp:.1}x:");
+            println!(
+                "  MACs dense {} -> sparse {} ({:.2}x)",
+                rep.total_dense_macs(),
+                rep.total_sparse_macs(),
+                rep.total_dense_macs() as f64
+                    / rep.total_sparse_macs().max(1) as f64
+            );
+            println!(
+                "  weights dense {}B -> compressed {}B ({:.2}x)",
+                rep.total_dense_bytes(),
+                rep.total_compressed_bytes(),
+                rep.total_dense_bytes() as f64
+                    / rep.total_compressed_bytes().max(1) as f64
+            );
+            println!(
+                "  LRE gain {:.2}x, reorder gain {:.2}x",
+                rep.lre_gain(),
+                rep.reorder_gain()
+            );
+            let mut rng = Pcg32::seeded(7);
+            let img = Fmap {
+                c: 3,
+                hw: spec.in_hw,
+                data: (0..3 * spec.in_hw * spec.in_hw)
+                    .map(|_| rng.uniform())
+                    .collect(),
+            };
+            for kind in [EngineKind::Dense, EngineKind::Sparse] {
+                for _ in 0..3 {
+                    engine::infer(&compiled, &img, kind);
+                }
+                let t = std::time::Instant::now();
+                for _ in 0..20 {
+                    std::hint::black_box(engine::infer(
+                        &compiled,
+                        &img,
+                        kind,
+                    ));
+                }
+                println!(
+                    "  host {kind:?} inference: {:.3} ms/frame",
+                    t.elapsed().as_secs_f64() * 50.0
+                );
+            }
+            Ok(())
+        }
+        "exp" => {
+            let which = args
+                .positional
+                .first()
+                .map(|s| s.as_str())
+                .unwrap_or("all");
+            let ctx = Ctx::new(args.artifacts(), args.preset()?)?;
+            match which {
+                "table1" => println!("{}", experiments::table1(&ctx)?.render()),
+                "table2" => println!("{}", experiments::table2(&ctx)?.render()),
+                "table3" => println!("{}", experiments::table3(&ctx)?.render()),
+                "table4" => println!("{}", experiments::table4(&ctx)?.render()),
+                "table5" => println!("{}", experiments::table5(&ctx)?.render()),
+                "fig3" => {
+                    let (a, b) = experiments::fig3(&ctx)?;
+                    println!("{}\n{}", a.render(), b.render());
+                }
+                "all" => experiments::all(&ctx)?,
+                _ => bail!("unknown experiment {which:?}"),
+            }
+            Ok(())
+        }
+        "pipeline" => {
+            let ctx = Ctx::new(args.artifacts(), args.preset()?)?;
+            let model = args.model()?;
+            let scheme = args.scheme()?;
+            let rate = args.rate()?;
+            println!(
+                "=== privacy-preserving pipeline: {model} {} {rate}x ===",
+                scheme.name()
+            );
+            let (_, base) = ctx.pretrained(model)?;
+            println!("[1/3] client pre-trained model: acc {base:.3}");
+            let row = ctx.prune_retrain(model, Method::Privacy, scheme, rate)?;
+            println!(
+                "[2/3] designer pruned on synthetic data: {:.1}x compression",
+                row.comp_rate
+            );
+            println!(
+                "[3/3] client retrained with mask: acc {:.3} (loss {:+.3})",
+                row.prune_acc,
+                row.base_acc - row.prune_acc
+            );
+            Ok(())
+        }
+        other => {
+            eprintln!("{HELP}");
+            bail!("unknown command {other:?}");
+        }
+    }
+}

@@ -1,0 +1,345 @@
+//! Experiment drivers: one function per paper table/figure (DESIGN.md §4).
+//!
+//! Model/dataset mapping (DESIGN.md §2):
+//!   CIFAR-10   → SynthVision-10 @ 16px  (vgg_sv10 / res_sv10)
+//!   CIFAR-100  → SynthVision-20 @ 16px  (vgg_sv20 / res_sv20 / resdeep_sv20)
+//!   ImageNet   → SynthVision-20 @ 32px  (res32_sv20)
+//!
+//! Each driver regenerates the table rows by running the pipeline for real
+//! (rows are cached under runs/results/, so reruns are incremental) and
+//! saves text + markdown renderings under runs/tables/.
+
+use anyhow::Result;
+
+use crate::mobile::costmodel::{
+    self, latency_ms, AnalyticModel, Device, ALL_ENGINES, GALAXY_S10,
+};
+use crate::mobile::engine::{self, EngineKind, Fmap};
+use crate::mobile::ir::ModelIR;
+use crate::pruning::Scheme;
+use crate::report::{loss_cell, pct, rate, Table};
+use crate::rng::Pcg32;
+
+use super::{Ctx, Method, RowResult};
+
+fn acc_row(t: &mut Table, r: &RowResult) {
+    t.row(&[
+        r.model.clone(),
+        r.scheme.name().into(),
+        r.method.name().into(),
+        rate(r.comp_rate),
+        pct(r.base_acc),
+        pct(r.prune_acc),
+        loss_cell(r.base_acc, r.prune_acc),
+        if r.method.preserves_privacy() { "yes" } else { "no" }.into(),
+    ]);
+}
+
+fn acc_table(title: &str) -> Table {
+    Table::new(
+        title,
+        &[
+            "Network",
+            "Pruning Scheme",
+            "Method",
+            "CONV Comp. Rate",
+            "Base Accuracy",
+            "Pruning Accuracy",
+            "Accuracy loss",
+            "Privacy",
+        ],
+    )
+}
+
+/// Table I — CIFAR-10 analogue: ResNet & VGG × four schemes ×
+/// {ADMM†, Privacy-Preserving} (+ magnitude-pruning baselines on VGG).
+pub fn table1(ctx: &Ctx) -> Result<Table> {
+    let mut t = acc_table(
+        "Table I analogue: SynthVision-10 (CIFAR-10 stand-in)",
+    );
+    for model in ["res_sv10", "vgg_sv10"] {
+        let filter_rate = if model == "res_sv10" { 4.0 } else { 2.3 };
+        let cases: Vec<(Scheme, f64)> = vec![
+            (Scheme::Irregular, 16.0),
+            (Scheme::Column, 6.0),
+            (Scheme::Filter, filter_rate),
+        ];
+        for (scheme, r) in cases {
+            for method in [Method::Traditional, Method::Privacy] {
+                acc_row(&mut t, &ctx.prune_retrain(model, method, scheme, r)?);
+            }
+        }
+        // magnitude-pruning baselines (paper rows [6], VGG only)
+        if model == "vgg_sv10" {
+            acc_row(
+                &mut t,
+                &ctx.prune_retrain(model, Method::Iterative, Scheme::Irregular, 2.0)?,
+            );
+            acc_row(
+                &mut t,
+                &ctx.prune_retrain(model, Method::OneShot, Scheme::Irregular, 2.5)?,
+            );
+        }
+        // pattern sweep 8/12/16x
+        acc_row(
+            &mut t,
+            &ctx.prune_retrain(model, Method::Traditional, Scheme::Pattern, 16.0)?,
+        );
+        for r in [8.0, 16.0] {
+            acc_row(
+                &mut t,
+                &ctx.prune_retrain(model, Method::Privacy, Scheme::Pattern, r)?,
+            );
+        }
+    }
+    t.save(ctx.runs.join("tables"), "table1")?;
+    Ok(t)
+}
+
+/// Table II — CIFAR-100 analogue: pattern pruning across three networks.
+pub fn table2(ctx: &Ctx) -> Result<Table> {
+    let mut t = acc_table(
+        "Table II analogue: SynthVision-20 (CIFAR-100 stand-in), pattern",
+    );
+    for (model, rates) in [
+        ("res_sv20", vec![8.0, 16.0]),
+        ("resdeep_sv20", vec![8.0, 16.0]),
+        ("vgg_sv20", vec![8.0, 12.0]),
+    ] {
+        for r in rates {
+            acc_row(
+                &mut t,
+                &ctx.prune_retrain(model, Method::Privacy, Scheme::Pattern, r)?,
+            );
+        }
+    }
+    t.save(ctx.runs.join("tables"), "table2")?;
+    Ok(t)
+}
+
+/// Table III — ImageNet analogue: pattern 4x/6x (+ ADMM† 6x) on the
+/// 20-class ResNet. The 32px variant (res32_sv20) is in the manifest and
+/// runnable via `repro retrain --model res32_sv20 ...`, but its 4x compute
+/// is excluded from the default suite (quick preset is CPU-budgeted).
+pub fn table3(ctx: &Ctx) -> Result<Table> {
+    let mut t = acc_table(
+        "Table III analogue: SynthVision-20 ResNet (ImageNet stand-in)",
+    );
+    let model = "res_sv20";
+    acc_row(
+        &mut t,
+        &ctx.prune_retrain(model, Method::Traditional, Scheme::Pattern, 6.0)?,
+    );
+    for r in [4.0, 6.0] {
+        acc_row(
+            &mut t,
+            &ctx.prune_retrain(model, Method::Privacy, Scheme::Pattern, r)?,
+        );
+    }
+    t.save(ctx.runs.join("tables"), "table3")?;
+    Ok(t)
+}
+
+/// Table IV — problem (3) vs problem (2): accuracy + per-iteration runtime.
+pub fn table4(ctx: &Ctx) -> Result<Table> {
+    let mut t = Table::new(
+        "Table IV analogue: problem formulations (VGG, irregular 16x)",
+        &[
+            "Method",
+            "Pruning Scheme",
+            "Base Accuracy",
+            "Prune Accuracy",
+            "CONV Comp. Rate",
+            "Per Iter. Run Time",
+        ],
+    );
+    let model = "vgg_sv10";
+    let p3 = ctx.prune_retrain(model, Method::Privacy, Scheme::Irregular, 16.0)?;
+    let p2 =
+        ctx.prune_retrain(model, Method::PrivacyWhole, Scheme::Irregular, 16.0)?;
+    for (name, r) in [("Problem (3) layer-wise", &p3), ("Problem (2) whole-model", &p2)]
+    {
+        t.row(&[
+            name.into(),
+            r.scheme.name().into(),
+            pct(r.base_acc),
+            pct(r.prune_acc),
+            rate(r.comp_rate),
+            format!("{:.3} secs", r.mean_iter_secs),
+        ]);
+    }
+    t.save(ctx.runs.join("tables"), "table4")?;
+    Ok(t)
+}
+
+/// Table V — ADMM vs greedy/Uniform under privacy, all four schemes.
+pub fn table5(ctx: &Ctx) -> Result<Table> {
+    let mut t = acc_table(
+        "Table V analogue: effectiveness vs greedy (Uniform) pruning",
+    );
+    for model in ["res_sv10", "vgg_sv10"] {
+        let filter_rate = if model == "res_sv10" { 4.0 } else { 2.3 };
+        for (scheme, r) in [
+            (Scheme::Irregular, 16.0),
+            (Scheme::Column, 6.0),
+            (Scheme::Filter, filter_rate),
+            (Scheme::Pattern, 16.0),
+        ] {
+            for method in [Method::Uniform, Method::Privacy] {
+                acc_row(&mut t, &ctx.prune_retrain(model, method, scheme, r)?);
+            }
+        }
+    }
+    t.save(ctx.runs.join("tables"), "table5")?;
+    Ok(t)
+}
+
+/// Fig. 3 — mobile CPU/GPU inference latency, ours vs TFLite/TVM/MNN.
+///
+/// Two parts: (a) *measured* host-CPU wallclock of the compiled sparse
+/// engine vs the dense engine on our pattern-pruned mini models, and (b)
+/// the calibrated S10 cost model applied to the paper-scale VGG-16@12x and
+/// ResNet-18@6x conv stacks using the compiler-pass gains measured in (a).
+pub fn fig3(ctx: &Ctx) -> Result<(Table, Table)> {
+    // -- part (a): real execution on pruned minis --------------------------
+    let mut meas = Table::new(
+        "Fig. 3 (measured): host CPU per-frame latency, compiled sparse vs dense",
+        &[
+            "Model",
+            "Comp. Rate",
+            "Dense ms",
+            "Sparse ms",
+            "Speedup",
+            "LRE gain",
+            "Reorder gain",
+            "Compressed bytes",
+        ],
+    );
+    let mut gains = Vec::new();
+    for (model_id, r) in [("vgg_sv20", 12.0), ("res_sv20", 6.0)] {
+        // latency depends only on the sparsity structure (same α ⇒ same
+        // kept-kernel counts); magnitude projection produces an identical
+        // structure class without re-running ADMM (EXPERIMENTS.md §Fig3)
+        let (params, _, comp, _, _) =
+            ctx.prune(model_id, Method::Uniform, Scheme::Pattern, r)?;
+        let spec = ctx.rt.model(model_id)?.clone();
+        let compiled = engine::compile(ModelIR::build(&spec, &params)?);
+        let mut rng = Pcg32::seeded(99);
+        let img = Fmap {
+            c: 3,
+            hw: spec.in_hw,
+            data: (0..3 * spec.in_hw * spec.in_hw)
+                .map(|_| rng.uniform())
+                .collect(),
+        };
+        let time = |kind: EngineKind| {
+            for _ in 0..3 {
+                engine::infer(&compiled, &img, kind);
+            }
+            let reps = 30;
+            let t = std::time::Instant::now();
+            for _ in 0..reps {
+                std::hint::black_box(engine::infer(
+                    &compiled,
+                    std::hint::black_box(&img),
+                    kind,
+                ));
+            }
+            t.elapsed().as_secs_f64() * 1e3 / reps as f64
+        };
+        let td = time(EngineKind::Dense);
+        let ts = time(EngineKind::Sparse);
+        let rep = &compiled.report;
+        gains.push((rep.lre_gain(), rep.reorder_gain()));
+        meas.row(&[
+            model_id.into(),
+            rate(comp),
+            format!("{td:.3}"),
+            format!("{ts:.3}"),
+            format!("{:.2}x", td / ts),
+            format!("{:.2}x", rep.lre_gain()),
+            format!("{:.2}x", rep.reorder_gain()),
+            format!(
+                "{} (dense {})",
+                rep.total_compressed_bytes(),
+                rep.total_dense_bytes()
+            ),
+        ]);
+    }
+    meas.save(ctx.runs.join("tables"), "fig3_measured")?;
+
+    // -- part (b): S10 cost model at paper scale ---------------------------
+    let mut est = Table::new(
+        "Fig. 3 (estimated, Galaxy S10 cost model): ms per frame",
+        &[
+            "Model",
+            "Device",
+            "TFLite",
+            "TVM",
+            "MNN",
+            "Ours",
+            "Speedup vs TFLite/TVM/MNN",
+        ],
+    );
+    let (lre_vgg, ro_vgg) = gains[0];
+    let (lre_r18, ro_r18) = gains[1];
+    let models = [
+        AnalyticModel::paper_scale(
+            "VGG-16 CIFAR-100 12x",
+            &costmodel::vgg16_cifar(),
+            12.0,
+            lre_vgg,
+            ro_vgg,
+        ),
+        AnalyticModel::paper_scale(
+            "ResNet-18 ImageNet 6x",
+            &costmodel::resnet18_imagenet(),
+            6.0,
+            lre_r18,
+            ro_r18,
+        ),
+    ];
+    for m in &models {
+        for dev in [Device::Cpu, Device::Gpu] {
+            let ts: Vec<f64> = ALL_ENGINES
+                .iter()
+                .map(|e| latency_ms(m, e, &GALAXY_S10, dev))
+                .collect();
+            let ours = ts[3];
+            est.row(&[
+                m.name.clone(),
+                format!("{dev:?}"),
+                format!("{:.1}", ts[0]),
+                format!("{:.1}", ts[1]),
+                format!("{:.1}", ts[2]),
+                format!("{:.1}", ours),
+                format!(
+                    "{:.1}x / {:.1}x / {:.1}x",
+                    ts[0] / ours,
+                    ts[1] / ours,
+                    ts[2] / ours
+                ),
+            ]);
+        }
+    }
+    est.save(ctx.runs.join("tables"), "fig3_estimated")?;
+    Ok((meas, est))
+}
+
+/// Run every experiment and print the tables.
+pub fn all(ctx: &Ctx) -> Result<()> {
+    let (f3a, f3b) = fig3(ctx)?;
+    println!("{}", f3a.render());
+    println!("{}", f3b.render());
+    let t1 = table1(ctx)?;
+    println!("{}", t1.render());
+    let t5 = table5(ctx)?;
+    println!("{}", t5.render());
+    let t4 = table4(ctx)?;
+    println!("{}", t4.render());
+    let t2 = table2(ctx)?;
+    println!("{}", t2.render());
+    let t3 = table3(ctx)?;
+    println!("{}", t3.render());
+    Ok(())
+}

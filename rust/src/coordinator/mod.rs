@@ -1,0 +1,396 @@
+//! L3 coordinator: experiment context, pipeline stages, result caching.
+//!
+//! [`Ctx`] owns the runtime, the preset-scaled budgets, and the `runs/`
+//! directory. Every pipeline stage (pretrain → prune → retrain → deploy) is
+//! resumable: pre-trained checkpoints and per-row experiment results are
+//! cached on disk, so `repro exp all` can be interrupted and rerun.
+
+pub mod cli;
+pub mod experiments;
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::admm::{self, DataSource};
+use crate::baselines;
+use crate::config::{AdmmConfig, Preset, TrainConfig};
+use crate::data::SynthVision;
+use crate::pruning::Scheme;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+use crate::train::{self, params as pstore};
+use crate::util::json::Json;
+
+/// How a pruned model is produced (the paper's method column).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// problem (3) on synthetic data — the paper's framework
+    Privacy,
+    /// problem (2) on synthetic data (Table IV comparison)
+    PrivacyWhole,
+    /// ADMM† on the client's data (no privacy)
+    Traditional,
+    /// greedy magnitude projection (Table V "Uniform")
+    Uniform,
+    /// one-shot magnitude pruning [6]
+    OneShot,
+    /// iterative magnitude pruning [6]
+    Iterative,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Privacy => "Privacy-Preserving",
+            Method::PrivacyWhole => "Privacy-Preserving (whole, prob. 2)",
+            Method::Traditional => "ADMM\u{2020}",
+            Method::Uniform => "Uniform",
+            Method::OneShot => "One Shot Pruning",
+            Method::Iterative => "Iterative Pruning",
+        }
+    }
+
+    pub fn key(&self) -> &'static str {
+        match self {
+            Method::Privacy => "privacy",
+            Method::PrivacyWhole => "whole",
+            Method::Traditional => "admm",
+            Method::Uniform => "uniform",
+            Method::OneShot => "oneshot",
+            Method::Iterative => "iterative",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s {
+            "privacy" => Method::Privacy,
+            "whole" => Method::PrivacyWhole,
+            "admm" => Method::Traditional,
+            "uniform" => Method::Uniform,
+            "oneshot" => Method::OneShot,
+            "iterative" => Method::Iterative,
+            _ => anyhow::bail!(
+                "unknown method {s:?} \
+                 (privacy|whole|admm|uniform|oneshot|iterative)"
+            ),
+        })
+    }
+
+    pub fn preserves_privacy(&self) -> bool {
+        matches!(
+            self,
+            Method::Privacy | Method::PrivacyWhole | Method::Uniform
+        )
+    }
+}
+
+/// Output of a prune stage: (pruned params, masks, achieved compression,
+/// wall seconds, mean ADMM-iteration seconds).
+pub type PruneStage = (Vec<Tensor>, Vec<Tensor>, f64, f64, f64);
+
+/// One pruning-experiment row (a line of Tables I/II/III/V).
+#[derive(Clone, Debug)]
+pub struct RowResult {
+    pub model: String,
+    pub scheme: Scheme,
+    pub method: Method,
+    pub target_rate: f64,
+    pub comp_rate: f64,
+    pub base_acc: f64,
+    pub prune_acc: f64,
+    pub prune_secs: f64,
+    pub retrain_secs: f64,
+    pub mean_iter_secs: f64,
+}
+
+pub struct Ctx {
+    pub rt: Runtime,
+    pub preset: Preset,
+    pub runs: PathBuf,
+    pub verbose: bool,
+}
+
+impl Ctx {
+    pub fn new(
+        artifacts: impl AsRef<std::path::Path>,
+        preset: Preset,
+    ) -> Result<Self> {
+        Ok(Ctx {
+            rt: Runtime::new(artifacts)?,
+            preset,
+            runs: PathBuf::from("runs"),
+            verbose: true,
+        })
+    }
+
+    pub fn log(&self, msg: &str) {
+        if self.verbose {
+            eprintln!("[repro] {msg}");
+        }
+    }
+
+    fn dataset_sizes(&self) -> (usize, usize) {
+        match self.preset {
+            Preset::Smoke => (200, 100),
+            Preset::Quick => (1600, 600),
+            Preset::Full => (3000, 1000),
+        }
+    }
+
+    /// Client train/test splits. The dataset seed depends only on
+    /// (classes, hw) so every model of a family sees the same data.
+    pub fn data(&self, model_id: &str) -> Result<(SynthVision, SynthVision)> {
+        let m = self.rt.model(model_id)?;
+        let (ntr, nte) = self.dataset_sizes();
+        let seed = 0x5EED_0000 + (m.classes * 131 + m.in_hw) as u64;
+        Ok((
+            SynthVision::generate(m.classes, m.in_hw, ntr, seed, 0),
+            SynthVision::generate(m.classes, m.in_hw, nte, seed, 1),
+        ))
+    }
+
+    fn ckpt_path(&self, model_id: &str) -> PathBuf {
+        self.runs
+            .join("ckpt")
+            .join(format!("{model_id}_{:?}.ckpt", self.preset))
+    }
+
+    /// Pre-trained params + base accuracy, cached under runs/ckpt/.
+    pub fn pretrained(&self, model_id: &str) -> Result<(Vec<Tensor>, f64)> {
+        let spec = self.rt.model(model_id)?.clone();
+        let path = self.ckpt_path(model_id);
+        let acc_path = path.with_extension("acc");
+        if path.exists() && acc_path.exists() {
+            let params = pstore::load(&path, &spec)?;
+            let acc: f64 =
+                std::fs::read_to_string(&acc_path)?.trim().parse()?;
+            return Ok((params, acc));
+        }
+        self.log(&format!("pretraining {model_id} ({:?})", self.preset));
+        let (tr, te) = self.data(model_id)?;
+        let mut params = pstore::init_params(&spec, 0xBA5E);
+        let cfg = TrainConfig::pretrain(self.preset);
+        let t = crate::util::Stopwatch::start();
+        let trace =
+            train::pretrain(&self.rt, model_id, &mut params, &tr, &te, &cfg)?;
+        let acc = trace.final_acc();
+        self.log(&format!(
+            "pretrained {model_id}: acc {:.3} in {:.0}s",
+            acc,
+            t.secs()
+        ));
+        pstore::save(&path, &spec, &params)?;
+        std::fs::write(&acc_path, format!("{acc}"))?;
+        Ok((params, acc))
+    }
+
+    /// Run one pruning method at `rate`× target compression. Returns
+    /// (pruned params, masks, achieved rate, wall secs, mean iter secs).
+    pub fn prune(
+        &self,
+        model_id: &str,
+        method: Method,
+        scheme: Scheme,
+        rate: f64,
+    ) -> Result<PruneStage> {
+        let alpha = 1.0 / rate;
+        let (pre, _) = self.pretrained(model_id)?;
+        let cfg = AdmmConfig::preset(self.preset);
+        let t = crate::util::Stopwatch::start();
+        let (params, masks, comp, iters) = match method {
+            Method::Privacy => {
+                let o = admm::prune_layerwise(
+                    &self.rt,
+                    model_id,
+                    &pre,
+                    scheme,
+                    alpha,
+                    &cfg,
+                    DataSource::Synthetic,
+                )?;
+                let mi = mean(&o.trace.per_iter_secs);
+                (o.params, o.masks, o.comp_rate, mi)
+            }
+            Method::PrivacyWhole => {
+                let o = admm::prune_whole(
+                    &self.rt, model_id, &pre, scheme, alpha, &cfg,
+                )?;
+                let mi = mean(&o.trace.per_iter_secs);
+                (o.params, o.masks, o.comp_rate, mi)
+            }
+            Method::Traditional => {
+                let (tr, _) = self.data(model_id)?;
+                let o = admm::prune_traditional(
+                    &self.rt, model_id, &pre, scheme, alpha, &cfg, &tr,
+                )?;
+                let mi = mean(&o.trace.per_iter_secs);
+                (o.params, o.masks, o.comp_rate, mi)
+            }
+            Method::Uniform => {
+                let o = baselines::greedy_uniform(
+                    &self.rt, model_id, &pre, scheme, alpha,
+                )?;
+                (o.params, o.masks, o.comp_rate, 0.0)
+            }
+            Method::OneShot => {
+                let o = baselines::one_shot_magnitude(
+                    &self.rt, model_id, &pre, alpha,
+                )?;
+                (o.params, o.masks, o.comp_rate, 0.0)
+            }
+            Method::Iterative => {
+                let (tr, te) = self.data(model_id)?;
+                let rcfg = TrainConfig::retrain(self.preset);
+                let o = baselines::iterative_magnitude(
+                    &self.rt, model_id, &pre, alpha, 3, &tr, &te, &rcfg,
+                )?;
+                (o.params, o.masks, o.comp_rate, 0.0)
+            }
+        };
+        Ok((params, masks, comp, t.secs(), iters))
+    }
+
+    fn row_cache_path(
+        &self,
+        model_id: &str,
+        method: Method,
+        scheme: Scheme,
+        rate: f64,
+    ) -> PathBuf {
+        self.runs.join("results").join(format!(
+            "{model_id}_{}_{}_{rate:.1}_{:?}.json",
+            scheme.name(),
+            method.key(),
+            self.preset
+        ))
+    }
+
+    /// Full prune→retrain row, cached under runs/results/.
+    pub fn prune_retrain(
+        &self,
+        model_id: &str,
+        method: Method,
+        scheme: Scheme,
+        rate: f64,
+    ) -> Result<RowResult> {
+        let cache = self.row_cache_path(model_id, method, scheme, rate);
+        if let Some(row) =
+            self.load_row(&cache, model_id, method, scheme, rate)
+        {
+            return Ok(row);
+        }
+        let (_, base_acc) = self.pretrained(model_id)?;
+        self.log(&format!(
+            "prune {model_id} {} {} {rate}x",
+            method.key(),
+            scheme.name()
+        ));
+        let (mut params, masks, comp, prune_secs, mean_iter) =
+            self.prune(model_id, method, scheme, rate)?;
+        let (tr, te) = self.data(model_id)?;
+        let rcfg = TrainConfig::retrain(self.preset);
+        let t = crate::util::Stopwatch::start();
+        let trace = train::retrain_masked(
+            &self.rt, model_id, &mut params, &masks, &tr, &te, &rcfg,
+        )?;
+        let row = RowResult {
+            model: model_id.into(),
+            scheme,
+            method,
+            target_rate: rate,
+            comp_rate: comp,
+            base_acc,
+            prune_acc: trace.final_acc(),
+            prune_secs,
+            retrain_secs: t.secs(),
+            mean_iter_secs: mean_iter,
+        };
+        self.log(&format!(
+            "row {model_id}/{}/{}: comp {:.1}x base {:.3} pruned {:.3}",
+            scheme.name(),
+            method.key(),
+            row.comp_rate,
+            row.base_acc,
+            row.prune_acc
+        ));
+        self.save_row(&cache, &row)?;
+        Ok(row)
+    }
+
+    fn save_row(&self, path: &PathBuf, row: &RowResult) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("comp_rate".into(), Json::Num(row.comp_rate));
+        obj.insert("base_acc".into(), Json::Num(row.base_acc));
+        obj.insert("prune_acc".into(), Json::Num(row.prune_acc));
+        obj.insert("prune_secs".into(), Json::Num(row.prune_secs));
+        obj.insert("retrain_secs".into(), Json::Num(row.retrain_secs));
+        obj.insert("mean_iter_secs".into(), Json::Num(row.mean_iter_secs));
+        std::fs::write(path, Json::Obj(obj).to_string())?;
+        Ok(())
+    }
+
+    fn load_row(
+        &self,
+        path: &PathBuf,
+        model_id: &str,
+        method: Method,
+        scheme: Scheme,
+        rate: f64,
+    ) -> Option<RowResult> {
+        let text = std::fs::read_to_string(path).ok()?;
+        let j = Json::parse(&text).ok()?;
+        let f = |k: &str| j.get(k).ok().and_then(|v| v.as_f64().ok());
+        Some(RowResult {
+            model: model_id.into(),
+            scheme,
+            method,
+            target_rate: rate,
+            comp_rate: f("comp_rate")?,
+            base_acc: f("base_acc")?,
+            prune_acc: f("prune_acc")?,
+            prune_secs: f("prune_secs")?,
+            retrain_secs: f("retrain_secs")?,
+            mean_iter_secs: f("mean_iter_secs")?,
+        })
+    }
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in [
+            Method::Privacy,
+            Method::PrivacyWhole,
+            Method::Traditional,
+            Method::Uniform,
+            Method::OneShot,
+            Method::Iterative,
+        ] {
+            assert_eq!(Method::parse(m.key()).unwrap(), m);
+        }
+        assert!(Method::parse("nope").is_err());
+    }
+
+    #[test]
+    fn privacy_flags() {
+        assert!(Method::Privacy.preserves_privacy());
+        assert!(Method::Uniform.preserves_privacy());
+        assert!(!Method::Traditional.preserves_privacy());
+        assert!(!Method::Iterative.preserves_privacy());
+    }
+}

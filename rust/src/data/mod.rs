@@ -1,0 +1,283 @@
+//! Dataset substrates.
+//!
+//! * [`SynthVision`] — the *client's confidential dataset*: a procedural
+//!   class-conditional image classification task standing in for
+//!   CIFAR-10/100/ImageNet (DESIGN.md §2). Each class has a deterministic
+//!   signature (base color + oriented stripe field + blob); samples add
+//!   pixel noise. Learnable by the mini nets to high accuracy, yet
+//!   non-trivial (greedy privacy-free pruning visibly degrades it).
+//! * [`designer_batch`] — the *system designer's* synthetic data: i.i.d.
+//!   discrete-uniform pixels, exactly the paper's generator (§III-B). It
+//!   encodes zero knowledge of the client data.
+
+use crate::rng::Pcg32;
+use crate::tensor::Tensor;
+
+#[derive(Clone, Debug)]
+struct ClassSig {
+    base: [f32; 3],
+    freq_x: f32,
+    freq_y: f32,
+    phase: f32,
+    blob_x: f32,
+    blob_y: f32,
+    blob_amp: [f32; 3],
+}
+
+impl ClassSig {
+    fn new(dataset_seed: u64, class: usize) -> Self {
+        let mut r = Pcg32::new(dataset_seed ^ 0x51_6e47, class as u64 + 1);
+        ClassSig {
+            base: [r.uniform(), r.uniform(), r.uniform()],
+            freq_x: r.uniform_in(0.5, 3.0),
+            freq_y: r.uniform_in(0.5, 3.0),
+            phase: r.uniform_in(0.0, std::f32::consts::TAU),
+            blob_x: r.uniform_in(0.2, 0.8),
+            blob_y: r.uniform_in(0.2, 0.8),
+            blob_amp: [
+                r.uniform_in(-0.8, 0.8),
+                r.uniform_in(-0.8, 0.8),
+                r.uniform_in(-0.8, 0.8),
+            ],
+        }
+    }
+
+    fn pixel(&self, c: usize, i: usize, j: usize, hw: usize) -> f32 {
+        let y = i as f32 / hw as f32;
+        let x = j as f32 / hw as f32;
+        let stripe = (self.freq_x * std::f32::consts::TAU * x
+            + self.freq_y * std::f32::consts::TAU * y
+            + self.phase)
+            .sin()
+            * 0.25;
+        let d2 = (x - self.blob_x).powi(2) + (y - self.blob_y).powi(2);
+        let blob = self.blob_amp[c] * (-d2 / 0.02).exp();
+        self.base[c] + stripe + blob
+    }
+}
+
+/// In-memory labelled image set, NCHW f32 in [0, 1].
+pub struct SynthVision {
+    pub images: Vec<f32>,
+    pub labels: Vec<usize>,
+    pub classes: usize,
+    pub hw: usize,
+    pub n: usize,
+}
+
+impl SynthVision {
+    /// `split` separates train/test streams for the same class signatures.
+    pub fn generate(
+        classes: usize,
+        hw: usize,
+        n: usize,
+        seed: u64,
+        split: u64,
+    ) -> Self {
+        let sigs: Vec<ClassSig> =
+            (0..classes).map(|k| ClassSig::new(seed, k)).collect();
+        let mut rng = Pcg32::new(seed ^ 0xda7a, split);
+        let mut images = vec![0.0f32; n * 3 * hw * hw];
+        let mut labels = vec![0usize; n];
+        let noise = 0.18;
+        for s in 0..n {
+            let k = s % classes; // balanced
+            labels[s] = k;
+            let sig = &sigs[k];
+            let img = &mut images[s * 3 * hw * hw..(s + 1) * 3 * hw * hw];
+            for c in 0..3 {
+                for i in 0..hw {
+                    for j in 0..hw {
+                        let v = sig.pixel(c, i, j, hw)
+                            + rng.normal_scaled(noise);
+                        img[c * hw * hw + i * hw + j] = v.clamp(0.0, 1.0);
+                    }
+                }
+            }
+        }
+        SynthVision {
+            images,
+            labels,
+            classes,
+            hw,
+            n,
+        }
+    }
+
+    fn sample_len(&self) -> usize {
+        3 * self.hw * self.hw
+    }
+
+    /// Copy samples `idx` into an NCHW batch tensor (zero-padded to `bsz`)
+    /// plus the one-hot label tensor.
+    pub fn gather(&self, idx: &[usize], bsz: usize) -> (Tensor, Tensor) {
+        assert!(idx.len() <= bsz);
+        let sl = self.sample_len();
+        let mut x = vec![0.0f32; bsz * sl];
+        let mut y = vec![0.0f32; bsz * self.classes];
+        for (bi, &s) in idx.iter().enumerate() {
+            x[bi * sl..(bi + 1) * sl]
+                .copy_from_slice(&self.images[s * sl..(s + 1) * sl]);
+            y[bi * self.classes + self.labels[s]] = 1.0;
+        }
+        (
+            Tensor::from_vec(&[bsz, 3, self.hw, self.hw], x).unwrap(),
+            Tensor::from_vec(&[bsz, self.classes], y).unwrap(),
+        )
+    }
+
+    /// Random batch of `bsz` samples.
+    pub fn batch(&self, rng: &mut Pcg32, bsz: usize) -> (Tensor, Tensor) {
+        let idx: Vec<usize> =
+            (0..bsz).map(|_| rng.below(self.n)).collect();
+        self.gather(&idx, bsz)
+    }
+
+    /// Deterministic eval chunks of size `bsz` (last chunk zero-padded);
+    /// returns (x, labels-in-chunk).
+    pub fn eval_chunks(
+        &self,
+        bsz: usize,
+    ) -> Vec<(Tensor, Vec<usize>)> {
+        let mut out = Vec::new();
+        let mut s = 0;
+        while s < self.n {
+            let e = (s + bsz).min(self.n);
+            let idx: Vec<usize> = (s..e).collect();
+            let (x, _) = self.gather(&idx, bsz);
+            out.push((x, self.labels[s..e].to_vec()));
+            s = e;
+        }
+        out
+    }
+}
+
+/// The paper's privacy-preserving synthetic batch: every pixel i.i.d.
+/// discrete Uniform{0..255}/255 — no prior knowledge of the client data.
+pub fn designer_batch(rng: &mut Pcg32, bsz: usize, hw: usize) -> Tensor {
+    let mut x = vec![0.0f32; bsz * 3 * hw * hw];
+    for v in &mut x {
+        *v = rng.uniform_pixel();
+    }
+    Tensor::from_vec(&[bsz, 3, hw, hw], x).unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = SynthVision::generate(10, 16, 40, 7, 0);
+        let b = SynthVision::generate(10, 16, 40, 7, 0);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn splits_differ_but_share_signatures() {
+        let tr = SynthVision::generate(10, 16, 40, 7, 0);
+        let te = SynthVision::generate(10, 16, 40, 7, 1);
+        assert_ne!(tr.images, te.images);
+        // same class => same mean signature (noise averages out);
+        // compare class-0 mean pixel between splits
+        let mean = |d: &SynthVision, k: usize| -> f32 {
+            let sl = d.sample_len();
+            let mut acc = 0.0;
+            let mut cnt = 0;
+            for s in 0..d.n {
+                if d.labels[s] == k {
+                    acc += d.images[s * sl..(s + 1) * sl]
+                        .iter()
+                        .sum::<f32>();
+                    cnt += 1;
+                }
+            }
+            acc / (cnt as f32 * sl as f32)
+        };
+        assert!((mean(&tr, 0) - mean(&te, 0)).abs() < 0.02);
+    }
+
+    #[test]
+    fn balanced_labels_and_range() {
+        let d = SynthVision::generate(10, 16, 100, 3, 0);
+        for k in 0..10 {
+            assert_eq!(d.labels.iter().filter(|&&l| l == k).count(), 10);
+        }
+        assert!(d.images.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn classes_are_separable_by_mean_color() {
+        // nearest-class-mean classifier on raw pixels should beat chance
+        // by a lot — guarantees the task is learnable.
+        let tr = SynthVision::generate(10, 16, 200, 11, 0);
+        let te = SynthVision::generate(10, 16, 100, 11, 1);
+        let sl = tr.sample_len();
+        let mut means = vec![vec![0.0f32; sl]; 10];
+        let mut counts = vec![0usize; 10];
+        for s in 0..tr.n {
+            let k = tr.labels[s];
+            counts[k] += 1;
+            for (m, v) in means[k]
+                .iter_mut()
+                .zip(&tr.images[s * sl..(s + 1) * sl])
+            {
+                *m += v;
+            }
+        }
+        for k in 0..10 {
+            for m in &mut means[k] {
+                *m /= counts[k] as f32;
+            }
+        }
+        let mut correct = 0;
+        for s in 0..te.n {
+            let img = &te.images[s * sl..(s + 1) * sl];
+            let pred = (0..10)
+                .min_by(|&a, &b| {
+                    let da: f32 = means[a]
+                        .iter()
+                        .zip(img)
+                        .map(|(m, v)| (m - v).powi(2))
+                        .sum();
+                    let db: f32 = means[b]
+                        .iter()
+                        .zip(img)
+                        .map(|(m, v)| (m - v).powi(2))
+                        .sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if pred == te.labels[s] {
+                correct += 1;
+            }
+        }
+        let acc = correct as f32 / te.n as f32;
+        assert!(acc > 0.6, "nearest-mean acc {acc}");
+    }
+
+    #[test]
+    fn gather_pads_and_one_hots() {
+        let d = SynthVision::generate(10, 16, 20, 5, 0);
+        let (x, y) = d.gather(&[0, 1, 2], 8);
+        assert_eq!(x.shape(), &[8, 3, 16, 16]);
+        assert_eq!(y.shape(), &[8, 10]);
+        // padded rows are zero
+        assert!(x.data()[3 * 768..].iter().all(|&v| v == 0.0));
+        assert_eq!(
+            y.data().iter().filter(|&&v| v == 1.0).count(),
+            3
+        );
+    }
+
+    #[test]
+    fn designer_batch_is_uniform_pixels() {
+        let mut r = Pcg32::seeded(1);
+        let x = designer_batch(&mut r, 4, 16);
+        assert_eq!(x.shape(), &[4, 3, 16, 16]);
+        let mean: f32 =
+            x.data().iter().sum::<f32>() / x.len() as f32;
+        assert!((mean - 0.5).abs() < 0.03, "mean {mean}");
+    }
+}

@@ -1,0 +1,21 @@
+//! Privacy-preserving DNN pruning + mobile acceleration framework.
+//!
+//! Rust L3 coordinator of the three-layer reproduction of Zhan et al. 2020
+//! (see DESIGN.md). Python/JAX/Pallas exist only at build time; this crate
+//! loads the AOT-lowered HLO artifacts and owns the entire pipeline:
+//! pre-training, privacy-preserving ADMM pruning, masked client retraining,
+//! and compiler-assisted mobile deployment.
+pub mod util;
+pub mod rng;
+pub mod tensor;
+pub mod config;
+pub mod data;
+pub mod runtime;
+pub mod pruning;
+pub mod admm;
+pub mod train;
+pub mod baselines;
+pub mod mobile;
+pub mod coordinator;
+pub mod report;
+pub mod bench_harness;

@@ -1,0 +1,345 @@
+//! Layer-wise weight IR for the mobile compiler.
+//!
+//! A [`ModelIR`] is extracted from a (possibly pruned) parameter set plus
+//! the manifest op list; each conv layer records, per kernel, its pattern
+//! style (9-bit tap bitmask) and connectivity status — "a layer-wise weight
+//! representation incorporating information of layer shape, pattern style,
+//! connectivity status, etc." (paper §V-C).
+
+use anyhow::{bail, Result};
+
+use crate::config::{Act, ConvOp, ModelSpec, Op};
+use crate::tensor::Tensor;
+
+/// One convolution layer in compiler form.
+#[derive(Clone, Debug)]
+pub struct ConvIR {
+    /// op index in the model spec
+    pub op_idx: usize,
+    pub a: usize,
+    pub c: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub act: Act,
+    pub in_hw: usize,
+    pub out_hw: usize,
+    /// dense weights, (A, C, kh, kw) row-major
+    pub w: Tensor,
+    pub bias: Tensor,
+    /// per (filter, channel) kernel: tap bitmask (bit t = tap kept);
+    /// 0 ⇒ kernel pruned away entirely (connectivity pruning)
+    pub pattern: Vec<u16>,
+    /// residual tag for proj layers ("" for main-path convs)
+    pub tag: String,
+    pub is_proj: bool,
+}
+
+impl ConvIR {
+    pub fn kernel_size(&self) -> usize {
+        self.kh * self.kw
+    }
+
+    pub fn n_kernels(&self) -> usize {
+        self.a * self.c
+    }
+
+    pub fn kept_kernels(&self) -> usize {
+        self.pattern.iter().filter(|&&p| p != 0).count()
+    }
+
+    /// MACs actually executed by the sparse engine.
+    pub fn sparse_macs(&self) -> usize {
+        let per_pos: usize = self
+            .pattern
+            .iter()
+            .map(|p| p.count_ones() as usize)
+            .sum();
+        per_pos * self.out_hw * self.out_hw
+    }
+
+    pub fn dense_macs(&self) -> usize {
+        self.a * self.c * self.kernel_size() * self.out_hw * self.out_hw
+    }
+
+    fn extract_pattern(w: &Tensor, a: usize, c: usize, ks: usize) -> Vec<u16> {
+        (0..a * c)
+            .map(|ki| {
+                let base = ki * ks;
+                (0..ks).fold(0u16, |m, t| {
+                    if w.data()[base + t] != 0.0 {
+                        m | (1 << t)
+                    } else {
+                        m
+                    }
+                })
+            })
+            .collect()
+    }
+
+    fn from_op(op_idx: usize, op: &ConvOp, params: &[Tensor], is_proj: bool) -> Self {
+        let w = params[op.w].clone();
+        let ks = op.kh * op.kw;
+        let pattern = Self::extract_pattern(&w, op.a, op.c, ks);
+        ConvIR {
+            op_idx,
+            a: op.a,
+            c: op.c,
+            kh: op.kh,
+            kw: op.kw,
+            stride: op.stride,
+            act: op.act,
+            in_hw: op.in_hw,
+            out_hw: op.out_hw,
+            w,
+            bias: params[op.b].clone(),
+            pattern,
+            tag: op.tag.clone(),
+            is_proj,
+        }
+    }
+}
+
+/// Non-conv ops the engine must interpret.
+#[derive(Clone, Debug)]
+pub enum IrOp {
+    Conv(usize),
+    Pool,
+    Save { tag: String },
+    Proj(usize),
+    Add { tag: String },
+    Relu,
+    Gap,
+    Fc,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelIR {
+    pub model_id: String,
+    pub in_hw: usize,
+    pub classes: usize,
+    pub convs: Vec<ConvIR>,
+    pub ops: Vec<IrOp>,
+    pub fc_w: Tensor,
+    pub fc_b: Tensor,
+}
+
+impl ModelIR {
+    pub fn build(spec: &ModelSpec, params: &[Tensor]) -> Result<Self> {
+        let mut convs = Vec::new();
+        let mut ops = Vec::new();
+        let mut fc: Option<(Tensor, Tensor)> = None;
+        for (oi, op) in spec.ops.iter().enumerate() {
+            match op {
+                Op::Conv(c) => {
+                    ops.push(IrOp::Conv(convs.len()));
+                    convs.push(ConvIR::from_op(oi, c, params, false));
+                }
+                Op::Proj(c) => {
+                    ops.push(IrOp::Proj(convs.len()));
+                    convs.push(ConvIR::from_op(oi, c, params, true));
+                }
+                Op::Pool => ops.push(IrOp::Pool),
+                Op::Save { tag } => ops.push(IrOp::Save { tag: tag.clone() }),
+                Op::Add { tag } => ops.push(IrOp::Add { tag: tag.clone() }),
+                Op::Relu => ops.push(IrOp::Relu),
+                Op::Gap => ops.push(IrOp::Gap),
+                Op::Fc { w, b, .. } => {
+                    ops.push(IrOp::Fc);
+                    fc = Some((params[*w].clone(), params[*b].clone()));
+                }
+            }
+        }
+        let Some((fc_w, fc_b)) = fc else {
+            bail!("model has no fc head");
+        };
+        Ok(ModelIR {
+            model_id: spec.id.clone(),
+            in_hw: spec.in_hw,
+            classes: spec.classes,
+            convs,
+            ops,
+            fc_w,
+            fc_b,
+        })
+    }
+
+    pub fn total_weights(&self) -> usize {
+        self.convs.iter().map(|c| c.w.len()).sum::<usize>() + self.fc_w.len()
+    }
+
+    pub fn nonzero_weights(&self) -> usize {
+        self.convs
+            .iter()
+            .map(|c| c.w.count_nonzero())
+            .sum::<usize>()
+            + self.fc_w.count_nonzero()
+    }
+}
+
+/// Compressed weight storage (paper's second compiler optimization): per
+/// kept kernel a (channel, pattern-style-id) header + the payload taps —
+/// the FKW-style format that removes CSR's per-weight indices.
+#[derive(Clone, Debug)]
+pub struct CompressedLayer {
+    /// distinct pattern styles in this layer (the "pattern table")
+    pub styles: Vec<u16>,
+    /// per filter: (channel, style index into `styles`, payload taps)
+    pub filters: Vec<Vec<(u32, u16, Vec<f32>)>>,
+    pub bias: Vec<f32>,
+}
+
+impl CompressedLayer {
+    pub fn compress(c: &ConvIR) -> Self {
+        let ks = c.kernel_size();
+        let mut styles: Vec<u16> = c
+            .pattern
+            .iter()
+            .copied()
+            .filter(|&p| p != 0)
+            .collect();
+        styles.sort_unstable();
+        styles.dedup();
+        let style_idx = |pat: u16| -> u16 {
+            styles.binary_search(&pat).unwrap() as u16
+        };
+        let mut filters = Vec::with_capacity(c.a);
+        for f in 0..c.a {
+            let mut kernels = Vec::new();
+            for ch in 0..c.c {
+                let pat = c.pattern[f * c.c + ch];
+                if pat == 0 {
+                    continue; // connectivity-pruned
+                }
+                let base = (f * c.c + ch) * ks;
+                let payload: Vec<f32> = (0..ks)
+                    .filter(|&t| pat & (1 << t) != 0)
+                    .map(|t| c.w.data()[base + t])
+                    .collect();
+                kernels.push((ch as u32, style_idx(pat), payload));
+            }
+            filters.push(kernels);
+        }
+        CompressedLayer {
+            styles,
+            filters,
+            bias: c.bias.data().to_vec(),
+        }
+    }
+
+    /// Storage footprint in bytes: style table (2B/style) + per kernel a
+    /// 4B channel+style header + 4B per payload tap + bias.
+    pub fn bytes(&self) -> usize {
+        let header = 2 * self.styles.len();
+        let kernels: usize = self
+            .filters
+            .iter()
+            .flatten()
+            .map(|(_, _, p)| 4 + 4 * p.len())
+            .sum();
+        header + kernels + 4 * self.bias.len()
+    }
+
+    /// Reconstruct the dense weight tensor (round-trip check).
+    pub fn decompress(&self, c: &ConvIR) -> Tensor {
+        let ks = c.kernel_size();
+        let mut w = Tensor::zeros(&[c.a, c.c, c.kh, c.kw]);
+        for (f, kernels) in self.filters.iter().enumerate() {
+            for (ch, si, payload) in kernels {
+                let pat = self.styles[*si as usize];
+                let base = (f * c.c + *ch as usize) * ks;
+                let mut pi = 0;
+                for t in 0..ks {
+                    if pat & (1 << t) != 0 {
+                        w.data_mut()[base + t] = payload[pi];
+                        pi += 1;
+                    }
+                }
+            }
+        }
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::{schemes, LayerShape};
+    use crate::rng::Pcg32;
+
+    fn pruned_conv_ir(a: usize, c: usize, alpha: f64, seed: u64) -> ConvIR {
+        let mut rng = Pcg32::seeded(seed);
+        let shape = LayerShape {
+            p: a,
+            c,
+            kh: 3,
+            kw: 3,
+        };
+        let w = Tensor::from_vec(
+            &[a, c * 9],
+            (0..a * c * 9).map(|_| rng.normal()).collect(),
+        )
+        .unwrap();
+        let pr = schemes::pattern(&w, &shape, alpha);
+        ConvIR {
+            op_idx: 0,
+            a,
+            c,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            act: Act::Relu,
+            in_hw: 8,
+            out_hw: 8,
+            w: pr.w.reshape(&[a, c, 3, 3]).unwrap(),
+            bias: Tensor::zeros(&[a]),
+            pattern: vec![],
+            tag: String::new(),
+            is_proj: false,
+        }
+        .with_pattern()
+    }
+
+    impl ConvIR {
+        fn with_pattern(mut self) -> Self {
+            self.pattern =
+                ConvIR::extract_pattern(&self.w, self.a, self.c, 9);
+            self
+        }
+    }
+
+    #[test]
+    fn pattern_extraction_counts_taps() {
+        let ir = pruned_conv_ir(6, 4, 4.0 / 9.0, 1);
+        // alpha 4/9 keeps all kernels with exactly 4 taps
+        for &p in &ir.pattern {
+            assert_eq!(p.count_ones(), 4);
+        }
+        assert_eq!(ir.sparse_macs(), 6 * 4 * 4 * 64);
+        assert_eq!(ir.dense_macs(), 6 * 4 * 9 * 64);
+    }
+
+    #[test]
+    fn connectivity_pruned_kernels_have_zero_pattern() {
+        let ir = pruned_conv_ir(6, 4, 0.2, 2);
+        let kept = ir.kept_kernels();
+        assert_eq!(kept, (2.25f64 * 0.2 * 24.0).floor() as usize);
+        assert!(ir.pattern.iter().any(|&p| p == 0));
+    }
+
+    #[test]
+    fn compression_roundtrip_and_size() {
+        let ir = pruned_conv_ir(8, 6, 0.25, 3);
+        let comp = CompressedLayer::compress(&ir);
+        let back = comp.decompress(&ir);
+        assert_eq!(back, ir.w);
+        // compressed bytes well below dense storage
+        let dense_bytes = ir.w.len() * 4;
+        assert!(
+            comp.bytes() < dense_bytes / 2,
+            "{} vs {}",
+            comp.bytes(),
+            dense_bytes
+        );
+    }
+}

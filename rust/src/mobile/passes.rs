@@ -1,0 +1,269 @@
+//! The three pattern-enabled compiler optimizations of paper §V-C.
+//!
+//! 1. **Filter kernel reorder** — schedule filters so that ones sharing
+//!    pattern styles execute consecutively (regular inner loops / balanced
+//!    SIMD groups). Outputs are scattered to their original channel slots,
+//!    so semantics are untouched (verified in engine tests).
+//! 2. **Compressed weight storage** — [`super::ir::CompressedLayer`]
+//!    (pattern-style header + payload, no per-weight indices).
+//! 3. **Load redundancy elimination** — taps grouped by input row
+//!    ([`row_group`]): every row of a pattern is one streaming codelet, so
+//!    a 4-tap pattern spanning r rows issues r load streams instead of 4.
+//!
+//! [`CompileReport`] quantifies each pass for the Fig. 3 cost model.
+
+use super::ir::{CompressedLayer, ConvIR, ModelIR};
+
+/// Group a pattern's taps by kernel row: [(ky, [(kx, payload_slot)])].
+/// Payload slots index into the compressed payload (tap order = ascending
+/// tap index, matching `CompressedLayer::compress`).
+pub fn row_group(pat: u16, kh: usize, kw: usize) -> Vec<(usize, Vec<(usize, usize)>)> {
+    let mut out: Vec<(usize, Vec<(usize, usize)>)> = Vec::new();
+    let mut slot = 0usize;
+    for t in 0..kh * kw {
+        if pat & (1 << t) != 0 {
+            let (ky, kx) = (t / kw, t % kw);
+            match out.last_mut() {
+                Some((y, taps)) if *y == ky => taps.push((kx, slot)),
+                _ => out.push((ky, vec![(kx, slot)])),
+            }
+            slot += 1;
+        }
+    }
+    out
+}
+
+/// Filter kernel reorder: execution order grouping filters by their
+/// dominant pattern-style signature, larger kernel counts first within a
+/// group (load balance across SIMD lanes / threads).
+pub fn reorder_filters(c: &ConvIR) -> Vec<usize> {
+    // signature: sorted (style, count) multiset of the filter's kernels
+    let sig = |f: usize| -> Vec<(u16, usize)> {
+        let mut counts = std::collections::BTreeMap::<u16, usize>::new();
+        for ch in 0..c.c {
+            let p = c.pattern[f * c.c + ch];
+            if p != 0 {
+                *counts.entry(p).or_insert(0) += 1;
+            }
+        }
+        counts.into_iter().collect()
+    };
+    let mut order: Vec<usize> = (0..c.a).collect();
+    let sigs: Vec<Vec<(u16, usize)>> = (0..c.a).map(sig).collect();
+    let kern_count: Vec<usize> = (0..c.a)
+        .map(|f| {
+            (0..c.c)
+                .filter(|&ch| c.pattern[f * c.c + ch] != 0)
+                .count()
+        })
+        .collect();
+    order.sort_by(|&x, &y| {
+        sigs[x]
+            .cmp(&sigs[y])
+            .then(kern_count[y].cmp(&kern_count[x]))
+            .then(x.cmp(&y))
+    });
+    // The pass is a schedule choice, so it never has to regress: keep the
+    // grouped order only if it actually reduces style switches (random
+    // near-unique patterns can make grouping a wash).
+    let identity: Vec<usize> = (0..c.a).collect();
+    if style_switches(c, &order) <= style_switches(c, &identity) {
+        order
+    } else {
+        identity
+    }
+}
+
+/// Pattern-style switches encountered while walking the execution order —
+/// the branch-divergence proxy the reorder pass minimizes.
+pub fn style_switches(c: &ConvIR, order: &[usize]) -> usize {
+    let mut switches = 0usize;
+    let mut last: Option<u16> = None;
+    for &f in order {
+        for ch in 0..c.c {
+            let p = c.pattern[f * c.c + ch];
+            if p == 0 {
+                continue;
+            }
+            if last != Some(p) {
+                switches += 1;
+                last = Some(p);
+            }
+        }
+    }
+    switches
+}
+
+/// Loads per output position for one layer, without (naive) and with
+/// (row-grouped) load redundancy elimination.
+pub fn lre_loads(c: &ConvIR) -> (usize, usize) {
+    let mut naive = 0usize;
+    let mut optimized = 0usize;
+    for &p in &c.pattern {
+        if p == 0 {
+            continue;
+        }
+        naive += p.count_ones() as usize;
+        optimized += row_group(p, c.kh, c.kw).len();
+    }
+    (naive, optimized)
+}
+
+/// Per-model compile summary consumed by the cost model and reports.
+#[derive(Clone, Debug)]
+pub struct CompileReport {
+    pub layers: Vec<LayerReport>,
+}
+
+#[derive(Clone, Debug)]
+pub struct LayerReport {
+    pub dense_macs: usize,
+    pub sparse_macs: usize,
+    pub dense_bytes: usize,
+    pub compressed_bytes: usize,
+    pub styles: usize,
+    /// style switches before/after filter kernel reorder
+    pub switches_before: usize,
+    pub switches_after: usize,
+    /// loads per output position before/after LRE
+    pub loads_naive: usize,
+    pub loads_lre: usize,
+}
+
+impl CompileReport {
+    pub fn build(
+        ir: &ModelIR,
+        compressed: &[CompressedLayer],
+        orders: &[Vec<usize>],
+    ) -> Self {
+        let layers = ir
+            .convs
+            .iter()
+            .zip(compressed)
+            .zip(orders)
+            .map(|((c, comp), order)| {
+                let identity: Vec<usize> = (0..c.a).collect();
+                let (naive, lre) = lre_loads(c);
+                LayerReport {
+                    dense_macs: c.dense_macs(),
+                    sparse_macs: c.sparse_macs(),
+                    dense_bytes: c.w.len() * 4 + c.bias.len() * 4,
+                    compressed_bytes: comp.bytes(),
+                    styles: comp.styles.len(),
+                    switches_before: style_switches(c, &identity),
+                    switches_after: style_switches(c, order),
+                    loads_naive: naive,
+                    loads_lre: lre,
+                }
+            })
+            .collect();
+        CompileReport { layers }
+    }
+
+    pub fn total_dense_macs(&self) -> usize {
+        self.layers.iter().map(|l| l.dense_macs).sum()
+    }
+
+    pub fn total_sparse_macs(&self) -> usize {
+        self.layers.iter().map(|l| l.sparse_macs).sum()
+    }
+
+    pub fn total_compressed_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.compressed_bytes).sum()
+    }
+
+    pub fn total_dense_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.dense_bytes).sum()
+    }
+
+    /// Average loads/MAC improvement from LRE (≥ 1).
+    pub fn lre_gain(&self) -> f64 {
+        let naive: usize = self.layers.iter().map(|l| l.loads_naive).sum();
+        let lre: usize = self.layers.iter().map(|l| l.loads_lre).sum();
+        naive as f64 / lre.max(1) as f64
+    }
+
+    /// Reorder gain: style switches removed (≥ 1).
+    pub fn reorder_gain(&self) -> f64 {
+        let before: usize =
+            self.layers.iter().map(|l| l.switches_before).sum();
+        let after: usize =
+            self.layers.iter().map(|l| l.switches_after).sum();
+        before as f64 / after.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Act;
+    use crate::rng::Pcg32;
+    use crate::tensor::Tensor;
+
+    fn mk_conv(a: usize, c: usize, patterns: &[u16]) -> ConvIR {
+        let mut rng = Pcg32::seeded(1);
+        let ks = 9;
+        let mut w = Tensor::zeros(&[a, c, 3, 3]);
+        for ki in 0..a * c {
+            let p = patterns[ki % patterns.len()];
+            for t in 0..ks {
+                if p & (1 << t) != 0 {
+                    w.data_mut()[ki * ks + t] = rng.normal();
+                }
+            }
+        }
+        let pattern: Vec<u16> = (0..a * c)
+            .map(|ki| patterns[ki % patterns.len()])
+            .collect();
+        ConvIR {
+            op_idx: 0,
+            a,
+            c,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            act: Act::Relu,
+            in_hw: 8,
+            out_hw: 8,
+            w,
+            bias: Tensor::zeros(&[a]),
+            pattern,
+            tag: String::new(),
+            is_proj: false,
+        }
+    }
+
+    #[test]
+    fn row_group_slots_are_payload_order() {
+        // pattern taps 0,2,4,8 -> rows: (0,[0,2]), (1,[1]), (2,[2])
+        let pat: u16 = 1 | (1 << 2) | (1 << 4) | (1 << 8);
+        let rows = row_group(pat, 3, 3);
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0], (0, vec![(0, 0), (2, 1)]));
+        assert_eq!(rows[1], (1, vec![(1, 2)]));
+        assert_eq!(rows[2], (2, vec![(2, 3)]));
+    }
+
+    #[test]
+    fn reorder_is_permutation_and_reduces_switches() {
+        // alternate two styles across filters -> reorder groups them
+        let c = mk_conv(8, 4, &[0b000011011, 0b110110000]);
+        let order = reorder_filters(&c);
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..8).collect::<Vec<_>>());
+        let identity: Vec<usize> = (0..8).collect();
+        let before = style_switches(&c, &identity);
+        let after = style_switches(&c, &order);
+        assert!(after <= before, "{after} > {before}");
+    }
+
+    #[test]
+    fn lre_counts_rows_vs_taps() {
+        // style with taps spread over 2 rows: naive 4 loads, lre 2
+        let c = mk_conv(2, 2, &[0b000011011]); // taps 0,1,3,4 -> rows 0,1
+        let (naive, opt) = lre_loads(&c);
+        assert_eq!(naive, 4 * 4);
+        assert_eq!(opt, 2 * 4);
+    }
+}

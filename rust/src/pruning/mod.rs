@@ -1,0 +1,445 @@
+//! Weight-pruning schemes: the Euclidean projections Π_Sₙ of paper §IV-D
+//! and the mask function they induce.
+//!
+//! All projections operate on the GEMM matrix view **W ∈ R^{P×Q}** with
+//! P = Aₙ (filters) and Q = Bₙ·Cₙ·Dₙ (channels × kernel), exactly the
+//! paper's §IV-A notation. The 4-D kernel structure needed by pattern
+//! pruning is recovered from [`LayerShape`].
+//!
+//! Each scheme returns both the projected weights and the 0/1 support mask
+//! — the "mask function" shipped to the client for retraining.
+
+pub mod schemes;
+
+use anyhow::{bail, Result};
+
+use crate::config::ConvOp;
+use crate::tensor::Tensor;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    /// Eqn. (13): keep the ⌊αPQ⌋ largest-magnitude weights anywhere.
+    Irregular,
+    /// Eqn. (14): keep the ⌊αP⌋ rows with largest Frobenius norm.
+    Filter,
+    /// Eqn. (15): keep the ⌊αQ⌋ columns with largest Frobenius norm.
+    Column,
+    /// Eqns. (16)-(18): 4-entry kernel patterns + connectivity pruning.
+    Pattern,
+}
+
+impl Scheme {
+    pub fn parse(s: &str) -> Result<Scheme> {
+        Ok(match s {
+            "irregular" => Scheme::Irregular,
+            "filter" => Scheme::Filter,
+            "column" => Scheme::Column,
+            "pattern" => Scheme::Pattern,
+            _ => bail!("unknown scheme {s:?} (irregular|filter|column|pattern)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::Irregular => "irregular",
+            Scheme::Filter => "filter",
+            Scheme::Column => "column",
+            Scheme::Pattern => "pattern",
+        }
+    }
+
+    pub fn all() -> [Scheme; 4] {
+        [
+            Scheme::Irregular,
+            Scheme::Filter,
+            Scheme::Column,
+            Scheme::Pattern,
+        ]
+    }
+}
+
+/// Kernel geometry of one conv layer's GEMM matrix.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerShape {
+    /// filters (GEMM rows)
+    pub p: usize,
+    /// channels
+    pub c: usize,
+    pub kh: usize,
+    pub kw: usize,
+}
+
+impl LayerShape {
+    pub fn q(&self) -> usize {
+        self.c * self.kh * self.kw
+    }
+
+    pub fn kernel_size(&self) -> usize {
+        self.kh * self.kw
+    }
+
+    pub fn from_conv(op: &ConvOp) -> Self {
+        LayerShape {
+            p: op.a,
+            c: op.c,
+            kh: op.kh,
+            kw: op.kw,
+        }
+    }
+}
+
+/// Projection output: pruned weights + the 0/1 support mask (same shape).
+#[derive(Clone, Debug)]
+pub struct Projected {
+    pub w: Tensor,
+    pub mask: Tensor,
+}
+
+impl Projected {
+    pub fn kept(&self) -> usize {
+        self.mask.data().iter().filter(|&&m| m != 0.0).count()
+    }
+}
+
+/// Π_Sₙ — Euclidean projection of `w` (P×Q GEMM layout) onto the scheme's
+/// constraint set at remaining-weight ratio `alpha` (paper's α).
+pub fn project(
+    scheme: Scheme,
+    w: &Tensor,
+    shape: &LayerShape,
+    alpha: f64,
+) -> Result<Projected> {
+    if w.shape() != [shape.p, shape.q()] {
+        bail!(
+            "weight shape {:?} != layer GEMM shape {:?}",
+            w.shape(),
+            [shape.p, shape.q()]
+        );
+    }
+    if !(0.0 < alpha && alpha <= 1.0) {
+        bail!("alpha must be in (0,1], got {alpha}");
+    }
+    Ok(match scheme {
+        Scheme::Irregular => schemes::irregular(w, alpha),
+        Scheme::Filter => schemes::filter(w, alpha),
+        Scheme::Column => schemes::column(w, alpha),
+        Scheme::Pattern => schemes::pattern(w, shape, alpha),
+    })
+}
+
+/// Achieved CONV compression rate over a set of layers:
+/// total weights / remaining weights (the paper's "CONV Comp. Rate").
+pub fn compression_rate(projected: &[Projected]) -> f64 {
+    let total: usize = projected.iter().map(|p| p.w.len()).sum();
+    let kept: usize = projected.iter().map(|p| p.kept()).sum();
+    total as f64 / kept.max(1) as f64
+}
+
+/// Fraction of zero weights.
+pub fn sparsity(w: &Tensor) -> f64 {
+    1.0 - w.count_nonzero() as f64 / w.len().max(1) as f64
+}
+
+/// ASCII rendering of a small GEMM mask — the Fig. 1 illustration used by
+/// the quickstart example ('█' kept, '·' pruned; kernels separated).
+pub fn render_ascii(mask: &Tensor, shape: &LayerShape) -> String {
+    let q = shape.q();
+    let ks = shape.kernel_size();
+    let mut s = String::new();
+    for r in 0..shape.p.min(16) {
+        for col in 0..q.min(72) {
+            if col > 0 && col % ks == 0 {
+                s.push(' ');
+            }
+            s.push(if mask.at2(r, col) != 0.0 { '█' } else { '·' });
+        }
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+    use crate::util::propcheck::{check, Gen};
+
+    fn rand_w(g: &mut Gen, p: usize, q: usize) -> Tensor {
+        Tensor::from_vec(&[p, q], g.vec_f32(p * q)).unwrap()
+    }
+
+    fn rand_shape(g: &mut Gen) -> LayerShape {
+        LayerShape {
+            p: g.dim_up_to(24),
+            c: g.dim_up_to(12),
+            kh: 3,
+            kw: 3,
+        }
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let shape = LayerShape {
+            p: 2,
+            c: 1,
+            kh: 3,
+            kw: 3,
+        };
+        let w = Tensor::zeros(&[2, 9]);
+        assert!(project(Scheme::Irregular, &w, &shape, 0.0).is_err());
+        assert!(project(Scheme::Irregular, &w, &shape, 1.5).is_err());
+        let bad = Tensor::zeros(&[3, 9]);
+        assert!(project(Scheme::Irregular, &bad, &shape, 0.5).is_err());
+    }
+
+    /// Every scheme satisfies its constraint-set cardinality and the mask
+    /// matches the support exactly. (proptest-style invariant)
+    #[test]
+    fn prop_projection_satisfies_constraint_and_mask_support() {
+        for scheme in Scheme::all() {
+            check(
+                &format!("constraint-{}", scheme.name()),
+                42,
+                60,
+                24,
+                |g| {
+                    let shape = rand_shape(g);
+                    let w = rand_w(g, shape.p, shape.q());
+                    let alpha = g.alpha();
+                    let pr = project(scheme, &w, &shape, alpha).unwrap();
+                    // mask is exactly the support of w
+                    for (wi, mi) in
+                        pr.w.data().iter().zip(pr.mask.data())
+                    {
+                        if *mi == 0.0 && *wi != 0.0 {
+                            return Err("pruned coord nonzero".into());
+                        }
+                        if *mi != 0.0 && *mi != 1.0 {
+                            return Err("mask not 0/1".into());
+                        }
+                    }
+                    // cardinality constraint
+                    let total = shape.p * shape.q();
+                    let bound = match scheme {
+                        Scheme::Irregular => {
+                            crate::util::keep_count(alpha, total)
+                        }
+                        Scheme::Filter => {
+                            crate::util::keep_count(alpha, shape.p)
+                                * shape.q()
+                        }
+                        Scheme::Column => {
+                            crate::util::keep_count(alpha, shape.q())
+                                * shape.p
+                        }
+                        Scheme::Pattern => {
+                            let kb = shape.p * shape.c;
+                            let keep = ((2.25 * alpha * kb as f64).floor()
+                                as usize)
+                                .clamp(1, kb);
+                            keep * 4
+                        }
+                    };
+                    if pr.kept() > bound {
+                        return Err(format!(
+                            "kept {} > bound {bound} (alpha={alpha})",
+                            pr.kept()
+                        ));
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
+
+    /// Projection is idempotent: Π(Π(w)) == Π(w). (proptest-style)
+    #[test]
+    fn prop_projection_idempotent() {
+        for scheme in Scheme::all() {
+            check(
+                &format!("idempotent-{}", scheme.name()),
+                7,
+                40,
+                20,
+                |g| {
+                    let shape = rand_shape(g);
+                    let w = rand_w(g, shape.p, shape.q());
+                    let alpha = g.alpha();
+                    let p1 = project(scheme, &w, &shape, alpha).unwrap();
+                    let p2 =
+                        project(scheme, &p1.w, &shape, alpha).unwrap();
+                    if p1.w.max_abs_diff(&p2.w) > 0.0 {
+                        return Err("not idempotent".into());
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
+
+    /// Kept coordinates are unchanged (projection only zeroes).
+    #[test]
+    fn prop_projection_only_zeroes() {
+        for scheme in Scheme::all() {
+            check(&format!("zero-only-{}", scheme.name()), 9, 40, 20, |g| {
+                let shape = rand_shape(g);
+                let w = rand_w(g, shape.p, shape.q());
+                let alpha = g.alpha();
+                let pr = project(scheme, &w, &shape, alpha).unwrap();
+                for ((a, b), m) in w
+                    .data()
+                    .iter()
+                    .zip(pr.w.data())
+                    .zip(pr.mask.data())
+                {
+                    if *m != 0.0 && a != b {
+                        return Err("kept coord modified".into());
+                    }
+                    if *m == 0.0 && *b != 0.0 {
+                        return Err("pruned coord not zeroed".into());
+                    }
+                }
+                Ok(())
+            });
+        }
+    }
+
+    /// Structured schemes keep the highest-norm groups: every kept
+    /// row/column has norm ≥ every pruned row/column. (proptest-style)
+    #[test]
+    fn prop_structured_schemes_keep_largest_norm_groups() {
+        check("filter-column-norm-order", 21, 50, 20, |g| {
+            let shape = rand_shape(g);
+            let w = rand_w(g, shape.p, shape.q());
+            let alpha = g.alpha();
+            // filter: rows
+            let pr = project(Scheme::Filter, &w, &shape, alpha).unwrap();
+            let row_norm = |r: usize| -> f64 {
+                w.row(r).iter().map(|&v| (v as f64).powi(2)).sum()
+            };
+            let kept: Vec<usize> = (0..shape.p)
+                .filter(|&r| pr.w.row(r).iter().any(|&v| v != 0.0))
+                .collect();
+            let min_kept = kept
+                .iter()
+                .map(|&r| row_norm(r))
+                .fold(f64::INFINITY, f64::min);
+            for r in 0..shape.p {
+                if !kept.contains(&r) && row_norm(r) > min_kept + 1e-9 {
+                    return Err(format!(
+                        "pruned row {r} has higher norm than a kept row"
+                    ));
+                }
+            }
+            // column: columns
+            let pr = project(Scheme::Column, &w, &shape, alpha).unwrap();
+            let q = shape.q();
+            let col_norm = |c: usize| -> f64 {
+                (0..shape.p)
+                    .map(|r| (w.at2(r, c) as f64).powi(2))
+                    .sum()
+            };
+            let keptc: Vec<usize> = (0..q)
+                .filter(|&c| (0..shape.p).any(|r| pr.w.at2(r, c) != 0.0))
+                .collect();
+            let min_keptc = keptc
+                .iter()
+                .map(|&c| col_norm(c))
+                .fold(f64::INFINITY, f64::min);
+            for c in 0..q {
+                if !keptc.contains(&c) && col_norm(c) > min_keptc + 1e-9 {
+                    return Err(format!(
+                        "pruned col {c} has higher norm than a kept col"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Irregular keeps exactly the global top-k by |w| (threshold check).
+    #[test]
+    fn prop_irregular_is_magnitude_thresholding() {
+        check("irregular-threshold", 23, 50, 24, |g| {
+            let shape = rand_shape(g);
+            let w = rand_w(g, shape.p, shape.q());
+            let alpha = g.alpha();
+            let pr = project(Scheme::Irregular, &w, &shape, alpha).unwrap();
+            let kept_min = w
+                .data()
+                .iter()
+                .zip(pr.mask.data())
+                .filter(|(_, &m)| m != 0.0)
+                .map(|(&v, _)| v.abs())
+                .fold(f32::INFINITY, f32::min);
+            for (&v, &m) in w.data().iter().zip(pr.mask.data()) {
+                if m == 0.0 && v.abs() > kept_min + 1e-7 {
+                    return Err(format!(
+                        "pruned |{v}| > kept min {kept_min}"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// α = 1 keeps everything for irregular/filter/column.
+    #[test]
+    fn alpha_one_is_identity_for_unstructured() {
+        let mut rng = Pcg32::seeded(5);
+        let shape = LayerShape {
+            p: 6,
+            c: 2,
+            kh: 3,
+            kw: 3,
+        };
+        let w = Tensor::from_vec(
+            &[6, 18],
+            (0..108).map(|_| rng.normal()).collect(),
+        )
+        .unwrap();
+        for scheme in [Scheme::Irregular, Scheme::Filter, Scheme::Column] {
+            let pr = project(scheme, &w, &shape, 1.0).unwrap();
+            assert_eq!(pr.w, w, "{scheme:?}");
+        }
+        // pattern always enforces 4-of-9 (2.25x floor)
+        let pr = project(Scheme::Pattern, &w, &shape, 1.0).unwrap();
+        assert_eq!(pr.kept(), 6 * 2 * 4);
+    }
+
+    #[test]
+    fn compression_rate_math() {
+        let shape = LayerShape {
+            p: 4,
+            c: 1,
+            kh: 3,
+            kw: 3,
+        };
+        let mut rng = Pcg32::seeded(6);
+        let w = Tensor::from_vec(
+            &[4, 9],
+            (0..36).map(|_| rng.normal()).collect(),
+        )
+        .unwrap();
+        let pr = project(Scheme::Irregular, &w, &shape, 0.25).unwrap();
+        assert_eq!(pr.kept(), 9); // floor(0.25*36)
+        let rate = compression_rate(&[pr]);
+        assert!((rate - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn render_ascii_smoke() {
+        let shape = LayerShape {
+            p: 2,
+            c: 1,
+            kh: 3,
+            kw: 3,
+        };
+        let mask =
+            Tensor::from_vec(&[2, 9], vec![1.0, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0, 0.0,
+                                           0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0])
+                .unwrap();
+        let s = render_ascii(&mask, &shape);
+        assert!(s.contains('█') && s.contains('·'));
+    }
+}

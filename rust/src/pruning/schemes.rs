@@ -1,0 +1,323 @@
+//! Closed-form solutions to the (Proximal) problem, Eqn. (11), for each
+//! constraint set of paper §IV-D. Each function takes the GEMM-layout
+//! weights and returns the projected weights + support mask.
+
+use crate::tensor::{top_k_indices, Tensor};
+use crate::util::keep_count;
+
+use super::{LayerShape, Projected};
+
+fn zero_outside(w: &Tensor, keep: impl Fn(usize) -> bool) -> Projected {
+    let mut out = w.clone();
+    let mut mask = Tensor::zeros(w.shape());
+    for (i, v) in out.data_mut().iter_mut().enumerate() {
+        if keep(i) {
+            mask.data_mut()[i] = 1.0;
+        } else {
+            *v = 0.0;
+        }
+    }
+    Projected { w: out, mask }
+}
+
+/// Irregular pruning (Eqn. 13): keep the ⌊αPQ⌋ largest magnitudes.
+pub fn irregular(w: &Tensor, alpha: f64) -> Projected {
+    let k = keep_count(alpha, w.len());
+    let scores: Vec<f64> =
+        w.data().iter().map(|&v| (v as f64).abs()).collect();
+    let kept: std::collections::HashSet<usize> =
+        top_k_indices(&scores, k).into_iter().collect();
+    zero_outside(w, |i| kept.contains(&i))
+}
+
+/// Filter pruning (Eqn. 14): keep the ⌊αP⌋ rows with largest ‖·‖²_F.
+pub fn filter(w: &Tensor, alpha: f64) -> Projected {
+    let p = w.rows();
+    let k = keep_count(alpha, p);
+    let scores: Vec<f64> = (0..p)
+        .map(|r| w.row(r).iter().map(|&v| (v as f64).powi(2)).sum())
+        .collect();
+    let kept: std::collections::HashSet<usize> =
+        top_k_indices(&scores, k).into_iter().collect();
+    let q = w.cols();
+    zero_outside(w, |i| kept.contains(&(i / q)))
+}
+
+/// Column pruning (Eqn. 15): keep the ⌊αQ⌋ columns with largest ‖·‖²_F.
+pub fn column(w: &Tensor, alpha: f64) -> Projected {
+    let (p, q) = (w.rows(), w.cols());
+    let k = keep_count(alpha, q);
+    let mut scores = vec![0.0f64; q];
+    for r in 0..p {
+        for (cidx, &v) in w.row(r).iter().enumerate() {
+            scores[cidx] += (v as f64).powi(2);
+        }
+    }
+    let kept: std::collections::HashSet<usize> =
+        top_k_indices(&scores, k).into_iter().collect();
+    zero_outside(w, |i| kept.contains(&(i % q)))
+}
+
+/// How many entries a kernel pattern reserves (paper: 4, to fill one
+/// 128-bit SIMD lane of the mobile CPU).
+pub const PATTERN_ENTRIES: usize = 4;
+
+/// Pattern-based pruning = kernel-pattern pruning (Eqns. 16/17, keep the 4
+/// largest-magnitude taps of every kernel) followed by connectivity pruning
+/// (Eqn. 18, keep the ⌊2.25·α·A·B⌋ kernels with largest norm).
+pub fn pattern(w: &Tensor, shape: &LayerShape, alpha: f64) -> Projected {
+    let ks = shape.kernel_size();
+    assert_eq!(ks, 9, "pattern pruning requires 3x3 kernels (paper IV-D.4)");
+    let (p, q) = (w.rows(), w.cols());
+    let n_kernels = p * shape.c;
+
+    // Step 1 — kernel pattern: per kernel keep the PATTERN_ENTRIES largest.
+    let mut keep_flags = vec![false; p * q];
+    let mut kernel_norm = vec![0.0f64; n_kernels];
+    for r in 0..p {
+        for ch in 0..shape.c {
+            let base = r * q + ch * ks;
+            let taps = &w.data()[base..base + ks];
+            let scores: Vec<f64> =
+                taps.iter().map(|&v| (v as f64).abs()).collect();
+            let top = top_k_indices(&scores, PATTERN_ENTRIES);
+            let mut norm = 0.0;
+            for &t in &top {
+                keep_flags[base + t] = true;
+                norm += (taps[t] as f64).powi(2);
+            }
+            kernel_norm[r * shape.c + ch] = norm;
+        }
+    }
+
+    // Step 2 — connectivity: keep ⌊2.25·α·(A·B)⌋ kernels by pattern norm.
+    let keep_kernels =
+        ((2.25 * alpha * n_kernels as f64).floor() as usize).clamp(1, n_kernels);
+    let kept_kernels: std::collections::HashSet<usize> =
+        top_k_indices(&kernel_norm, keep_kernels)
+            .into_iter()
+            .collect();
+
+    zero_outside(w, |i| {
+        let r = i / q;
+        let ch = (i % q) / ks;
+        keep_flags[i] && kept_kernels.contains(&(r * shape.c + ch))
+    })
+}
+
+/// PCONV-style *pattern library* variant (extension / ablation, DESIGN.md):
+/// kernel patterns are restricted to the `lib_size` most frequent 4-entry
+/// patterns across the layer, which makes the mobile compiler's codelets
+/// denser. Returns (projected, pattern-ids-per-kernel, library).
+pub fn pattern_with_library(
+    w: &Tensor,
+    shape: &LayerShape,
+    alpha: f64,
+    lib_size: usize,
+) -> (Projected, Vec<u16>, Vec<u16>) {
+    let ks = shape.kernel_size();
+    assert_eq!(ks, 9);
+    let (p, q) = (w.rows(), w.cols());
+    let n_kernels = p * shape.c;
+
+    // natural top-4 pattern of each kernel, as a 9-bit bitmask
+    let natural: Vec<u16> = (0..n_kernels)
+        .map(|ki| {
+            let (r, ch) = (ki / shape.c, ki % shape.c);
+            let base = r * q + ch * ks;
+            let taps = &w.data()[base..base + ks];
+            let scores: Vec<f64> =
+                taps.iter().map(|&v| (v as f64).abs()).collect();
+            top_k_indices(&scores, PATTERN_ENTRIES)
+                .iter()
+                .fold(0u16, |m, &t| m | (1 << t))
+        })
+        .collect();
+
+    // library = most frequent natural patterns
+    let mut freq = std::collections::HashMap::<u16, usize>::new();
+    for &pat in &natural {
+        *freq.entry(pat).or_insert(0) += 1;
+    }
+    let mut pats: Vec<(u16, usize)> = freq.into_iter().collect();
+    pats.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+    let library: Vec<u16> = pats
+        .into_iter()
+        .take(lib_size.max(1))
+        .map(|(p, _)| p)
+        .collect();
+
+    // per kernel: pick the library pattern preserving the most magnitude
+    let mut keep_flags = vec![false; p * q];
+    let mut kernel_norm = vec![0.0f64; n_kernels];
+    let mut chosen = vec![0u16; n_kernels];
+    for ki in 0..n_kernels {
+        let (r, ch) = (ki / shape.c, ki % shape.c);
+        let base = r * q + ch * ks;
+        let taps = &w.data()[base..base + ks];
+        let (best_pat, best_norm) = library
+            .iter()
+            .map(|&pat| {
+                let norm: f64 = (0..ks)
+                    .filter(|&t| pat & (1 << t) != 0)
+                    .map(|t| (taps[t] as f64).powi(2))
+                    .sum();
+                (pat, norm)
+            })
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        chosen[ki] = best_pat;
+        kernel_norm[ki] = best_norm;
+        for t in 0..ks {
+            if best_pat & (1 << t) != 0 {
+                keep_flags[base + t] = true;
+            }
+        }
+    }
+
+    let keep_kernels =
+        ((2.25 * alpha * n_kernels as f64).floor() as usize).clamp(1, n_kernels);
+    let kept_kernels: std::collections::HashSet<usize> =
+        top_k_indices(&kernel_norm, keep_kernels)
+            .into_iter()
+            .collect();
+    let projected = zero_outside(w, |i| {
+        let r = i / q;
+        let ch = (i % q) / ks;
+        keep_flags[i] && kept_kernels.contains(&(r * shape.c + ch))
+    });
+    (projected, chosen, library)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    fn randw(p: usize, q: usize, seed: u64) -> Tensor {
+        let mut r = Pcg32::seeded(seed);
+        Tensor::from_vec(&[p, q], (0..p * q).map(|_| r.normal()).collect())
+            .unwrap()
+    }
+
+    #[test]
+    fn irregular_keeps_largest() {
+        let w = Tensor::from_vec(&[2, 3], vec![3.0, -1.0, 0.5, -4.0, 2.0, 0.1])
+            .unwrap();
+        let pr = irregular(&w, 0.5); // keep 3 of 6
+        assert_eq!(
+            pr.w.data(),
+            &[3.0, 0.0, 0.0, -4.0, 2.0, 0.0]
+        );
+    }
+
+    #[test]
+    fn filter_keeps_whole_rows() {
+        let w = randw(8, 18, 1);
+        let pr = filter(&w, 0.5);
+        for r in 0..8 {
+            let nz = pr.w.row(r).iter().filter(|&&v| v != 0.0).count();
+            assert!(nz == 0 || nz == 18, "row {r} partially pruned");
+        }
+        let kept_rows = (0..8)
+            .filter(|&r| pr.w.row(r).iter().any(|&v| v != 0.0))
+            .count();
+        assert_eq!(kept_rows, 4);
+    }
+
+    #[test]
+    fn column_keeps_whole_columns() {
+        let w = randw(6, 18, 2);
+        let pr = column(&w, 1.0 / 3.0);
+        let kept_cols: Vec<usize> = (0..18)
+            .filter(|&c| (0..6).any(|r| pr.w.at2(r, c) != 0.0))
+            .collect();
+        assert_eq!(kept_cols.len(), 6);
+        for c in 0..18 {
+            let full = (0..6).all(|r| {
+                (pr.w.at2(r, c) != 0.0) == kept_cols.contains(&c)
+                    || w.at2(r, c) == 0.0
+            });
+            assert!(full);
+        }
+    }
+
+    #[test]
+    fn pattern_reserves_four_per_kept_kernel() {
+        let shape = LayerShape {
+            p: 4,
+            c: 3,
+            kh: 3,
+            kw: 3,
+        };
+        let w = randw(4, 27, 3);
+        // alpha = 4/9 -> keep all kernels, 4 taps each
+        let pr = pattern(&w, &shape, 4.0 / 9.0);
+        for r in 0..4 {
+            for ch in 0..3 {
+                let taps: Vec<f32> = (0..9)
+                    .map(|t| pr.w.at2(r, ch * 9 + t))
+                    .collect();
+                let nz = taps.iter().filter(|&&v| v != 0.0).count();
+                assert_eq!(nz, 4, "kernel ({r},{ch})");
+            }
+        }
+        // tighter alpha drops whole kernels
+        let pr2 = pattern(&w, &shape, 1.0 / 9.0);
+        let kernels_kept = (0..4)
+            .flat_map(|r| (0..3).map(move |ch| (r, ch)))
+            .filter(|&(r, ch)| {
+                (0..9).any(|t| pr2.w.at2(r, ch * 9 + t) != 0.0)
+            })
+            .count();
+        assert_eq!(kernels_kept, (2.25f64 * (1.0 / 9.0) * 12.0) as usize);
+    }
+
+    #[test]
+    fn pattern_kept_taps_are_the_largest() {
+        let shape = LayerShape {
+            p: 1,
+            c: 1,
+            kh: 3,
+            kw: 3,
+        };
+        let w = Tensor::from_vec(
+            &[1, 9],
+            vec![0.9, -0.8, 0.1, 0.7, -0.05, 0.02, 0.6, 0.0, 0.3],
+        )
+        .unwrap();
+        let pr = pattern(&w, &shape, 4.0 / 9.0);
+        assert_eq!(
+            pr.w.data(),
+            &[0.9, -0.8, 0.0, 0.7, 0.0, 0.0, 0.6, 0.0, 0.0]
+        );
+    }
+
+    #[test]
+    fn pattern_library_restricts_styles() {
+        let shape = LayerShape {
+            p: 8,
+            c: 4,
+            kh: 3,
+            kw: 3,
+        };
+        let w = randw(8, 36, 4);
+        let (pr, chosen, lib) =
+            pattern_with_library(&w, &shape, 4.0 / 9.0, 6);
+        assert!(lib.len() <= 6);
+        for pat in &chosen {
+            assert!(lib.contains(pat));
+            assert_eq!(pat.count_ones(), 4);
+        }
+        // every kept kernel uses its chosen pattern
+        for ki in 0..32 {
+            let (r, ch) = (ki / 4, ki % 4);
+            let kept: u16 = (0..9)
+                .filter(|&t| pr.w.at2(r, ch * 9 + t) != 0.0)
+                .fold(0, |m, t| m | (1 << t));
+            if kept != 0 {
+                assert_eq!(kept & !chosen[ki], 0);
+            }
+        }
+    }
+}

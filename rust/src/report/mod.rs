@@ -1,0 +1,135 @@
+//! Paper-style table rendering + persistence of experiment results.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::Result;
+
+/// A simple column-aligned table that renders like the paper's tables.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.chars().count()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let mut s = String::new();
+        let _ = writeln!(s, "== {} ==", self.title);
+        let line = |s: &mut String, cells: &[String]| {
+            for i in 0..ncol {
+                let w = widths[i];
+                let c = &cells[i];
+                let pad = w - c.chars().count();
+                let _ = write!(s, "| {}{} ", c, " ".repeat(pad));
+            }
+            let _ = writeln!(s, "|");
+        };
+        line(&mut s, &self.headers);
+        let total: usize = widths.iter().map(|w| w + 3).sum::<usize>() + 1;
+        let _ = writeln!(s, "{}", "-".repeat(total));
+        for r in &self.rows {
+            line(&mut s, r);
+        }
+        s
+    }
+
+    pub fn render_markdown(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "### {}\n", self.title);
+        let _ = writeln!(s, "| {} |", self.headers.join(" | "));
+        let _ = writeln!(
+            s,
+            "|{}|",
+            self.headers.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        );
+        for r in &self.rows {
+            let _ = writeln!(s, "| {} |", r.join(" | "));
+        }
+        s
+    }
+
+    pub fn save(&self, dir: impl AsRef<Path>, name: &str) -> Result<()> {
+        std::fs::create_dir_all(&dir)?;
+        std::fs::write(
+            dir.as_ref().join(format!("{name}.txt")),
+            self.render(),
+        )?;
+        std::fs::write(
+            dir.as_ref().join(format!("{name}.md")),
+            self.render_markdown(),
+        )?;
+        Ok(())
+    }
+}
+
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", 100.0 * x)
+}
+
+pub fn rate(x: f64) -> String {
+    format!("{x:.1}x")
+}
+
+pub fn ms(x: f64) -> String {
+    format!("{x:.1} ms")
+}
+
+/// Accuracy loss cell with the paper's sign convention (negative = gain).
+pub fn loss_cell(base: f64, pruned: f64) -> String {
+    format!("{:+.1}%", 100.0 * (base - pruned))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("T", &["a", "bbbb"]);
+        t.row(&["xx".into(), "y".into()]);
+        let s = t.render();
+        assert!(s.contains("== T =="));
+        assert!(s.contains("| xx | y    |"));
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        let md = t.render_markdown();
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("|---|---|"));
+        assert!(md.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(pct(0.941), "94.1%");
+        assert_eq!(rate(16.0), "16.0x");
+        assert_eq!(loss_cell(0.941, 0.942), "-0.1%");
+        assert_eq!(loss_cell(0.941, 0.930), "+1.1%");
+    }
+}

@@ -1,0 +1,205 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on the
+//! CPU PJRT client. This is the only place the `xla` crate is touched.
+//!
+//! Python never runs here: `make artifacts` happens once at build time, and
+//! this module gives the coordinator a `exec(model, artifact, inputs)` call
+//! with Tensor⇄Literal marshalling, shape checking against the manifest,
+//! and a compile cache (each HLO module is parsed + compiled exactly once
+//! per process).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{ArtifactSpec, Manifest, ModelSpec};
+use crate::tensor::Tensor;
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// cumulative PJRT execute count + wall time (perf accounting)
+    stats: RefCell<ExecStats>,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecStats {
+    pub executions: u64,
+    pub exec_secs: f64,
+    pub compile_secs: f64,
+    pub marshal_secs: f64,
+}
+
+impl Runtime {
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client =
+            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(ExecStats::default()),
+        })
+    }
+
+    pub fn model(&self, id: &str) -> Result<&ModelSpec> {
+        self.manifest.model(id)
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        *self.stats.borrow()
+    }
+
+    fn executable(
+        &self,
+        model: &ModelSpec,
+        artifact: &str,
+    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        let key = format!("{}/{}", model.id, artifact);
+        if let Some(exe) = self.cache.borrow().get(&key) {
+            return Ok(exe.clone());
+        }
+        let spec = model.artifact(artifact)?;
+        let path = self.manifest.artifact_path(spec);
+        let t = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {key}"))?,
+        );
+        self.stats.borrow_mut().compile_secs += t.elapsed().as_secs_f64();
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile an artifact (used to pull compilation out of timed
+    /// regions in the benches).
+    pub fn warm(&self, model_id: &str, artifact: &str) -> Result<()> {
+        let model = self.manifest.model(model_id)?;
+        self.executable(model, artifact).map(|_| ())
+    }
+
+    /// Execute `model/artifact` on `inputs`, validating shapes against the
+    /// manifest. Returns the flattened outputs in manifest order.
+    pub fn exec(
+        &self,
+        model_id: &str,
+        artifact: &str,
+        inputs: &[&Tensor],
+    ) -> Result<Vec<Tensor>> {
+        let model = self.manifest.model(model_id)?;
+        let spec = model.artifact(artifact)?;
+        validate_inputs(spec, inputs)
+            .with_context(|| format!("inputs of {model_id}/{artifact}"))?;
+        let exe = self.executable(model, artifact)?;
+
+        let tm = std::time::Instant::now();
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| tensor_to_literal(t))
+            .collect::<Result<_>>()?;
+        let marshal_in = tm.elapsed().as_secs_f64();
+
+        let te = std::time::Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .with_context(|| format!("executing {model_id}/{artifact}"))?;
+        let exec = te.elapsed().as_secs_f64();
+
+        let tm2 = std::time::Instant::now();
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result")?
+            .to_tuple()
+            .context("untupling result")?;
+        if tuple.len() != spec.outputs.len() {
+            bail!(
+                "{model_id}/{artifact}: expected {} outputs, got {}",
+                spec.outputs.len(),
+                tuple.len()
+            );
+        }
+        let outs = tuple
+            .into_iter()
+            .zip(&spec.outputs)
+            .map(|(lit, shape)| literal_to_tensor(lit, shape))
+            .collect::<Result<Vec<_>>>()?;
+        let marshal_out = tm2.elapsed().as_secs_f64();
+
+        let mut s = self.stats.borrow_mut();
+        s.executions += 1;
+        s.exec_secs += exec;
+        s.marshal_secs += marshal_in + marshal_out;
+        Ok(outs)
+    }
+}
+
+fn validate_inputs(spec: &ArtifactSpec, inputs: &[&Tensor]) -> Result<()> {
+    if inputs.len() != spec.inputs.len() {
+        bail!(
+            "expected {} inputs ({:?}...), got {}",
+            spec.inputs.len(),
+            spec.inputs.iter().take(4).map(|(n, _)| n).collect::<Vec<_>>(),
+            inputs.len()
+        );
+    }
+    for (t, (name, shape)) in inputs.iter().zip(&spec.inputs) {
+        if t.shape() != shape.as_slice() {
+            bail!(
+                "input {name:?}: expected shape {:?}, got {:?}",
+                shape,
+                t.shape()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    if t.shape().is_empty() {
+        return Ok(xla::Literal::scalar(t.data()[0]));
+    }
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(t.data())
+        .reshape(&dims)
+        .context("reshaping literal")
+}
+
+fn literal_to_tensor(lit: xla::Literal, shape: &[usize]) -> Result<Tensor> {
+    let data = lit.to_vec::<f32>().context("reading f32 literal")?;
+    Tensor::from_vec(shape, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_checks_count_and_shape() {
+        let spec = ArtifactSpec {
+            file: "x.hlo.txt".into(),
+            inputs: vec![("a".into(), vec![2, 3])],
+            outputs: vec![vec![2, 3]],
+        };
+        let good = Tensor::zeros(&[2, 3]);
+        let bad = Tensor::zeros(&[3, 2]);
+        assert!(validate_inputs(&spec, &[&good]).is_ok());
+        assert!(validate_inputs(&spec, &[&bad]).is_err());
+        assert!(validate_inputs(&spec, &[]).is_err());
+    }
+
+    #[test]
+    fn scalar_literal_roundtrip() {
+        let t = Tensor::scalar(3.5);
+        let lit = tensor_to_literal(&t).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![3.5]);
+    }
+}

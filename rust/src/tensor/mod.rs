@@ -1,0 +1,244 @@
+//! Host-side ND tensor substrate (f32, row-major), shared by the runtime
+//! marshalling layer, the pruning projections, and the mobile engine.
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn filled(shape: &[usize], v: f32) -> Self {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![v; shape.iter().product()],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        if shape.iter().product::<usize>() != data.len() {
+            bail!(
+                "shape {:?} (={}) does not match data len {}",
+                shape,
+                shape.iter().product::<usize>(),
+                data.len()
+            );
+        }
+        Ok(Tensor {
+            shape: shape.to_vec(),
+            data,
+        })
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Row-major reshape (no data movement).
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Self> {
+        if shape.iter().product::<usize>() != self.data.len() {
+            bail!("cannot reshape {:?} -> {:?}", self.shape, shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.shape.len(), 2, "rows() on {:?}", self.shape);
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.shape.len(), 2, "cols() on {:?}", self.shape);
+        self.shape[1]
+    }
+
+    pub fn at2(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.shape[1] + c]
+    }
+
+    pub fn set2(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.shape[1] + c] = v;
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        let c = self.shape[1];
+        &self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        let c = self.shape[1];
+        &mut self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn sq_frobenius(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    pub fn count_nonzero(&self) -> usize {
+        self.data.iter().filter(|&&x| x != 0.0).count()
+    }
+
+    pub fn map(mut self, f: impl Fn(f32) -> f32) -> Self {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+        self
+    }
+
+    /// Elementwise `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Elementwise product (used for mask application on host).
+    pub fn hadamard(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a *= b;
+        }
+    }
+
+    /// Max |a - b| over all elements.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Argmax along the last axis of a 2D tensor, per row.
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        assert_eq!(self.shape.len(), 2);
+        (0..self.shape[0])
+            .map(|r| {
+                let row = self.row(r);
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+}
+
+/// Select the indices of the `k` largest values (by `score`) out of `n`.
+/// Deterministic tie-break by lower index. O(n log n); projection sizes are
+/// small enough that this is never hot (verified by bench_projection).
+pub fn top_k_indices(scores: &[f64], k: usize) -> Vec<usize> {
+    // NaN-safe total order: NaN ranks below everything (a diverged weight
+    // must never be selected as a "largest magnitude").
+    let key = |i: usize| -> f64 {
+        let s = scores[i];
+        if s.is_nan() {
+            f64::NEG_INFINITY
+        } else {
+            s
+        }
+    };
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| {
+        key(b)
+            .partial_cmp(&key(a))
+            .expect("keys are never NaN")
+            .then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_vec_validates_shape() {
+        assert!(Tensor::from_vec(&[2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::from_vec(&[2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[2, 6], (0..12).map(|i| i as f32).collect())
+            .unwrap();
+        let t = t.reshape(&[3, 4]).unwrap();
+        assert_eq!(t.at2(1, 0), 4.0);
+        assert!(t.clone().reshape(&[5, 5]).is_err());
+    }
+
+    #[test]
+    fn row_and_at2_agree() {
+        let t = Tensor::from_vec(&[3, 4], (0..12).map(|i| i as f32).collect())
+            .unwrap();
+        assert_eq!(t.row(2), &[8.0, 9.0, 10.0, 11.0]);
+        assert_eq!(t.at2(2, 3), 11.0);
+    }
+
+    #[test]
+    fn argmax_rows_basic() {
+        let t =
+            Tensor::from_vec(&[2, 3], vec![0.1, 0.9, 0.2, 3.0, -1.0, 2.0])
+                .unwrap();
+        assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    fn top_k_orders_and_breaks_ties() {
+        let s = vec![1.0, 5.0, 5.0, 0.0];
+        assert_eq!(top_k_indices(&s, 2), vec![1, 2]);
+        assert_eq!(top_k_indices(&s, 3), vec![1, 2, 0]);
+        assert_eq!(top_k_indices(&s, 0), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn axpy_hadamard() {
+        let mut a = Tensor::from_vec(&[2], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::from_vec(&[2], vec![3.0, 4.0]).unwrap();
+        a.axpy(2.0, &b);
+        assert_eq!(a.data(), &[7.0, 10.0]);
+        a.hadamard(&b);
+        assert_eq!(a.data(), &[21.0, 40.0]);
+    }
+}

@@ -1,0 +1,139 @@
+//! Training substrate: parameter init, the client's pre-training loop, the
+//! masked retraining loop (paper Fig. 2(b) right side), the evaluator, and
+//! a checkpoint store. All compute runs through PJRT artifacts; this module
+//! only orchestrates.
+
+pub mod params;
+
+use anyhow::{Context, Result};
+
+use crate::config::TrainConfig;
+use crate::data::SynthVision;
+use crate::rng::Pcg32;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+/// Loss/accuracy trace of a training run.
+#[derive(Clone, Debug, Default)]
+pub struct TrainTrace {
+    pub losses: Vec<f32>,
+    /// (step, accuracy) pairs at `log_every` cadence
+    pub accs: Vec<(usize, f64)>,
+}
+
+impl TrainTrace {
+    pub fn final_acc(&self) -> f64 {
+        self.accs.last().map(|&(_, a)| a).unwrap_or(0.0)
+    }
+}
+
+/// Client pre-training: plain SGD on the confidential dataset.
+pub fn pretrain(
+    rt: &Runtime,
+    model_id: &str,
+    params: &mut Vec<Tensor>,
+    train: &SynthVision,
+    test: &SynthVision,
+    cfg: &TrainConfig,
+) -> Result<TrainTrace> {
+    run_sgd(rt, model_id, params, None, train, test, cfg)
+}
+
+/// Client retraining with the designer's mask function: identical to the
+/// training loop except the `masked_train_step` artifact zeroes pruned
+/// weights and their gradients (observation (iii), §III-B).
+pub fn retrain_masked(
+    rt: &Runtime,
+    model_id: &str,
+    params: &mut Vec<Tensor>,
+    masks: &[Tensor],
+    train: &SynthVision,
+    test: &SynthVision,
+    cfg: &TrainConfig,
+) -> Result<TrainTrace> {
+    run_sgd(rt, model_id, params, Some(masks), train, test, cfg)
+}
+
+fn run_sgd(
+    rt: &Runtime,
+    model_id: &str,
+    params: &mut Vec<Tensor>,
+    masks: Option<&[Tensor]>,
+    train: &SynthVision,
+    test: &SynthVision,
+    cfg: &TrainConfig,
+) -> Result<TrainTrace> {
+    let np = params.len();
+    let bsz = rt.manifest.batches.train;
+    let artifact = if masks.is_some() {
+        "masked_train_step"
+    } else {
+        "train_step"
+    };
+    let mut rng = Pcg32::seeded(cfg.seed);
+    let lr = Tensor::scalar(cfg.lr);
+    let mut trace = TrainTrace::default();
+    for step in 0..cfg.steps {
+        let (x, y) = train.batch(&mut rng, bsz);
+        let mut inputs: Vec<&Tensor> = params.iter().collect();
+        if let Some(ms) = masks {
+            inputs.extend(ms.iter());
+        }
+        inputs.push(&x);
+        inputs.push(&y);
+        inputs.push(&lr);
+        let mut outs = rt
+            .exec(model_id, artifact, &inputs)
+            .with_context(|| format!("{artifact} step {step}"))?;
+        let loss = outs.pop().expect("loss output").data()[0];
+        trace.losses.push(loss);
+        *params = outs;
+        debug_assert_eq!(params.len(), np);
+        if cfg.log_every > 0 && (step + 1) % cfg.log_every == 0 {
+            let acc = evaluate(rt, model_id, params, test)?;
+            trace.accs.push((step + 1, acc));
+        }
+    }
+    let acc = evaluate(rt, model_id, params, test)?;
+    trace.accs.push((cfg.steps, acc));
+    Ok(trace)
+}
+
+/// Top-1 accuracy of `params` on `data` via the `fwd_eval` artifact.
+pub fn evaluate(
+    rt: &Runtime,
+    model_id: &str,
+    params: &[Tensor],
+    data: &SynthVision,
+) -> Result<f64> {
+    let bsz = rt.manifest.batches.eval;
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for (x, labels) in data.eval_chunks(bsz) {
+        let mut inputs: Vec<&Tensor> = params.iter().collect();
+        inputs.push(&x);
+        let outs = rt.exec(model_id, "fwd_eval", &inputs)?;
+        let preds = outs[0].argmax_rows();
+        for (p, l) in preds.iter().zip(&labels) {
+            if p == l {
+                correct += 1;
+            }
+            total += 1;
+        }
+    }
+    Ok(correct as f64 / total.max(1) as f64)
+}
+
+/// Forward pass on an admm-batch input returning logits — used for the
+/// problem-(2) distillation targets (fwd_acts output 0).
+pub fn logits_admm(
+    rt: &Runtime,
+    model_id: &str,
+    params: &[Tensor],
+    x: &Tensor,
+) -> Result<Tensor> {
+    let mut inputs: Vec<&Tensor> = params.iter().collect();
+    inputs.push(x);
+    let mut outs = rt.exec(model_id, "fwd_acts", &inputs)?;
+    Ok(outs.remove(0))
+}

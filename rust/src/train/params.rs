@@ -1,0 +1,185 @@
+//! Parameter initialization and the checkpoint store.
+//!
+//! Init matches the Python test reference (He-normal fan-in for weights,
+//! zeros for biases) but runs entirely in Rust — no weight files cross the
+//! Python/Rust boundary; the manifest's shape list is the contract.
+//!
+//! Checkpoints are a simple self-describing binary: magic, param count,
+//! then per param: name, rank, dims (u32 LE) and raw f32 LE data.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ModelSpec;
+use crate::rng::Pcg32;
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 8] = b"REPROCK1";
+
+/// He-normal init for weights (fan-in over all but the leading dim),
+/// zeros for rank-1 biases.
+pub fn init_params(spec: &ModelSpec, seed: u64) -> Vec<Tensor> {
+    spec.params
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            if p.shape.len() > 1 {
+                let fan_in: usize = p.shape[1..].iter().product();
+                let std = (2.0 / fan_in as f32).sqrt();
+                let mut rng = Pcg32::new(seed, i as u64 + 1);
+                let data = (0..p.shape.iter().product::<usize>())
+                    .map(|_| rng.normal_scaled(std))
+                    .collect();
+                Tensor::from_vec(&p.shape, data).unwrap()
+            } else {
+                Tensor::zeros(&p.shape)
+            }
+        })
+        .collect()
+}
+
+pub fn save(path: impl AsRef<Path>, spec: &ModelSpec, params: &[Tensor]) -> Result<()> {
+    if params.len() != spec.params.len() {
+        bail!(
+            "param count mismatch: {} vs spec {}",
+            params.len(),
+            spec.params.len()
+        );
+    }
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&(params.len() as u32).to_le_bytes())?;
+    for (t, p) in params.iter().zip(&spec.params) {
+        let name = p.name.as_bytes();
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name)?;
+        f.write_all(&(t.shape().len() as u32).to_le_bytes())?;
+        for &d in t.shape() {
+            f.write_all(&(d as u32).to_le_bytes())?;
+        }
+        for &v in t.data() {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+pub fn load(path: impl AsRef<Path>, spec: &ModelSpec) -> Result<Vec<Tensor>> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(&path)
+            .with_context(|| format!("opening checkpoint {:?}", path.as_ref()))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("bad checkpoint magic");
+    }
+    let n = read_u32(&mut f)? as usize;
+    if n != spec.params.len() {
+        bail!("checkpoint has {n} params, spec wants {}", spec.params.len());
+    }
+    let mut out = Vec::with_capacity(n);
+    for p in &spec.params {
+        let name_len = read_u32(&mut f)? as usize;
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let name = String::from_utf8(name)?;
+        if name != p.name {
+            bail!("checkpoint param {name:?} != spec {:?}", p.name);
+        }
+        let rank = read_u32(&mut f)? as usize;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(read_u32(&mut f)? as usize);
+        }
+        if shape != p.shape {
+            bail!("checkpoint shape {shape:?} != spec {:?}", p.shape);
+        }
+        let count: usize = shape.iter().product();
+        let mut buf = vec![0u8; count * 4];
+        f.read_exact(&mut buf)?;
+        let data = buf
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        out.push(Tensor::from_vec(&shape, data)?);
+    }
+    Ok(out)
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ParamSpec;
+
+    fn tiny_spec() -> ModelSpec {
+        ModelSpec {
+            id: "t".into(),
+            arch: "t".into(),
+            classes: 2,
+            in_hw: 4,
+            ops: vec![],
+            params: vec![
+                ParamSpec {
+                    name: "w".into(),
+                    shape: vec![4, 3, 3, 3],
+                },
+                ParamSpec {
+                    name: "b".into(),
+                    shape: vec![4],
+                },
+            ],
+            prunable: vec![],
+            artifacts: Default::default(),
+        }
+    }
+
+    #[test]
+    fn init_shapes_and_stats() {
+        let spec = tiny_spec();
+        let ps = init_params(&spec, 1);
+        assert_eq!(ps[0].shape(), &[4, 3, 3, 3]);
+        assert!(ps[1].data().iter().all(|&v| v == 0.0));
+        // deterministic
+        let ps2 = init_params(&spec, 1);
+        assert_eq!(ps[0], ps2[0]);
+        let ps3 = init_params(&spec, 2);
+        assert_ne!(ps[0], ps3[0]);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let spec = tiny_spec();
+        let ps = init_params(&spec, 7);
+        let dir = std::env::temp_dir().join("repro_ckpt_test");
+        let path = dir.join("m.ckpt");
+        save(&path, &spec, &ps).unwrap();
+        let loaded = load(&path, &spec).unwrap();
+        assert_eq!(ps, loaded);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn checkpoint_rejects_wrong_spec() {
+        let spec = tiny_spec();
+        let ps = init_params(&spec, 7);
+        let dir = std::env::temp_dir().join("repro_ckpt_test2");
+        let path = dir.join("m.ckpt");
+        save(&path, &spec, &ps).unwrap();
+        let mut other = tiny_spec();
+        other.params[1].shape = vec![5];
+        assert!(load(&path, &other).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

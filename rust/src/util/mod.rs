@@ -1,0 +1,42 @@
+//! Small in-tree substrates that replace unavailable external crates:
+//! JSON (`json`), property testing (`propcheck`), and misc helpers.
+pub mod json;
+pub mod propcheck;
+
+use std::time::Instant;
+
+/// Wall-clock timer for coarse phase logging.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+
+    pub fn ms(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// `floor(alpha * n)` with the paper's ⌊·⌋ semantics, clamped to ≥1 so a
+/// layer never loses all its weights (matches ADMM-pruning practice).
+pub fn keep_count(alpha: f64, n: usize) -> usize {
+    ((alpha * n as f64).floor() as usize).clamp(1, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keep_count_floor_and_clamp() {
+        assert_eq!(keep_count(0.25, 100), 25);
+        assert_eq!(keep_count(0.0624, 16), 1); // floor(0.9984) -> 0 -> clamp 1
+        assert_eq!(keep_count(1.0, 7), 7);
+        assert_eq!(keep_count(2.0, 7), 7); // over-asking caps at n
+    }
+}

@@ -1,0 +1,97 @@
+//! Property-testing harness (proptest is unavailable offline).
+//!
+//! A deliberately small propcheck: run a property over `n` cases drawn from
+//! a seeded [`Pcg32`]; on failure, report the case index and seed so the
+//! exact counterexample replays deterministically. Shrinking is replaced by
+//! generator-side size ramping (cases grow from tiny to large, so the first
+//! failure tends to be near-minimal).
+
+use crate::rng::Pcg32;
+
+/// Per-case generation context: `size` ramps from 1..=max over the run.
+pub struct Gen<'a> {
+    pub rng: &'a mut Pcg32,
+    pub size: usize,
+}
+
+impl<'a> Gen<'a> {
+    /// dimension in [1, size]
+    pub fn dim(&mut self) -> usize {
+        1 + self.rng.below(self.size)
+    }
+
+    pub fn dim_up_to(&mut self, cap: usize) -> usize {
+        1 + self.rng.below(self.size.min(cap))
+    }
+
+    pub fn vec_f32(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.rng.normal()).collect()
+    }
+
+    pub fn alpha(&mut self) -> f64 {
+        // sparsity ratios of interest: 1/16 .. 1.0
+        self.rng.uniform_in(0.0625, 1.0) as f64
+    }
+}
+
+/// Run `prop` over `cases` ramped cases. Panics with a replayable report on
+/// the first failure (propcheck properties return `Err(reason)` to fail).
+pub fn check<F>(name: &str, seed: u64, cases: usize, max_size: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        // ramp: early cases small, later cases near max_size
+        let size = 1 + (max_size - 1) * case / cases.max(1);
+        let mut rng = Pcg32::new(seed, case as u64);
+        let mut g = Gen {
+            rng: &mut rng,
+            size,
+        };
+        if let Err(reason) = prop(&mut g) {
+            panic!(
+                "property {name:?} failed at case {case} \
+                 (seed={seed}, stream={case}, size={size}): {reason}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("uniform-bounds", 1, 200, 64, |g| {
+            let x = g.rng.uniform();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("out of range: {x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn reports_failures() {
+        check("always-fails-at-big-size", 1, 50, 32, |g| {
+            if g.size < 16 {
+                Ok(())
+            } else {
+                Err("size reached 16".into())
+            }
+        });
+    }
+
+    #[test]
+    fn size_ramps() {
+        let mut max_seen = 0;
+        check("ramp", 3, 100, 40, |g| {
+            max_seen = max_seen.max(g.size);
+            Ok(())
+        });
+        assert!(max_seen >= 30);
+    }
+}

@@ -1,0 +1,98 @@
+//! Coordinator-level integration: Ctx caching (checkpoints + result rows),
+//! baselines, and the Table-IV formulation machinery on the micro model at
+//! smoke scale. Requires `make artifacts`.
+
+use repro::config::Preset;
+use repro::coordinator::{Ctx, Method};
+use repro::pruning::Scheme;
+
+fn ctx_in_tempdir() -> (Ctx, std::path::PathBuf) {
+    let dir = std::env::temp_dir().join(format!(
+        "repro_pipe_{}",
+        std::process::id()
+    ));
+    let mut ctx = Ctx::new(
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+        Preset::Smoke,
+    )
+    .expect("runtime");
+    ctx.runs = dir.clone();
+    ctx.verbose = false;
+    (ctx, dir)
+}
+
+#[test]
+fn pretrained_checkpoint_cache_roundtrip() {
+    let (ctx, dir) = ctx_in_tempdir();
+    let (p1, a1) = ctx.pretrained("lenet_sv10").unwrap();
+    // second call must come from cache with identical params + acc
+    let (p2, a2) = ctx.pretrained("lenet_sv10").unwrap();
+    assert_eq!(p1, p2);
+    assert_eq!(a1, a2);
+    assert!(dir.join("ckpt").exists());
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn row_results_are_cached_and_stable() {
+    let (ctx, dir) = ctx_in_tempdir();
+    let r1 = ctx
+        .prune_retrain("lenet_sv10", Method::Uniform, Scheme::Irregular, 4.0)
+        .unwrap();
+    let t = std::time::Instant::now();
+    let r2 = ctx
+        .prune_retrain("lenet_sv10", Method::Uniform, Scheme::Irregular, 4.0)
+        .unwrap();
+    // cache hit: instant and bit-identical
+    assert!(t.elapsed().as_secs_f64() < 0.5);
+    assert_eq!(r1.comp_rate, r2.comp_rate);
+    assert_eq!(r1.prune_acc, r2.prune_acc);
+    assert!((r1.comp_rate - 4.0).abs() < 0.2);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn all_methods_produce_valid_rows_on_lenet() {
+    let (ctx, dir) = ctx_in_tempdir();
+    for method in [
+        Method::Uniform,
+        Method::OneShot,
+        Method::Privacy,
+        Method::PrivacyWhole,
+        Method::Traditional,
+    ] {
+        let row = ctx
+            .prune_retrain("lenet_sv10", method, Scheme::Irregular, 4.0)
+            .unwrap();
+        assert!(
+            row.comp_rate > 3.5 && row.comp_rate < 4.5,
+            "{method:?}: comp {}",
+            row.comp_rate
+        );
+        assert!(
+            row.prune_acc > 0.05,
+            "{method:?}: acc {} (worse than chance)",
+            row.prune_acc
+        );
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn pattern_scheme_rate_is_bounded_by_connectivity() {
+    let (ctx, dir) = ctx_in_tempdir();
+    // pattern pruning cannot go below 2.25x (4-of-9 kernels all kept)
+    let row = ctx
+        .prune_retrain("lenet_sv10", Method::Uniform, Scheme::Pattern, 16.0)
+        .unwrap();
+    assert!(row.comp_rate >= 15.0, "comp {}", row.comp_rate);
+    let row2 = ctx
+        .prune_retrain("lenet_sv10", Method::Uniform, Scheme::Pattern, 2.0)
+        .unwrap();
+    assert!(
+        (row2.comp_rate - 2.25).abs() < 0.1,
+        "pattern floor: {}",
+        row2.comp_rate
+    );
+    std::fs::remove_dir_all(dir).ok();
+}

@@ -1,0 +1,286 @@
+//! Integration tests over the PJRT runtime + real AOT artifacts.
+//!
+//! Numerics are pinned against fixtures computed by the Python L2 graphs
+//! (python/tests/make_fixtures.py): parameters/inputs are generated from
+//! shared closed-form sin/cos ramps on both sides, so the same computation
+//! runs through (a) jax on CPU and (b) HLO-text → PJRT from Rust, and the
+//! results must agree to f32 tolerance.
+//!
+//! Requires `make artifacts` (manifest + lenet artifacts + fixtures.json).
+
+use repro::config::TrainConfig;
+use repro::runtime::Runtime;
+use repro::tensor::Tensor;
+use repro::util::json::Json;
+
+const MODEL: &str = "lenet_sv10";
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn runtime() -> Runtime {
+    Runtime::new(artifacts_dir()).expect("runtime (run `make artifacts`)")
+}
+
+fn fixtures() -> Json {
+    let text = std::fs::read_to_string(artifacts_dir().join("fixtures.json"))
+        .expect("fixtures.json (run `make artifacts`)");
+    Json::parse(&text).unwrap()
+}
+
+fn formula_param(shape: &[usize], scale: f32) -> Tensor {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    let data = (0..n).map(|i| (0.1 * i as f32).sin() * scale).collect();
+    Tensor::from_vec(if shape.is_empty() { &[] } else { shape }, data).unwrap()
+}
+
+fn formula_input(shape: &[usize]) -> Tensor {
+    let n: usize = shape.iter().product();
+    let data = (0..n)
+        .map(|i| (0.05 * i as f32).cos() * 0.5 + 0.5)
+        .collect();
+    Tensor::from_vec(shape, data).unwrap()
+}
+
+fn formula_params(rt: &Runtime) -> Vec<Tensor> {
+    rt.model(MODEL)
+        .unwrap()
+        .params
+        .iter()
+        .map(|p| formula_param(&p.shape, 0.1))
+        .collect()
+}
+
+fn assert_close(got: f32, want: f64, tol: f64, what: &str) {
+    assert!(
+        (got as f64 - want).abs() <= tol * want.abs().max(1.0),
+        "{what}: got {got}, want {want}"
+    );
+}
+
+#[test]
+fn fwd_eval_matches_python_fixture() {
+    let rt = runtime();
+    let fix = fixtures();
+    let params = formula_params(&rt);
+    let bsz = rt.manifest.batches.eval;
+    let hw = rt.model(MODEL).unwrap().in_hw;
+    let x = formula_input(&[bsz, 3, hw, hw]);
+    let mut inputs: Vec<&Tensor> = params.iter().collect();
+    inputs.push(&x);
+    let outs = rt.exec(MODEL, "fwd_eval", &inputs).unwrap();
+    let logits = &outs[0];
+    for (row_key, r) in
+        [("fwd_eval_logits_row0", 0usize), ("fwd_eval_logits_row7", 7)]
+    {
+        let want = fix.get(row_key).unwrap().as_arr().unwrap();
+        for (c, w) in want.iter().enumerate() {
+            assert_close(
+                logits.at2(r, c),
+                w.as_f64().unwrap(),
+                1e-4,
+                &format!("{row_key}[{c}]"),
+            );
+        }
+    }
+}
+
+#[test]
+fn train_step_matches_python_fixture() {
+    let rt = runtime();
+    let fix = fixtures();
+    let params = formula_params(&rt);
+    let bsz = rt.manifest.batches.train;
+    let model = rt.model(MODEL).unwrap();
+    let x = formula_input(&[bsz, 3, model.in_hw, model.in_hw]);
+    let mut y = Tensor::zeros(&[bsz, model.classes]);
+    for b in 0..bsz {
+        y.set2(b, b % model.classes, 1.0);
+    }
+    let lr = Tensor::scalar(0.05);
+    let mut inputs: Vec<&Tensor> = params.iter().collect();
+    inputs.push(&x);
+    inputs.push(&y);
+    inputs.push(&lr);
+    let outs = rt.exec(MODEL, "train_step", &inputs).unwrap();
+    let loss = outs.last().unwrap().data()[0];
+    assert_close(
+        loss,
+        fix.get("train_step_loss").unwrap().as_f64().unwrap(),
+        1e-4,
+        "train_step loss",
+    );
+    let w0_sum: f32 = outs[0].data().iter().sum();
+    assert_close(
+        w0_sum,
+        fix.get("train_step_w0_sum").unwrap().as_f64().unwrap(),
+        1e-3,
+        "train_step w0 sum",
+    );
+}
+
+#[test]
+fn layer_primal_matches_python_fixture() {
+    let rt = runtime();
+    let fix = fixtures();
+    let params = formula_params(&rt);
+    let model = rt.model(MODEL).unwrap();
+    let convs = model.prunable_convs();
+    let (_, op) = convs[0];
+    let bsz = rt.manifest.batches.admm;
+    let act_in = formula_input(&[bsz, op.c, op.in_hw, op.in_hw]);
+    let target = formula_input(&[bsz, op.a, op.out_hw, op.out_hw]);
+    let (p, q) = op.gemm_shape();
+    let z = formula_param(&[p, q], 0.05);
+    let u = formula_param(&[p, q], 0.01);
+    let rho = Tensor::scalar(1e-2);
+    let lr = Tensor::scalar(1e-3);
+    let outs = rt
+        .exec(
+            MODEL,
+            "layer_primal_0",
+            &[
+                &params[op.w],
+                &params[op.b],
+                &act_in,
+                &target,
+                &z,
+                &u,
+                &rho,
+                &lr,
+            ],
+        )
+        .unwrap();
+    assert_close(
+        outs[2].data()[0],
+        fix.get("layer_primal_loss").unwrap().as_f64().unwrap(),
+        1e-4,
+        "layer_primal loss",
+    );
+    let w_sum: f32 = outs[0].data().iter().sum();
+    assert_close(
+        w_sum,
+        fix.get("layer_primal_w_sum").unwrap().as_f64().unwrap(),
+        1e-3,
+        "layer_primal w sum",
+    );
+}
+
+#[test]
+fn exec_rejects_wrong_shapes() {
+    let rt = runtime();
+    let params = formula_params(&rt);
+    let inputs: Vec<&Tensor> = params.iter().collect();
+    // missing x input
+    assert!(rt.exec(MODEL, "fwd_eval", &inputs).is_err());
+}
+
+#[test]
+fn masked_train_step_keeps_pruned_weights_zero() {
+    use repro::pruning::{project, LayerShape, Scheme};
+    let rt = runtime();
+    let model = rt.model(MODEL).unwrap();
+    let mut params = formula_params(&rt);
+    // project conv weights irregular @ alpha 0.25, collect masks
+    let mut masks = Vec::new();
+    for (_, op) in model.prunable_convs() {
+        let shape = LayerShape::from_conv(op);
+        let wg = params[op.w]
+            .clone()
+            .reshape(&[shape.p, shape.q()])
+            .unwrap();
+        let pr = project(Scheme::Irregular, &wg, &shape, 0.25).unwrap();
+        let s4 = params[op.w].shape().to_vec();
+        params[op.w] = pr.w.clone().reshape(&s4).unwrap();
+        masks.push(pr.mask);
+    }
+    let bsz = rt.manifest.batches.train;
+    let x = formula_input(&[bsz, 3, model.in_hw, model.in_hw]);
+    let mut y = Tensor::zeros(&[bsz, model.classes]);
+    for b in 0..bsz {
+        y.set2(b, b % model.classes, 1.0);
+    }
+    let lr = Tensor::scalar(0.05);
+    let mut inputs: Vec<&Tensor> = params.iter().collect();
+    inputs.extend(masks.iter());
+    inputs.push(&x);
+    inputs.push(&y);
+    inputs.push(&lr);
+    let outs = rt.exec(MODEL, "masked_train_step", &inputs).unwrap();
+    for ((_, op), mask) in
+        model.prunable_convs().iter().zip(&masks)
+    {
+        let w = &outs[op.w];
+        for (wi, mi) in w.data().iter().zip(mask.data()) {
+            if *mi == 0.0 {
+                assert_eq!(*wi, 0.0, "pruned weight updated");
+            }
+        }
+    }
+}
+
+#[test]
+fn end_to_end_smoke_pipeline_on_lenet() {
+    use repro::admm::{prune_layerwise, DataSource};
+    use repro::config::{AdmmConfig, Preset};
+    use repro::data::SynthVision;
+    use repro::pruning::Scheme;
+    use repro::train;
+    use repro::train::params::init_params;
+
+    let rt = runtime();
+    let model = rt.model(MODEL).unwrap().clone();
+    let tr = SynthVision::generate(model.classes, model.in_hw, 200, 11, 0);
+    let te = SynthVision::generate(model.classes, model.in_hw, 100, 11, 1);
+    let mut params = init_params(&model, 1);
+
+    let mut cfg = TrainConfig::pretrain(Preset::Smoke);
+    cfg.steps = 40;
+    cfg.log_every = 0;
+    let trace =
+        train::pretrain(&rt, MODEL, &mut params, &tr, &te, &cfg).unwrap();
+    let base_acc = trace.final_acc();
+    assert!(
+        base_acc > 0.25,
+        "lenet should beat chance after 40 steps, got {base_acc}"
+    );
+
+    let admm_cfg = AdmmConfig::preset(Preset::Smoke);
+    let out = prune_layerwise(
+        &rt,
+        MODEL,
+        &params,
+        Scheme::Irregular,
+        0.25,
+        &admm_cfg,
+        DataSource::Synthetic,
+    )
+    .unwrap();
+    assert!(out.comp_rate > 3.9 && out.comp_rate < 4.3, "{}", out.comp_rate);
+
+    let mut pruned = out.params.clone();
+    let mut rcfg = TrainConfig::retrain(Preset::Smoke);
+    rcfg.steps = 30;
+    rcfg.log_every = 0;
+    let rt_trace = train::retrain_masked(
+        &rt, MODEL, &mut pruned, &out.masks, &tr, &te, &rcfg,
+    )
+    .unwrap();
+    // retraining should not be catastrophically below the dense model
+    assert!(
+        rt_trace.final_acc() > base_acc - 0.25,
+        "retrain acc {} vs base {base_acc}",
+        rt_trace.final_acc()
+    );
+    // pruned weights stay zero through retraining
+    for ((_, op), mask) in
+        model.prunable_convs().iter().zip(&out.masks)
+    {
+        for (wi, mi) in pruned[op.w].data().iter().zip(mask.data()) {
+            if *mi == 0.0 {
+                assert_eq!(*wi, 0.0);
+            }
+        }
+    }
+}
