@@ -1,9 +1,13 @@
 //! Mobile deployment deep-dive: prune a model with the pattern scheme,
-//! run all three compiler passes, execute the compiled form for real, and
-//! print the Fig. 3-style latency comparison (measured host + estimated
-//! Galaxy-S10 numbers for every framework).
+//! compile it through the PassManager into an ExecutionPlan, run every
+//! registered kernel for real (multi-threaded), and print the Fig. 3-style
+//! latency comparison (measured host + estimated Galaxy-S10 numbers for
+//! every framework).
 //!
-//! Run: `cargo run --release --example mobile_deploy`
+//! Run: `cargo run --release --features pjrt --example mobile_deploy`
+//! (pruning runs through the PJRT runtime; the mobile compile/execute
+//! stack itself has no PJRT dependency — see `cargo bench bench_mobile`
+//! for the artifact-free path).
 
 use anyhow::Result;
 use repro::config::Preset;
@@ -11,9 +15,11 @@ use repro::coordinator::{Ctx, Method};
 use repro::mobile::costmodel::{
     self, latency_ms, AnalyticModel, Device, ALL_ENGINES, GALAXY_S10,
 };
-use repro::mobile::engine::{self, EngineKind, Fmap};
+use repro::mobile::engine::{Executor, Fmap, KernelKind, KERNEL_KINDS};
 use repro::mobile::ir::ModelIR;
+use repro::mobile::plan::PassManager;
 use repro::pruning::Scheme;
+use repro::report::human_bytes;
 use repro::rng::Pcg32;
 
 fn main() -> Result<()> {
@@ -25,10 +31,11 @@ fn main() -> Result<()> {
     let (params, _, comp, _, _) =
         ctx.prune(model_id, Method::Privacy, Scheme::Pattern, rate)?;
     let spec = ctx.rt.model(model_id)?.clone();
-    let compiled = engine::compile(ModelIR::build(&spec, &params)?);
-    let rep = &compiled.report;
+    let plan = PassManager::new(ctx.threads)
+        .compile(ModelIR::build(&spec, &params)?)?;
+    let rep = &plan.report;
 
-    println!("\ncompiler report (achieved {comp:.1}x):");
+    println!("\ncompiler report (achieved {comp:.1}x, {} threads):", plan.threads);
     println!(
         "{:>5} {:>12} {:>12} {:>8} {:>10} {:>10} {:>9}",
         "layer", "dense MACs", "sparse MACs", "styles", "bytes", "(dense)", "LRE"
@@ -45,8 +52,18 @@ fn main() -> Result<()> {
             l.loads_naive as f64 / l.loads_lre.max(1) as f64
         );
     }
+    println!(
+        "plan: payload {} + headers {}, arena {}, {} worker blocks",
+        human_bytes(plan.stats.payload_bytes),
+        human_bytes(plan.stats.header_bytes),
+        human_bytes(plan.stats.arena_bytes),
+        plan.stats.n_blocks
+    );
+    for (name, ms) in &plan.stats.pass_ms {
+        println!("  pass {name:14} {ms:9.3} ms");
+    }
 
-    // real execution
+    // real execution through the kernel registry
     let mut rng = Pcg32::seeded(5);
     let img = Fmap {
         c: 3,
@@ -54,19 +71,27 @@ fn main() -> Result<()> {
         data: (0..3 * spec.in_hw * spec.in_hw).map(|_| rng.uniform()).collect(),
     };
     println!("\nmeasured host-CPU latency (batch 1):");
-    let mut times = [0.0f64; 2];
-    for (i, kind) in [EngineKind::Dense, EngineKind::Sparse].iter().enumerate() {
+    let mut logits = vec![0.0f32; plan.ir.classes];
+    let mut times = std::collections::BTreeMap::new();
+    for kind in KERNEL_KINDS {
+        let mut ex = Executor::new(&plan, kind);
         for _ in 0..3 {
-            engine::infer(&compiled, &img, *kind);
+            ex.execute_into(&img, &mut logits)?;
         }
         let t = std::time::Instant::now();
         for _ in 0..50 {
-            std::hint::black_box(engine::infer(&compiled, &img, *kind));
+            ex.execute_into(&img, &mut logits)?;
+            std::hint::black_box(&logits);
         }
-        times[i] = t.elapsed().as_secs_f64() * 1e3 / 50.0;
-        println!("  {kind:?}: {:.3} ms/frame", times[i]);
+        let ms = t.elapsed().as_secs_f64() * 1e3 / 50.0;
+        println!("  {:14}: {ms:.3} ms/frame", ex.kernel_name());
+        times.insert(kind.name(), ms);
     }
-    println!("  speedup: {:.2}x", times[0] / times[1]);
+    println!(
+        "  speedup (sparse vs dense): {:.2}x",
+        times[KernelKind::DenseRef.name()]
+            / times[KernelKind::PatternScalar.name()]
+    );
 
     // Fig. 3 estimated numbers at paper scale
     println!("\nestimated Galaxy S10 latency, paper-scale models (Fig. 3):");

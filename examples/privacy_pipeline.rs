@@ -115,7 +115,7 @@ fn main() -> Result<()> {
     // -- stage 4: mobile deployment ----------------------------------------
     println!("[4/4] compiling for mobile ...");
     let compiled = engine::compile(ModelIR::build(&spec, &pruned)?);
-    let rep = &compiled.report;
+    let rep = compiled.report();
     println!(
         "      MACs {:.2}x down, weights {:.2}x down, LRE {:.2}x, reorder {:.2}x",
         rep.total_dense_macs() as f64 / rep.total_sparse_macs().max(1) as f64,

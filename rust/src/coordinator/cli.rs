@@ -14,12 +14,14 @@
 use anyhow::{bail, Context, Result};
 
 use crate::config::Preset;
-use crate::mobile::engine::{self, EngineKind, Fmap};
+use crate::mobile::engine::{Executor, Fmap, KERNEL_KINDS};
 use crate::mobile::ir::ModelIR;
+use crate::mobile::plan::PassManager;
 use crate::pruning::Scheme;
+use crate::report::human_bytes;
 use crate::rng::Pcg32;
 
-use super::{experiments, Ctx, Method};
+use super::{default_threads, experiments, Ctx, Method};
 
 struct Args {
     cmd: String,
@@ -97,6 +99,26 @@ impl Args {
             .cloned()
             .unwrap_or_else(|| "artifacts".into())
     }
+
+    fn threads(&self) -> Result<usize> {
+        match self.flags.get("threads") {
+            Some(t) => {
+                let n: usize =
+                    t.parse().context("--threads must be an integer")?;
+                if n == 0 {
+                    bail!("--threads must be >= 1");
+                }
+                Ok(n)
+            }
+            None => Ok(default_threads()),
+        }
+    }
+
+    fn ctx(&self) -> Result<Ctx> {
+        let mut ctx = Ctx::new(self.artifacts(), self.preset()?)?;
+        ctx.threads = self.threads()?;
+        Ok(ctx)
+    }
 }
 
 const HELP: &str = "\
@@ -108,12 +130,13 @@ commands:
             [--rate N] [--method privacy|whole|admm|uniform|oneshot|iterative]
   retrain   --model <id> --scheme .. --rate ..      full prune+retrain row
   eval      --model <id>                            pre-trained accuracy
-  deploy    --model <id> [--rate N]                 compile + mobile report
+  deploy    --model <id> [--rate N] [--threads N]   compile plan + executor report
   exp       <table1|table2|table3|table4|table5|fig3|all> [--preset ..]
   pipeline  --model <id> [--scheme ..] [--rate N]   end-to-end demo
   models                                            list models in manifest
   help
-common flags: --artifacts <dir> (default ./artifacts), --preset (default quick)
+common flags: --artifacts <dir> (default ./artifacts), --preset (default quick),
+              --threads <n> (executor worker threads, default min(cores, 4))
 ";
 
 pub fn main() -> Result<()> {
@@ -140,13 +163,13 @@ pub fn main() -> Result<()> {
             Ok(())
         }
         "pretrain" => {
-            let ctx = Ctx::new(args.artifacts(), args.preset()?)?;
+            let ctx = args.ctx()?;
             let (_, acc) = ctx.pretrained(args.model()?)?;
             println!("base accuracy: {acc:.4}");
             Ok(())
         }
         "eval" => {
-            let ctx = Ctx::new(args.artifacts(), args.preset()?)?;
+            let ctx = args.ctx()?;
             let model = args.model()?;
             let (params, _) = ctx.pretrained(model)?;
             let (_, te) = ctx.data(model)?;
@@ -155,7 +178,7 @@ pub fn main() -> Result<()> {
             Ok(())
         }
         "prune" => {
-            let ctx = Ctx::new(args.artifacts(), args.preset()?)?;
+            let ctx = args.ctx()?;
             let model = args.model()?;
             let (_, masks, comp, secs, _) = ctx.prune(
                 model,
@@ -170,7 +193,7 @@ pub fn main() -> Result<()> {
             Ok(())
         }
         "retrain" => {
-            let ctx = Ctx::new(args.artifacts(), args.preset()?)?;
+            let ctx = args.ctx()?;
             let row = ctx.prune_retrain(
                 args.model()?,
                 args.method()?,
@@ -187,7 +210,7 @@ pub fn main() -> Result<()> {
             Ok(())
         }
         "deploy" => {
-            let ctx = Ctx::new(args.artifacts(), args.preset()?)?;
+            let ctx = args.ctx()?;
             let model = args.model()?;
             let (params, _, comp, _, _) = ctx.prune(
                 model,
@@ -196,9 +219,16 @@ pub fn main() -> Result<()> {
                 args.rate()?,
             )?;
             let spec = ctx.rt.model(model)?.clone();
-            let compiled = engine::compile(ModelIR::build(&spec, &params)?);
-            let rep = &compiled.report;
-            println!("compiled {model} @ {comp:.1}x:");
+            let t = crate::util::Stopwatch::start();
+            let plan = PassManager::new(ctx.threads)
+                .compile(ModelIR::build(&spec, &params)?)?;
+            let plan_ms = t.ms();
+            let rep = &plan.report;
+            println!(
+                "compiled {model} @ {comp:.1}x ({} threads, plan built \
+                 in {plan_ms:.2} ms):",
+                plan.threads
+            );
             println!(
                 "  MACs dense {} -> sparse {} ({:.2}x)",
                 rep.total_dense_macs(),
@@ -207,9 +237,9 @@ pub fn main() -> Result<()> {
                     / rep.total_sparse_macs().max(1) as f64
             );
             println!(
-                "  weights dense {}B -> compressed {}B ({:.2}x)",
-                rep.total_dense_bytes(),
-                rep.total_compressed_bytes(),
+                "  weights dense {} -> compressed {} ({:.2}x)",
+                human_bytes(rep.total_dense_bytes()),
+                human_bytes(rep.total_compressed_bytes()),
                 rep.total_dense_bytes() as f64
                     / rep.total_compressed_bytes().max(1) as f64
             );
@@ -218,6 +248,17 @@ pub fn main() -> Result<()> {
                 rep.lre_gain(),
                 rep.reorder_gain()
             );
+            println!(
+                "  plan: payload {} + headers {}, arena {}, {} worker \
+                 blocks",
+                human_bytes(plan.stats.payload_bytes),
+                human_bytes(plan.stats.header_bytes),
+                human_bytes(plan.stats.arena_bytes),
+                plan.stats.n_blocks
+            );
+            for (name, ms) in &plan.stats.pass_ms {
+                println!("    pass {name:14} {ms:9.3} ms");
+            }
             let mut rng = Pcg32::seeded(7);
             let img = Fmap {
                 c: 3,
@@ -226,21 +267,21 @@ pub fn main() -> Result<()> {
                     .map(|_| rng.uniform())
                     .collect(),
             };
-            for kind in [EngineKind::Dense, EngineKind::Sparse] {
+            for kind in KERNEL_KINDS {
+                let mut ex = Executor::new(&plan, kind);
                 for _ in 0..3 {
-                    engine::infer(&compiled, &img, kind);
+                    ex.execute(&img);
                 }
                 let t = std::time::Instant::now();
                 for _ in 0..20 {
-                    std::hint::black_box(engine::infer(
-                        &compiled,
-                        &img,
-                        kind,
-                    ));
+                    std::hint::black_box(ex.execute(&img));
                 }
                 println!(
-                    "  host {kind:?} inference: {:.3} ms/frame",
-                    t.elapsed().as_secs_f64() * 50.0
+                    "  host {:14} inference: {:.3} ms/frame \
+                     (arena growths: {})",
+                    ex.kernel_name(),
+                    t.elapsed().as_secs_f64() * 50.0,
+                    ex.alloc_events()
                 );
             }
             Ok(())
@@ -251,7 +292,7 @@ pub fn main() -> Result<()> {
                 .first()
                 .map(|s| s.as_str())
                 .unwrap_or("all");
-            let ctx = Ctx::new(args.artifacts(), args.preset()?)?;
+            let ctx = args.ctx()?;
             match which {
                 "table1" => println!("{}", experiments::table1(&ctx)?.render()),
                 "table2" => println!("{}", experiments::table2(&ctx)?.render()),
@@ -268,7 +309,7 @@ pub fn main() -> Result<()> {
             Ok(())
         }
         "pipeline" => {
-            let ctx = Ctx::new(args.artifacts(), args.preset()?)?;
+            let ctx = args.ctx()?;
             let model = args.model()?;
             let scheme = args.scheme()?;
             let rate = args.rate()?;

@@ -14,8 +14,9 @@ use anyhow::Result;
 use crate::mobile::costmodel::{
     self, latency_ms, AnalyticModel, Device, ALL_ENGINES, GALAXY_S10,
 };
-use crate::mobile::engine::{self, EngineKind, Fmap};
+use crate::mobile::engine::{Executor, Fmap, KernelKind};
 use crate::mobile::ir::ModelIR;
+use crate::mobile::plan::PassManager;
 use crate::pruning::Scheme;
 use crate::report::{loss_cell, pct, rate, Table};
 use crate::rng::Pcg32;
@@ -203,7 +204,11 @@ pub fn table5(ctx: &Ctx) -> Result<Table> {
 pub fn fig3(ctx: &Ctx) -> Result<(Table, Table)> {
     // -- part (a): real execution on pruned minis --------------------------
     let mut meas = Table::new(
-        "Fig. 3 (measured): host CPU per-frame latency, compiled sparse vs dense",
+        &format!(
+            "Fig. 3 (measured): host CPU per-frame latency, planned \
+             sparse vs dense ({} executor threads)",
+            ctx.threads
+        ),
         &[
             "Model",
             "Comp. Rate",
@@ -223,7 +228,8 @@ pub fn fig3(ctx: &Ctx) -> Result<(Table, Table)> {
         let (params, _, comp, _, _) =
             ctx.prune(model_id, Method::Uniform, Scheme::Pattern, r)?;
         let spec = ctx.rt.model(model_id)?.clone();
-        let compiled = engine::compile(ModelIR::build(&spec, &params)?);
+        let plan = PassManager::new(ctx.threads)
+            .compile(ModelIR::build(&spec, &params)?)?;
         let mut rng = Pcg32::seeded(99);
         let img = Fmap {
             c: 3,
@@ -232,24 +238,23 @@ pub fn fig3(ctx: &Ctx) -> Result<(Table, Table)> {
                 .map(|_| rng.uniform())
                 .collect(),
         };
-        let time = |kind: EngineKind| {
+        let time = |kind: KernelKind| {
+            let mut ex = Executor::new(&plan, kind);
             for _ in 0..3 {
-                engine::infer(&compiled, &img, kind);
+                ex.execute(&img);
             }
             let reps = 30;
             let t = std::time::Instant::now();
             for _ in 0..reps {
-                std::hint::black_box(engine::infer(
-                    &compiled,
-                    std::hint::black_box(&img),
-                    kind,
-                ));
+                std::hint::black_box(
+                    ex.execute(std::hint::black_box(&img)),
+                );
             }
             t.elapsed().as_secs_f64() * 1e3 / reps as f64
         };
-        let td = time(EngineKind::Dense);
-        let ts = time(EngineKind::Sparse);
-        let rep = &compiled.report;
+        let td = time(KernelKind::DenseRef);
+        let ts = time(KernelKind::PatternScalar);
+        let rep = &plan.report;
         gains.push((rep.lre_gain(), rep.reorder_gain()));
         meas.row(&[
             model_id.into(),

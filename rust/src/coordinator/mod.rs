@@ -104,11 +104,23 @@ pub struct RowResult {
     pub mean_iter_secs: f64,
 }
 
+/// Default executor worker-thread count: the host's parallelism capped at
+/// 4 (the mobile target's big-core count; more threads than that stops
+/// modeling the deployment and only adds scheduling noise to benches).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(4)
+}
+
 pub struct Ctx {
     pub rt: Runtime,
     pub preset: Preset,
     pub runs: PathBuf,
     pub verbose: bool,
+    /// worker threads for mobile execution plans (deploy / fig3)
+    pub threads: usize,
 }
 
 impl Ctx {
@@ -121,6 +133,7 @@ impl Ctx {
             preset,
             runs: PathBuf::from("runs"),
             verbose: true,
+            threads: default_threads(),
         })
     }
 
@@ -384,6 +397,12 @@ mod tests {
             assert_eq!(Method::parse(m.key()).unwrap(), m);
         }
         assert!(Method::parse("nope").is_err());
+    }
+
+    #[test]
+    fn default_threads_in_mobile_band() {
+        let t = default_threads();
+        assert!((1..=4).contains(&t), "{t}");
     }
 
     #[test]

@@ -220,6 +220,26 @@ pub fn vgg16_cifar() -> Vec<(usize, usize, usize)> {
     ]
 }
 
+/// Modeled execution cost of one filter of a pattern-pruned conv layer, in
+/// abstract work units. Used by the plan compiler to load-balance the
+/// reordered filter schedule across worker threads: taps actually executed
+/// dominate (one MAC per tap per output position), kept kernels add a
+/// per-kernel stream-setup term, and a constant covers schedule overhead
+/// so fully connectivity-pruned filters still get nonzero weight.
+pub fn filter_exec_cost(c: &super::ir::ConvIR, f: usize) -> u64 {
+    let mut taps = 0u64;
+    let mut kernels = 0u64;
+    for ch in 0..c.c {
+        let p = c.pattern[f * c.c + ch];
+        if p != 0 {
+            kernels += 1;
+            taps += p.count_ones() as u64;
+        }
+    }
+    let plane = (c.out_hw * c.out_hw) as u64;
+    taps * plane + kernels * (plane / 4 + 8) + 64
+}
+
 /// Predicted end-to-end single-frame latency (ms).
 pub fn latency_ms(
     model: &AnalyticModel,
@@ -325,6 +345,36 @@ mod tests {
             let t = latency_ms(m, &OURS, &GALAXY_S10, Device::Cpu);
             assert!(t < 33.0, "{}: {t:.1}ms", m.name);
         }
+    }
+
+    #[test]
+    fn filter_exec_cost_orders_by_work() {
+        use crate::config::Act;
+        use crate::mobile::ir::ConvIR;
+        use crate::tensor::Tensor;
+        let c = ConvIR {
+            op_idx: 0,
+            a: 3,
+            c: 2,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            act: Act::Relu,
+            in_hw: 8,
+            out_hw: 8,
+            w: Tensor::zeros(&[3, 2, 3, 3]),
+            bias: Tensor::zeros(&[3]),
+            // filter 0: two 4-tap kernels; filter 1: one 2-tap kernel;
+            // filter 2: fully connectivity-pruned
+            pattern: vec![0b1111, 0b1111, 0b11, 0, 0, 0],
+            tag: String::new(),
+            is_proj: false,
+        };
+        let c0 = filter_exec_cost(&c, 0);
+        let c1 = filter_exec_cost(&c, 1);
+        let c2 = filter_exec_cost(&c, 2);
+        assert!(c0 > c1 && c1 > c2, "{c0} {c1} {c2}");
+        assert_eq!(c2, 64);
     }
 
     #[test]

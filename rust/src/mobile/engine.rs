@@ -1,32 +1,38 @@
-//! Mobile execution engines: a dense reference executor and the
-//! pattern-aware sparse executor that consumes the compiler's output
-//! (compressed storage + filter reorder + row-grouped inner loops).
+//! Execute phase of the mobile stack (the executor side of the
+//! plan/executor split).
 //!
-//! Both run real single-image (batch-1, the mobile latency setting)
-//! inference on host buffers. Numerics are verified against the PJRT
-//! `fwd_eval` artifact in rust/tests/mobile_integration.rs, so the
-//! compiler passes are provably semantics-preserving.
+//! [`Executor`] is a thin interpreter over a compiled
+//! [`ExecutionPlan`](super::plan::ExecutionPlan): every schedule step is
+//! pre-resolved (no tag lookups, no shape inference), feature maps ping-pong
+//! through the plan-sized buffer [`Arena`] (zero heap allocations per
+//! inference after construction), and conv layers dispatch through the
+//! [`ConvKernel`] registry — a dense reference kernel, the pattern-sparse
+//! scalar kernel consuming the packed payload + row-grouped codelets, and a
+//! row-tiled variant. Conv layers run multi-threaded via
+//! `std::thread::scope` across the plan's cost-balanced per-thread filter
+//! blocks; [`Executor::execute_batch`] and [`execute_batch_parallel`] cover
+//! throughput scenarios.
+//!
+//! Numerics are verified against the PJRT `fwd_eval` artifact in
+//! rust/tests/pjrt_parity.rs (with `--features pjrt`) and against the dense
+//! reference kernel by property tests below and in
+//! rust/tests/mobile_integration.rs.
 
 use anyhow::{bail, Result};
 
 use crate::config::Act;
-use crate::tensor::Tensor;
+use crate::tensor::{Chw, Tensor};
 
-use super::ir::{CompressedLayer, ConvIR, IrOp, ModelIR};
-use super::passes;
+use super::ir::{ConvIR, ModelIR};
+use super::plan::{
+    self, Arena, ExecutionPlan, FilterBlock, LayerPlan, PlanStep,
+};
 
-/// Row-grouped taps of one pattern style: [(ky, [(kx, payload_slot)])].
-pub type StyleRows = Vec<(usize, Vec<(usize, usize)>)>;
+pub use super::passes::StyleRows;
+pub use super::plan::same_pad_lo;
 
-/// Padding per JAX 'SAME': out = ceil(in/s); lo = pad_total/2.
-pub fn same_pad_lo(in_hw: usize, k: usize, stride: usize) -> (usize, i64) {
-    let out = in_hw.div_ceil(stride);
-    let pad_total =
-        ((out - 1) * stride + k).saturating_sub(in_hw);
-    (out, (pad_total / 2) as i64)
-}
-
-/// Feature map: (C, H, W) row-major.
+/// Owned feature map: (C, H, W) row-major. The executor's input type; all
+/// intermediates live in the arena as flat slices viewed through [`Chw`].
 #[derive(Clone, Debug)]
 pub struct Fmap {
     pub c: usize,
@@ -59,121 +65,11 @@ impl Fmap {
     pub fn plane(&self, ch: usize) -> &[f32] {
         &self.data[ch * self.hw * self.hw..(ch + 1) * self.hw * self.hw]
     }
-}
 
-fn apply_act(act: Act, buf: &mut [f32]) {
-    if act == Act::Relu {
-        for v in buf {
-            *v = v.max(0.0);
-        }
+    #[inline]
+    pub fn view(&self) -> Chw<'_> {
+        Chw::new(self.c, self.hw, &self.data)
     }
-}
-
-/// Dense direct convolution (the baseline engines' compute shape).
-pub fn conv_dense(c: &ConvIR, x: &Fmap) -> Fmap {
-    debug_assert_eq!(x.c, c.c);
-    debug_assert_eq!(x.hw, c.in_hw);
-    let (out_hw, pad) = same_pad_lo(c.in_hw, c.kh, c.stride);
-    debug_assert_eq!(out_hw, c.out_hw);
-    let mut out = Fmap::zeros(c.a, out_hw);
-    let ihw = x.hw as i64;
-    for f in 0..c.a {
-        let obase = f * out_hw * out_hw;
-        out.data[obase..obase + out_hw * out_hw]
-            .fill(c.bias.data()[f]);
-        for ch in 0..c.c {
-            let plane = x.plane(ch);
-            let wbase = (f * c.c + ch) * c.kh * c.kw;
-            for ky in 0..c.kh {
-                for kx in 0..c.kw {
-                    let wv = c.w.data()[wbase + ky * c.kw + kx];
-                    if wv == 0.0 {
-                        // dense engines do the multiply anyway; keeping it
-                        // branchless here matters only for timing, and the
-                        // cost model charges dense MACs regardless.
-                    }
-                    for oy in 0..out_hw {
-                        let iy = (oy * c.stride) as i64 + ky as i64 - pad;
-                        if iy < 0 || iy >= ihw {
-                            continue;
-                        }
-                        let irow = (iy as usize) * x.hw;
-                        let orow = obase + oy * out_hw;
-                        for ox in 0..out_hw {
-                            let ix =
-                                (ox * c.stride) as i64 + kx as i64 - pad;
-                            if ix < 0 || ix >= ihw {
-                                continue;
-                            }
-                            out.data[orow + ox] +=
-                                wv * plane[irow + ix as usize];
-                        }
-                    }
-                }
-            }
-        }
-    }
-    apply_act(c.act, &mut out.data);
-    out
-}
-
-/// Pattern-aware sparse convolution: executes the compressed form, filters
-/// visited in the compiler's reordered schedule, taps grouped by input row
-/// (the load-redundancy-eliminated codelet shape).
-pub fn conv_sparse(
-    c: &ConvIR,
-    comp: &CompressedLayer,
-    exec_order: &[usize],
-    x: &Fmap,
-) -> Fmap {
-    debug_assert_eq!(x.c, c.c);
-    let (out_hw, pad) = same_pad_lo(c.in_hw, c.kh, c.stride);
-    let mut out = Fmap::zeros(c.a, out_hw);
-    let ihw = x.hw as i64;
-    // Pre-split every pattern style into row-grouped taps:
-    // style -> [(ky, [(kx, payload_slot)])]
-    let style_rows: Vec<StyleRows> = comp
-        .styles
-        .iter()
-        .map(|&pat| passes::row_group(pat, c.kh, c.kw))
-        .collect();
-    for &f in exec_order {
-        let obase = f * out_hw * out_hw;
-        out.data[obase..obase + out_hw * out_hw].fill(comp.bias[f]);
-        for (ch, style, payload) in &comp.filters[f] {
-            let plane = x.plane(*ch as usize);
-            for (ky, taps) in &style_rows[*style as usize] {
-                for oy in 0..out_hw {
-                    let iy =
-                        (oy * c.stride) as i64 + *ky as i64 - pad;
-                    if iy < 0 || iy >= ihw {
-                        continue;
-                    }
-                    let irow = (iy as usize) * x.hw;
-                    let orow = obase + oy * out_hw;
-                    // row codelet: all taps of this row share the input
-                    // row (one load stream instead of popcount streams)
-                    for (kx, slot) in taps {
-                        let wv = payload[*slot];
-                        let dx = *kx as i64 - pad;
-                        // interior fast path without per-x bounds checks
-                        let (ox0, ox1) = x_range(
-                            out_hw, c.stride, dx, ihw,
-                        );
-                        let mut ix =
-                            (ox0 * c.stride) as i64 + dx;
-                        for ox in ox0..ox1 {
-                            out.data[orow + ox] +=
-                                wv * plane[irow + ix as usize];
-                            ix += c.stride as i64;
-                        }
-                    }
-                }
-            }
-        }
-    }
-    apply_act(c.act, &mut out.data);
-    out
 }
 
 /// Valid output-x range for which ix = ox*stride + dx lies in [0, ihw).
@@ -185,58 +81,595 @@ fn x_range(out_hw: usize, stride: usize, dx: i64, ihw: i64) -> (usize, usize) {
     } else {
         ((-dx) as usize).div_ceil(stride)
     };
-    // largest ox with ox*stride + dx < ihw
+    // largest ox with ox*stride + dx < ihw; div_euclid (not truncating /)
+    // so a negative numerator still floors — with `/`, ihw - dx - 1 < 0
+    // yielded ox1 = 1 and an out-of-bounds read for e.g. in=2 k=3 s=2
     let mut ox1 = out_hw;
     if (out_hw as i64 - 1) * stride as i64 + dx >= ihw {
-        ox1 = ((ihw - dx - 1) / stride as i64 + 1).max(0) as usize;
+        ox1 = ((ihw - dx - 1).div_euclid(stride as i64) + 1).max(0) as usize;
     }
     (ox0.min(out_hw), ox1.min(out_hw))
 }
 
-fn max_pool2(x: &Fmap) -> Fmap {
+// ---------------------------------------------------------------------------
+// Disjoint output planes shared across worker threads
+// ---------------------------------------------------------------------------
+
+/// Raw view of a conv output buffer as per-filter planes, shared across the
+/// worker threads of one layer. Race freedom comes from the plan: the
+/// per-thread [`FilterBlock`]s partition the filter schedule, so each plane
+/// is written by exactly one thread (asserted at plan build).
+pub struct OutPlanes<'a> {
+    base: *mut f32,
+    plane: usize,
+    n: usize,
+    _life: std::marker::PhantomData<&'a mut [f32]>,
+}
+
+unsafe impl Send for OutPlanes<'_> {}
+unsafe impl Sync for OutPlanes<'_> {}
+
+impl<'a> OutPlanes<'a> {
+    pub fn new(buf: &'a mut [f32], plane: usize) -> Self {
+        let n = if plane == 0 { 0 } else { buf.len() / plane };
+        OutPlanes {
+            base: buf.as_mut_ptr(),
+            plane,
+            n,
+            _life: std::marker::PhantomData,
+        }
+    }
+
+    /// Mutable view of filter `f`'s output plane.
+    ///
+    /// # Safety
+    /// Each plane index must be held by at most one caller at a time. The
+    /// executor guarantees this by handing each worker thread a disjoint
+    /// filter block.
+    #[allow(clippy::mut_from_ref)]
+    #[inline]
+    pub unsafe fn plane_mut(&self, f: usize) -> &'a mut [f32] {
+        assert!(f < self.n, "plane {f} out of {}", self.n);
+        std::slice::from_raw_parts_mut(
+            self.base.add(f * self.plane),
+            self.plane,
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Conv kernel registry
+// ---------------------------------------------------------------------------
+
+/// A conv inner-loop implementation. Kernels compute complete output
+/// planes (bias fill → accumulate → activation) for every filter of the
+/// block they are handed, so blocks parallelize without a fix-up pass.
+pub trait ConvKernel: Sync {
+    fn name(&self) -> &'static str;
+    fn run_block(
+        &self,
+        c: &ConvIR,
+        lp: &LayerPlan,
+        block: &FilterBlock,
+        x: Chw<'_>,
+        out: &OutPlanes<'_>,
+    );
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    /// dense direct conv — the baseline frameworks' compute shape and the
+    /// numerics reference
+    DenseRef,
+    /// pattern-sparse scalar: packed payload + row-grouped codelets
+    PatternScalar,
+    /// pattern-sparse with output-row tiling (locality on large fmaps)
+    PatternTiled,
+}
+
+pub const KERNEL_KINDS: [KernelKind; 3] = [
+    KernelKind::DenseRef,
+    KernelKind::PatternScalar,
+    KernelKind::PatternTiled,
+];
+
+impl KernelKind {
+    pub fn name(self) -> &'static str {
+        kernel(self).name()
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "dense" => KernelKind::DenseRef,
+            "sparse" | "pattern" => KernelKind::PatternScalar,
+            "tiled" => KernelKind::PatternTiled,
+            _ => bail!("unknown kernel {s:?} (dense|sparse|tiled)"),
+        })
+    }
+}
+
+static DENSE_REF: DenseRef = DenseRef;
+static PATTERN_SCALAR: PatternScalar = PatternScalar;
+static PATTERN_TILED: PatternTiled = PatternTiled;
+
+/// Resolve a kernel implementation from the registry.
+pub fn kernel(kind: KernelKind) -> &'static dyn ConvKernel {
+    match kind {
+        KernelKind::DenseRef => &DENSE_REF,
+        KernelKind::PatternScalar => &PATTERN_SCALAR,
+        KernelKind::PatternTiled => &PATTERN_TILED,
+    }
+}
+
+#[inline]
+fn finish_plane(act: Act, o: &mut [f32]) {
+    if act == Act::Relu {
+        for v in o.iter_mut() {
+            *v = v.max(0.0);
+        }
+    }
+}
+
+/// Dense direct convolution over the original weights (multiplies the
+/// zeros; kept branchless — it is the timing baseline and the reference).
+pub struct DenseRef;
+
+impl ConvKernel for DenseRef {
+    fn name(&self) -> &'static str {
+        "dense-ref"
+    }
+
+    fn run_block(
+        &self,
+        c: &ConvIR,
+        lp: &LayerPlan,
+        block: &FilterBlock,
+        x: Chw<'_>,
+        out: &OutPlanes<'_>,
+    ) {
+        let ihw = lp.in_hw as i64;
+        let w = c.w.data();
+        for &f in &lp.exec_order[block.span.clone()] {
+            // Safety: block filters are disjoint across threads.
+            let o = unsafe { out.plane_mut(f) };
+            o.fill(lp.bias[f]);
+            for ch in 0..lp.c {
+                let xin = x.plane(ch);
+                let wbase = (f * lp.c + ch) * lp.kh * lp.kw;
+                for ky in 0..lp.kh {
+                    let dy = ky as i64 - lp.pad;
+                    for kx in 0..lp.kw {
+                        let wv = w[wbase + ky * lp.kw + kx];
+                        let dx = kx as i64 - lp.pad;
+                        accumulate_tap(lp, o, xin, wv, dy, dx, ihw);
+                    }
+                }
+            }
+            finish_plane(lp.act, o);
+        }
+    }
+}
+
+/// One (dy, dx) weight tap streamed over every valid output position.
+#[inline]
+fn accumulate_tap(
+    lp: &LayerPlan,
+    o: &mut [f32],
+    xin: &[f32],
+    wv: f32,
+    dy: i64,
+    dx: i64,
+    ihw: i64,
+) {
+    for oy in 0..lp.out_hw {
+        let iy = (oy * lp.stride) as i64 + dy;
+        if iy < 0 || iy >= ihw {
+            continue;
+        }
+        let irow = iy as usize * lp.in_hw;
+        let orow = oy * lp.out_hw;
+        let (ox0, ox1) = x_range(lp.out_hw, lp.stride, dx, ihw);
+        let mut ix = (ox0 * lp.stride) as i64 + dx;
+        for ox in ox0..ox1 {
+            o[orow + ox] += wv * xin[irow + ix as usize];
+            ix += lp.stride as i64;
+        }
+    }
+}
+
+/// Pattern-sparse scalar kernel: walks the packed payload in the reordered
+/// schedule; each pattern row is one streaming codelet (the
+/// load-redundancy-eliminated shape).
+pub struct PatternScalar;
+
+impl ConvKernel for PatternScalar {
+    fn name(&self) -> &'static str {
+        "pattern-scalar"
+    }
+
+    fn run_block(
+        &self,
+        _c: &ConvIR,
+        lp: &LayerPlan,
+        block: &FilterBlock,
+        x: Chw<'_>,
+        out: &OutPlanes<'_>,
+    ) {
+        let ihw = lp.in_hw as i64;
+        for &f in &lp.exec_order[block.span.clone()] {
+            // Safety: block filters are disjoint across threads.
+            let o = unsafe { out.plane_mut(f) };
+            o.fill(lp.bias[f]);
+            for k in &lp.kernels[lp.filter_ranges[f].clone()] {
+                let xin = x.plane(k.ch as usize);
+                let pay = &lp.payload[k.off as usize..];
+                for (ky, taps) in &lp.style_rows[k.style as usize] {
+                    let dy = *ky as i64 - lp.pad;
+                    for oy in 0..lp.out_hw {
+                        let iy = (oy * lp.stride) as i64 + dy;
+                        if iy < 0 || iy >= ihw {
+                            continue;
+                        }
+                        let irow = iy as usize * lp.in_hw;
+                        let orow = oy * lp.out_hw;
+                        // row codelet: all taps of this row share one
+                        // input-row load stream
+                        for (kx, slot) in taps {
+                            let wv = pay[*slot];
+                            let dx = *kx as i64 - lp.pad;
+                            let (ox0, ox1) =
+                                x_range(lp.out_hw, lp.stride, dx, ihw);
+                            let mut ix = (ox0 * lp.stride) as i64 + dx;
+                            for ox in ox0..ox1 {
+                                o[orow + ox] +=
+                                    wv * xin[irow + ix as usize];
+                                ix += lp.stride as i64;
+                            }
+                        }
+                    }
+                }
+            }
+            finish_plane(lp.act, o);
+        }
+    }
+}
+
+/// Pattern-sparse kernel with output-row tiling: kernels revisit a small
+/// band of input rows while it is cache-hot instead of streaming the whole
+/// plane per kernel.
+pub struct PatternTiled;
+
+const ROW_TILE: usize = 8;
+
+impl ConvKernel for PatternTiled {
+    fn name(&self) -> &'static str {
+        "pattern-tiled"
+    }
+
+    fn run_block(
+        &self,
+        _c: &ConvIR,
+        lp: &LayerPlan,
+        block: &FilterBlock,
+        x: Chw<'_>,
+        out: &OutPlanes<'_>,
+    ) {
+        let ihw = lp.in_hw as i64;
+        for &f in &lp.exec_order[block.span.clone()] {
+            // Safety: block filters are disjoint across threads.
+            let o = unsafe { out.plane_mut(f) };
+            o.fill(lp.bias[f]);
+            let mut oy0 = 0;
+            while oy0 < lp.out_hw {
+                let oy1 = (oy0 + ROW_TILE).min(lp.out_hw);
+                for k in &lp.kernels[lp.filter_ranges[f].clone()] {
+                    let xin = x.plane(k.ch as usize);
+                    let pay = &lp.payload[k.off as usize..];
+                    for (ky, taps) in &lp.style_rows[k.style as usize] {
+                        let dy = *ky as i64 - lp.pad;
+                        for oy in oy0..oy1 {
+                            let iy = (oy * lp.stride) as i64 + dy;
+                            if iy < 0 || iy >= ihw {
+                                continue;
+                            }
+                            let irow = iy as usize * lp.in_hw;
+                            let orow = oy * lp.out_hw;
+                            for (kx, slot) in taps {
+                                let wv = pay[*slot];
+                                let dx = *kx as i64 - lp.pad;
+                                let (ox0, ox1) = x_range(
+                                    lp.out_hw, lp.stride, dx, ihw,
+                                );
+                                let mut ix =
+                                    (ox0 * lp.stride) as i64 + dx;
+                                for ox in ox0..ox1 {
+                                    o[orow + ox] +=
+                                        wv * xin[irow + ix as usize];
+                                    ix += lp.stride as i64;
+                                }
+                            }
+                        }
+                    }
+                }
+                oy0 = oy1;
+            }
+            finish_plane(lp.act, o);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Executor
+// ---------------------------------------------------------------------------
+
+/// Run one conv layer: dispatch the plan's filter blocks to the kernel,
+/// spawning scoped workers when the plan was compiled for multiple
+/// threads. Block 0 always runs on the calling thread.
+fn run_conv(
+    p: &ExecutionPlan,
+    kernel: &'static dyn ConvKernel,
+    layer: usize,
+    x: Chw<'_>,
+    out: &mut [f32],
+) {
+    let lp = &p.layers[layer];
+    let c = &p.ir.convs[lp.conv];
+    let plane = lp.out_hw * lp.out_hw;
+    debug_assert!(out.len() >= lp.a * plane);
+    let planes = OutPlanes::new(out, plane);
+    if lp.blocks.len() <= 1 {
+        if let Some(b) = lp.blocks.first() {
+            kernel.run_block(c, lp, b, x, &planes);
+        }
+    } else {
+        std::thread::scope(|s| {
+            for b in &lp.blocks[1..] {
+                let pr = &planes;
+                s.spawn(move || kernel.run_block(c, lp, b, x, pr));
+            }
+            kernel.run_block(c, lp, &lp.blocks[0], x, &planes);
+        });
+    }
+}
+
+fn max_pool2(x: Chw<'_>, out: &mut [f32]) {
     let oh = x.hw / 2;
-    let mut out = Fmap::zeros(x.c, oh);
     for ch in 0..x.c {
         let p = x.plane(ch);
         let ob = ch * oh * oh;
         for y in 0..oh {
             for xx in 0..oh {
                 let i = 2 * y * x.hw + 2 * xx;
-                out.data[ob + y * oh + xx] = p[i]
+                out[ob + y * oh + xx] = p[i]
                     .max(p[i + 1])
                     .max(p[i + x.hw])
                     .max(p[i + x.hw + 1]);
             }
         }
     }
-    out
 }
 
-/// Compiled model: IR + per-layer compressed weights + execution schedule.
-pub struct CompiledModel {
-    pub ir: ModelIR,
-    pub compressed: Vec<CompressedLayer>,
-    pub exec_order: Vec<Vec<usize>>,
-    pub report: passes::CompileReport,
+/// The execute phase: interprets a compiled plan over a preallocated
+/// arena. Construct once, call [`Executor::execute_into`] per frame —
+/// the steady-state path performs zero heap allocations
+/// ([`Executor::alloc_events`] stays 0; asserted in the integration
+/// tests with a counting global allocator).
+pub struct Executor<'p> {
+    plan: &'p ExecutionPlan,
+    kernel: &'static dyn ConvKernel,
+    arena: Arena,
 }
 
-/// Run the three compiler passes over a model IR.
-pub fn compile(ir: ModelIR) -> CompiledModel {
-    let compressed: Vec<CompressedLayer> =
-        ir.convs.iter().map(CompressedLayer::compress).collect();
-    let exec_order: Vec<Vec<usize>> = ir
-        .convs
-        .iter()
-        .map(passes::reorder_filters)
-        .collect();
-    let report = passes::CompileReport::build(&ir, &compressed, &exec_order);
-    CompiledModel {
-        ir,
-        compressed,
-        exec_order,
-        report,
+impl<'p> Executor<'p> {
+    pub fn new(plan: &'p ExecutionPlan, kind: KernelKind) -> Self {
+        Executor {
+            plan,
+            kernel: kernel(kind),
+            arena: Arena::for_plan(plan),
+        }
+    }
+
+    pub fn plan(&self) -> &'p ExecutionPlan {
+        self.plan
+    }
+
+    pub fn kernel_name(&self) -> &'static str {
+        self.kernel.name()
+    }
+
+    /// Arena growth events since construction (0 ⇔ no heap allocation on
+    /// the inference path).
+    pub fn alloc_events(&self) -> usize {
+        self.arena.alloc_events()
+    }
+
+    /// Single-image inference into a caller-provided logits slice
+    /// (`classes` long). Allocation-free after construction.
+    pub fn execute_into(
+        &mut self,
+        img: &Fmap,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let p = self.plan;
+        if img.c != p.in_dims.c || img.hw != p.in_dims.hw {
+            bail!(
+                "image ({}, {}hw) does not match plan input ({}, {}hw)",
+                img.c,
+                img.hw,
+                p.in_dims.c,
+                p.in_dims.hw
+            );
+        }
+        if out.len() != p.ir.classes {
+            bail!(
+                "logits slice len {} != {} classes",
+                out.len(),
+                p.ir.classes
+            );
+        }
+        let kernel = self.kernel;
+        let a = &mut self.arena;
+        a.ping
+            .slice_mut(p.in_dims.elems())
+            .copy_from_slice(&img.data);
+        let mut cur_ping = true;
+        let mut cur = p.in_dims;
+        for (step, &after) in p.steps.iter().zip(&p.dims) {
+            match step {
+                PlanStep::Conv { layer } => {
+                    let lp = &p.layers[*layer];
+                    let (src, dst) = if cur_ping {
+                        (&a.ping, &mut a.pong)
+                    } else {
+                        (&a.pong, &mut a.ping)
+                    };
+                    let x = Chw::new(
+                        lp.c,
+                        lp.in_hw,
+                        src.slice(lp.c * lp.in_hw * lp.in_hw),
+                    );
+                    run_conv(
+                        p,
+                        kernel,
+                        *layer,
+                        x,
+                        dst.slice_mut(lp.out_elems()),
+                    );
+                    cur_ping = !cur_ping;
+                }
+                PlanStep::Pool => {
+                    let (src, dst) = if cur_ping {
+                        (&a.ping, &mut a.pong)
+                    } else {
+                        (&a.pong, &mut a.ping)
+                    };
+                    let x = Chw::new(cur.c, cur.hw, src.slice(cur.elems()));
+                    max_pool2(x, dst.slice_mut(after.elems()));
+                    cur_ping = !cur_ping;
+                }
+                PlanStep::Save { slot } => {
+                    let n = cur.elems();
+                    let src = if cur_ping { &a.ping } else { &a.pong };
+                    a.slots[*slot]
+                        .slice_mut(n)
+                        .copy_from_slice(src.slice(n));
+                }
+                PlanStep::Proj { layer, slot } => {
+                    let lp = &p.layers[*layer];
+                    let x = Chw::new(
+                        lp.c,
+                        lp.in_hw,
+                        a.slots[*slot].slice(lp.c * lp.in_hw * lp.in_hw),
+                    );
+                    run_conv(
+                        p,
+                        kernel,
+                        *layer,
+                        x,
+                        a.proj_scratch.slice_mut(lp.out_elems()),
+                    );
+                    let n = lp.out_elems();
+                    let s = &a.proj_scratch;
+                    a.slots[*slot]
+                        .slice_mut(n)
+                        .copy_from_slice(s.slice(n));
+                }
+                PlanStep::Add { slot } => {
+                    let n = cur.elems();
+                    let dst = if cur_ping { &mut a.ping } else { &mut a.pong };
+                    let d = dst.slice_mut(n);
+                    let s = a.slots[*slot].slice(n);
+                    for (x, y) in d.iter_mut().zip(s) {
+                        *x += y;
+                    }
+                }
+                PlanStep::Relu => {
+                    let dst = if cur_ping { &mut a.ping } else { &mut a.pong };
+                    for v in dst.slice_mut(cur.elems()).iter_mut() {
+                        *v = v.max(0.0);
+                    }
+                }
+                PlanStep::Gap => {
+                    let src = if cur_ping { &a.ping } else { &a.pong };
+                    let x = Chw::new(cur.c, cur.hw, src.slice(cur.elems()));
+                    let g = a.gap.slice_mut(cur.c);
+                    let inv = 1.0 / (cur.hw * cur.hw) as f32;
+                    for (ch, gv) in g.iter_mut().enumerate() {
+                        *gv = x.plane(ch).iter().sum::<f32>() * inv;
+                    }
+                }
+                PlanStep::Fc => {
+                    let cdim = p.ir.fc_w.cols();
+                    let g = &a.gap.slice(p.gap_len)[..cdim];
+                    for (k, l) in out.iter_mut().enumerate() {
+                        let row = p.ir.fc_w.row(k);
+                        *l = p.ir.fc_b.data()[k]
+                            + row
+                                .iter()
+                                .zip(g)
+                                .map(|(w, v)| w * v)
+                                .sum::<f32>();
+                    }
+                    return Ok(());
+                }
+            }
+            cur = after;
+        }
+        bail!("plan has no fc step")
+    }
+
+    /// Single-image inference; returns freshly allocated class logits
+    /// (convenience wrapper — use [`Executor::execute_into`] on the
+    /// allocation-free path).
+    pub fn execute(&mut self, img: &Fmap) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.plan.ir.classes];
+        self.execute_into(img, &mut out)
+            .expect("image does not match plan");
+        out
+    }
+
+    /// Sequential batch entry point: amortizes the arena across frames.
+    pub fn execute_batch(&mut self, imgs: &[Fmap]) -> Vec<Vec<f32>> {
+        imgs.iter().map(|img| self.execute(img)).collect()
     }
 }
+
+/// Throughput entry point: shard `imgs` across `workers` scoped threads,
+/// each with its own executor (one arena allocation per worker per call).
+/// Compile the plan with `threads = 1` for this mode so per-layer and
+/// per-image parallelism do not multiply.
+pub fn execute_batch_parallel(
+    plan: &ExecutionPlan,
+    kind: KernelKind,
+    imgs: &[Fmap],
+    workers: usize,
+) -> Vec<Vec<f32>> {
+    let w = workers.max(1).min(imgs.len().max(1));
+    if w <= 1 {
+        return Executor::new(plan, kind).execute_batch(imgs);
+    }
+    let chunk = imgs.len().div_ceil(w);
+    let mut results: Vec<Vec<Vec<f32>>> = Vec::new();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = imgs
+            .chunks(chunk)
+            .map(|ch| {
+                s.spawn(move || {
+                    Executor::new(plan, kind).execute_batch(ch)
+                })
+            })
+            .collect();
+        results = handles
+            .into_iter()
+            .map(|h| h.join().expect("batch worker panicked"))
+            .collect();
+    });
+    results.into_iter().flatten().collect()
+}
+
+// ---------------------------------------------------------------------------
+// Compatibility surface (pre-split API)
+// ---------------------------------------------------------------------------
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EngineKind {
@@ -246,108 +679,210 @@ pub enum EngineKind {
     Sparse,
 }
 
-/// Single-image inference; returns class logits.
-pub fn infer(m: &CompiledModel, image: &Fmap, kind: EngineKind) -> Vec<f32> {
-    let mut saved: std::collections::HashMap<String, Fmap> =
-        std::collections::HashMap::new();
-    let mut t = image.clone();
-    let mut gap: Vec<f32> = Vec::new();
-    for op in &m.ir.ops {
-        match op {
-            IrOp::Conv(ci) => {
-                let c = &m.ir.convs[*ci];
-                t = match kind {
-                    EngineKind::Dense => conv_dense(c, &t),
-                    EngineKind::Sparse => conv_sparse(
-                        c,
-                        &m.compressed[*ci],
-                        &m.exec_order[*ci],
-                        &t,
-                    ),
-                };
-            }
-            IrOp::Proj(ci) => {
-                let c = &m.ir.convs[*ci];
-                let src = saved.get(&c.tag).expect("saved fmap").clone();
-                let proj = match kind {
-                    EngineKind::Dense => conv_dense(c, &src),
-                    EngineKind::Sparse => conv_sparse(
-                        c,
-                        &m.compressed[*ci],
-                        &m.exec_order[*ci],
-                        &src,
-                    ),
-                };
-                saved.insert(c.tag.clone(), proj);
-            }
-            IrOp::Pool => t = max_pool2(&t),
-            IrOp::Save { tag } => {
-                saved.insert(tag.clone(), t.clone());
-            }
-            IrOp::Add { tag } => {
-                let s = &saved[tag];
-                for (a, b) in t.data.iter_mut().zip(&s.data) {
-                    *a += b;
-                }
-            }
-            IrOp::Relu => apply_act(Act::Relu, &mut t.data),
-            IrOp::Gap => {
-                gap = (0..t.c)
-                    .map(|ch| {
-                        t.plane(ch).iter().sum::<f32>()
-                            / (t.hw * t.hw) as f32
-                    })
-                    .collect();
-            }
-            IrOp::Fc => {
-                let cls = m.ir.classes;
-                let cdim = m.ir.fc_w.cols();
-                let mut logits = vec![0.0f32; cls];
-                for (k, l) in logits.iter_mut().enumerate() {
-                    let row = m.ir.fc_w.row(k);
-                    *l = m.ir.fc_b.data()[k]
-                        + row
-                            .iter()
-                            .zip(&gap[..cdim])
-                            .map(|(w, g)| w * g)
-                            .sum::<f32>();
-                }
-                return logits;
-            }
+impl EngineKind {
+    pub fn kernel(self) -> KernelKind {
+        match self {
+            EngineKind::Dense => KernelKind::DenseRef,
+            EngineKind::Sparse => KernelKind::PatternScalar,
         }
     }
-    panic!("model has no fc head");
+}
+
+/// Compiled model: a single-threaded [`ExecutionPlan`] (compatibility
+/// wrapper around [`plan::compile_plan`]).
+pub struct CompiledModel {
+    pub plan: ExecutionPlan,
+}
+
+impl CompiledModel {
+    pub fn report(&self) -> &super::passes::CompileReport {
+        &self.plan.report
+    }
+}
+
+/// Run the compiler passes over a model IR (single-threaded plan).
+pub fn compile(ir: ModelIR) -> CompiledModel {
+    CompiledModel {
+        plan: plan::compile_plan(ir, 1).expect("IR schedule does not lower"),
+    }
+}
+
+/// Single-image inference; returns class logits. Convenience wrapper that
+/// builds a fresh executor per call — latency-sensitive callers should
+/// hold an [`Executor`].
+pub fn infer(m: &CompiledModel, image: &Fmap, kind: EngineKind) -> Vec<f32> {
+    Executor::new(&m.plan, kind.kernel()).execute(image)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn same_pad_matches_jax() {
-        // (in, k, s) -> (out, pad_lo) spot-checked against jax SAME
-        assert_eq!(same_pad_lo(16, 3, 1), (16, 1));
-        assert_eq!(same_pad_lo(16, 3, 2), (8, 0));
-        assert_eq!(same_pad_lo(8, 3, 2), (4, 0));
-        assert_eq!(same_pad_lo(16, 1, 1), (16, 0));
-        assert_eq!(same_pad_lo(16, 1, 2), (8, 0));
-        assert_eq!(same_pad_lo(15, 3, 2), (8, 1));
-    }
+    use crate::rng::Pcg32;
+    use crate::util::propcheck::check;
 
     #[test]
     fn x_range_covers_valid_indices() {
-        for stride in 1..=2usize {
-            for dx in -2i64..=2 {
-                let ihw = 9i64;
-                let out_hw = 9usize.div_ceil(stride);
-                let (ox0, ox1) = x_range(out_hw, stride, dx, ihw);
-                for ox in 0..out_hw {
-                    let ix = (ox * stride) as i64 + dx;
-                    let valid = ix >= 0 && ix < ihw;
-                    let inside = ox >= ox0 && ox < ox1;
-                    assert_eq!(valid, inside, "s={stride} dx={dx} ox={ox}");
+        // small ihw with stride 2 exercises the negative-numerator floor
+        // (in=2, k=3, s=2 ⇒ dx=2 ≥ ihw: ox1 must be 0, not 1)
+        for ihw in 1..=9i64 {
+            for stride in 1..=2usize {
+                for dx in -2i64..=2 {
+                    let out_hw = (ihw as usize).div_ceil(stride);
+                    let (ox0, ox1) = x_range(out_hw, stride, dx, ihw);
+                    for ox in 0..out_hw {
+                        let ix = (ox * stride) as i64 + dx;
+                        let valid = ix >= 0 && ix < ihw;
+                        let inside = ox >= ox0 && ox < ox1;
+                        assert_eq!(
+                            valid, inside,
+                            "ihw={ihw} s={stride} dx={dx} ox={ox}"
+                        );
+                    }
                 }
             }
+        }
+    }
+
+    #[test]
+    fn kernel_registry_roundtrip() {
+        for kind in KERNEL_KINDS {
+            assert_eq!(kernel(kind).name(), kind.name());
+        }
+        assert_eq!(
+            KernelKind::parse("sparse").unwrap(),
+            KernelKind::PatternScalar
+        );
+        assert_eq!(
+            KernelKind::parse("tiled").unwrap(),
+            KernelKind::PatternTiled
+        );
+        assert!(KernelKind::parse("simd").is_err());
+        assert_eq!(EngineKind::Dense.kernel(), KernelKind::DenseRef);
+        assert_eq!(EngineKind::Sparse.kernel(), KernelKind::PatternScalar);
+    }
+
+    /// Run `kind` over every block of a standalone layer plan.
+    fn run_kernel_full(
+        kind: KernelKind,
+        c: &ConvIR,
+        lp: &LayerPlan,
+        x: Chw<'_>,
+    ) -> Vec<f32> {
+        let mut out = vec![0.0f32; lp.out_elems()];
+        let planes = OutPlanes::new(&mut out, lp.out_hw * lp.out_hw);
+        let k = kernel(kind);
+        for b in &lp.blocks {
+            k.run_block(c, lp, b, x, &planes);
+        }
+        out
+    }
+
+    fn random_pruned_conv(
+        rng: &mut Pcg32,
+        a: usize,
+        cch: usize,
+        ksz: usize,
+        stride: usize,
+        in_hw: usize,
+    ) -> ConvIR {
+        let ks = ksz * ksz;
+        let mut w = Tensor::zeros(&[a, cch, ksz, ksz]);
+        let mut pattern = Vec::with_capacity(a * cch);
+        for ki in 0..a * cch {
+            let mut p: u16 = 0;
+            // ~20% of kernels fully connectivity-pruned (pattern = 0)
+            if rng.below(5) != 0 {
+                for t in 0..ks {
+                    if rng.below(2) == 1 {
+                        p |= 1 << t;
+                    }
+                }
+            }
+            for t in 0..ks {
+                if p & (1 << t) != 0 {
+                    w.data_mut()[ki * ks + t] = rng.normal();
+                }
+            }
+            pattern.push(p);
+        }
+        let (out_hw, _) = same_pad_lo(in_hw, ksz, stride);
+        let act = if rng.below(2) == 0 { Act::Relu } else { Act::None };
+        let bias: Vec<f32> = (0..a).map(|_| rng.normal()).collect();
+        ConvIR {
+            op_idx: 0,
+            a,
+            c: cch,
+            kh: ksz,
+            kw: ksz,
+            stride,
+            act,
+            in_hw,
+            out_hw,
+            w,
+            bias: Tensor::from_vec(&[a], bias).unwrap(),
+            pattern,
+            tag: String::new(),
+            is_proj: false,
+        }
+    }
+
+    /// Property (paper §V-C semantics preservation): the planned sparse
+    /// kernels reproduce the dense reference to 1e-4 across randomized
+    /// pattern masks, strides {1,2}, kernel sizes {1,3}, and
+    /// fully-pruned (pattern = 0) kernels.
+    #[test]
+    fn prop_sparse_kernels_match_dense_reference() {
+        check("sparse-vs-dense-kernels", 2024, 60, 8, |g| {
+            let ksz = if g.rng.below(2) == 0 { 1 } else { 3 };
+            let stride = 1 + g.rng.below(2);
+            let a = g.dim_up_to(6);
+            let cch = g.dim_up_to(4);
+            let in_hw = 2 + g.rng.below(9);
+            let c = random_pruned_conv(g.rng, a, cch, ksz, stride, in_hw);
+            let threads = 1 + g.rng.below(3);
+            let lp = LayerPlan::for_conv(&c, threads);
+            let xdata = g.vec_f32(cch * in_hw * in_hw);
+            let x = Chw::new(cch, in_hw, &xdata);
+            let dense = run_kernel_full(KernelKind::DenseRef, &c, &lp, x);
+            for kind in
+                [KernelKind::PatternScalar, KernelKind::PatternTiled]
+            {
+                let got = run_kernel_full(kind, &c, &lp, x);
+                for (i, (ge, de)) in got.iter().zip(&dense).enumerate() {
+                    if (ge - de).abs() > 1e-4 {
+                        return Err(format!(
+                            "{:?} diverges at {i}: {ge} vs {de} \
+                             (k={ksz} s={stride} a={a} c={cch} hw={in_hw})",
+                            kind
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// A fully connectivity-pruned layer (every pattern = 0) must still
+    /// produce bias+activation planes, identically to dense-over-zeros.
+    #[test]
+    fn fully_pruned_layer_yields_bias_planes() {
+        let mut rng = Pcg32::seeded(77);
+        let mut c = random_pruned_conv(&mut rng, 4, 3, 3, 1, 6);
+        c.w = Tensor::zeros(&[4, 3, 3, 3]);
+        c.pattern = vec![0; 12];
+        let lp = LayerPlan::for_conv(&c, 2);
+        let xdata: Vec<f32> = (0..3 * 36).map(|_| rng.normal()).collect();
+        let x = Chw::new(3, 6, &xdata);
+        let dense = run_kernel_full(KernelKind::DenseRef, &c, &lp, x);
+        let sparse =
+            run_kernel_full(KernelKind::PatternScalar, &c, &lp, x);
+        assert_eq!(dense, sparse);
+        for (f, plane) in sparse.chunks(36).enumerate() {
+            let want = match c.act {
+                Act::Relu => c.bias.data()[f].max(0.0),
+                Act::None => c.bias.data()[f],
+            };
+            assert!(plane.iter().all(|&v| v == want));
         }
     }
 }

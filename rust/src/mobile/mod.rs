@@ -5,14 +5,27 @@
 //! storage, and load redundancy elimination — and measures end-to-end
 //! inference on a Samsung Galaxy S10 against TFLite/TVM/MNN.
 //!
-//! Here the passes are implemented for real over a layer-wise weight IR
-//! ([`ir`]), the generated sparse form actually executes on the host CPU
-//! ([`engine`], verified bit-for-bit against the PJRT reference), and a
-//! calibrated analytical cost model ([`costmodel`]) translates the
-//! operation/byte counts into Kryo-485/Adreno-640-class latencies for the
-//! Fig. 3 comparison (DESIGN.md §2 and §5 document the substitution).
+//! The stack is split into a compile phase and an execute phase:
+//!
+//! * [`ir`] — layer-wise weight IR extracted from a (pruned) parameter set;
+//! * [`passes`] — the three compiler passes and the [`passes::CompileReport`]
+//!   that quantifies them;
+//! * [`plan`] — the [`plan::PassManager`] lowers the IR into an
+//!   [`plan::ExecutionPlan`]: packed payload buffers, row-grouped codelets
+//!   resolved once, cost-balanced per-thread filter blocks, and exact
+//!   arena sizing;
+//! * [`engine`] — the thin multi-threaded executor over a plan, with a
+//!   [`engine::ConvKernel`] registry (dense reference, pattern-sparse
+//!   scalar, row-tiled) and batch entry points;
+//! * [`costmodel`] — a calibrated analytical model translating the pass
+//!   outputs into Kryo-485/Adreno-640-class latencies for the Fig. 3
+//!   comparison (DESIGN.md §2 and §5 document the substitution);
+//! * [`synth`] — synthetic in-Rust model specs so all of the above tests
+//!   and benches without PJRT artifacts.
 
 pub mod costmodel;
 pub mod engine;
 pub mod ir;
 pub mod passes;
+pub mod plan;
+pub mod synth;

@@ -14,10 +14,13 @@
 
 use super::ir::{CompressedLayer, ConvIR, ModelIR};
 
+/// Row-grouped taps of one pattern style: [(ky, [(kx, payload_slot)])].
+pub type StyleRows = Vec<(usize, Vec<(usize, usize)>)>;
+
 /// Group a pattern's taps by kernel row: [(ky, [(kx, payload_slot)])].
 /// Payload slots index into the compressed payload (tap order = ascending
 /// tap index, matching `CompressedLayer::compress`).
-pub fn row_group(pat: u16, kh: usize, kw: usize) -> Vec<(usize, Vec<(usize, usize)>)> {
+pub fn row_group(pat: u16, kh: usize, kw: usize) -> StyleRows {
     let mut out: Vec<(usize, Vec<(usize, usize)>)> = Vec::new();
     let mut slot = 0usize;
     for t in 0..kh * kw {

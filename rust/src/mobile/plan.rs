@@ -1,0 +1,726 @@
+//! Compile phase of the mobile stack (the plan side of the plan/executor
+//! split).
+//!
+//! [`PassManager`] lowers a [`ModelIR`] through the three pattern-enabled
+//! compiler passes of paper §V-C — filter kernel reorder, compressed weight
+//! storage, load redundancy elimination — into an [`ExecutionPlan`]:
+//!
+//! * per layer a [`LayerPlan`] with one **contiguous packed payload
+//!   buffer** (no per-kernel `Vec`s), the pattern-style row-grouped
+//!   codelets resolved **once** at compile time, and the reordered filter
+//!   schedule pre-partitioned into per-thread [`FilterBlock`]s
+//!   load-balanced with [`costmodel::filter_exec_cost`];
+//! * the op stream lowered to [`PlanStep`]s with every residual tag
+//!   resolved to an arena slot index and every intermediate shape computed
+//!   at compile time;
+//! * exact sizing for a ping-pong [`Arena`] so the execute phase performs
+//!   **zero heap allocations** per inference.
+//!
+//! The executor ([`super::engine`]) is a thin interpreter over this plan;
+//! every future backend (SIMD, quantized, sharded serving) plugs in behind
+//! the same boundary.
+
+use anyhow::{bail, Result};
+
+use crate::config::Act;
+use crate::tensor::ScratchBuf;
+use crate::util::Stopwatch;
+
+use super::costmodel;
+use super::ir::{CompressedLayer, ConvIR, IrOp, ModelIR};
+use super::passes::{self, CompileReport, StyleRows};
+
+/// Padding per JAX 'SAME': out = ceil(in/s); lo = pad_total/2.
+pub fn same_pad_lo(in_hw: usize, k: usize, stride: usize) -> (usize, i64) {
+    let out = in_hw.div_ceil(stride);
+    let pad_total = ((out - 1) * stride + k).saturating_sub(in_hw);
+    (out, (pad_total / 2) as i64)
+}
+
+/// Header of one kept kernel in a layer's packed payload buffer: channel,
+/// pattern-style index, and the offset of its taps in
+/// [`LayerPlan::payload`]. The payload length is implicit — it equals the
+/// style's tap count, and the row-grouped codelet indexes it by slot.
+#[derive(Clone, Copy, Debug)]
+pub struct PackedKernel {
+    pub ch: u32,
+    pub style: u16,
+    pub off: u32,
+}
+
+/// Contiguous span of the reordered filter schedule assigned to one worker
+/// thread, with its modeled cost (for reporting / balance assertions).
+#[derive(Clone, Debug)]
+pub struct FilterBlock {
+    /// range into [`LayerPlan::exec_order`]
+    pub span: std::ops::Range<usize>,
+    pub cost: u64,
+}
+
+/// One conv layer lowered to directly executable form.
+#[derive(Clone, Debug)]
+pub struct LayerPlan {
+    /// index into `ExecutionPlan::ir.convs` (dense weights for the
+    /// reference kernel live there)
+    pub conv: usize,
+    pub a: usize,
+    pub c: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub in_hw: usize,
+    pub out_hw: usize,
+    pub pad: i64,
+    pub act: Act,
+    pub bias: Vec<f32>,
+    /// all kept kernels' taps, packed back to back
+    pub payload: Vec<f32>,
+    /// kept-kernel headers, grouped per filter
+    pub kernels: Vec<PackedKernel>,
+    /// per original filter index: its span in `kernels`
+    pub filter_ranges: Vec<std::ops::Range<usize>>,
+    /// distinct pattern styles of the layer
+    pub styles: Vec<u16>,
+    /// per style: row-grouped codelet, resolved once at compile time
+    pub style_rows: Vec<StyleRows>,
+    /// filter schedule after the reorder pass
+    pub exec_order: Vec<usize>,
+    /// per-thread partition of `exec_order` (cost-balanced, non-empty)
+    pub blocks: Vec<FilterBlock>,
+}
+
+impl LayerPlan {
+    pub fn build(
+        conv: usize,
+        c: &ConvIR,
+        comp: &CompressedLayer,
+        exec_order: Vec<usize>,
+        threads: usize,
+    ) -> Self {
+        let styles = comp.styles.clone();
+        let style_rows: Vec<StyleRows> = styles
+            .iter()
+            .map(|&pat| passes::row_group(pat, c.kh, c.kw))
+            .collect();
+        let mut payload = Vec::new();
+        let mut kernels = Vec::new();
+        let mut filter_ranges = Vec::with_capacity(c.a);
+        for f in 0..c.a {
+            let start = kernels.len();
+            for (ch, style, taps) in &comp.filters[f] {
+                kernels.push(PackedKernel {
+                    ch: *ch,
+                    style: *style,
+                    off: payload.len() as u32,
+                });
+                payload.extend_from_slice(taps);
+            }
+            filter_ranges.push(start..kernels.len());
+        }
+        let (out_hw, pad) = same_pad_lo(c.in_hw, c.kh, c.stride);
+        debug_assert_eq!(out_hw, c.out_hw);
+        // the OutPlanes aliasing argument rests on this: exec_order must
+        // be a duplicate-free permutation of 0..a, or two worker blocks
+        // could hold &mut to the same output plane
+        debug_assert!(
+            {
+                let mut seen = vec![false; c.a];
+                exec_order.len() == c.a
+                    && exec_order.iter().all(|&f| {
+                        f < c.a && !std::mem::replace(&mut seen[f], true)
+                    })
+            },
+            "exec_order is not a permutation of 0..{}",
+            c.a
+        );
+        let blocks = balance_blocks(c, &exec_order, threads);
+        LayerPlan {
+            conv,
+            a: c.a,
+            c: c.c,
+            kh: c.kh,
+            kw: c.kw,
+            stride: c.stride,
+            in_hw: c.in_hw,
+            out_hw,
+            pad,
+            act: c.act,
+            bias: comp.bias.clone(),
+            payload,
+            kernels,
+            filter_ranges,
+            styles,
+            style_rows,
+            exec_order,
+            blocks,
+        }
+    }
+
+    /// Compile a single conv layer standalone (reorder + compress + pack):
+    /// the harness the kernel property-tests drive.
+    pub fn for_conv(c: &ConvIR, threads: usize) -> Self {
+        let order = passes::reorder_filters(c);
+        let comp = CompressedLayer::compress(c);
+        LayerPlan::build(0, c, &comp, order, threads)
+    }
+
+    pub fn out_elems(&self) -> usize {
+        self.a * self.out_hw * self.out_hw
+    }
+}
+
+/// Partition the reordered filter schedule into at most `threads`
+/// contiguous, cost-balanced, non-empty blocks. Contiguity preserves the
+/// reorder pass's style grouping inside each worker; the greedy split
+/// re-targets the remaining budget after each block so early overshoot
+/// doesn't starve the tail.
+fn balance_blocks(
+    c: &ConvIR,
+    exec_order: &[usize],
+    threads: usize,
+) -> Vec<FilterBlock> {
+    let n = exec_order.len();
+    let t = threads.max(1).min(n.max(1));
+    let costs: Vec<u64> = exec_order
+        .iter()
+        .map(|&f| costmodel::filter_exec_cost(c, f))
+        .collect();
+    let mut remaining: u64 = costs.iter().sum();
+    let mut blocks = Vec::with_capacity(t);
+    let mut start = 0usize;
+    let mut acc = 0u64;
+    for (i, &cost) in costs.iter().enumerate() {
+        acc += cost;
+        let blocks_left = (t - blocks.len()) as u64;
+        let filters_left = n - i - 1;
+        // close the block once it reaches its fair share, or when the
+        // remaining filters are exactly enough to keep later blocks
+        // non-empty
+        let target = remaining / blocks_left.max(1);
+        if blocks.len() + 1 < t
+            && i + 1 < n
+            && (acc >= target || filters_left <= t - blocks.len() - 1)
+        {
+            remaining -= acc;
+            blocks.push(FilterBlock {
+                span: start..i + 1,
+                cost: acc,
+            });
+            start = i + 1;
+            acc = 0;
+        }
+    }
+    blocks.push(FilterBlock {
+        span: start..n,
+        cost: acc,
+    });
+    debug_assert!(blocks.iter().all(|b| !b.span.is_empty() || n == 0));
+    debug_assert_eq!(
+        blocks.iter().map(|b| b.span.len()).sum::<usize>(),
+        n
+    );
+    blocks
+}
+
+/// Feature-map shape after a schedule step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StepDims {
+    pub c: usize,
+    pub hw: usize,
+}
+
+impl StepDims {
+    pub fn elems(&self) -> usize {
+        self.c * self.hw * self.hw
+    }
+}
+
+/// One lowered op: residual tags are resolved to arena slot indices, conv
+/// ops to layer-plan indices — the executor interprets these with zero
+/// name lookups and zero shape inference.
+#[derive(Clone, Debug)]
+pub enum PlanStep {
+    Conv { layer: usize },
+    Pool,
+    Save { slot: usize },
+    Proj { layer: usize, slot: usize },
+    Add { slot: usize },
+    Relu,
+    Gap,
+    Fc,
+}
+
+/// Compile-time statistics of a plan (reported by `repro deploy` and the
+/// benches; per-pass wall times quantify plan construction cost).
+#[derive(Clone, Debug)]
+pub struct PlanStats {
+    pub pass_ms: Vec<(&'static str, f64)>,
+    /// packed payload taps across all layers, bytes
+    pub payload_bytes: usize,
+    /// packed kernel headers across all layers, bytes
+    pub header_bytes: usize,
+    /// preallocated arena footprint, bytes
+    pub arena_bytes: usize,
+    /// worker blocks across all layers
+    pub n_blocks: usize,
+    pub threads: usize,
+}
+
+/// The compiled model: everything the execute phase needs, resolved.
+#[derive(Clone, Debug)]
+pub struct ExecutionPlan {
+    pub ir: ModelIR,
+    pub layers: Vec<LayerPlan>,
+    pub steps: Vec<PlanStep>,
+    /// feature-map dims *after* each step (parallel to `steps`)
+    pub dims: Vec<StepDims>,
+    /// input image dims
+    pub in_dims: StepDims,
+    /// element size of each residual save slot
+    pub slot_sizes: Vec<usize>,
+    /// max elements either ping-pong buffer must hold
+    pub fmap_elems: usize,
+    /// max elements a Proj output needs (0 when the model has none)
+    pub proj_scratch_elems: usize,
+    /// channel count entering Gap
+    pub gap_len: usize,
+    pub threads: usize,
+    pub report: CompileReport,
+    pub stats: PlanStats,
+}
+
+impl ExecutionPlan {
+    pub fn classes(&self) -> usize {
+        self.ir.classes
+    }
+}
+
+/// The pass pipeline. Passes run in a fixed order (reorder → compress →
+/// pack/row-group → schedule lowering), each timed into
+/// [`PlanStats::pass_ms`].
+pub struct PassManager {
+    threads: usize,
+}
+
+impl PassManager {
+    pub fn new(threads: usize) -> Self {
+        PassManager {
+            threads: threads.max(1),
+        }
+    }
+
+    pub fn compile(&self, ir: ModelIR) -> Result<ExecutionPlan> {
+        let mut pass_ms = Vec::new();
+
+        let t = Stopwatch::start();
+        let orders: Vec<Vec<usize>> =
+            ir.convs.iter().map(passes::reorder_filters).collect();
+        pass_ms.push(("reorder", t.ms()));
+
+        let t = Stopwatch::start();
+        let compressed: Vec<CompressedLayer> =
+            ir.convs.iter().map(CompressedLayer::compress).collect();
+        pass_ms.push(("compress", t.ms()));
+
+        // lower the schedule before packing: it validates the op stream's
+        // shape chain, so a malformed IR fails here instead of producing
+        // layer plans with inconsistent geometry
+        let t = Stopwatch::start();
+        let sched = lower_schedule(&ir)?;
+        pass_ms.push(("schedule", t.ms()));
+
+        let t = Stopwatch::start();
+        let layers: Vec<LayerPlan> = ir
+            .convs
+            .iter()
+            .zip(orders.iter())
+            .enumerate()
+            .map(|(i, (c, order))| {
+                LayerPlan::build(
+                    i,
+                    c,
+                    &compressed[i],
+                    order.clone(),
+                    self.threads,
+                )
+            })
+            .collect();
+        pass_ms.push(("pack+rowgroup", t.ms()));
+
+        let report = CompileReport::build(&ir, &compressed, &orders);
+
+        let payload_bytes: usize =
+            layers.iter().map(|l| 4 * l.payload.len()).sum();
+        let header_bytes: usize = layers
+            .iter()
+            .map(|l| std::mem::size_of::<PackedKernel>() * l.kernels.len())
+            .sum();
+        let arena_elems = 2 * sched.fmap_elems
+            + sched.slot_sizes.iter().sum::<usize>()
+            + sched.proj_scratch_elems
+            + sched.gap_len;
+        let stats = PlanStats {
+            pass_ms,
+            payload_bytes,
+            header_bytes,
+            arena_bytes: 4 * arena_elems,
+            n_blocks: layers.iter().map(|l| l.blocks.len()).sum(),
+            threads: self.threads,
+        };
+
+        Ok(ExecutionPlan {
+            ir,
+            layers,
+            steps: sched.steps,
+            dims: sched.dims,
+            in_dims: sched.in_dims,
+            slot_sizes: sched.slot_sizes,
+            fmap_elems: sched.fmap_elems,
+            proj_scratch_elems: sched.proj_scratch_elems,
+            gap_len: sched.gap_len,
+            threads: self.threads,
+            report,
+            stats,
+        })
+    }
+}
+
+/// Compile `ir` into an execution plan for `threads` worker threads.
+pub fn compile_plan(ir: ModelIR, threads: usize) -> Result<ExecutionPlan> {
+    PassManager::new(threads).compile(ir)
+}
+
+struct Schedule {
+    steps: Vec<PlanStep>,
+    dims: Vec<StepDims>,
+    in_dims: StepDims,
+    slot_sizes: Vec<usize>,
+    fmap_elems: usize,
+    proj_scratch_elems: usize,
+    gap_len: usize,
+}
+
+/// Lower the IR op stream: resolve residual tags to slots and compute
+/// every intermediate shape, so the executor never inspects strings or
+/// infers sizes.
+fn lower_schedule(ir: &ModelIR) -> Result<Schedule> {
+    let in_c = ir
+        .ops
+        .iter()
+        .find_map(|op| match op {
+            IrOp::Conv(ci) => Some(ir.convs[*ci].c),
+            _ => None,
+        })
+        .unwrap_or(3);
+    let in_dims = StepDims {
+        c: in_c,
+        hw: ir.in_hw,
+    };
+    let mut cur = in_dims;
+    let mut fmap_elems = cur.elems();
+    let mut proj_scratch_elems = 0usize;
+    let mut gap_len = 0usize;
+    let mut slots: Vec<usize> = Vec::new();
+    let mut slot_dims: Vec<StepDims> = Vec::new();
+    let mut tag_slot: std::collections::BTreeMap<String, usize> =
+        std::collections::BTreeMap::new();
+    let mut steps = Vec::with_capacity(ir.ops.len());
+    let mut dims = Vec::with_capacity(ir.ops.len());
+    let mut saw_fc = false;
+    for op in &ir.ops {
+        let step = match op {
+            IrOp::Conv(ci) => {
+                let c = &ir.convs[*ci];
+                if c.c != cur.c || c.in_hw != cur.hw {
+                    bail!(
+                        "conv {} expects ({}, {}hw), schedule has \
+                         ({}, {}hw)",
+                        ci,
+                        c.c,
+                        c.in_hw,
+                        cur.c,
+                        cur.hw
+                    );
+                }
+                cur = StepDims {
+                    c: c.a,
+                    hw: c.out_hw,
+                };
+                PlanStep::Conv { layer: *ci }
+            }
+            IrOp::Pool => {
+                cur = StepDims {
+                    c: cur.c,
+                    hw: cur.hw / 2,
+                };
+                PlanStep::Pool
+            }
+            IrOp::Save { tag } => {
+                let slot = *tag_slot.entry(tag.clone()).or_insert_with(|| {
+                    slots.push(0);
+                    slot_dims.push(cur);
+                    slots.len() - 1
+                });
+                slots[slot] = slots[slot].max(cur.elems());
+                slot_dims[slot] = cur;
+                PlanStep::Save { slot }
+            }
+            IrOp::Proj(ci) => {
+                let c = &ir.convs[*ci];
+                let Some(&slot) = tag_slot.get(&c.tag) else {
+                    bail!("proj references unsaved tag {:?}", c.tag);
+                };
+                let saved = slot_dims[slot];
+                if c.c != saved.c || c.in_hw != saved.hw {
+                    bail!(
+                        "proj {} expects ({}, {}hw), saved tag {:?} holds \
+                         ({}, {}hw)",
+                        ci,
+                        c.c,
+                        c.in_hw,
+                        c.tag,
+                        saved.c,
+                        saved.hw
+                    );
+                }
+                let out = c.a * c.out_hw * c.out_hw;
+                slots[slot] = slots[slot].max(out);
+                slot_dims[slot] = StepDims {
+                    c: c.a,
+                    hw: c.out_hw,
+                };
+                proj_scratch_elems = proj_scratch_elems.max(out);
+                PlanStep::Proj { layer: *ci, slot }
+            }
+            IrOp::Add { tag } => {
+                let Some(&slot) = tag_slot.get(tag) else {
+                    bail!("add references unsaved tag {tag:?}");
+                };
+                if slot_dims[slot] != cur {
+                    bail!(
+                        "add {tag:?}: saved fmap is ({}, {}hw) but the \
+                         main path is ({}, {}hw)",
+                        slot_dims[slot].c,
+                        slot_dims[slot].hw,
+                        cur.c,
+                        cur.hw
+                    );
+                }
+                PlanStep::Add { slot }
+            }
+            IrOp::Relu => PlanStep::Relu,
+            IrOp::Gap => {
+                gap_len = gap_len.max(cur.c);
+                PlanStep::Gap
+            }
+            IrOp::Fc => {
+                saw_fc = true;
+                PlanStep::Fc
+            }
+        };
+        fmap_elems = fmap_elems.max(cur.elems());
+        steps.push(step);
+        dims.push(cur);
+    }
+    if !saw_fc {
+        bail!("model has no fc head");
+    }
+    Ok(Schedule {
+        steps,
+        dims,
+        in_dims,
+        slot_sizes: slots,
+        fmap_elems,
+        proj_scratch_elems,
+        gap_len,
+    })
+}
+
+/// Preallocated ping-pong buffer arena sized from the plan. Every buffer
+/// is a [`ScratchBuf`], so [`Arena::alloc_events`] counts any slice
+/// request that outgrew its preallocation — the executor's zero-alloc
+/// invariant is `alloc_events() == 0` after construction.
+#[derive(Clone, Debug)]
+pub struct Arena {
+    pub ping: ScratchBuf,
+    pub pong: ScratchBuf,
+    pub slots: Vec<ScratchBuf>,
+    pub proj_scratch: ScratchBuf,
+    pub gap: ScratchBuf,
+}
+
+impl Arena {
+    pub fn for_plan(p: &ExecutionPlan) -> Self {
+        Arena {
+            ping: ScratchBuf::with_len(p.fmap_elems),
+            pong: ScratchBuf::with_len(p.fmap_elems),
+            slots: p
+                .slot_sizes
+                .iter()
+                .map(|&n| ScratchBuf::with_len(n))
+                .collect(),
+            proj_scratch: ScratchBuf::with_len(p.proj_scratch_elems),
+            gap: ScratchBuf::with_len(p.gap_len),
+        }
+    }
+
+    /// Total growth events since construction (0 ⇔ the inference path has
+    /// performed no heap allocation through the arena).
+    pub fn alloc_events(&self) -> usize {
+        self.ping.grows()
+            + self.pong.grows()
+            + self.slots.iter().map(|s| s.grows()).sum::<usize>()
+            + self.proj_scratch.grows()
+            + self.gap.grows()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+    use crate::tensor::Tensor;
+
+    fn mk_conv(a: usize, c: usize, patterns: &[u16]) -> ConvIR {
+        let mut rng = Pcg32::seeded(11);
+        let ks = 9;
+        let mut w = Tensor::zeros(&[a, c, 3, 3]);
+        for ki in 0..a * c {
+            let p = patterns[ki % patterns.len()];
+            for t in 0..ks {
+                if p & (1 << t) != 0 {
+                    w.data_mut()[ki * ks + t] = rng.normal();
+                }
+            }
+        }
+        let pattern: Vec<u16> = (0..a * c)
+            .map(|ki| patterns[ki % patterns.len()])
+            .collect();
+        ConvIR {
+            op_idx: 0,
+            a,
+            c,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            act: Act::Relu,
+            in_hw: 8,
+            out_hw: 8,
+            w,
+            bias: Tensor::zeros(&[a]),
+            pattern,
+            tag: String::new(),
+            is_proj: false,
+        }
+    }
+
+    #[test]
+    fn packed_payload_matches_compressed_layer() {
+        let c = mk_conv(6, 4, &[0b000011011, 0b110110000, 0]);
+        let comp = CompressedLayer::compress(&c);
+        let lp = LayerPlan::for_conv(&c, 2);
+        // every kept kernel appears once, payload slices agree
+        let mut n = 0;
+        for f in 0..c.a {
+            for (i, (ch, style, taps)) in
+                comp.filters[f].iter().enumerate()
+            {
+                let k = lp.kernels[lp.filter_ranges[f].start + i];
+                assert_eq!(k.ch, *ch);
+                assert_eq!(k.style, *style);
+                let got =
+                    &lp.payload[k.off as usize..k.off as usize + taps.len()];
+                assert_eq!(got, taps.as_slice());
+                n += 1;
+            }
+        }
+        assert_eq!(n, lp.kernels.len());
+        assert_eq!(lp.styles, comp.styles);
+        assert_eq!(lp.style_rows.len(), lp.styles.len());
+    }
+
+    #[test]
+    fn blocks_partition_schedule_and_balance_cost() {
+        let c = mk_conv(16, 4, &[0b000011011, 0b110110000, 0b000000111]);
+        for threads in [1usize, 2, 3, 4, 16, 64] {
+            let lp = LayerPlan::for_conv(&c, threads);
+            assert!(lp.blocks.len() <= threads.max(1));
+            assert!(!lp.blocks.is_empty());
+            // partition: concatenated spans cover exec_order exactly
+            let mut pos = 0;
+            for b in &lp.blocks {
+                assert_eq!(b.span.start, pos);
+                assert!(!b.span.is_empty());
+                pos = b.span.end;
+            }
+            assert_eq!(pos, lp.exec_order.len());
+            if threads == 4 {
+                let max = lp.blocks.iter().map(|b| b.cost).max().unwrap();
+                let min = lp.blocks.iter().map(|b| b.cost).min().unwrap();
+                assert!(
+                    max <= 3 * min.max(1),
+                    "imbalanced blocks: max {max} min {min}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn same_pad_matches_jax() {
+        // (in, k, s) -> (out, pad_lo) spot-checked against jax SAME
+        assert_eq!(same_pad_lo(16, 3, 1), (16, 1));
+        assert_eq!(same_pad_lo(16, 3, 2), (8, 0));
+        assert_eq!(same_pad_lo(8, 3, 2), (4, 0));
+        assert_eq!(same_pad_lo(16, 1, 1), (16, 0));
+        assert_eq!(same_pad_lo(16, 1, 2), (8, 0));
+        assert_eq!(same_pad_lo(15, 3, 2), (8, 1));
+    }
+
+    #[test]
+    fn arena_sizes_from_plan_and_counts_growth() {
+        use super::super::synth;
+        let (spec, params) = synth::vgg_style("t", 8, 4, &[4, 6], 1);
+        let ir = ModelIR::build(&spec, &params).unwrap();
+        let plan = compile_plan(ir, 2).unwrap();
+        let mut arena = Arena::for_plan(&plan);
+        assert_eq!(arena.alloc_events(), 0);
+        arena.ping.slice_mut(plan.fmap_elems);
+        assert_eq!(arena.alloc_events(), 0);
+        arena.ping.slice_mut(plan.fmap_elems + 1);
+        assert_eq!(arena.alloc_events(), 1);
+    }
+
+    #[test]
+    fn schedule_lowering_resolves_tags_and_dims() {
+        use super::super::synth;
+        let (spec, params) = synth::res_style("r", 8, 4, &[4, 8], 1);
+        let ir = ModelIR::build(&spec, &params).unwrap();
+        let plan = compile_plan(ir, 1).unwrap();
+        // residual model: has Save/Proj/Add steps, all slots sized
+        let mut saves = 0;
+        let mut projs = 0;
+        let mut adds = 0;
+        for s in &plan.steps {
+            match s {
+                PlanStep::Save { slot }
+                | PlanStep::Proj { slot, .. }
+                | PlanStep::Add { slot } => {
+                    assert!(*slot < plan.slot_sizes.len());
+                    assert!(plan.slot_sizes[*slot] > 0);
+                    match s {
+                        PlanStep::Save { .. } => saves += 1,
+                        PlanStep::Proj { .. } => projs += 1,
+                        _ => adds += 1,
+                    }
+                }
+                _ => {}
+            }
+        }
+        assert!(saves > 0 && projs > 0 && adds > 0);
+        assert_eq!(plan.steps.len(), plan.dims.len());
+        assert!(plan.fmap_elems > 0);
+        assert!(plan.gap_len > 0);
+        // last step is Fc with classes dims recorded in ir
+        assert!(matches!(plan.steps.last(), Some(PlanStep::Fc)));
+    }
+}

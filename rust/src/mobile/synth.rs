@@ -1,0 +1,282 @@
+//! Synthetic in-Rust model specs for the mobile stack.
+//!
+//! The mobile compiler + executor only need a [`ModelSpec`] and a
+//! parameter set; nothing about them requires the PJRT manifest. This
+//! module builds small VGG-style and residual specs directly in Rust so
+//! the mobile tests, benches, and examples run on machines without the
+//! AOT artifacts (and without the `pjrt` feature).
+
+use std::collections::BTreeMap;
+
+use crate::config::{Act, ConvOp, ModelSpec, Op, ParamSpec};
+use crate::pruning::{project, LayerShape, Scheme};
+use crate::tensor::Tensor;
+use crate::train::params::init_params;
+
+use super::plan::same_pad_lo;
+
+/// Incremental [`ModelSpec`] builder that tracks the feature-map shape so
+/// every `ConvOp` gets consistent `in_hw`/`out_hw` and the residual ops
+/// get shape-compatible projections.
+pub struct SpecBuilder {
+    id: String,
+    classes: usize,
+    in_hw: usize,
+    ops: Vec<Op>,
+    params: Vec<ParamSpec>,
+    prunable: Vec<usize>,
+    hw: usize,
+    c: usize,
+    saved: BTreeMap<String, (usize, usize)>,
+}
+
+impl SpecBuilder {
+    pub fn new(id: &str, in_hw: usize, classes: usize, in_c: usize) -> Self {
+        SpecBuilder {
+            id: id.to_string(),
+            classes,
+            in_hw,
+            ops: Vec::new(),
+            params: Vec::new(),
+            prunable: Vec::new(),
+            hw: in_hw,
+            c: in_c,
+            saved: BTreeMap::new(),
+        }
+    }
+
+    fn conv_params(&mut self, a: usize, c: usize, k: usize) -> (usize, usize) {
+        let i = self.params.len();
+        self.params.push(ParamSpec {
+            name: format!("conv{i}_w"),
+            shape: vec![a, c, k, k],
+        });
+        self.params.push(ParamSpec {
+            name: format!("conv{i}_b"),
+            shape: vec![a],
+        });
+        (i, i + 1)
+    }
+
+    fn conv_op(
+        &mut self,
+        a: usize,
+        c: usize,
+        k: usize,
+        stride: usize,
+        act: Act,
+        prunable: bool,
+        in_hw: usize,
+        tag: &str,
+    ) -> ConvOp {
+        let (w, b) = self.conv_params(a, c, k);
+        let (out_hw, _) = same_pad_lo(in_hw, k, stride);
+        ConvOp {
+            w,
+            b,
+            stride,
+            act,
+            prunable,
+            a,
+            c,
+            kh: k,
+            kw: k,
+            in_hw,
+            out_hw,
+            tag: tag.to_string(),
+        }
+    }
+
+    /// Main-path conv: consumes the current feature map.
+    pub fn conv(
+        &mut self,
+        a: usize,
+        k: usize,
+        stride: usize,
+        act: Act,
+        prunable: bool,
+    ) -> &mut Self {
+        let op = self.conv_op(a, self.c, k, stride, act, prunable, self.hw, "");
+        self.hw = op.out_hw;
+        self.c = a;
+        if prunable {
+            self.prunable.push(self.ops.len());
+        }
+        self.ops.push(Op::Conv(op));
+        self
+    }
+
+    pub fn pool(&mut self) -> &mut Self {
+        self.ops.push(Op::Pool);
+        self.hw /= 2;
+        self
+    }
+
+    pub fn save(&mut self, tag: &str) -> &mut Self {
+        self.saved.insert(tag.to_string(), (self.c, self.hw));
+        self.ops.push(Op::Save {
+            tag: tag.to_string(),
+        });
+        self
+    }
+
+    /// 1x1 projection conv over the feature map saved under `tag`
+    /// (downsampling shortcut of a residual stage).
+    pub fn proj(&mut self, a: usize, stride: usize, tag: &str) -> &mut Self {
+        let (c, hw) = self.saved[tag];
+        let op = self.conv_op(a, c, 1, stride, Act::None, false, hw, tag);
+        self.ops.push(Op::Proj(op));
+        self
+    }
+
+    pub fn add(&mut self, tag: &str) -> &mut Self {
+        self.ops.push(Op::Add {
+            tag: tag.to_string(),
+        });
+        self
+    }
+
+    pub fn relu(&mut self) -> &mut Self {
+        self.ops.push(Op::Relu);
+        self
+    }
+
+    pub fn finish(mut self) -> ModelSpec {
+        self.ops.push(Op::Gap);
+        let i = self.params.len();
+        self.params.push(ParamSpec {
+            name: "fc_w".into(),
+            shape: vec![self.classes, self.c],
+        });
+        self.params.push(ParamSpec {
+            name: "fc_b".into(),
+            shape: vec![self.classes],
+        });
+        self.ops.push(Op::Fc {
+            w: i,
+            b: i + 1,
+            a: self.classes,
+            c: self.c,
+        });
+        ModelSpec {
+            id: self.id,
+            arch: "synth".into(),
+            classes: self.classes,
+            in_hw: self.in_hw,
+            ops: self.ops,
+            params: self.params,
+            prunable: self.prunable,
+            artifacts: Default::default(),
+        }
+    }
+}
+
+/// VGG-style spec: per stage two prunable 3x3 convs then a 2x2 max-pool.
+/// Returns the spec plus He-initialized parameters.
+pub fn vgg_style(
+    id: &str,
+    in_hw: usize,
+    classes: usize,
+    widths: &[usize],
+    seed: u64,
+) -> (ModelSpec, Vec<Tensor>) {
+    let mut b = SpecBuilder::new(id, in_hw, classes, 3);
+    for &w in widths {
+        b.conv(w, 3, 1, Act::Relu, true);
+        b.conv(w, 3, 1, Act::Relu, true);
+        b.pool();
+    }
+    let spec = b.finish();
+    let params = init_params(&spec, seed);
+    (spec, params)
+}
+
+/// Residual spec: a stem conv, one identity block, then one downsampling
+/// block per extra width (stride-2 main path + 1x1 stride-2 projection
+/// shortcut). Exercises every executor step kind: Save, Proj, Add, Relu.
+pub fn res_style(
+    id: &str,
+    in_hw: usize,
+    classes: usize,
+    widths: &[usize],
+    seed: u64,
+) -> (ModelSpec, Vec<Tensor>) {
+    assert!(!widths.is_empty());
+    let mut b = SpecBuilder::new(id, in_hw, classes, 3);
+    b.conv(widths[0], 3, 1, Act::Relu, true);
+    // identity residual block on the stem width
+    b.save("id0");
+    b.conv(widths[0], 3, 1, Act::Relu, true);
+    b.conv(widths[0], 3, 1, Act::None, true);
+    b.add("id0");
+    b.relu();
+    // one downsampling block per subsequent width
+    for (i, &w) in widths.iter().enumerate().skip(1) {
+        let tag = format!("s{i}");
+        b.save(&tag);
+        b.conv(w, 3, 2, Act::Relu, true);
+        b.conv(w, 3, 1, Act::None, true);
+        b.proj(w, 2, &tag);
+        b.add(&tag);
+        b.relu();
+    }
+    let spec = b.finish();
+    let params = init_params(&spec, seed);
+    (spec, params)
+}
+
+/// Pattern-prune every prunable conv of `spec` in place at remaining-weight
+/// ratio `alpha` (4-of-9 patterns + connectivity, paper §IV-D).
+pub fn pattern_prune(spec: &ModelSpec, params: &mut [Tensor], alpha: f64) {
+    for (_, op) in spec.prunable_convs() {
+        let shape = LayerShape::from_conv(op);
+        let wg = params[op.w]
+            .clone()
+            .reshape(&[shape.p, shape.q()])
+            .unwrap();
+        let pr = project(Scheme::Pattern, &wg, &shape, alpha).unwrap();
+        let s4 = params[op.w].shape().to_vec();
+        params[op.w] = pr.w.clone().reshape(&s4).unwrap();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mobile::ir::ModelIR;
+
+    #[test]
+    fn vgg_spec_shapes_are_consistent() {
+        let (spec, params) = vgg_style("v", 16, 5, &[4, 8], 3);
+        assert_eq!(spec.prunable.len(), 4);
+        assert_eq!(params.len(), spec.params.len());
+        let ir = ModelIR::build(&spec, &params).unwrap();
+        assert_eq!(ir.convs.len(), 4);
+        assert_eq!(ir.fc_w.shape(), &[5, 8]);
+        // stage hw: 16 -> pool 8 -> pool 4
+        assert_eq!(ir.convs[0].in_hw, 16);
+        assert_eq!(ir.convs[2].in_hw, 8);
+    }
+
+    #[test]
+    fn res_spec_builds_ir_with_projs() {
+        let (spec, params) = res_style("r", 16, 5, &[4, 8], 4);
+        let ir = ModelIR::build(&spec, &params).unwrap();
+        let projs: Vec<_> =
+            ir.convs.iter().filter(|c| c.is_proj).collect();
+        assert_eq!(projs.len(), 1);
+        assert_eq!(projs[0].kh, 1);
+        assert_eq!(projs[0].stride, 2);
+        assert_eq!(projs[0].in_hw, 16);
+        assert_eq!(projs[0].out_hw, 8);
+    }
+
+    #[test]
+    fn pattern_prune_zeroes_weights() {
+        let (spec, mut params) = vgg_style("v", 8, 4, &[4], 5);
+        let before: usize = params.iter().map(|t| t.count_nonzero()).sum();
+        pattern_prune(&spec, &mut params, 0.25);
+        let after: usize = params.iter().map(|t| t.count_nonzero()).sum();
+        assert!(after < before / 2, "{after} vs {before}");
+    }
+}

@@ -97,6 +97,20 @@ pub fn ms(x: f64) -> String {
     format!("{x:.1} ms")
 }
 
+/// Humanized byte count for plan/arena stats ("512 B", "3.4 KiB",
+/// "1.2 MiB").
+pub fn human_bytes(n: usize) -> String {
+    const KIB: f64 = 1024.0;
+    let b = n as f64;
+    if b < KIB {
+        format!("{n} B")
+    } else if b < KIB * KIB {
+        format!("{:.1} KiB", b / KIB)
+    } else {
+        format!("{:.1} MiB", b / (KIB * KIB))
+    }
+}
+
 /// Accuracy loss cell with the paper's sign convention (negative = gain).
 pub fn loss_cell(base: f64, pruned: f64) -> String {
     format!("{:+.1}%", 100.0 * (base - pruned))
@@ -131,5 +145,8 @@ mod tests {
         assert_eq!(rate(16.0), "16.0x");
         assert_eq!(loss_cell(0.941, 0.942), "-0.1%");
         assert_eq!(loss_cell(0.941, 0.930), "+1.1%");
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(3 * 1024 + 512), "3.5 KiB");
+        assert_eq!(human_bytes(5 * 1024 * 1024), "5.0 MiB");
     }
 }

@@ -1,5 +1,10 @@
 //! PJRT runtime: loads the AOT HLO-text artifacts and executes them on the
-//! CPU PJRT client. This is the only place the `xla` crate is touched.
+//! CPU PJRT client. This is the only place the `xla` crate is touched, and
+//! the crate is optional: without the `pjrt` cargo feature this module
+//! compiles to a stub with the same API whose constructor reports a clear
+//! error, so the rest of the workspace (pruning math, the whole mobile
+//! compile/execute stack) builds and tests on machines without an XLA
+//! toolchain.
 //!
 //! Python never runs here: `make artifacts` happens once at build time, and
 //! this module gives the coordinator a `exec(model, artifact, inputs)` call
@@ -7,23 +12,25 @@
 //! and a compile cache (each HLO module is parsed + compiled exactly once
 //! per process).
 
+#[cfg(feature = "pjrt")]
 use std::cell::RefCell;
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
 use std::rc::Rc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::Result;
+#[cfg(feature = "pjrt")]
+use anyhow::{bail, Context};
 
-use crate::config::{ArtifactSpec, Manifest, ModelSpec};
+use crate::config::Manifest;
+#[cfg(feature = "pjrt")]
+use crate::config::{ArtifactSpec, ModelSpec};
+#[cfg(not(feature = "pjrt"))]
+use crate::config::ModelSpec;
 use crate::tensor::Tensor;
 
-pub struct Runtime {
-    client: xla::PjRtClient,
-    pub manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
-    /// cumulative PJRT execute count + wall time (perf accounting)
-    stats: RefCell<ExecStats>,
-}
-
+/// Cumulative PJRT execute count + wall time (perf accounting).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ExecStats {
     pub executions: u64,
@@ -32,6 +39,15 @@ pub struct ExecStats {
     pub marshal_secs: f64,
 }
 
+#[cfg(feature = "pjrt")]
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    stats: RefCell<ExecStats>,
+}
+
+#[cfg(feature = "pjrt")]
 impl Runtime {
     pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Self> {
         let manifest = Manifest::load(artifact_dir)?;
@@ -142,6 +158,7 @@ impl Runtime {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn validate_inputs(spec: &ArtifactSpec, inputs: &[&Tensor]) -> Result<()> {
     if inputs.len() != spec.inputs.len() {
         bail!(
@@ -163,6 +180,7 @@ fn validate_inputs(spec: &ArtifactSpec, inputs: &[&Tensor]) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
     if t.shape().is_empty() {
         return Ok(xla::Literal::scalar(t.data()[0]));
@@ -173,12 +191,55 @@ fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
         .context("reshaping literal")
 }
 
+#[cfg(feature = "pjrt")]
 fn literal_to_tensor(lit: xla::Literal, shape: &[usize]) -> Result<Tensor> {
     let data = lit.to_vec::<f32>().context("reading f32 literal")?;
     Tensor::from_vec(shape, data)
 }
 
-#[cfg(test)]
+// ---------------------------------------------------------------------------
+// Stub runtime (no XLA toolchain): same API surface, constructor errors.
+// ---------------------------------------------------------------------------
+
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    pub manifest: Manifest,
+}
+
+#[cfg(not(feature = "pjrt"))]
+const NO_PJRT: &str = "this build has no PJRT runtime: rebuild with \
+                       `cargo build --features pjrt` (requires an XLA \
+                       toolchain) to execute AOT artifacts";
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    pub fn new(_artifact_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        anyhow::bail!(NO_PJRT)
+    }
+
+    pub fn model(&self, id: &str) -> Result<&ModelSpec> {
+        self.manifest.model(id)
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        ExecStats::default()
+    }
+
+    pub fn warm(&self, _model_id: &str, _artifact: &str) -> Result<()> {
+        anyhow::bail!(NO_PJRT)
+    }
+
+    pub fn exec(
+        &self,
+        _model_id: &str,
+        _artifact: &str,
+        _inputs: &[&Tensor],
+    ) -> Result<Vec<Tensor>> {
+        anyhow::bail!(NO_PJRT)
+    }
+}
+
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
 
@@ -201,5 +262,16 @@ mod tests {
         let t = Tensor::scalar(3.5);
         let lit = tensor_to_literal(&t).unwrap();
         assert_eq!(lit.to_vec::<f32>().unwrap(), vec![3.5]);
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod stub_tests {
+    use super::*;
+
+    #[test]
+    fn stub_constructor_reports_missing_feature() {
+        let err = Runtime::new("artifacts").unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
     }
 }

@@ -164,9 +164,10 @@ impl Tensor {
     }
 }
 
-/// Select the indices of the `k` largest values (by `score`) out of `n`.
-/// Deterministic tie-break by lower index. O(n log n); projection sizes are
-/// small enough that this is never hot (verified by bench_projection).
+/// Select the indices of the `k` largest values (by `score`) out of `n`,
+/// ordered descending. Deterministic tie-break by lower index. Partial
+/// selection: O(n) to isolate the top k, then O(k log k) to order them —
+/// the full sort only ever touches k elements.
 pub fn top_k_indices(scores: &[f64], k: usize) -> Vec<usize> {
     // NaN-safe total order: NaN ranks below everything (a diverged weight
     // must never be selected as a "largest magnitude").
@@ -178,15 +179,94 @@ pub fn top_k_indices(scores: &[f64], k: usize) -> Vec<usize> {
             s
         }
     };
-    let mut idx: Vec<usize> = (0..scores.len()).collect();
-    idx.sort_by(|&a, &b| {
-        key(b)
-            .partial_cmp(&key(a))
+    let cmp = |a: &usize, b: &usize| {
+        key(*b)
+            .partial_cmp(&key(*a))
             .expect("keys are never NaN")
-            .then(a.cmp(&b))
-    });
-    idx.truncate(k);
+            .then(a.cmp(b))
+    };
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    let k = k.min(idx.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    if k < idx.len() {
+        idx.select_nth_unstable_by(k - 1, cmp);
+        idx.truncate(k);
+    }
+    idx.sort_by(cmp);
     idx
+}
+
+/// Borrowed (C, H, W) feature-map view over a flat f32 slice — the shape
+/// the mobile executor streams through its buffer arena (no ownership, no
+/// copies; `Copy` so it crosses `thread::scope` spawns freely).
+#[derive(Clone, Copy, Debug)]
+pub struct Chw<'a> {
+    pub c: usize,
+    pub hw: usize,
+    pub data: &'a [f32],
+}
+
+impl<'a> Chw<'a> {
+    pub fn new(c: usize, hw: usize, data: &'a [f32]) -> Self {
+        debug_assert!(data.len() >= c * hw * hw);
+        Chw { c, hw, data }
+    }
+
+    #[inline]
+    pub fn plane(&self, ch: usize) -> &'a [f32] {
+        &self.data[ch * self.hw * self.hw..(ch + 1) * self.hw * self.hw]
+    }
+}
+
+/// Preallocated f32 scratch buffer that counts post-construction growth.
+/// The mobile buffer arena is built from these: a plan sizes every buffer
+/// up front, so `grows()` staying at 0 across inference calls is the
+/// zero-allocation invariant the tests assert.
+#[derive(Clone, Debug, Default)]
+pub struct ScratchBuf {
+    data: Vec<f32>,
+    grows: usize,
+}
+
+impl ScratchBuf {
+    pub fn with_len(n: usize) -> Self {
+        ScratchBuf {
+            data: vec![0.0; n],
+            grows: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Times a `slice_mut` request exceeded the preallocated length and
+    /// forced a heap growth.
+    pub fn grows(&self) -> usize {
+        self.grows
+    }
+
+    #[inline]
+    pub fn slice(&self, n: usize) -> &[f32] {
+        &self.data[..n]
+    }
+
+    /// First `n` elements, growing (and counting the growth) if the buffer
+    /// was under-provisioned.
+    #[inline]
+    pub fn slice_mut(&mut self, n: usize) -> &mut [f32] {
+        if n > self.data.len() {
+            self.grows += 1;
+            self.data.resize(n, 0.0);
+        }
+        &mut self.data[..n]
+    }
 }
 
 #[cfg(test)]
@@ -230,6 +310,56 @@ mod tests {
         assert_eq!(top_k_indices(&s, 2), vec![1, 2]);
         assert_eq!(top_k_indices(&s, 3), vec![1, 2, 0]);
         assert_eq!(top_k_indices(&s, 0), Vec::<usize>::new());
+        // k >= n returns the full descending order
+        assert_eq!(top_k_indices(&s, 9), vec![1, 2, 0, 3]);
+    }
+
+    #[test]
+    fn top_k_ranks_nan_last() {
+        let s = vec![f64::NAN, 2.0, f64::NAN, 1.0, 3.0];
+        // NaNs must never displace finite scores...
+        assert_eq!(top_k_indices(&s, 3), vec![4, 1, 3]);
+        // ...and when forced into the tail they tie-break by lower index.
+        assert_eq!(top_k_indices(&s, 5), vec![4, 1, 3, 0, 2]);
+        let all_nan = vec![f64::NAN; 3];
+        assert_eq!(top_k_indices(&all_nan, 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn top_k_matches_full_sort_on_random_input() {
+        use crate::rng::Pcg32;
+        let mut rng = Pcg32::seeded(31);
+        for n in [1usize, 7, 64, 257] {
+            let s: Vec<f64> =
+                (0..n).map(|_| rng.normal() as f64).collect();
+            let mut full: Vec<usize> = (0..n).collect();
+            full.sort_by(|&a, &b| {
+                s[b].partial_cmp(&s[a]).unwrap().then(a.cmp(&b))
+            });
+            for k in [0usize, 1, n / 2, n] {
+                assert_eq!(top_k_indices(&s, k), full[..k], "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn chw_view_planes() {
+        let data: Vec<f32> = (0..2 * 9).map(|i| i as f32).collect();
+        let v = Chw::new(2, 3, &data);
+        assert_eq!(v.plane(0), &data[..9]);
+        assert_eq!(v.plane(1), &data[9..18]);
+    }
+
+    #[test]
+    fn scratch_buf_counts_growth() {
+        let mut b = ScratchBuf::with_len(8);
+        b.slice_mut(4)[0] = 1.0;
+        b.slice_mut(8)[7] = 2.0;
+        assert_eq!(b.grows(), 0);
+        assert_eq!(b.slice(8)[7], 2.0);
+        b.slice_mut(16);
+        assert_eq!(b.grows(), 1);
+        assert_eq!(b.len(), 16);
     }
 
     #[test]

@@ -1,124 +1,192 @@
-//! Mobile engine vs PJRT reference: the compiled sparse executor (all
-//! three compiler passes applied) must reproduce the `fwd_eval` artifact's
-//! logits exactly (up to f32 accumulation order), proving the passes are
-//! semantics-preserving on a real model.
+//! Mobile plan/executor integration (artifact-free: runs on synthetic
+//! specs, no PJRT needed). The planned sparse executor must reproduce the
+//! dense reference executor across models, kernels, and thread counts —
+//! proving the compiler passes and the plan lowering are
+//! semantics-preserving — and the plan report must show the pass gains.
+//! PJRT parity lives in tests/pjrt_parity.rs (`--features pjrt`).
 
-use repro::mobile::engine::{self, EngineKind, Fmap};
+use repro::mobile::engine::{
+    execute_batch_parallel, infer, compile, EngineKind, Executor, Fmap,
+    KernelKind, KERNEL_KINDS,
+};
 use repro::mobile::ir::ModelIR;
-use repro::pruning::{project, LayerShape, Scheme};
+use repro::mobile::plan::{compile_plan, PassManager};
+use repro::mobile::synth;
 use repro::rng::Pcg32;
-use repro::runtime::Runtime;
-use repro::tensor::Tensor;
-use repro::train::params::init_params;
+use repro::util::propcheck::check;
 
-const MODEL: &str = "lenet_sv10";
-
-fn artifacts_dir() -> std::path::PathBuf {
-    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-}
-
-/// PJRT logits for a single image (slot 0 of a zero-padded eval batch).
-fn pjrt_logits(rt: &Runtime, params: &[Tensor], img: &Fmap) -> Vec<f32> {
-    let bsz = rt.manifest.batches.eval;
-    let model = rt.model(MODEL).unwrap();
-    let hw = model.in_hw;
-    let mut x = Tensor::zeros(&[bsz, 3, hw, hw]);
-    x.data_mut()[..3 * hw * hw].copy_from_slice(&img.data);
-    let mut inputs: Vec<&Tensor> = params.iter().collect();
-    inputs.push(&x);
-    let outs = rt.exec(MODEL, "fwd_eval", &inputs).unwrap();
-    outs[0].row(0).to_vec()
-}
-
-fn rand_image(hw: usize, seed: u64) -> Fmap {
+fn rand_image(c: usize, hw: usize, seed: u64) -> Fmap {
     let mut rng = Pcg32::seeded(seed);
     Fmap {
-        c: 3,
+        c,
         hw,
-        data: (0..3 * hw * hw).map(|_| rng.uniform()).collect(),
+        data: (0..c * hw * hw).map(|_| rng.uniform()).collect(),
     }
 }
 
-fn pattern_prune(rt: &Runtime, params: &mut [Tensor], alpha: f64) {
-    let model = rt.model(MODEL).unwrap();
-    for (_, op) in model.prunable_convs() {
-        let shape = LayerShape::from_conv(op);
-        let wg = params[op.w]
-            .clone()
-            .reshape(&[shape.p, shape.q()])
-            .unwrap();
-        let pr = project(Scheme::Pattern, &wg, &shape, alpha).unwrap();
-        let s4 = params[op.w].shape().to_vec();
-        params[op.w] = pr.w.clone().reshape(&s4).unwrap();
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() < tol * y.abs().max(1.0),
+            "{what}[{i}]: {x} vs {y}"
+        );
     }
 }
 
 #[test]
-fn dense_engine_matches_pjrt() {
-    let rt = Runtime::new(artifacts_dir()).unwrap();
-    let model = rt.model(MODEL).unwrap().clone();
-    let params = init_params(&model, 3);
-    let compiled =
-        engine::compile(ModelIR::build(&model, &params).unwrap());
+fn sparse_executors_match_dense_on_vgg_model() {
+    let (spec, mut params) = synth::vgg_style("vgg", 16, 6, &[6, 10], 21);
+    synth::pattern_prune(&spec, &mut params, 0.25);
+    let ir = ModelIR::build(&spec, &params).unwrap();
+    let plan = compile_plan(ir, 1).unwrap();
+    let img = rand_image(3, 16, 7);
+    let dense = Executor::new(&plan, KernelKind::DenseRef).execute(&img);
+    for kind in [KernelKind::PatternScalar, KernelKind::PatternTiled] {
+        let got = Executor::new(&plan, kind).execute(&img);
+        assert_close(&got, &dense, 1e-4, kind.name());
+    }
+}
+
+#[test]
+fn sparse_executor_matches_dense_on_residual_model() {
+    // exercises Save/Proj/Add/Relu slot machinery incl. stride-2 convs
+    let (spec, mut params) = synth::res_style("res", 16, 5, &[6, 10], 33);
+    synth::pattern_prune(&spec, &mut params, 0.3);
+    let ir = ModelIR::build(&spec, &params).unwrap();
+    let plan = compile_plan(ir, 2).unwrap();
     for seed in 0..3u64 {
-        let img = rand_image(model.in_hw, seed);
-        let want = pjrt_logits(&rt, &params, &img);
-        let got = engine::infer(&compiled, &img, EngineKind::Dense);
-        for (g, w) in got.iter().zip(&want) {
-            assert!(
-                (g - w).abs() < 2e-4 * w.abs().max(1.0),
-                "seed {seed}: {got:?} vs {want:?}"
-            );
+        let img = rand_image(3, 16, 40 + seed);
+        let dense =
+            Executor::new(&plan, KernelKind::DenseRef).execute(&img);
+        let sparse =
+            Executor::new(&plan, KernelKind::PatternScalar).execute(&img);
+        assert_close(&sparse, &dense, 1e-4, "residual sparse");
+    }
+}
+
+/// Property (ISSUE satellite): planned sparse executor output matches the
+/// dense reference to 1e-4 across randomized pattern masks (via random
+/// pruning ratios incl. heavy connectivity pruning), model shapes, and
+/// thread counts. Strides {1,2} and kernel sizes {1,3} are covered by the
+/// residual spec (3x3 stride-2 main path + 1x1 stride-2 projection).
+#[test]
+fn prop_planned_sparse_matches_dense_reference() {
+    check("plan-sparse-vs-dense", 4242, 12, 8, |g| {
+        let w0 = 4 + g.dim_up_to(4);
+        let w1 = 4 + g.dim_up_to(6);
+        let residual = g.rng.below(2) == 0;
+        let seed = g.rng.next_u64();
+        let (spec, mut params) = if residual {
+            synth::res_style("p", 8, 4, &[w0, w1], seed)
+        } else {
+            synth::vgg_style("p", 8, 4, &[w0, w1], seed)
+        };
+        // alpha down to 1/16: many kernels fully connectivity-pruned
+        let alpha = g.alpha();
+        synth::pattern_prune(&spec, &mut params, alpha);
+        let ir = ModelIR::build(&spec, &params).unwrap();
+        let threads = 1 + g.rng.below(4);
+        let plan = compile_plan(ir, threads).unwrap();
+        let img = rand_image(3, 8, seed ^ 0xF00D);
+        let dense =
+            Executor::new(&plan, KernelKind::DenseRef).execute(&img);
+        for kind in [KernelKind::PatternScalar, KernelKind::PatternTiled] {
+            let got = Executor::new(&plan, kind).execute(&img);
+            for (i, (x, y)) in got.iter().zip(&dense).enumerate() {
+                if (x - y).abs() > 1e-4 * y.abs().max(1.0) {
+                    return Err(format!(
+                        "{} diverges at logit {i}: {x} vs {y} \
+                         (residual={residual} alpha={alpha:.3} \
+                         threads={threads})",
+                        kind.name()
+                    ));
+                }
+            }
         }
+        Ok(())
+    });
+}
+
+#[test]
+fn thread_count_does_not_change_results() {
+    // per-filter planes are computed identically regardless of the block
+    // partition, so outputs are bitwise equal across thread counts
+    let (spec, mut params) = synth::vgg_style("t", 16, 8, &[8, 12], 55);
+    synth::pattern_prune(&spec, &mut params, 0.25);
+    let img = rand_image(3, 16, 3);
+    let base = {
+        let ir = ModelIR::build(&spec, &params).unwrap();
+        let plan = compile_plan(ir, 1).unwrap();
+        Executor::new(&plan, KernelKind::PatternScalar).execute(&img)
+    };
+    for threads in [2usize, 4, 8] {
+        let ir = ModelIR::build(&spec, &params).unwrap();
+        let plan = compile_plan(ir, threads).unwrap();
+        let got =
+            Executor::new(&plan, KernelKind::PatternScalar).execute(&img);
+        assert_eq!(got, base, "threads={threads}");
     }
 }
 
 #[test]
-fn sparse_engine_matches_pjrt_on_pruned_model() {
-    let rt = Runtime::new(artifacts_dir()).unwrap();
-    let model = rt.model(MODEL).unwrap().clone();
-    let mut params = init_params(&model, 4);
-    pattern_prune(&rt, &mut params, 0.25);
-    let compiled =
-        engine::compile(ModelIR::build(&model, &params).unwrap());
-    for seed in 10..13u64 {
-        let img = rand_image(model.in_hw, seed);
-        let want = pjrt_logits(&rt, &params, &img);
-        let got = engine::infer(&compiled, &img, EngineKind::Sparse);
-        for (g, w) in got.iter().zip(&want) {
-            assert!(
-                (g - w).abs() < 2e-4 * w.abs().max(1.0),
-                "seed {seed}: {got:?} vs {want:?}"
-            );
-        }
+fn executor_is_deterministic_across_calls() {
+    let (spec, mut params) = synth::res_style("d", 8, 4, &[4, 6], 77);
+    synth::pattern_prune(&spec, &mut params, 0.3);
+    let plan =
+        compile_plan(ModelIR::build(&spec, &params).unwrap(), 2).unwrap();
+    let mut ex = Executor::new(&plan, KernelKind::PatternScalar);
+    let img = rand_image(3, 8, 9);
+    let a = ex.execute(&img);
+    let b = ex.execute(&img);
+    assert_eq!(a, b, "arena reuse must not leak state between frames");
+    assert_eq!(ex.alloc_events(), 0);
+}
+
+#[test]
+fn batch_entry_points_match_single_frame_path() {
+    let (spec, mut params) = synth::vgg_style("b", 16, 6, &[6, 8], 91);
+    synth::pattern_prune(&spec, &mut params, 0.25);
+    let plan =
+        compile_plan(ModelIR::build(&spec, &params).unwrap(), 1).unwrap();
+    let imgs: Vec<Fmap> =
+        (0..7).map(|i| rand_image(3, 16, 200 + i)).collect();
+    let mut ex = Executor::new(&plan, KernelKind::PatternScalar);
+    let single: Vec<Vec<f32>> =
+        imgs.iter().map(|i| ex.execute(i)).collect();
+    let batch = ex.execute_batch(&imgs);
+    assert_eq!(batch, single);
+    for workers in [1usize, 2, 3, 8] {
+        let par = execute_batch_parallel(
+            &plan,
+            KernelKind::PatternScalar,
+            &imgs,
+            workers,
+        );
+        assert_eq!(par, single, "workers={workers}");
     }
 }
 
 #[test]
-fn sparse_and_dense_engines_agree_on_pruned_model() {
-    let rt = Runtime::new(artifacts_dir()).unwrap();
-    let model = rt.model(MODEL).unwrap().clone();
-    let mut params = init_params(&model, 5);
-    pattern_prune(&rt, &mut params, 0.2);
-    let compiled =
-        engine::compile(ModelIR::build(&model, &params).unwrap());
-    let img = rand_image(model.in_hw, 42);
-    let d = engine::infer(&compiled, &img, EngineKind::Dense);
-    let s = engine::infer(&compiled, &img, EngineKind::Sparse);
-    for (a, b) in d.iter().zip(&s) {
-        assert!((a - b).abs() < 1e-4, "{d:?} vs {s:?}");
-    }
+fn compat_compile_infer_agrees_with_executor() {
+    let (spec, mut params) = synth::vgg_style("c", 8, 4, &[4, 6], 13);
+    synth::pattern_prune(&spec, &mut params, 0.3);
+    let compiled = compile(ModelIR::build(&spec, &params).unwrap());
+    let img = rand_image(3, 8, 5);
+    let via_compat = infer(&compiled, &img, EngineKind::Sparse);
+    let via_executor = Executor::new(&compiled.plan, KernelKind::PatternScalar)
+        .execute(&img);
+    assert_eq!(via_compat, via_executor);
+    assert!(compiled.report().lre_gain() >= 1.0);
 }
 
 #[test]
 fn compile_report_shows_pass_gains_on_pruned_model() {
-    let rt = Runtime::new(artifacts_dir()).unwrap();
-    let model = rt.model(MODEL).unwrap().clone();
-    let mut params = init_params(&model, 6);
-    pattern_prune(&rt, &mut params, 0.25);
-    let compiled =
-        engine::compile(ModelIR::build(&model, &params).unwrap());
-    let r = &compiled.report;
+    let (spec, mut params) = synth::vgg_style("g", 16, 8, &[8, 12], 6);
+    synth::pattern_prune(&spec, &mut params, 0.25);
+    let plan =
+        compile_plan(ModelIR::build(&spec, &params).unwrap(), 4).unwrap();
+    let r = &plan.report;
     assert!(r.total_sparse_macs() * 3 < r.total_dense_macs());
     assert!(
         (r.total_compressed_bytes() as f64)
@@ -126,42 +194,93 @@ fn compile_report_shows_pass_gains_on_pruned_model() {
     );
     assert!(r.lre_gain() >= 1.0);
     assert!(r.reorder_gain() >= 1.0);
+    // plan stats populated: four timed passes, nonzero footprints
+    assert_eq!(plan.stats.pass_ms.len(), 4);
+    assert!(plan.stats.payload_bytes > 0);
+    assert!(plan.stats.arena_bytes > 0);
+    assert!(plan.stats.n_blocks >= plan.layers.len());
+}
+
+#[test]
+fn pass_manager_rejects_inconsistent_schedules() {
+    // a spec whose conv chain mismatches (pool halves hw but the next
+    // conv still expects the full size) must fail at compile, not execute
+    let (spec, params) = synth::vgg_style("bad", 16, 4, &[4, 6], 8);
+    let mut ir = ModelIR::build(&spec, &params).unwrap();
+    ir.convs[1].in_hw = 5; // corrupt
+    assert!(PassManager::new(1).compile(ir).is_err());
 }
 
 #[test]
 fn sparse_execution_is_actually_faster() {
-    // Real wallclock on the host CPU: the compiled sparse form must beat
+    // Real wallclock on the host CPU: the planned sparse form must beat
     // dense execution on a heavily pruned model (this is the "real
     // execution" half of Fig. 3; the cost model extrapolates to mobile).
-    let rt = Runtime::new(artifacts_dir()).unwrap();
-    let model = rt.model(MODEL).unwrap().clone();
-    let mut params = init_params(&model, 7);
-    pattern_prune(&rt, &mut params, 1.0 / 9.0); // 16x-ish compression
-    let compiled =
-        engine::compile(ModelIR::build(&model, &params).unwrap());
-    let img = rand_image(model.in_hw, 1);
-    // warm up + time
-    let time = |kind: EngineKind| {
+    let (spec, mut params) =
+        synth::vgg_style("f", 32, 10, &[16, 24], 17);
+    synth::pattern_prune(&spec, &mut params, 1.0 / 9.0); // 16x-ish
+    let plan =
+        compile_plan(ModelIR::build(&spec, &params).unwrap(), 1).unwrap();
+    let img = rand_image(3, 32, 1);
+    let mut logits = vec![0.0f32; plan.ir.classes];
+    let mut time = |kind: KernelKind| {
+        let mut ex = Executor::new(&plan, kind);
         for _ in 0..3 {
-            engine::infer(&compiled, &img, kind);
+            ex.execute_into(&img, &mut logits).unwrap();
         }
         let t = std::time::Instant::now();
         let reps = 20;
         for _ in 0..reps {
-            std::hint::black_box(engine::infer(
-                &compiled,
-                std::hint::black_box(&img),
-                kind,
-            ));
+            ex.execute_into(&img, &mut logits).unwrap();
+            std::hint::black_box(&logits);
         }
         t.elapsed().as_secs_f64() / reps as f64
     };
-    let td = time(EngineKind::Dense);
-    let ts = time(EngineKind::Sparse);
+    let td = time(KernelKind::DenseRef);
+    let ts = time(KernelKind::PatternScalar);
     assert!(
         ts < td,
         "sparse {:.3}ms should beat dense {:.3}ms",
         ts * 1e3,
         td * 1e3
     );
+}
+
+#[test]
+fn multithreaded_arena_never_grows() {
+    // at threads > 1 the scoped spawns allocate inside std, but the
+    // executor's own arena must never grow after construction (the
+    // counting-allocator hard proof at threads = 1 is tests/zero_alloc.rs)
+    let (spec, mut params) = synth::vgg_style("z4", 16, 6, &[8, 12], 9);
+    synth::pattern_prune(&spec, &mut params, 0.25);
+    let plan =
+        compile_plan(ModelIR::build(&spec, &params).unwrap(), 4).unwrap();
+    let mut ex = Executor::new(&plan, KernelKind::PatternScalar);
+    let img = rand_image(3, 16, 8);
+    let mut logits = vec![0.0f32; plan.ir.classes];
+    for _ in 0..5 {
+        ex.execute_into(&img, &mut logits).unwrap();
+    }
+    assert_eq!(ex.alloc_events(), 0);
+}
+
+#[test]
+fn executor_rejects_mismatched_inputs() {
+    let (spec, params) = synth::vgg_style("e", 8, 4, &[4], 2);
+    let plan =
+        compile_plan(ModelIR::build(&spec, &params).unwrap(), 1).unwrap();
+    let mut ex = Executor::new(&plan, KernelKind::DenseRef);
+    let wrong_hw = rand_image(3, 16, 1);
+    let mut out = vec![0.0f32; 4];
+    assert!(ex.execute_into(&wrong_hw, &mut out).is_err());
+    let good = rand_image(3, 8, 1);
+    let mut short = vec![0.0f32; 3];
+    assert!(ex.execute_into(&good, &mut short).is_err());
+    assert!(ex.execute_into(&good, &mut out).is_ok());
+    for kind in KERNEL_KINDS {
+        // all registry kernels accept the same plan
+        assert!(Executor::new(&plan, kind)
+            .execute_into(&good, &mut out)
+            .is_ok());
+    }
 }

@@ -1,6 +1,7 @@
 //! Coordinator-level integration: Ctx caching (checkpoints + result rows),
 //! baselines, and the Table-IV formulation machinery on the micro model at
-//! smoke scale. Requires `make artifacts`.
+//! smoke scale. Requires `make artifacts` and the `pjrt` cargo feature.
+#![cfg(feature = "pjrt")]
 
 use repro::config::Preset;
 use repro::coordinator::{Ctx, Method};

@@ -1,0 +1,94 @@
+//! Mobile executor vs PJRT reference (requires `--features pjrt` and
+//! `make artifacts`): the planned sparse executor (all three compiler
+//! passes applied) must reproduce the `fwd_eval` artifact's logits exactly
+//! (up to f32 accumulation order), proving the passes are
+//! semantics-preserving on a real model. The artifact-free engine
+//! consistency suite lives in tests/mobile_integration.rs.
+#![cfg(feature = "pjrt")]
+
+use repro::mobile::engine::{
+    compile, infer, EngineKind, Executor, Fmap, KernelKind,
+};
+use repro::mobile::ir::ModelIR;
+use repro::mobile::plan::compile_plan;
+use repro::mobile::synth;
+use repro::rng::Pcg32;
+use repro::runtime::Runtime;
+use repro::tensor::Tensor;
+use repro::train::params::init_params;
+
+const MODEL: &str = "lenet_sv10";
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// PJRT logits for a single image (slot 0 of a zero-padded eval batch).
+fn pjrt_logits(rt: &Runtime, params: &[Tensor], img: &Fmap) -> Vec<f32> {
+    let bsz = rt.manifest.batches.eval;
+    let model = rt.model(MODEL).unwrap();
+    let hw = model.in_hw;
+    let mut x = Tensor::zeros(&[bsz, 3, hw, hw]);
+    x.data_mut()[..3 * hw * hw].copy_from_slice(&img.data);
+    let mut inputs: Vec<&Tensor> = params.iter().collect();
+    inputs.push(&x);
+    let outs = rt.exec(MODEL, "fwd_eval", &inputs).unwrap();
+    outs[0].row(0).to_vec()
+}
+
+fn rand_image(hw: usize, seed: u64) -> Fmap {
+    let mut rng = Pcg32::seeded(seed);
+    Fmap {
+        c: 3,
+        hw,
+        data: (0..3 * hw * hw).map(|_| rng.uniform()).collect(),
+    }
+}
+
+fn pattern_prune(rt: &Runtime, params: &mut [Tensor], alpha: f64) {
+    synth::pattern_prune(rt.model(MODEL).unwrap(), params, alpha);
+}
+
+#[test]
+fn dense_engine_matches_pjrt() {
+    let rt = Runtime::new(artifacts_dir()).unwrap();
+    let model = rt.model(MODEL).unwrap().clone();
+    let params = init_params(&model, 3);
+    let compiled = compile(ModelIR::build(&model, &params).unwrap());
+    for seed in 0..3u64 {
+        let img = rand_image(model.in_hw, seed);
+        let want = pjrt_logits(&rt, &params, &img);
+        let got = infer(&compiled, &img, EngineKind::Dense);
+        for (g, w) in got.iter().zip(&want) {
+            assert!(
+                (g - w).abs() < 2e-4 * w.abs().max(1.0),
+                "seed {seed}: {got:?} vs {want:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn sparse_executor_matches_pjrt_on_pruned_model() {
+    let rt = Runtime::new(artifacts_dir()).unwrap();
+    let model = rt.model(MODEL).unwrap().clone();
+    let mut params = init_params(&model, 4);
+    pattern_prune(&rt, &mut params, 0.25);
+    // multi-threaded plan, both sparse kernels
+    let plan =
+        compile_plan(ModelIR::build(&model, &params).unwrap(), 4).unwrap();
+    for seed in 10..13u64 {
+        let img = rand_image(model.in_hw, seed);
+        let want = pjrt_logits(&rt, &params, &img);
+        for kind in [KernelKind::PatternScalar, KernelKind::PatternTiled] {
+            let got = Executor::new(&plan, kind).execute(&img);
+            for (g, w) in got.iter().zip(&want) {
+                assert!(
+                    (g - w).abs() < 2e-4 * w.abs().max(1.0),
+                    "seed {seed} {:?}: {got:?} vs {want:?}",
+                    kind
+                );
+            }
+        }
+    }
+}

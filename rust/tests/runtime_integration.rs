@@ -6,7 +6,9 @@
 //! runs through (a) jax on CPU and (b) HLO-text → PJRT from Rust, and the
 //! results must agree to f32 tolerance.
 //!
-//! Requires `make artifacts` (manifest + lenet artifacts + fixtures.json).
+//! Requires `make artifacts` (manifest + lenet artifacts + fixtures.json)
+//! and the `pjrt` cargo feature (XLA toolchain).
+#![cfg(feature = "pjrt")]
 
 use repro::config::TrainConfig;
 use repro::runtime::Runtime;

@@ -1,0 +1,86 @@
+//! Zero-allocation invariant of the execute phase (ISSUE acceptance
+//! criterion): after plan construction and executor warm-up, `execute_into`
+//! performs no heap allocation at all. Verified two ways: a counting
+//! global allocator wrapped around the system allocator (hard proof, kept
+//! in its own integration binary so no concurrent test thread can perturb
+//! the counter), and the arena's own growth counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use repro::mobile::engine::{Executor, Fmap, KernelKind};
+use repro::mobile::ir::ModelIR;
+use repro::mobile::plan::compile_plan;
+use repro::mobile::synth;
+use repro::rng::Pcg32;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::SeqCst);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::SeqCst);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn execute_into_is_allocation_free_after_plan_construction() {
+    // residual model: exercises every step kind (Conv/Pool-free path,
+    // Save/Proj/Add/Relu/Gap/Fc) on the allocation-free path
+    let (spec, mut params) = synth::res_style("z", 16, 6, &[6, 10], 3);
+    synth::pattern_prune(&spec, &mut params, 0.25);
+    let ir = ModelIR::build(&spec, &params).unwrap();
+    // threads = 1: per-layer thread spawning is the one std-level
+    // allocation source at threads > 1; the executor's own data path must
+    // be allocation-free, which single-thread plans expose exactly
+    let plan = compile_plan(ir, 1).unwrap();
+    let mut ex = Executor::new(&plan, KernelKind::PatternScalar);
+    let mut rng = Pcg32::seeded(5);
+    let img = Fmap {
+        c: 3,
+        hw: 16,
+        data: (0..3 * 16 * 16).map(|_| rng.uniform()).collect(),
+    };
+    let mut logits = vec![0.0f32; plan.ir.classes];
+    // warm-up (first call touches every arena buffer)
+    ex.execute_into(&img, &mut logits).unwrap();
+    let expected = logits.clone();
+
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..10 {
+        ex.execute_into(&img, &mut logits).unwrap();
+        std::hint::black_box(&logits);
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "inference path allocated {} times",
+        after - before
+    );
+    assert_eq!(ex.alloc_events(), 0, "arena grew post-construction");
+    assert_eq!(logits, expected, "warm path changed results");
+}
+
+// NOTE: exactly one test lives in this binary on purpose — a second test
+// running on a sibling libtest thread would allocate inside the counting
+// window. The threads>1 arena variant lives in mobile_integration.rs.
