@@ -10,6 +10,12 @@
 //!
 //! Run: `cargo run --release --example privacy_pipeline [--preset quick]`
 //! Writes runs/privacy_pipeline.log with the loss curves.
+//!
+//! The designer's prune stage is also available multi-threaded: `repro
+//! prune --model res_sv10 --threads 4` parallelizes the proximal
+//! projections, and the host scheduler (`admm::scheduler`, `repro exp
+//! sweep`) solves the per-layer ADMM subproblems concurrently with
+//! bit-identical results at any thread count (DESIGN.md §10).
 
 use std::fmt::Write as _;
 

@@ -6,6 +6,12 @@
 //! masked retraining.
 //!
 //! Run: `cargo run --release --example quickstart`
+//!
+//! The prune CLI accepts `--threads N` (`repro prune --model lenet_sv10
+//! --threads 4`): N workers drive the proximal projections here and the
+//! whole layer-wise solve in the host scheduler (`repro exp sweep`,
+//! `admm::scheduler` — no artifacts needed). Pruning results are
+//! bit-identical at any thread count.
 
 use anyhow::Result;
 use repro::admm::{prune_layerwise, DataSource};

@@ -1,19 +1,104 @@
-//! Bench (Tables I-III context): per-iteration cost of the
-//! privacy-preserving ADMM pruning loop per scheme, on the lenet model —
-//! isolates the L3 orchestration + primal/proximal split from the
-//! experiment-scale training noise.
+//! Bench (Tables I-III context + the scheduler): layer-wise ADMM pruning
+//! cost.
+//!
+//! Group 1 runs the **host scheduler** (`admm::scheduler`) on a synthetic
+//! VGG spec — no artifacts or PJRT needed — serial vs parallel plus
+//! thread scaling, and prints the 4-thread speedup explicitly. Group 2 is
+//! the per-scheme cost at full parallelism. Group 3 keeps the original
+//! PJRT per-iteration benches (lenet, problem (3)) and is skipped with a
+//! note when no runtime is available.
 
+use repro::admm::scheduler::{prune_layerwise_par, SchedulerCfg};
 use repro::admm::{prune_layerwise, DataSource};
 use repro::bench_harness::{bench, section};
 use repro::config::AdmmConfig;
+use repro::mobile::synth::vgg_style;
 use repro::pruning::Scheme;
 use repro::runtime::Runtime;
 use repro::train::params::init_params;
 
+fn host_cfg(threads: usize) -> SchedulerCfg {
+    SchedulerCfg::new(
+        AdmmConfig {
+            rhos: vec![1e-2, 1e-1],
+            iters_per_rho: 2,
+            primal_steps: 3,
+            lr: 1e-2,
+            lr_layer: 5e-3,
+            gauss_seidel: true,
+            seed: 1,
+            threads: 1,
+        },
+        8,
+        threads,
+    )
+}
+
 fn main() {
-    let rt = Runtime::new("artifacts").expect("run `make artifacts`");
+    // synthetic VGG spec: 6 prunable 3x3 convs over three width stages
+    let (spec, params) = vgg_style("vgg_bench", 16, 10, &[8, 16, 32], 1);
+
+    section("host scheduler: serial vs parallel layer-wise pruning (synthetic VGG)");
+    let mut mean_ms = std::collections::BTreeMap::new();
+    for threads in [1usize, 2, 4] {
+        let cfg = host_cfg(threads);
+        let r = bench(
+            &format!("prune pattern 8x  {threads} thread(s)"),
+            1,
+            5,
+            || {
+                std::hint::black_box(
+                    prune_layerwise_par(
+                        &spec,
+                        &params,
+                        Scheme::Pattern,
+                        1.0 / 8.0,
+                        &cfg,
+                    )
+                    .unwrap(),
+                );
+            },
+        );
+        mean_ms.insert(threads, r.mean_ms);
+    }
+    println!(
+        "layer-wise speedup vs serial: {:.2}x at 2 threads, {:.2}x at 4 threads",
+        mean_ms[&1] / mean_ms[&2],
+        mean_ms[&1] / mean_ms[&4]
+    );
+
+    section("host scheduler: per-scheme cost at 4 threads");
+    let cfg4 = host_cfg(4);
+    for scheme in Scheme::all() {
+        bench(
+            &format!("prune {} 8x  4 threads", scheme.name()),
+            1,
+            3,
+            || {
+                std::hint::black_box(
+                    prune_layerwise_par(
+                        &spec,
+                        &params,
+                        scheme,
+                        1.0 / 8.0,
+                        &cfg4,
+                    )
+                    .unwrap(),
+                );
+            },
+        );
+    }
+
+    // ---- PJRT artifact benches (original groups) -------------------------
+    let rt = match Runtime::new("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("\n(skipping PJRT artifact benches: {e})");
+            return;
+        }
+    };
     let model = rt.model("lenet_sv10").unwrap().clone();
-    let params = init_params(&model, 1);
+    let lenet_params = init_params(&model, 1);
     // one-iteration config: the bench times a single full ADMM iteration
     // (synthetic batch + target acts + per-layer primal/proximal/dual)
     let cfg = AdmmConfig {
@@ -24,18 +109,19 @@ fn main() {
         lr_layer: 1e-3,
         gauss_seidel: true,
         seed: 1,
+        threads: 1,
     };
     for a in ["fwd_acts", "layer_primal_0", "layer_primal_1"] {
         rt.warm("lenet_sv10", a).unwrap();
     }
-    section("one ADMM iteration (lenet, layer-wise problem (3))");
+    section("one ADMM iteration (lenet, layer-wise problem (3), PJRT)");
     for scheme in Scheme::all() {
         bench(&format!("admm iter {}", scheme.name()), 1, 5, || {
             std::hint::black_box(
                 prune_layerwise(
                     &rt,
                     "lenet_sv10",
-                    &params,
+                    &lenet_params,
                     scheme,
                     1.0 / 8.0,
                     &cfg,
@@ -55,7 +141,7 @@ fn main() {
                 prune_layerwise(
                     &rt,
                     "lenet_sv10",
-                    &params,
+                    &lenet_params,
                     Scheme::Irregular,
                     1.0 / 8.0,
                     &c,

@@ -22,6 +22,7 @@ fn main() {
         lr_layer: 1e-3,
         gauss_seidel: true,
         seed: 1,
+        threads: 1,
     };
     rt.warm("vgg_sv10", "fwd_acts").unwrap();
     rt.warm("vgg_sv10", "whole_primal_step").unwrap();

@@ -3,7 +3,7 @@
 //! zoo and at paper-scale (512×4608, ResNet-18's largest 3x3 layer).
 
 use repro::bench_harness::{bench, section};
-use repro::pruning::{project, LayerShape, Scheme};
+use repro::pruning::{project, project_par, LayerShape, Scheme};
 use repro::rng::Pcg32;
 use repro::tensor::Tensor;
 
@@ -35,6 +35,30 @@ fn main() {
                 || {
                     std::hint::black_box(
                         project(scheme, &w, &shape, 1.0 / 8.0).unwrap(),
+                    );
+                },
+            );
+        }
+    }
+
+    section("parallel projection (project_par) thread scaling, paper-scale layer");
+    let shape = LayerShape {
+        p: 512,
+        c: 512,
+        kh: 3,
+        kw: 3,
+    };
+    let w = randw(shape.p, shape.q(), 7);
+    for scheme in [Scheme::Pattern, Scheme::Column, Scheme::Irregular] {
+        for threads in [1usize, 2, 4] {
+            bench(
+                &format!("512x4608 {} par x{threads}", scheme.name()),
+                2,
+                10,
+                || {
+                    std::hint::black_box(
+                        project_par(scheme, &w, &shape, 1.0 / 8.0, threads)
+                            .unwrap(),
                     );
                 },
             );

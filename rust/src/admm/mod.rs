@@ -11,14 +11,24 @@
 //!   client's real training data; the no-privacy comparator of Tables I-III.
 //!
 //! The primal SGD steps run as PJRT artifacts; the proximal step is the
-//! exact Euclidean projection from [`crate::pruning`]; the dual update is
-//! plain host arithmetic. ρ follows the paper's ramp (1e-4 ×10 → 1e-1).
+//! exact Euclidean projection from [`crate::pruning`] (parallelized across
+//! `cfg.threads` workers via [`crate::pruning::project_par`]); the dual
+//! update is plain host arithmetic. ρ follows the paper's ramp
+//! (1e-4 ×10 → 1e-1).
+//!
+//! The PJRT drivers here solve layers strictly serially (Gauss-Seidel
+//! coupling + a non-`Sync` runtime); [`scheduler`] is the host-native
+//! **parallel** layer-wise engine that solves the independent per-layer
+//! subproblems concurrently with bit-identical results at any thread
+//! count.
+
+pub mod scheduler;
 
 use anyhow::{Context, Result};
 
 use crate::config::AdmmConfig;
 use crate::data::{designer_batch, SynthVision};
-use crate::pruning::{project, LayerShape, Projected, Scheme};
+use crate::pruning::{project_par, LayerShape, Projected, Scheme};
 use crate::rng::Pcg32;
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
@@ -66,6 +76,7 @@ fn init_layers(
     params: &[Tensor],
     scheme: Scheme,
     alpha: f64,
+    threads: usize,
 ) -> Result<Vec<LayerState>> {
     let model = rt.model(model_id)?;
     model
@@ -74,7 +85,7 @@ fn init_layers(
         .map(|(_, op)| {
             let shape = LayerShape::from_conv(op);
             let wg = gemm_view(&params[op.w], &shape);
-            let z = project(scheme, &wg, &shape, alpha)?.w;
+            let z = project_par(scheme, &wg, &shape, alpha, threads)?.w;
             let u = Tensor::zeros(&[shape.p, shape.q()]);
             Ok(LayerState {
                 wi: op.w,
@@ -105,11 +116,12 @@ fn proximal_dual(
     l: &mut LayerState,
     scheme: Scheme,
     alpha: f64,
+    threads: usize,
 ) -> Result<()> {
     let wg = gemm_view(&params[l.wi], &l.shape);
     let mut wu = wg.clone();
     wu.axpy(1.0, &l.u);
-    l.z = project(scheme, &wu, &l.shape, alpha)?.w;
+    l.z = project_par(scheme, &wu, &l.shape, alpha, threads)?.w;
     // U += W - Z
     let mut u = l.u.clone();
     u.axpy(1.0, &wg);
@@ -125,13 +137,14 @@ fn finalize(
     layers: &[LayerState],
     scheme: Scheme,
     alpha: f64,
+    threads: usize,
     trace: AdmmTrace,
 ) -> Result<PruneOutcome> {
     let mut masks = Vec::with_capacity(layers.len());
     let mut projections: Vec<Projected> = Vec::with_capacity(layers.len());
     for l in layers {
         let wg = gemm_view(&params[l.wi], &l.shape);
-        let pr = project(scheme, &wg, &l.shape, alpha)?;
+        let pr = project_par(scheme, &wg, &l.shape, alpha, threads)?;
         let shape4 = params[l.wi].shape().to_vec();
         params[l.wi] = pr.w.clone().reshape(&shape4)?;
         masks.push(pr.mask.clone());
@@ -192,7 +205,7 @@ pub fn prune_layerwise(
 
     let mut params = pretrained.to_vec();
     let mut layers =
-        init_layers(rt, model_id, &params, scheme, alpha)?;
+        init_layers(rt, model_id, &params, scheme, alpha, cfg.threads)?;
     let mut rng = Pcg32::seeded(cfg.seed);
     let lr = Tensor::scalar(cfg.lr_layer);
     let mut trace = AdmmTrace::default();
@@ -244,7 +257,7 @@ pub fn prune_layerwise(
                     loss = new_loss;
                 }
                 iter_loss += loss;
-                proximal_dual(&params, l, scheme, alpha)?;
+                proximal_dual(&params, l, scheme, alpha, cfg.threads)?;
                 if cfg.gauss_seidel && n + 1 < n_layers {
                     cur_acts = fwd_acts(rt, model_id, &params, &x)?;
                 }
@@ -255,7 +268,7 @@ pub fn prune_layerwise(
         }
         let _ = ri;
     }
-    finalize(params, &layers, scheme, alpha, trace)
+    finalize(params, &layers, scheme, alpha, cfg.threads, trace)
 }
 
 /// Per-layer activations of one forward pass (admm batch).
@@ -307,7 +320,7 @@ fn prune_whole_driver(
     let np = pretrained.len();
     let mut params = pretrained.to_vec();
     let mut layers =
-        init_layers(rt, model_id, &params, scheme, alpha)?;
+        init_layers(rt, model_id, &params, scheme, alpha, cfg.threads)?;
     let mut rng = Pcg32::seeded(cfg.seed);
     let lr = Tensor::scalar(cfg.lr);
     let pre_params = pretrained.to_vec();
@@ -345,14 +358,14 @@ fn prune_whole_driver(
                 debug_assert_eq!(params.len(), np);
             }
             for l in &mut layers {
-                proximal_dual(&params, l, scheme, alpha)?;
+                proximal_dual(&params, l, scheme, alpha, cfg.threads)?;
             }
             trace.primal_loss.push(loss);
             trace.residual.push(residual(&params, &layers));
             trace.per_iter_secs.push(t0.elapsed().as_secs_f64());
         }
     }
-    finalize(params, &layers, scheme, alpha, trace)
+    finalize(params, &layers, scheme, alpha, cfg.threads, trace)
 }
 
 /// Problem (2): whole-model distillation pruning on synthetic data.

@@ -1,0 +1,974 @@
+//! Parallel layer-wise ADMM pruning scheduler — the designer-side host
+//! engine (paper §IV, problem (3)).
+//!
+//! The paper's central observation is that privacy-preserving pruning
+//! decomposes into **independent per-layer subproblems** driven by
+//! synthetic data: layer n's primal solve needs only the frozen
+//! pre-trained model's activations F′(X) as inputs and targets, never
+//! another in-flight layer. This module exploits that independence:
+//!
+//! * each prunable conv becomes a [`PruneJob`] owning its own W/Z/U shard
+//!   and a [`Pcg32`] stream split deterministically from the job seed
+//!   ([`Pcg32::split_stream`]), so a job's result depends only on
+//!   (seed, layer) — never on which worker runs it;
+//! * every ADMM round generates **one** synthetic batch
+//!   ([`crate::data::designer_round_batch`]) and computes the pre-trained
+//!   activations once (sharded over images across the worker pool), shared
+//!   read-only by all jobs;
+//! * jobs are partitioned across scoped worker threads by a
+//!   costmodel-style per-layer estimate ([`layer_solve_cost`], ~P·Q·iters)
+//!   using deterministic LPT assignment ([`partition_lpt`]), mirroring the
+//!   cost-balanced filter blocks of `mobile/plan.rs`.
+//!
+//! **Determinism guarantee:** `PruneOutcome` (params, masks, comp_rate,
+//! loss/residual traces) is bit-identical at any thread count. Scheduling
+//! only decides *where* a job runs; all cross-layer reductions (mean loss,
+//! feasibility residual, compression rate) run on the main thread in layer
+//! order, and the parallel proximal projections are bit-equal to the
+//! serial ones (see [`crate::pruning::project_par`]).
+//!
+//! Relation to the PJRT drivers in [`crate::admm`]: `prune_layerwise`
+//! follows Algorithm 1's Gauss-Seidel refresh (layer n+1 sees layer n's
+//! fresh update within an iteration), which serializes layers. This engine
+//! solves the *anchored* (Jacobi-style) decomposition — inputs and targets
+//! both come from the frozen pre-trained model — which is exactly what
+//! makes the subproblems independent. Both land on the same constraint set
+//! via the same final hard projection. The `gauss_seidel` config flag is
+//! therefore ignored here.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{Act, AdmmConfig, ConvOp, ModelSpec, Op};
+use crate::data::designer_round_batch;
+use crate::mobile::engine::x_range;
+use crate::mobile::plan::same_pad_lo;
+use crate::pruning::{compression_rate, project, LayerShape, Scheme};
+use crate::rng::Pcg32;
+use crate::report::Table;
+use crate::tensor::Tensor;
+
+use super::{AdmmTrace, PruneOutcome};
+
+// ---------------------------------------------------------------------------
+// Configuration
+// ---------------------------------------------------------------------------
+
+/// Scheduler knobs on top of the shared ADMM schedule. The PJRT path reads
+/// its batch size from the artifact manifest; the host engine takes it
+/// explicitly so it runs without any artifacts.
+#[derive(Clone, Debug)]
+pub struct SchedulerCfg {
+    pub admm: AdmmConfig,
+    /// synthetic images per ADMM round
+    pub batch: usize,
+    /// worker threads solving layer subproblems (1 = serial)
+    pub threads: usize,
+}
+
+impl SchedulerCfg {
+    pub fn new(admm: AdmmConfig, batch: usize, threads: usize) -> Self {
+        SchedulerCfg {
+            admm,
+            batch: batch.max(1),
+            threads: threads.max(1),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Host convolution substrate (dense, pre-activation)
+// ---------------------------------------------------------------------------
+
+/// Geometry of one conv layer's host compute. Forward accumulation streams
+/// taps in the same order as the mobile executor's dense reference kernel,
+/// so host activations match the deployed numerics.
+#[derive(Clone, Copy, Debug)]
+struct ConvGeom {
+    a: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: i64,
+    in_hw: usize,
+    out_hw: usize,
+}
+
+impl ConvGeom {
+    fn from_op(cv: &ConvOp) -> Self {
+        let (out_hw, pad) = same_pad_lo(cv.in_hw, cv.kh, cv.stride);
+        debug_assert_eq!(out_hw, cv.out_hw);
+        ConvGeom {
+            a: cv.a,
+            c: cv.c,
+            kh: cv.kh,
+            kw: cv.kw,
+            stride: cv.stride,
+            pad,
+            in_hw: cv.in_hw,
+            out_hw: cv.out_hw,
+        }
+    }
+
+    /// Dense direct convolution: bias fill then per-tap accumulation;
+    /// pre-activation output.
+    fn fwd(&self, w: &[f32], bias: &[f32], x: &[f32], out: &mut [f32]) {
+        let ihw = self.in_hw as i64;
+        let plane = self.out_hw * self.out_hw;
+        let in_plane = self.in_hw * self.in_hw;
+        for f in 0..self.a {
+            let o = &mut out[f * plane..(f + 1) * plane];
+            o.fill(bias[f]);
+            for ch in 0..self.c {
+                let xin = &x[ch * in_plane..(ch + 1) * in_plane];
+                let wbase = (f * self.c + ch) * self.kh * self.kw;
+                for ky in 0..self.kh {
+                    let dy = ky as i64 - self.pad;
+                    for kx in 0..self.kw {
+                        let wv = w[wbase + ky * self.kw + kx];
+                        let dx = kx as i64 - self.pad;
+                        self.accumulate_tap(o, xin, wv, dy, dx, ihw);
+                    }
+                }
+            }
+        }
+    }
+
+    #[inline]
+    fn accumulate_tap(
+        &self,
+        o: &mut [f32],
+        xin: &[f32],
+        wv: f32,
+        dy: i64,
+        dx: i64,
+        ihw: i64,
+    ) {
+        for oy in 0..self.out_hw {
+            let iy = (oy * self.stride) as i64 + dy;
+            if iy < 0 || iy >= ihw {
+                continue;
+            }
+            let irow = iy as usize * self.in_hw;
+            let orow = oy * self.out_hw;
+            let (ox0, ox1) = x_range(self.out_hw, self.stride, dx, ihw);
+            let mut ix = (ox0 * self.stride) as i64 + dx;
+            for ox in ox0..ox1 {
+                o[orow + ox] += wv * xin[irow + ix as usize];
+                ix += self.stride as i64;
+            }
+        }
+    }
+
+    /// d/dW of the squared reconstruction error for one image (without the
+    /// factor 2, applied by the caller's normalization):
+    /// grad[f,ch,ky,kx] += Σ resid[f,oy,ox] · x[ch, oy·s+ky−pad, ox·s+kx−pad]
+    /// over valid output positions.
+    fn grad_w(&self, resid: &[f32], x: &[f32], grad: &mut [f32]) {
+        let ihw = self.in_hw as i64;
+        let plane = self.out_hw * self.out_hw;
+        let in_plane = self.in_hw * self.in_hw;
+        for f in 0..self.a {
+            let r = &resid[f * plane..(f + 1) * plane];
+            for ch in 0..self.c {
+                let xin = &x[ch * in_plane..(ch + 1) * in_plane];
+                let wbase = (f * self.c + ch) * self.kh * self.kw;
+                for ky in 0..self.kh {
+                    let dy = ky as i64 - self.pad;
+                    for kx in 0..self.kw {
+                        let dx = kx as i64 - self.pad;
+                        let mut acc = 0.0f32;
+                        for oy in 0..self.out_hw {
+                            let iy = (oy * self.stride) as i64 + dy;
+                            if iy < 0 || iy >= ihw {
+                                continue;
+                            }
+                            let irow = iy as usize * self.in_hw;
+                            let orow = oy * self.out_hw;
+                            let (ox0, ox1) =
+                                x_range(self.out_hw, self.stride, dx, ihw);
+                            let mut ix = (ox0 * self.stride) as i64 + dx;
+                            for ox in ox0..ox1 {
+                                acc += r[orow + ox] * xin[irow + ix as usize];
+                                ix += self.stride as i64;
+                            }
+                        }
+                        grad[wbase + ky * self.kw + kx] += acc;
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Host forward pass with activation capture
+// ---------------------------------------------------------------------------
+
+/// Per-image activations: for each prunable conv (network order), the
+/// input feature map and the **pre-activation** conv output — the Eqn. (8)
+/// distillation target (measuring the reconstruction distance before the
+/// nonlinearity keeps the per-layer primal an exact least-squares
+/// objective).
+struct ImgActs {
+    ins: Vec<Vec<f32>>,
+    tgts: Vec<Vec<f32>>,
+    logits: Vec<f32>,
+}
+
+fn fwd_image_acts(
+    spec: &ModelSpec,
+    params: &[Tensor],
+    img: &[f32],
+) -> Result<ImgActs> {
+    let mut ins = Vec::new();
+    let mut tgts = Vec::new();
+    let mut cur = img.to_vec();
+    let mut cur_c = spec
+        .ops
+        .iter()
+        .find_map(|op| match op {
+            Op::Conv(cv) => Some(cv.c),
+            _ => None,
+        })
+        .unwrap_or(3);
+    let mut cur_hw = spec.in_hw;
+    let mut saved: BTreeMap<&str, Vec<f32>> = BTreeMap::new();
+    let mut logits = Vec::new();
+    for op in &spec.ops {
+        match op {
+            Op::Conv(cv) => {
+                let geom = ConvGeom::from_op(cv);
+                let mut out = vec![0.0f32; cv.a * cv.out_hw * cv.out_hw];
+                geom.fwd(
+                    params[cv.w].data(),
+                    params[cv.b].data(),
+                    &cur,
+                    &mut out,
+                );
+                if cv.prunable {
+                    ins.push(cur.clone());
+                    tgts.push(out.clone());
+                }
+                if cv.act == Act::Relu {
+                    for v in &mut out {
+                        *v = v.max(0.0);
+                    }
+                }
+                cur = out;
+                cur_c = cv.a;
+                cur_hw = cv.out_hw;
+            }
+            Op::Pool => {
+                let oh = cur_hw / 2;
+                let mut out = vec![0.0f32; cur_c * oh * oh];
+                for ch in 0..cur_c {
+                    let p = &cur
+                        [ch * cur_hw * cur_hw..(ch + 1) * cur_hw * cur_hw];
+                    let ob = ch * oh * oh;
+                    for y in 0..oh {
+                        for xx in 0..oh {
+                            let i = 2 * y * cur_hw + 2 * xx;
+                            out[ob + y * oh + xx] = p[i]
+                                .max(p[i + 1])
+                                .max(p[i + cur_hw])
+                                .max(p[i + cur_hw + 1]);
+                        }
+                    }
+                }
+                cur = out;
+                cur_hw = oh;
+            }
+            Op::Save { tag } => {
+                saved.insert(tag.as_str(), cur.clone());
+            }
+            Op::Proj(cv) => {
+                let src = saved.get(cv.tag.as_str()).with_context(|| {
+                    format!("proj: no saved fmap {:?}", cv.tag)
+                })?;
+                let geom = ConvGeom::from_op(cv);
+                let mut out = vec![0.0f32; cv.a * cv.out_hw * cv.out_hw];
+                geom.fwd(
+                    params[cv.w].data(),
+                    params[cv.b].data(),
+                    src,
+                    &mut out,
+                );
+                if cv.act == Act::Relu {
+                    for v in &mut out {
+                        *v = v.max(0.0);
+                    }
+                }
+                saved.insert(cv.tag.as_str(), out);
+            }
+            Op::Add { tag } => {
+                let src = saved.get(tag.as_str()).with_context(|| {
+                    format!("add: no saved fmap {tag:?}")
+                })?;
+                if src.len() != cur.len() {
+                    bail!(
+                        "add {tag:?}: fmap len {} vs {}",
+                        src.len(),
+                        cur.len()
+                    );
+                }
+                for (a, b) in cur.iter_mut().zip(src) {
+                    *a += b;
+                }
+            }
+            Op::Relu => {
+                for v in &mut cur {
+                    *v = v.max(0.0);
+                }
+            }
+            Op::Gap => {
+                let plane = cur_hw * cur_hw;
+                let inv = 1.0 / plane as f32;
+                cur = (0..cur_c)
+                    .map(|ch| {
+                        cur[ch * plane..(ch + 1) * plane]
+                            .iter()
+                            .sum::<f32>()
+                            * inv
+                    })
+                    .collect();
+                cur_hw = 1;
+            }
+            Op::Fc { w, b, a, c } => {
+                let wt = &params[*w];
+                let bt = &params[*b];
+                logits = (0..*a)
+                    .map(|k| {
+                        bt.data()[k]
+                            + wt.row(k)
+                                .iter()
+                                .zip(&cur[..*c])
+                                .map(|(wv, v)| wv * v)
+                                .sum::<f32>()
+                    })
+                    .collect();
+            }
+        }
+    }
+    Ok(ImgActs { ins, tgts, logits })
+}
+
+/// Host forward pass of `spec` on one (C,H,W) image; returns the class
+/// logits. Matches the mobile executor's dense reference kernel numerics
+/// (same tap-streaming accumulation order) — asserted in the integration
+/// tests.
+pub fn fwd_logits_host(
+    spec: &ModelSpec,
+    params: &[Tensor],
+    img: &[f32],
+) -> Result<Vec<f32>> {
+    Ok(fwd_image_acts(spec, params, img)?.logits)
+}
+
+/// One round's pre-trained activations, shared read-only by all jobs.
+struct RoundActs {
+    batch: usize,
+    /// [layer] → per-image input fmaps, concatenated in image order
+    inputs: Vec<Vec<f32>>,
+    /// [layer] → per-image pre-activation conv outputs (targets)
+    targets: Vec<Vec<f32>>,
+}
+
+/// Compute the frozen pre-trained activations for a whole synthetic batch,
+/// sharding images across up to `threads` scoped workers. Per-image
+/// compute is independent, so the assembled result is bit-identical at any
+/// thread count.
+fn fwd_round_acts(
+    spec: &ModelSpec,
+    params: &[Tensor],
+    x: &Tensor,
+    threads: usize,
+) -> Result<RoundActs> {
+    let n = x.shape()[0];
+    let sl = x.len() / n.max(1);
+    let n_layers = spec.prunable_convs().len();
+    let imgs: Vec<&[f32]> =
+        (0..n).map(|i| &x.data()[i * sl..(i + 1) * sl]).collect();
+    let t = threads.max(1).min(n.max(1));
+    let per_chunk: Vec<Result<Vec<ImgActs>>> = if t <= 1 {
+        vec![imgs
+            .iter()
+            .map(|img| fwd_image_acts(spec, params, img))
+            .collect()]
+    } else {
+        let chunk = n.div_ceil(t);
+        let mut out = Vec::new();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = imgs
+                .chunks(chunk)
+                .map(|ch| {
+                    s.spawn(move || {
+                        ch.iter()
+                            .map(|img| fwd_image_acts(spec, params, img))
+                            .collect::<Result<Vec<_>>>()
+                    })
+                })
+                .collect();
+            out = handles
+                .into_iter()
+                .map(|h| h.join().expect("acts worker panicked"))
+                .collect();
+        });
+        out
+    };
+    let mut acts = RoundActs {
+        batch: n,
+        inputs: vec![Vec::new(); n_layers],
+        targets: vec![Vec::new(); n_layers],
+    };
+    for chunk in per_chunk {
+        for ia in chunk? {
+            if ia.ins.len() != n_layers {
+                bail!(
+                    "spec {:?}: captured {} prunable acts, expected {}",
+                    spec.id,
+                    ia.ins.len(),
+                    n_layers
+                );
+            }
+            for l in 0..n_layers {
+                acts.inputs[l].extend_from_slice(&ia.ins[l]);
+                acts.targets[l].extend_from_slice(&ia.tgts[l]);
+            }
+        }
+    }
+    Ok(acts)
+}
+
+// ---------------------------------------------------------------------------
+// Jobs and scheduling
+// ---------------------------------------------------------------------------
+
+/// One independent per-layer ADMM subproblem: the layer's W/Z/U shard plus
+/// the geometry to run its primal SGD steps against the shared frozen
+/// activations. Jobs never touch each other's state; the dedicated rng
+/// stream keeps their stochastic subsampling scheduling-independent.
+pub struct PruneJob {
+    /// index among the spec's prunable convs (network order)
+    pub layer: usize,
+    /// modeled solve cost (the LPT scheduling weight)
+    pub cost: u64,
+    wi: usize,
+    bi: usize,
+    shape: LayerShape,
+    geom: ConvGeom,
+    w: Tensor,
+    b: Tensor,
+    z: Tensor,
+    u: Tensor,
+    rng: Pcg32,
+    secs: f64,
+    last_loss: f32,
+    losses: Vec<f32>,
+}
+
+/// Costmodel-style per-layer solve estimate: the primal tap streams
+/// dominate (P·Q MACs per output position, forward + gradient, per sampled
+/// image per step); the trailing term covers the per-round projection.
+pub fn layer_solve_cost(
+    shape: &LayerShape,
+    out_hw: usize,
+    cfg: &SchedulerCfg,
+) -> u64 {
+    let pq = (shape.p * shape.q()) as u64;
+    let plane = (out_hw * out_hw) as u64;
+    let sub = (cfg.batch / 2).max(1) as u64;
+    let steps = cfg.admm.primal_steps.max(1) as u64;
+    pq * plane * sub * steps * 2 + pq * 8
+}
+
+/// Longest-processing-time assignment of job indices to at most `workers`
+/// bins: jobs in descending cost order each go to the least-loaded bin.
+/// Deterministic (ties break toward the lower index), and it only decides
+/// *placement* — job results never depend on it.
+pub fn partition_lpt(costs: &[u64], workers: usize) -> Vec<Vec<usize>> {
+    let w = workers.max(1).min(costs.len().max(1));
+    let mut order: Vec<usize> = (0..costs.len()).collect();
+    order.sort_by(|&a, &b| costs[b].cmp(&costs[a]).then(a.cmp(&b)));
+    let mut bins: Vec<Vec<usize>> = vec![Vec::new(); w];
+    let mut load = vec![0u64; w];
+    for j in order {
+        let k = (0..w).min_by_key(|&k| (load[k], k)).expect("w >= 1");
+        bins[k].push(j);
+        load[k] += costs[j];
+    }
+    bins
+}
+
+/// One ADMM round of one job: `primal_steps` SGD steps on the Eqn. (8)
+/// objective (stochastic image subsample from the job's own stream),
+/// then the proximal projection Z ← Π(W+U) and dual update U ← U + W − Z.
+fn solve_round(
+    job: &mut PruneJob,
+    acts: &RoundActs,
+    scheme: Scheme,
+    alpha: f64,
+    rho: f32,
+    cfg: &AdmmConfig,
+) -> Result<()> {
+    let t0 = Instant::now();
+    let g = job.geom;
+    let plane = g.out_hw * g.out_hw;
+    let in_sl = g.c * g.in_hw * g.in_hw;
+    let out_sl = g.a * plane;
+    let ins = &acts.inputs[job.layer];
+    let tgts = &acts.targets[job.layer];
+    let sub = (acts.batch / 2).max(1);
+    let pq = job.w.len();
+    let mut pre = vec![0.0f32; out_sl];
+    let mut grad_w = vec![0.0f32; pq];
+    let mut grad_b = vec![0.0f32; g.a];
+    for _step in 0..cfg.primal_steps {
+        let picks: Vec<usize> =
+            (0..sub).map(|_| job.rng.below(acts.batch)).collect();
+        grad_w.fill(0.0);
+        grad_b.fill(0.0);
+        let mut loss = 0.0f64;
+        for &i in &picks {
+            let x = &ins[i * in_sl..(i + 1) * in_sl];
+            let tgt = &tgts[i * out_sl..(i + 1) * out_sl];
+            g.fwd(job.w.data(), job.b.data(), x, &mut pre);
+            for (pv, tv) in pre.iter_mut().zip(tgt) {
+                *pv -= tv;
+                loss += (*pv as f64) * (*pv as f64);
+            }
+            g.grad_w(&pre, x, &mut grad_w);
+            for (f, gb) in grad_b.iter_mut().enumerate() {
+                let mut s = 0.0f32;
+                for v in &pre[f * plane..(f + 1) * plane] {
+                    s += v;
+                }
+                *gb += s;
+            }
+        }
+        let step_loss =
+            (loss / (picks.len() * out_sl).max(1) as f64) as f32;
+        if !step_loss.is_finite() {
+            // divergence guard (mirrors the PJRT path): reject the step,
+            // keep the last finite loss, and leave the layer to the
+            // proximal/dual machinery this round
+            break;
+        }
+        job.last_loss = step_loss;
+        // feature-map-normalized data term + the ρ(W − Z + U) penalty
+        let norm = 2.0 / (picks.len() * plane) as f32;
+        let lr = cfg.lr_layer;
+        let wd = job.w.data();
+        let zd = job.z.data();
+        let ud = job.u.data();
+        let mut new_w = Vec::with_capacity(pq);
+        for i in 0..pq {
+            let gv = norm * grad_w[i] + rho * (wd[i] - zd[i] + ud[i]);
+            new_w.push(wd[i] - lr * gv);
+        }
+        let new_b: Vec<f32> = job
+            .b
+            .data()
+            .iter()
+            .zip(&grad_b)
+            .map(|(bv, gb)| bv - lr * norm * gb)
+            .collect();
+        if new_w.iter().any(|v| !v.is_finite())
+            || new_b.iter().any(|v| !v.is_finite())
+        {
+            break;
+        }
+        job.w.data_mut().copy_from_slice(&new_w);
+        job.b.data_mut().copy_from_slice(&new_b);
+    }
+    // proximal: Z ← Π(W + U); dual: U ← U + W − Z. Serial projection — the
+    // layer jobs themselves carry the parallelism here.
+    let mut wu = job.w.clone();
+    wu.axpy(1.0, &job.u);
+    job.z = project(scheme, &wu, &job.shape, alpha)?.w;
+    let mut u = job.u.clone();
+    u.axpy(1.0, &job.w);
+    u.axpy(-1.0, &job.z);
+    job.u = u;
+    job.losses.push(job.last_loss);
+    job.secs += t0.elapsed().as_secs_f64();
+    Ok(())
+}
+
+/// Run one round of every job under the precomputed LPT assignment.
+fn run_round(
+    jobs: &mut [PruneJob],
+    assign: &[Vec<usize>],
+    acts: &RoundActs,
+    scheme: Scheme,
+    alpha: f64,
+    rho: f32,
+    cfg: &AdmmConfig,
+) -> Result<()> {
+    if assign.len() <= 1 {
+        for j in jobs.iter_mut() {
+            solve_round(j, acts, scheme, alpha, rho, cfg)?;
+        }
+        return Ok(());
+    }
+    let mut owner = vec![0usize; jobs.len()];
+    for (wi, bin) in assign.iter().enumerate() {
+        for &j in bin {
+            owner[j] = wi;
+        }
+    }
+    let mut slots: Vec<Vec<&mut PruneJob>> =
+        assign.iter().map(|b| Vec::with_capacity(b.len())).collect();
+    for (ji, job) in jobs.iter_mut().enumerate() {
+        slots[owner[ji]].push(job);
+    }
+    let mut results: Vec<Result<()>> = Vec::new();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = slots
+            .into_iter()
+            .map(|mut bin| {
+                s.spawn(move || -> Result<()> {
+                    for j in bin.iter_mut() {
+                        solve_round(j, acts, scheme, alpha, rho, cfg)?;
+                    }
+                    Ok(())
+                })
+            })
+            .collect();
+        results = handles
+            .into_iter()
+            .map(|h| h.join().expect("prune worker panicked"))
+            .collect();
+    });
+    for r in results {
+        r?;
+    }
+    Ok(())
+}
+
+fn residual_of(jobs: &[PruneJob]) -> f64 {
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for j in jobs {
+        den += j.w.sq_frobenius();
+        for (w, z) in j.w.data().iter().zip(j.z.data()) {
+            num += ((w - z) as f64).powi(2);
+        }
+    }
+    (num / den.max(1e-12)).sqrt()
+}
+
+// ---------------------------------------------------------------------------
+// Trace / report plumbing
+// ---------------------------------------------------------------------------
+
+/// Per-layer solve accounting of one scheduler run.
+#[derive(Clone, Debug)]
+pub struct LayerTiming {
+    pub layer: usize,
+    pub p: usize,
+    pub q: usize,
+    pub cost: u64,
+    pub secs: f64,
+    pub final_loss: f32,
+    /// per-round primal loss curve of this layer's subproblem
+    pub losses: Vec<f32>,
+}
+
+/// Scheduler-level trace: wall time of the shared forward passes plus the
+/// per-layer solve timings (the load-balance evidence).
+#[derive(Clone, Debug, Default)]
+pub struct SchedTrace {
+    pub rounds: usize,
+    pub threads: usize,
+    pub fwd_secs: f64,
+    pub per_layer: Vec<LayerTiming>,
+}
+
+impl SchedTrace {
+    /// Render the per-layer timings as a report table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "per-layer ADMM solve time ({} rounds, {} threads)",
+                self.rounds, self.threads
+            ),
+            &["Layer", "P", "Q", "Cost share", "Solve secs", "Final loss"],
+        );
+        let total: u64 = self.per_layer.iter().map(|l| l.cost).sum();
+        for l in &self.per_layer {
+            t.row(&[
+                format!("{}", l.layer),
+                format!("{}", l.p),
+                format!("{}", l.q),
+                format!(
+                    "{:.1}%",
+                    100.0 * l.cost as f64 / total.max(1) as f64
+                ),
+                format!("{:.3}", l.secs),
+                format!("{:.4}", l.final_loss),
+            ]);
+        }
+        t
+    }
+}
+
+/// [`PruneOutcome`] plus the scheduler trace.
+pub struct ParPruneOutcome {
+    pub outcome: PruneOutcome,
+    pub sched: SchedTrace,
+}
+
+// ---------------------------------------------------------------------------
+// Entry point
+// ---------------------------------------------------------------------------
+
+/// Parallel layer-wise privacy-preserving pruning on the host engine (no
+/// PJRT, no artifacts): solves every prunable conv's ADMM subproblem
+/// concurrently across `cfg.threads` workers. Bit-identical results at any
+/// thread count (see module docs).
+pub fn prune_layerwise_par(
+    spec: &ModelSpec,
+    pretrained: &[Tensor],
+    scheme: Scheme,
+    alpha: f64,
+    cfg: &SchedulerCfg,
+) -> Result<ParPruneOutcome> {
+    let convs = spec.prunable_convs();
+    if convs.is_empty() {
+        bail!("model {:?} has no prunable conv layers", spec.id);
+    }
+    if cfg.batch == 0 {
+        bail!("scheduler batch must be >= 1");
+    }
+    let threads = cfg.threads.max(1);
+
+    let mut jobs = convs
+        .iter()
+        .enumerate()
+        .map(|(n, (_, op))| {
+            let shape = LayerShape::from_conv(op);
+            let wg = pretrained[op.w]
+                .clone()
+                .reshape(&[shape.p, shape.q()])?;
+            let z = project(scheme, &wg, &shape, alpha)?.w;
+            let u = Tensor::zeros(&[shape.p, shape.q()]);
+            Ok(PruneJob {
+                layer: n,
+                cost: layer_solve_cost(&shape, op.out_hw, cfg),
+                wi: op.w,
+                bi: op.b,
+                shape,
+                geom: ConvGeom::from_op(op),
+                w: wg,
+                b: pretrained[op.b].clone(),
+                z,
+                u,
+                rng: Pcg32::split_stream(cfg.admm.seed, n as u64),
+                secs: 0.0,
+                last_loss: 0.0,
+                losses: Vec::new(),
+            })
+        })
+        .collect::<Result<Vec<PruneJob>>>()?;
+
+    let costs: Vec<u64> = jobs.iter().map(|j| j.cost).collect();
+    let assign = partition_lpt(&costs, threads);
+
+    let mut trace = AdmmTrace::default();
+    let mut sched = SchedTrace {
+        rounds: 0,
+        threads,
+        fwd_secs: 0.0,
+        per_layer: Vec::new(),
+    };
+    let mut round = 0u64;
+    for &rho in &cfg.admm.rhos {
+        for _ in 0..cfg.admm.iters_per_rho {
+            let t0 = Instant::now();
+            // one batch per round, shared by every layer job
+            let x = designer_round_batch(
+                cfg.admm.seed,
+                round,
+                cfg.batch,
+                spec.in_hw,
+            );
+            let tf = Instant::now();
+            let acts = fwd_round_acts(spec, pretrained, &x, threads)?;
+            sched.fwd_secs += tf.elapsed().as_secs_f64();
+            run_round(
+                &mut jobs,
+                &assign,
+                &acts,
+                scheme,
+                alpha,
+                rho,
+                &cfg.admm,
+            )?;
+            // cross-layer reductions on the main thread, in layer order
+            trace.primal_loss.push(
+                jobs.iter().map(|j| j.last_loss).sum::<f32>()
+                    / jobs.len() as f32,
+            );
+            trace.residual.push(residual_of(&jobs));
+            trace.per_iter_secs.push(t0.elapsed().as_secs_f64());
+            round += 1;
+            sched.rounds += 1;
+        }
+    }
+
+    // final hard projection + reassembly of the full parameter set
+    let mut params = pretrained.to_vec();
+    let mut masks = Vec::with_capacity(jobs.len());
+    let mut projections = Vec::with_capacity(jobs.len());
+    for j in &jobs {
+        let pr = project(scheme, &j.w, &j.shape, alpha)?;
+        let s4 = pretrained[j.wi].shape().to_vec();
+        params[j.wi] = pr.w.clone().reshape(&s4)?;
+        params[j.bi] = j.b.clone();
+        masks.push(pr.mask.clone());
+        projections.push(pr);
+        sched.per_layer.push(LayerTiming {
+            layer: j.layer,
+            p: j.shape.p,
+            q: j.shape.q(),
+            cost: j.cost,
+            secs: j.secs,
+            final_loss: j.last_loss,
+            losses: j.losses.clone(),
+        });
+    }
+    let comp_rate = compression_rate(&projections);
+    Ok(ParPruneOutcome {
+        outcome: PruneOutcome {
+            params,
+            masks,
+            comp_rate,
+            trace,
+        },
+        sched,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn lpt_partition_covers_each_job_once_and_balances() {
+        let costs = [10u64, 9, 8, 1, 1, 1, 7, 2];
+        let bins = partition_lpt(&costs, 3);
+        assert_eq!(bins.len(), 3);
+        let mut seen: Vec<usize> =
+            bins.iter().flatten().copied().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..costs.len()).collect::<Vec<_>>());
+        let loads: Vec<u64> = bins
+            .iter()
+            .map(|b| b.iter().map(|&j| costs[j]).sum())
+            .collect();
+        let (lo, hi) = (
+            *loads.iter().min().unwrap(),
+            *loads.iter().max().unwrap(),
+        );
+        // LPT keeps the spread below the largest single job
+        assert!(hi - lo <= 10, "loads {loads:?}");
+        // deterministic
+        assert_eq!(bins, partition_lpt(&costs, 3));
+    }
+
+    #[test]
+    fn lpt_caps_workers_at_job_count() {
+        let bins = partition_lpt(&[5, 3], 8);
+        assert_eq!(bins.len(), 2);
+        assert!(bins.iter().all(|b| b.len() == 1));
+    }
+
+    #[test]
+    fn layer_cost_orders_by_work() {
+        let cfg = SchedulerCfg::new(
+            crate::config::AdmmConfig::preset(crate::config::Preset::Smoke),
+            8,
+            1,
+        );
+        let small = LayerShape {
+            p: 4,
+            c: 3,
+            kh: 3,
+            kw: 3,
+        };
+        let big = LayerShape {
+            p: 16,
+            c: 8,
+            kh: 3,
+            kw: 3,
+        };
+        assert!(
+            layer_solve_cost(&big, 8, &cfg)
+                > layer_solve_cost(&small, 8, &cfg)
+        );
+        // larger fmaps cost more at equal PQ
+        assert!(
+            layer_solve_cost(&small, 16, &cfg)
+                > layer_solve_cost(&small, 4, &cfg)
+        );
+    }
+
+    /// The analytic conv gradient matches central finite differences of
+    /// the squared reconstruction error.
+    #[test]
+    fn conv_grad_matches_finite_differences() {
+        let g = ConvGeom {
+            a: 2,
+            c: 2,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+            in_hw: 5,
+            out_hw: 5,
+        };
+        let mut rng = Pcg32::seeded(31);
+        let nw = g.a * g.c * g.kh * g.kw;
+        let w: Vec<f32> = (0..nw).map(|_| rng.normal() * 0.3).collect();
+        let bias: Vec<f32> = (0..g.a).map(|_| rng.normal() * 0.1).collect();
+        let x: Vec<f32> =
+            (0..g.c * g.in_hw * g.in_hw).map(|_| rng.normal()).collect();
+        let tgt: Vec<f32> = (0..g.a * g.out_hw * g.out_hw)
+            .map(|_| rng.normal())
+            .collect();
+        let loss = |w: &[f32]| -> f64 {
+            let mut out = vec![0.0f32; g.a * g.out_hw * g.out_hw];
+            g.fwd(w, &bias, &x, &mut out);
+            out.iter()
+                .zip(&tgt)
+                .map(|(o, t)| ((o - t) as f64).powi(2))
+                .sum()
+        };
+        // analytic: grad of Σ resid² is 2·Σ resid·x
+        let mut out = vec![0.0f32; g.a * g.out_hw * g.out_hw];
+        g.fwd(&w, &bias, &x, &mut out);
+        for (o, t) in out.iter_mut().zip(&tgt) {
+            *o -= t;
+        }
+        let mut ana = vec![0.0f32; nw];
+        g.grad_w(&out, &x, &mut ana);
+        let eps = 1e-2f32;
+        for i in (0..nw).step_by(7) {
+            let mut wp = w.clone();
+            wp[i] += eps;
+            let mut wm = w.clone();
+            wm[i] -= eps;
+            let num = (loss(&wp) - loss(&wm)) / (2.0 * eps as f64);
+            let a = 2.0 * ana[i] as f64;
+            assert!(
+                (num - a).abs() <= 1e-2 * a.abs().max(1.0),
+                "tap {i}: numeric {num} vs analytic {a}"
+            );
+        }
+    }
+}

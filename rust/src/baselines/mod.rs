@@ -10,7 +10,7 @@
 //!   geometric sparsity ramp, retraining between stages (uses the client's
 //!   data, so it is *not* privacy-preserving — matching the paper's row).
 
-use anyhow::Result;
+use anyhow::{bail, Context, Result};
 
 use crate::config::TrainConfig;
 use crate::data::SynthVision;
@@ -78,6 +78,9 @@ pub fn iterative_magnitude(
     test: &SynthVision,
     retrain_cfg: &TrainConfig,
 ) -> Result<BaselineOutcome> {
+    if stages == 0 {
+        bail!("iterative magnitude pruning needs stages >= 1");
+    }
     let mut params = pretrained.to_vec();
     let mut outcome = None;
     for t in 1..=stages {
@@ -96,5 +99,5 @@ pub fn iterative_magnitude(
             comp_rate: o.comp_rate,
         });
     }
-    Ok(outcome.expect("stages >= 1"))
+    outcome.context("iterative magnitude pruning produced no outcome")
 }

@@ -293,6 +293,10 @@ pub struct AdmmConfig {
     /// paper's Algorithm 1) vs once per iteration (Jacobi ablation)
     pub gauss_seidel: bool,
     pub seed: u64,
+    /// worker threads for the proximal projections (and, in the host
+    /// scheduler, for layer subproblems); 1 = serial. Pruning results are
+    /// bit-identical at any value (see `admm::scheduler`).
+    pub threads: usize,
 }
 
 impl AdmmConfig {
@@ -314,7 +318,14 @@ impl AdmmConfig {
             lr_layer: 3e-4,
             gauss_seidel: true,
             seed: 0xADA17,
+            threads: 1,
         }
+    }
+
+    /// Builder-style thread override (clamped to ≥ 1).
+    pub fn with_threads(mut self, n: usize) -> Self {
+        self.threads = n.max(1);
+        self
     }
 }
 
@@ -388,6 +399,8 @@ mod tests {
         assert_eq!(c.rhos, vec![1e-3, 1e-2, 1e-1, 3e-1]);
         assert!(c.gauss_seidel);
         assert!(c.lr_layer < c.lr);
+        assert_eq!(c.threads, 1);
+        assert_eq!(c.with_threads(0).threads, 1);
     }
 
     #[test]

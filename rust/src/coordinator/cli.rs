@@ -127,16 +127,20 @@ privacy-preserving DNN pruning + mobile acceleration (Zhan et al. 2020)
 commands:
   pretrain  --model <id> [--preset smoke|quick|full]
   prune     --model <id> [--scheme irregular|filter|column|pattern]
-            [--rate N] [--method privacy|whole|admm|uniform|oneshot|iterative]
+            [--rate N] [--threads N]
+            [--method privacy|whole|admm|uniform|oneshot|iterative]
   retrain   --model <id> --scheme .. --rate ..      full prune+retrain row
   eval      --model <id>                            pre-trained accuracy
   deploy    --model <id> [--rate N] [--threads N]   compile plan + executor report
-  exp       <table1|table2|table3|table4|table5|fig3|all> [--preset ..]
+  exp       <table1|table2|table3|table4|table5|fig3|sweep|all> [--preset ..]
+            (sweep = host-engine parallel prune sweep; no artifacts needed)
   pipeline  --model <id> [--scheme ..] [--rate N]   end-to-end demo
   models                                            list models in manifest
   help
 common flags: --artifacts <dir> (default ./artifacts), --preset (default quick),
-              --threads <n> (executor worker threads, default min(cores, 4))
+              --threads <n> (worker threads for pruning + the executor,
+                             default min(cores, 4); results are identical
+                             at any thread count)
 ";
 
 pub fn main() -> Result<()> {
@@ -292,6 +296,15 @@ pub fn main() -> Result<()> {
                 .first()
                 .map(|s| s.as_str())
                 .unwrap_or("all");
+            if which == "sweep" {
+                // host-engine parallel sweep: needs no artifacts/PJRT
+                let (table, timing) = experiments::sweep_host(
+                    args.threads()?,
+                    args.preset()?,
+                )?;
+                println!("{}\n{}", table.render(), timing.render());
+                return Ok(());
+            }
             let ctx = args.ctx()?;
             match which {
                 "table1" => println!("{}", experiments::table1(&ctx)?.render()),

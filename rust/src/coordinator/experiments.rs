@@ -11,16 +11,19 @@
 
 use anyhow::Result;
 
+use crate::config::{AdmmConfig, Preset};
 use crate::mobile::costmodel::{
     self, latency_ms, AnalyticModel, Device, ALL_ENGINES, GALAXY_S10,
 };
 use crate::mobile::engine::{Executor, Fmap, KernelKind};
 use crate::mobile::ir::ModelIR;
 use crate::mobile::plan::PassManager;
+use crate::mobile::synth::vgg_style;
 use crate::pruning::Scheme;
 use crate::report::{loss_cell, pct, rate, Table};
 use crate::rng::Pcg32;
 
+use super::service::{PruneConfig, PruneService};
 use super::{Ctx, Method, RowResult};
 
 fn acc_row(t: &mut Table, r: &RowResult) {
@@ -329,6 +332,55 @@ pub fn fig3(ctx: &Ctx) -> Result<(Table, Table)> {
     }
     est.save(ctx.runs.join("tables"), "fig3_estimated")?;
     Ok((meas, est))
+}
+
+/// `repro exp sweep` — the Tables I–IV prune-stage grid as **one parallel
+/// sweep** through the host scheduler (no artifacts or PJRT required): a
+/// synthetic VGG spec is pruned under every (scheme, rate) configuration
+/// concurrently, and the per-layer solve timings of one fully-parallel run
+/// show the scheduler's load balance. Returns (sweep table, per-layer
+/// timing table); both are saved under runs/tables/.
+pub fn sweep_host(threads: usize, preset: Preset) -> Result<(Table, Table)> {
+    let (spec, params) = vgg_style("vgg_host", 16, 10, &[8, 16], 0xBA5E);
+    let mut admm = AdmmConfig::preset(preset);
+    // the host primal is feature-map normalized (admm::scheduler), so it
+    // takes a generic SGD-scale step size
+    admm.lr_layer = 5e-3;
+    let svc = PruneService::new(threads, 8);
+    let configs = [
+        PruneConfig {
+            scheme: Scheme::Irregular,
+            rate: 16.0,
+        },
+        PruneConfig {
+            scheme: Scheme::Irregular,
+            rate: 8.0,
+        },
+        PruneConfig {
+            scheme: Scheme::Column,
+            rate: 6.0,
+        },
+        PruneConfig {
+            scheme: Scheme::Filter,
+            rate: 2.3,
+        },
+        PruneConfig {
+            scheme: Scheme::Pattern,
+            rate: 8.0,
+        },
+        PruneConfig {
+            scheme: Scheme::Pattern,
+            rate: 16.0,
+        },
+    ];
+    let rows = svc.sweep(&spec, &params, &admm, &configs)?;
+    let table = svc.sweep_table(&spec.id, &rows);
+    table.save("runs/tables", "sweep_host")?;
+    // one latency-mode run to surface the per-layer timing plumbing
+    let one = svc.prune_one(&spec, &params, &admm, configs[4])?;
+    let timing = one.sched.table();
+    timing.save("runs/tables", "sweep_host_layers")?;
+    Ok((table, timing))
 }
 
 /// Run every experiment and print the tables.

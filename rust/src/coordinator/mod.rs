@@ -7,6 +7,7 @@
 
 pub mod cli;
 pub mod experiments;
+pub mod service;
 
 use std::path::PathBuf;
 
@@ -119,7 +120,8 @@ pub struct Ctx {
     pub preset: Preset,
     pub runs: PathBuf,
     pub verbose: bool,
-    /// worker threads for mobile execution plans (deploy / fig3)
+    /// worker threads for mobile execution plans (deploy / fig3) and for
+    /// the prune stage's proximal projections (`--threads` on the CLI)
     pub threads: usize,
 }
 
@@ -209,7 +211,8 @@ impl Ctx {
     ) -> Result<PruneStage> {
         let alpha = 1.0 / rate;
         let (pre, _) = self.pretrained(model_id)?;
-        let cfg = AdmmConfig::preset(self.preset);
+        let cfg =
+            AdmmConfig::preset(self.preset).with_threads(self.threads);
         let t = crate::util::Stopwatch::start();
         let (params, masks, comp, iters) = match method {
             Method::Privacy => {

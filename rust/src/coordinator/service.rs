@@ -1,0 +1,185 @@
+//! PruneService: the designer-side sweep entry point over the parallel
+//! pruning scheduler.
+//!
+//! The paper's Tables I–IV are grids of (scheme, compression-rate)
+//! configurations whose prune stages are mutually independent — each is a
+//! separate ADMM solve against the same pre-trained model. The service
+//! runs them as **one parallel sweep**: configurations shard across the
+//! service's worker pool, each solved by a single-threaded scheduler so
+//! config-level and layer-level parallelism do not multiply
+//! (throughput mode). [`PruneService::prune_one`] is the complementary
+//! latency mode: one configuration with full layer-level parallelism.
+//!
+//! Everything here is host-native (no PJRT, no artifacts): it accepts any
+//! [`ModelSpec`] + parameter set — a manifest model's pre-trained weights
+//! when a runtime exists, or a `mobile::synth` spec on a bare machine.
+
+use anyhow::Result;
+
+use crate::admm::scheduler::{
+    prune_layerwise_par, ParPruneOutcome, SchedulerCfg,
+};
+use crate::config::{AdmmConfig, ModelSpec};
+use crate::pruning::Scheme;
+use crate::report::{rate, secs, Table};
+use crate::tensor::Tensor;
+
+/// One (scheme, target-rate) configuration of a sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct PruneConfig {
+    pub scheme: Scheme,
+    /// target CONV compression rate (α = 1/rate)
+    pub rate: f64,
+}
+
+/// Result row of one sweep configuration.
+#[derive(Clone, Debug)]
+pub struct SweepRow {
+    pub scheme: Scheme,
+    pub rate: f64,
+    pub comp_rate: f64,
+    pub secs: f64,
+    /// final ADMM feasibility residual ‖W − Z‖_F / ‖W‖_F
+    pub final_residual: f64,
+    /// the mask function shipped to the client
+    pub masks: Vec<Tensor>,
+}
+
+/// Parallel pruning sweep executor.
+pub struct PruneService {
+    /// total worker threads shared by a sweep (or used whole by
+    /// [`PruneService::prune_one`])
+    pub threads: usize,
+    /// synthetic images per ADMM round
+    pub batch: usize,
+}
+
+impl PruneService {
+    pub fn new(threads: usize, batch: usize) -> Self {
+        PruneService {
+            threads: threads.max(1),
+            batch: batch.max(1),
+        }
+    }
+
+    /// Solve one configuration with full layer-level parallelism.
+    pub fn prune_one(
+        &self,
+        spec: &ModelSpec,
+        pretrained: &[Tensor],
+        admm: &AdmmConfig,
+        config: PruneConfig,
+    ) -> Result<ParPruneOutcome> {
+        let cfg = SchedulerCfg::new(admm.clone(), self.batch, self.threads);
+        prune_layerwise_par(
+            spec,
+            pretrained,
+            config.scheme,
+            1.0 / config.rate,
+            &cfg,
+        )
+    }
+
+    /// Solve many configurations concurrently. Each configuration runs a
+    /// single-threaded scheduler, so results are identical to solving it
+    /// alone — the sweep's row list does not depend on `threads`.
+    pub fn sweep(
+        &self,
+        spec: &ModelSpec,
+        pretrained: &[Tensor],
+        admm: &AdmmConfig,
+        configs: &[PruneConfig],
+    ) -> Result<Vec<SweepRow>> {
+        let inner = SchedulerCfg::new(admm.clone(), self.batch, 1);
+        let t = self.threads.min(configs.len().max(1));
+        if t <= 1 {
+            return configs
+                .iter()
+                .map(|&c| solve_row(spec, pretrained, &inner, c))
+                .collect();
+        }
+        let chunk = configs.len().div_ceil(t);
+        let inner_ref = &inner;
+        let mut per_chunk: Vec<Result<Vec<SweepRow>>> = Vec::new();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = configs
+                .chunks(chunk)
+                .map(|cs| {
+                    s.spawn(move || {
+                        cs.iter()
+                            .map(|&c| {
+                                solve_row(spec, pretrained, inner_ref, c)
+                            })
+                            .collect::<Result<Vec<_>>>()
+                    })
+                })
+                .collect();
+            per_chunk = handles
+                .into_iter()
+                .map(|h| h.join().expect("sweep worker panicked"))
+                .collect();
+        });
+        let mut rows = Vec::with_capacity(configs.len());
+        for chunk in per_chunk {
+            rows.extend(chunk?);
+        }
+        Ok(rows)
+    }
+
+    /// Render sweep rows as a paper-style table.
+    pub fn sweep_table(&self, model: &str, rows: &[SweepRow]) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "parallel prune sweep on {model} ({} threads)",
+                self.threads
+            ),
+            &[
+                "Pruning Scheme",
+                "Target Rate",
+                "CONV Comp. Rate",
+                "Residual",
+                "Prune Time",
+            ],
+        );
+        for r in rows {
+            t.row(&[
+                r.scheme.name().into(),
+                rate(r.rate),
+                rate(r.comp_rate),
+                format!("{:.4}", r.final_residual),
+                secs(r.secs),
+            ]);
+        }
+        t
+    }
+}
+
+fn solve_row(
+    spec: &ModelSpec,
+    pretrained: &[Tensor],
+    cfg: &SchedulerCfg,
+    c: PruneConfig,
+) -> Result<SweepRow> {
+    let t = crate::util::Stopwatch::start();
+    let out = prune_layerwise_par(
+        spec,
+        pretrained,
+        c.scheme,
+        1.0 / c.rate,
+        cfg,
+    )?;
+    Ok(SweepRow {
+        scheme: c.scheme,
+        rate: c.rate,
+        comp_rate: out.outcome.comp_rate,
+        secs: t.secs(),
+        final_residual: out
+            .outcome
+            .trace
+            .residual
+            .last()
+            .copied()
+            .unwrap_or(0.0),
+        masks: out.outcome.masks,
+    })
+}

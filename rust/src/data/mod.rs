@@ -152,6 +152,22 @@ impl SynthVision {
     }
 }
 
+/// One ADMM round's synthetic batch, addressed by (seed, round) instead of
+/// by generator state: the pruning scheduler generates each round's batch
+/// exactly once and shares it read-only across every layer job, so the
+/// data a round sees is a pure function of the experiment seed and the
+/// round index — independent of thread count, scheduling order, or how
+/// many layers the model has.
+pub fn designer_round_batch(
+    seed: u64,
+    round: u64,
+    bsz: usize,
+    hw: usize,
+) -> Tensor {
+    let mut rng = Pcg32::new(seed ^ 0xBA7C_4000, round.wrapping_add(1));
+    designer_batch(&mut rng, bsz, hw)
+}
+
 /// The paper's privacy-preserving synthetic batch: every pixel i.i.d.
 /// discrete Uniform{0..255}/255 — no prior knowledge of the client data.
 pub fn designer_batch(rng: &mut Pcg32, bsz: usize, hw: usize) -> Tensor {
@@ -269,6 +285,17 @@ mod tests {
             y.data().iter().filter(|&&v| v == 1.0).count(),
             3
         );
+    }
+
+    #[test]
+    fn round_batches_are_stable_per_round_and_differ_across_rounds() {
+        let a = designer_round_batch(9, 0, 4, 8);
+        let b = designer_round_batch(9, 0, 4, 8);
+        assert_eq!(a, b);
+        let c = designer_round_batch(9, 1, 4, 8);
+        assert_ne!(a, c);
+        let d = designer_round_batch(10, 0, 4, 8);
+        assert_ne!(a, d);
     }
 
     #[test]

@@ -73,8 +73,15 @@ impl Fmap {
 }
 
 /// Valid output-x range for which ix = ox*stride + dx lies in [0, ihw).
+/// Shared with the pruning scheduler's host convolutions
+/// (crate::admm::scheduler), which stream taps in the same order.
 #[inline]
-fn x_range(out_hw: usize, stride: usize, dx: i64, ihw: i64) -> (usize, usize) {
+pub(crate) fn x_range(
+    out_hw: usize,
+    stride: usize,
+    dx: i64,
+    ihw: i64,
+) -> (usize, usize) {
     // smallest ox with ox*stride + dx >= 0
     let ox0 = if dx >= 0 {
         0

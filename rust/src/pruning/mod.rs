@@ -101,14 +101,11 @@ impl Projected {
     }
 }
 
-/// Π_Sₙ — Euclidean projection of `w` (P×Q GEMM layout) onto the scheme's
-/// constraint set at remaining-weight ratio `alpha` (paper's α).
-pub fn project(
-    scheme: Scheme,
+fn validate_projection_args(
     w: &Tensor,
     shape: &LayerShape,
     alpha: f64,
-) -> Result<Projected> {
+) -> Result<()> {
     if w.shape() != [shape.p, shape.q()] {
         bail!(
             "weight shape {:?} != layer GEMM shape {:?}",
@@ -119,11 +116,48 @@ pub fn project(
     if !(0.0 < alpha && alpha <= 1.0) {
         bail!("alpha must be in (0,1], got {alpha}");
     }
+    Ok(())
+}
+
+/// Π_Sₙ — Euclidean projection of `w` (P×Q GEMM layout) onto the scheme's
+/// constraint set at remaining-weight ratio `alpha` (paper's α).
+pub fn project(
+    scheme: Scheme,
+    w: &Tensor,
+    shape: &LayerShape,
+    alpha: f64,
+) -> Result<Projected> {
+    validate_projection_args(w, shape, alpha)?;
     Ok(match scheme {
         Scheme::Irregular => schemes::irregular(w, alpha),
         Scheme::Filter => schemes::filter(w, alpha),
         Scheme::Column => schemes::column(w, alpha),
         Scheme::Pattern => schemes::pattern(w, shape, alpha),
+    })
+}
+
+/// Parallel Π_Sₙ: fans the score computation (magnitudes / group norms /
+/// kernel patterns) out across up to `threads` scoped workers. The result
+/// is **bit-identical** to [`project`] at any thread count — each score
+/// group is computed whole by one worker in the serial inner-loop order,
+/// so no floating-point sum is re-associated (see
+/// [`schemes`] module notes).
+pub fn project_par(
+    scheme: Scheme,
+    w: &Tensor,
+    shape: &LayerShape,
+    alpha: f64,
+    threads: usize,
+) -> Result<Projected> {
+    if threads <= 1 {
+        return project(scheme, w, shape, alpha);
+    }
+    validate_projection_args(w, shape, alpha)?;
+    Ok(match scheme {
+        Scheme::Irregular => schemes::irregular_par(w, alpha, threads),
+        Scheme::Filter => schemes::filter_par(w, alpha, threads),
+        Scheme::Column => schemes::column_par(w, alpha, threads),
+        Scheme::Pattern => schemes::pattern_par(w, shape, alpha, threads),
     })
 }
 

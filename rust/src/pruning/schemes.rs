@@ -62,6 +62,21 @@ pub fn column(w: &Tensor, alpha: f64) -> Projected {
 /// 128-bit SIMD lane of the mobile CPU).
 pub const PATTERN_ENTRIES: usize = 4;
 
+/// Connectivity pruning (Eqn. 18): the ⌊2.25·α·A·B⌋ kernels with largest
+/// pattern norm (clamped to [1, A·B]). Shared by the serial, parallel,
+/// and pattern-library variants so the keep rule can never diverge.
+fn connectivity_keep(
+    kernel_norm: &[f64],
+    alpha: f64,
+) -> std::collections::HashSet<usize> {
+    let n_kernels = kernel_norm.len();
+    let keep_kernels = ((2.25 * alpha * n_kernels as f64).floor() as usize)
+        .clamp(1, n_kernels);
+    top_k_indices(kernel_norm, keep_kernels)
+        .into_iter()
+        .collect()
+}
+
 /// Pattern-based pruning = kernel-pattern pruning (Eqns. 16/17, keep the 4
 /// largest-magnitude taps of every kernel) followed by connectivity pruning
 /// (Eqn. 18, keep the ⌊2.25·α·A·B⌋ kernels with largest norm).
@@ -91,12 +106,7 @@ pub fn pattern(w: &Tensor, shape: &LayerShape, alpha: f64) -> Projected {
     }
 
     // Step 2 — connectivity: keep ⌊2.25·α·(A·B)⌋ kernels by pattern norm.
-    let keep_kernels =
-        ((2.25 * alpha * n_kernels as f64).floor() as usize).clamp(1, n_kernels);
-    let kept_kernels: std::collections::HashSet<usize> =
-        top_k_indices(&kernel_norm, keep_kernels)
-            .into_iter()
-            .collect();
+    let kept_kernels = connectivity_keep(&kernel_norm, alpha);
 
     zero_outside(w, |i| {
         let r = i / q;
@@ -175,18 +185,162 @@ pub fn pattern_with_library(
         }
     }
 
-    let keep_kernels =
-        ((2.25 * alpha * n_kernels as f64).floor() as usize).clamp(1, n_kernels);
-    let kept_kernels: std::collections::HashSet<usize> =
-        top_k_indices(&kernel_norm, keep_kernels)
-            .into_iter()
-            .collect();
+    let kept_kernels = connectivity_keep(&kernel_norm, alpha);
     let projected = zero_outside(w, |i| {
         let r = i / q;
         let ch = (i % q) / ks;
         keep_flags[i] && kept_kernels.contains(&(r * shape.c + ch))
     });
     (projected, chosen, library)
+}
+
+// ---------------------------------------------------------------------------
+// Parallel projections (the proximal step of the pruning scheduler)
+// ---------------------------------------------------------------------------
+//
+// Every parallel variant is **bit-identical** to its serial counterpart at
+// any thread count. The rule that makes this hold: each score *group* (an
+// element, a row, a column, a kernel) is computed entirely by one worker
+// with exactly the serial inner-loop order, so no floating-point sum is
+// ever re-associated; the global top-k selection then runs on the full
+// score vector exactly as in the serial path.
+
+/// Fill `out[i] = score(i)` with group indices sharded across up to
+/// `threads` scoped workers (contiguous chunks; each group computed whole
+/// by one worker).
+fn parallel_scores(
+    threads: usize,
+    out: &mut [f64],
+    score: impl Fn(usize) -> f64 + Sync,
+) {
+    let n = out.len();
+    let t = threads.max(1).min(n.max(1));
+    if t <= 1 {
+        for (i, v) in out.iter_mut().enumerate() {
+            *v = score(i);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(t);
+    let score_ref = &score;
+    std::thread::scope(|s| {
+        for (ci, slot) in out.chunks_mut(chunk).enumerate() {
+            s.spawn(move || {
+                for (j, v) in slot.iter_mut().enumerate() {
+                    *v = score_ref(ci * chunk + j);
+                }
+            });
+        }
+    });
+}
+
+/// Irregular pruning, parallel scoring (Eqn. 13).
+pub fn irregular_par(w: &Tensor, alpha: f64, threads: usize) -> Projected {
+    if threads <= 1 {
+        return irregular(w, alpha);
+    }
+    let k = keep_count(alpha, w.len());
+    let data = w.data();
+    let mut scores = vec![0.0f64; w.len()];
+    parallel_scores(threads, &mut scores, |i| (data[i] as f64).abs());
+    let kept: std::collections::HashSet<usize> =
+        top_k_indices(&scores, k).into_iter().collect();
+    zero_outside(w, |i| kept.contains(&i))
+}
+
+/// Filter pruning, parallel per-row norms (Eqn. 14).
+pub fn filter_par(w: &Tensor, alpha: f64, threads: usize) -> Projected {
+    if threads <= 1 {
+        return filter(w, alpha);
+    }
+    let p = w.rows();
+    let k = keep_count(alpha, p);
+    let mut scores = vec![0.0f64; p];
+    parallel_scores(threads, &mut scores, |r| {
+        w.row(r).iter().map(|&v| (v as f64).powi(2)).sum()
+    });
+    let kept: std::collections::HashSet<usize> =
+        top_k_indices(&scores, k).into_iter().collect();
+    let q = w.cols();
+    zero_outside(w, |i| kept.contains(&(i / q)))
+}
+
+/// Column pruning, parallel per-column norms (Eqn. 15). Each column's sum
+/// runs over rows in ascending order — the same accumulation sequence the
+/// serial row-major loop produces for that column.
+pub fn column_par(w: &Tensor, alpha: f64, threads: usize) -> Projected {
+    if threads <= 1 {
+        return column(w, alpha);
+    }
+    let (p, q) = (w.rows(), w.cols());
+    let k = keep_count(alpha, q);
+    let mut scores = vec![0.0f64; q];
+    parallel_scores(threads, &mut scores, |c| {
+        (0..p).map(|r| (w.at2(r, c) as f64).powi(2)).sum()
+    });
+    let kept: std::collections::HashSet<usize> =
+        top_k_indices(&scores, k).into_iter().collect();
+    zero_outside(w, |i| kept.contains(&(i % q)))
+}
+
+/// Pattern-based pruning, parallel over kernels (Eqns. 16-18): the
+/// per-kernel top-4 selection and pattern norm — the compute-heavy step —
+/// shard across workers; connectivity pruning then selects over the full
+/// kernel-norm vector exactly as in the serial path.
+pub fn pattern_par(
+    w: &Tensor,
+    shape: &LayerShape,
+    alpha: f64,
+    threads: usize,
+) -> Projected {
+    if threads <= 1 {
+        return pattern(w, shape, alpha);
+    }
+    let ks = shape.kernel_size();
+    assert_eq!(ks, 9, "pattern pruning requires 3x3 kernels (paper IV-D.4)");
+    let (p, q) = (w.rows(), w.cols());
+    let n_kernels = p * shape.c;
+
+    // Step 1 in parallel: kernel regions are contiguous and kernel-ordered
+    // in the GEMM layout (base = ki * ks since q = c·ks), so keep_flags and
+    // kernel_norm chunk into disjoint aligned slices.
+    let mut keep_flags = vec![false; p * q];
+    let mut kernel_norm = vec![0.0f64; n_kernels];
+    let t = threads.max(1).min(n_kernels.max(1));
+    let kchunk = n_kernels.div_ceil(t);
+    let wd = w.data();
+    std::thread::scope(|s| {
+        for (ci, (flags, norms)) in keep_flags
+            .chunks_mut(kchunk * ks)
+            .zip(kernel_norm.chunks_mut(kchunk))
+            .enumerate()
+        {
+            s.spawn(move || {
+                for (j, nslot) in norms.iter_mut().enumerate() {
+                    let ki = ci * kchunk + j;
+                    let taps = &wd[ki * ks..(ki + 1) * ks];
+                    let scores: Vec<f64> =
+                        taps.iter().map(|&v| (v as f64).abs()).collect();
+                    let top = top_k_indices(&scores, PATTERN_ENTRIES);
+                    let mut norm = 0.0;
+                    for &tp in &top {
+                        flags[j * ks + tp] = true;
+                        norm += (taps[tp] as f64).powi(2);
+                    }
+                    *nslot = norm;
+                }
+            });
+        }
+    });
+
+    // Step 2 — connectivity, identical to the serial path.
+    let kept_kernels = connectivity_keep(&kernel_norm, alpha);
+
+    zero_outside(w, |i| {
+        let r = i / q;
+        let ch = (i % q) / ks;
+        keep_flags[i] && kept_kernels.contains(&(r * shape.c + ch))
+    })
 }
 
 #[cfg(test)]
@@ -291,6 +445,47 @@ mod tests {
             pr.w.data(),
             &[0.9, -0.8, 0.0, 0.7, 0.0, 0.0, 0.6, 0.0, 0.0]
         );
+    }
+
+    /// The parallel projections are bit-identical to the serial ones at
+    /// every thread count, across all four schemes (proptest-style).
+    #[test]
+    fn prop_parallel_projection_matches_serial_bitwise() {
+        use crate::util::propcheck::check;
+        check("par-projection-vs-serial", 77, 60, 20, |g| {
+            let shape = LayerShape {
+                p: g.dim_up_to(16),
+                c: g.dim_up_to(8),
+                kh: 3,
+                kw: 3,
+            };
+            let w = Tensor::from_vec(
+                &[shape.p, shape.q()],
+                g.vec_f32(shape.p * shape.q()),
+            )
+            .unwrap();
+            let alpha = g.alpha();
+            let threads = 2 + g.rng.below(4);
+            let pairs: [(Projected, Projected); 4] = [
+                (irregular(&w, alpha), irregular_par(&w, alpha, threads)),
+                (filter(&w, alpha), filter_par(&w, alpha, threads)),
+                (column(&w, alpha), column_par(&w, alpha, threads)),
+                (
+                    pattern(&w, &shape, alpha),
+                    pattern_par(&w, &shape, alpha, threads),
+                ),
+            ];
+            for (i, (ser, par)) in pairs.iter().enumerate() {
+                if ser.w != par.w || ser.mask != par.mask {
+                    return Err(format!(
+                        "scheme #{i} diverges at {threads} threads \
+                         (p={} c={} alpha={alpha})",
+                        shape.p, shape.c
+                    ));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

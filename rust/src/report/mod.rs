@@ -97,6 +97,10 @@ pub fn ms(x: f64) -> String {
     format!("{x:.1} ms")
 }
 
+pub fn secs(x: f64) -> String {
+    format!("{x:.2} s")
+}
+
 /// Humanized byte count for plan/arena stats ("512 B", "3.4 KiB",
 /// "1.2 MiB").
 pub fn human_bytes(n: usize) -> String {
@@ -143,6 +147,7 @@ mod tests {
     fn formatting_helpers() {
         assert_eq!(pct(0.941), "94.1%");
         assert_eq!(rate(16.0), "16.0x");
+        assert_eq!(secs(1.234), "1.23 s");
         assert_eq!(loss_cell(0.941, 0.942), "-0.1%");
         assert_eq!(loss_cell(0.941, 0.930), "+1.1%");
         assert_eq!(human_bytes(512), "512 B");

@@ -85,7 +85,12 @@ fn run_sgd(
         let mut outs = rt
             .exec(model_id, artifact, &inputs)
             .with_context(|| format!("{artifact} step {step}"))?;
-        let loss = outs.pop().expect("loss output").data()[0];
+        let loss = outs
+            .pop()
+            .with_context(|| {
+                format!("{artifact} step {step} returned no outputs")
+            })?
+            .data()[0];
         trace.losses.push(loss);
         *params = outs;
         debug_assert_eq!(params.len(), np);

@@ -1,0 +1,217 @@
+//! Determinism of the parallel pruning scheduler (admm::scheduler): the
+//! `PruneOutcome` must be bit-identical at every thread count, the service
+//! sweep must be independent of its worker count, and the host forward
+//! pass must match the mobile executor's dense reference numerics. Runs
+//! entirely on the host engine — no artifacts or `pjrt` feature required.
+
+use repro::admm::scheduler::{
+    fwd_logits_host, prune_layerwise_par, SchedulerCfg,
+};
+use repro::config::AdmmConfig;
+use repro::coordinator::service::{PruneConfig, PruneService};
+use repro::mobile::engine::{Executor, Fmap, KernelKind};
+use repro::mobile::ir::ModelIR;
+use repro::mobile::plan::PassManager;
+use repro::mobile::synth::{res_style, vgg_style};
+use repro::pruning::Scheme;
+use repro::rng::Pcg32;
+
+fn admm_cfg() -> AdmmConfig {
+    AdmmConfig {
+        rhos: vec![1e-2, 1e-1],
+        iters_per_rho: 2,
+        primal_steps: 2,
+        lr: 1e-2,
+        lr_layer: 5e-3,
+        gauss_seidel: true,
+        seed: 0xADA17,
+        threads: 1,
+    }
+}
+
+fn sched_cfg(threads: usize) -> SchedulerCfg {
+    SchedulerCfg::new(admm_cfg(), 4, threads)
+}
+
+#[test]
+fn prune_outcome_bit_identical_across_thread_counts() {
+    let (spec, params) = vgg_style("det_vgg", 16, 6, &[6, 10], 7);
+    for scheme in Scheme::all() {
+        let base = prune_layerwise_par(
+            &spec,
+            &params,
+            scheme,
+            0.25,
+            &sched_cfg(1),
+        )
+        .unwrap();
+        assert!(
+            base.outcome
+                .trace
+                .primal_loss
+                .iter()
+                .all(|l| l.is_finite()),
+            "{scheme:?}: non-finite primal loss"
+        );
+        assert_eq!(base.outcome.trace.primal_loss.len(), 4);
+        for threads in [2usize, 4] {
+            let got = prune_layerwise_par(
+                &spec,
+                &params,
+                scheme,
+                0.25,
+                &sched_cfg(threads),
+            )
+            .unwrap();
+            assert_eq!(
+                base.outcome.params, got.outcome.params,
+                "{scheme:?}: params differ at {threads} threads"
+            );
+            assert_eq!(
+                base.outcome.masks, got.outcome.masks,
+                "{scheme:?}: masks differ at {threads} threads"
+            );
+            assert_eq!(
+                base.outcome.comp_rate.to_bits(),
+                got.outcome.comp_rate.to_bits(),
+                "{scheme:?}: comp_rate differs at {threads} threads"
+            );
+            assert_eq!(
+                base.outcome.trace.primal_loss,
+                got.outcome.trace.primal_loss,
+                "{scheme:?}: loss trace differs at {threads} threads"
+            );
+            let same_residual = base
+                .outcome
+                .trace
+                .residual
+                .iter()
+                .zip(&got.outcome.trace.residual)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(
+                same_residual,
+                "{scheme:?}: residual trace differs at {threads} threads"
+            );
+        }
+    }
+}
+
+#[test]
+fn residual_spec_prunes_deterministically() {
+    // res_style exercises the host forward's Save/Proj/Add/Relu ops
+    let (spec, params) = res_style("det_res", 16, 6, &[6, 8], 9);
+    let a =
+        prune_layerwise_par(&spec, &params, Scheme::Pattern, 0.25, &sched_cfg(1))
+            .unwrap();
+    let b =
+        prune_layerwise_par(&spec, &params, Scheme::Pattern, 0.25, &sched_cfg(4))
+            .unwrap();
+    assert_eq!(a.outcome.params, b.outcome.params);
+    assert_eq!(a.outcome.masks, b.outcome.masks);
+    // the achieved compression must actually compress
+    assert!(a.outcome.comp_rate > 2.0, "comp {}", a.outcome.comp_rate);
+}
+
+#[test]
+fn scheduler_prunes_to_the_target_rate() {
+    let (spec, params) = vgg_style("det_rate", 16, 6, &[6, 10], 11);
+    let out = prune_layerwise_par(
+        &spec,
+        &params,
+        Scheme::Irregular,
+        1.0 / 8.0,
+        &sched_cfg(4),
+    )
+    .unwrap();
+    // irregular keeps floor(PQ/8) per layer, so the achieved rate is >= 8
+    assert!(
+        out.outcome.comp_rate >= 8.0,
+        "comp rate {} < 8.0",
+        out.outcome.comp_rate
+    );
+    // per-layer timing plumbing: one entry per prunable conv, costs > 0
+    assert_eq!(out.sched.per_layer.len(), spec.prunable.len());
+    assert!(out.sched.per_layer.iter().all(|l| l.cost > 0));
+    assert_eq!(out.sched.rounds, 4);
+    let table = out.sched.table().render();
+    assert!(table.contains("per-layer ADMM solve time"));
+}
+
+#[test]
+fn service_sweep_is_independent_of_worker_count() {
+    let (spec, params) = vgg_style("det_sweep", 8, 4, &[4, 6], 13);
+    let admm = admm_cfg();
+    let configs = [
+        PruneConfig {
+            scheme: Scheme::Irregular,
+            rate: 8.0,
+        },
+        PruneConfig {
+            scheme: Scheme::Column,
+            rate: 4.0,
+        },
+        PruneConfig {
+            scheme: Scheme::Filter,
+            rate: 2.0,
+        },
+        PruneConfig {
+            scheme: Scheme::Pattern,
+            rate: 8.0,
+        },
+    ];
+    let a = PruneService::new(1, 4)
+        .sweep(&spec, &params, &admm, &configs)
+        .unwrap();
+    let b = PruneService::new(3, 4)
+        .sweep(&spec, &params, &admm, &configs)
+        .unwrap();
+    assert_eq!(a.len(), configs.len());
+    assert_eq!(a.len(), b.len());
+    for (ra, rb) in a.iter().zip(&b) {
+        assert_eq!(ra.scheme, rb.scheme);
+        assert_eq!(ra.comp_rate.to_bits(), rb.comp_rate.to_bits());
+        assert_eq!(ra.masks, rb.masks);
+        assert_eq!(
+            ra.final_residual.to_bits(),
+            rb.final_residual.to_bits()
+        );
+    }
+    let table = PruneService::new(3, 4).sweep_table("det_sweep", &a);
+    assert!(table.render().contains("parallel prune sweep"));
+}
+
+/// The scheduler's host forward pass reproduces the mobile executor's
+/// dense reference kernel on both spec families (paper §V-C semantics
+/// preservation, designer side).
+#[test]
+fn host_forward_matches_dense_executor() {
+    for (spec, params) in [
+        vgg_style("fwd_vgg", 8, 5, &[4, 6], 3),
+        res_style("fwd_res", 8, 5, &[4, 6], 5),
+    ] {
+        let ir = ModelIR::build(&spec, &params).unwrap();
+        let plan = PassManager::new(1).compile(ir).unwrap();
+        let mut ex = Executor::new(&plan, KernelKind::DenseRef);
+        let mut rng = Pcg32::seeded(17);
+        for trial in 0..3 {
+            let img = Fmap {
+                c: 3,
+                hw: spec.in_hw,
+                data: (0..3 * spec.in_hw * spec.in_hw)
+                    .map(|_| rng.uniform())
+                    .collect(),
+            };
+            let want = ex.execute(&img);
+            let got =
+                fwd_logits_host(&spec, &params, &img.data).unwrap();
+            assert_eq!(want.len(), got.len());
+            for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+                assert!(
+                    (w - g).abs() <= 1e-4 * w.abs().max(1.0),
+                    "{} trial {trial} logit {i}: executor {w} vs host {g}",
+                    spec.id
+                );
+            }
+        }
+    }
+}
