@@ -10,7 +10,7 @@
 
 use repro::admm::scheduler::{prune_layerwise_par, SchedulerCfg};
 use repro::admm::{prune_layerwise, DataSource};
-use repro::bench_harness::{bench, section};
+use repro::serve::stats::{bench, section};
 use repro::config::AdmmConfig;
 use repro::mobile::synth::vgg_style;
 use repro::pruning::Scheme;

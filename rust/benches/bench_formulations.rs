@@ -4,7 +4,7 @@
 //! refreshes) must reproduce here.
 
 use repro::admm::{prune_layerwise, prune_whole, DataSource};
-use repro::bench_harness::{bench, section};
+use repro::serve::stats::{bench, section};
 use repro::config::AdmmConfig;
 use repro::pruning::Scheme;
 use repro::runtime::Runtime;

@@ -3,7 +3,7 @@
 //! execution, kernel comparison, thread scaling, batch throughput — plus
 //! the Galaxy-S10 cost-model estimates for every framework at paper scale.
 
-use repro::bench_harness::{bench, section};
+use repro::serve::stats::{bench, section};
 use repro::mobile::costmodel::{
     self, latency_ms, AnalyticModel, Device, ALL_ENGINES, GALAXY_S10,
 };
@@ -97,7 +97,7 @@ fn main() {
         (0..16).map(|i| rand_image(in_hw, 100 + i)).collect();
     let mut ex = Executor::new(&plan1, KernelKind::PatternScalar);
     bench("execute_batch sequential (1 thread)", 2, 8, || {
-        std::hint::black_box(ex.execute_batch(&batch));
+        std::hint::black_box(ex.execute_batch(&batch).unwrap());
     });
     for workers in [2usize, 4] {
         bench(
@@ -105,12 +105,15 @@ fn main() {
             2,
             8,
             || {
-                std::hint::black_box(execute_batch_parallel(
-                    &plan1,
-                    KernelKind::PatternScalar,
-                    &batch,
-                    workers,
-                ));
+                std::hint::black_box(
+                    execute_batch_parallel(
+                        &plan1,
+                        KernelKind::PatternScalar,
+                        &batch,
+                        workers,
+                    )
+                    .unwrap(),
+                );
             },
         );
     }

@@ -2,7 +2,7 @@
 //! proximal step of every ADMM iteration) at the layer sizes of the model
 //! zoo and at paper-scale (512×4608, ResNet-18's largest 3x3 layer).
 
-use repro::bench_harness::{bench, section};
+use repro::serve::stats::{bench, section};
 use repro::pruning::{project, project_par, LayerShape, Scheme};
 use repro::rng::Pcg32;
 use repro::tensor::Tensor;

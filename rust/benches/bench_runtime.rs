@@ -1,7 +1,7 @@
 //! Bench: PJRT execute overhead + Literal marshalling — the L3↔XLA
 //! boundary cost that the perf pass drives down (EXPERIMENTS.md §Perf).
 
-use repro::bench_harness::{bench, section};
+use repro::serve::stats::{bench, section};
 use repro::runtime::Runtime;
 use repro::tensor::Tensor;
 use repro::train::params::init_params;

@@ -1,0 +1,147 @@
+//! Serving-tier bench: compile-once-vs-load plan artifacts, and
+//! dynamic-batching throughput swept over batch window × worker counts
+//! under closed-loop concurrent load (ISSUE acceptance: batching must
+//! beat single-request serving at >= 8 concurrent clients on the
+//! synthetic VGG spec).
+
+use std::sync::Arc;
+
+use repro::config::ServeConfig;
+use repro::mobile::engine::KernelKind;
+use repro::mobile::ir::ModelIR;
+use repro::mobile::plan::{compile_plan, ExecutionPlan};
+use repro::mobile::synth;
+use repro::serve::artifact;
+use repro::serve::loadgen::{self, LoadGenConfig, LoadMode};
+use repro::serve::server::Server;
+use repro::serve::stats::{bench, section};
+
+const CLIENTS: usize = 8;
+const REQUESTS: usize = 96;
+
+fn serve_qps(plan: &Arc<ExecutionPlan>, cfg: &ServeConfig) -> f64 {
+    let server =
+        Server::start(plan.clone(), KernelKind::PatternScalar, cfg);
+    let load = loadgen::run(
+        &server.handle(),
+        plan.in_dims,
+        &LoadGenConfig {
+            mode: LoadMode::Closed { clients: CLIENTS },
+            requests: REQUESTS,
+            seed: 42,
+        },
+    );
+    let report = server.shutdown();
+    assert_eq!(report.errors, 0);
+    println!(
+        "serve  w={} batch={:<2} wait={:>4}us bt={}   {:>8.1} req/s   \
+         p95 {:>6} us   mean batch {:.2}",
+        cfg.workers,
+        cfg.max_batch,
+        cfg.max_wait_us,
+        cfg.batch_threads,
+        load.achieved_qps,
+        report.latency.p95_us,
+        report.mean_batch
+    );
+    load.achieved_qps
+}
+
+fn main() {
+    let in_hw = 32;
+    let (spec, mut params) =
+        synth::vgg_style("bench_serve_vgg", in_hw, 10, &[32, 64], 9);
+    synth::pattern_prune(&spec, &mut params, 1.0 / 8.0);
+    let ir = ModelIR::build(&spec, &params).unwrap();
+
+    section("plan compile vs artifact load (pay lowering once)");
+    let mut pool: Vec<_> = (0..13).map(|_| ir.clone()).collect();
+    bench("compile_plan (PassManager lowering)", 2, 10, || {
+        let ir = pool.pop().expect("clone pool exhausted");
+        std::hint::black_box(compile_plan(ir, 1).unwrap());
+    });
+    let plan = Arc::new(compile_plan(ir, 1).unwrap());
+    let bytes = artifact::encode_plan(&plan);
+    println!(
+        "artifact size: {} bytes ({} layers)",
+        bytes.len(),
+        plan.layers.len()
+    );
+    bench("artifact encode", 2, 10, || {
+        std::hint::black_box(artifact::encode_plan(&plan));
+    });
+    bench("artifact decode (validated load)", 2, 10, || {
+        std::hint::black_box(artifact::decode_plan(&bytes).unwrap());
+    });
+    let dir = std::env::temp_dir()
+        .join(format!("repro_bench_serve_{}", std::process::id()));
+    let path = dir.join("plan.rpln");
+    artifact::save(&plan, &path).unwrap();
+    let loaded = artifact::load(&path).unwrap();
+    artifact::verify_roundtrip(&plan, &loaded, 2, 7).unwrap();
+    println!("artifact round-trip verified (bit-identical outputs)");
+    std::fs::remove_dir_all(&dir).ok();
+
+    section(format!(
+        "dynamic batching vs single-request serving \
+         ({CLIENTS} closed-loop clients, {REQUESTS} requests)"
+    )
+    .as_str());
+    let single = serve_qps(
+        &plan,
+        &ServeConfig {
+            workers: 1,
+            max_batch: 1,
+            max_wait_us: 0,
+            queue_cap: 256,
+            batch_threads: 1,
+        },
+    );
+    // same executor-thread budget: isolates batch formation itself
+    let batched = serve_qps(
+        &plan,
+        &ServeConfig {
+            workers: 1,
+            max_batch: 8,
+            max_wait_us: 500,
+            queue_cap: 256,
+            batch_threads: 1,
+        },
+    );
+    // the full serving tier: batching + intra-batch parallel execution
+    let batched_par = serve_qps(
+        &plan,
+        &ServeConfig {
+            workers: 1,
+            max_batch: 8,
+            max_wait_us: 500,
+            queue_cap: 256,
+            batch_threads: 4,
+        },
+    );
+    println!(
+        "batch formation alone (1 executor thread): {:.2}x; \
+         dynamic batching + intra-batch parallelism: {:.2}x \
+         over single-request serving",
+        batched / single.max(1e-9),
+        batched_par / single.max(1e-9)
+    );
+
+    section("batch window x worker sweep");
+    for workers in [1usize, 2, 4] {
+        for max_batch in [1usize, 4, 8] {
+            for wait_us in [0u64, 200, 1000] {
+                serve_qps(
+                    &plan,
+                    &ServeConfig {
+                        workers,
+                        max_batch,
+                        max_wait_us: wait_us,
+                        queue_cap: 256,
+                        batch_threads: if max_batch > 1 { 2 } else { 1 },
+                    },
+                );
+            }
+        }
+    }
+}

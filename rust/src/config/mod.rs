@@ -366,6 +366,61 @@ impl TrainConfig {
     }
 }
 
+/// Serving-tier knobs (`serve::server::Server`): worker pool size,
+/// micro-batch formation, and admission control. Scaled by
+/// [`Preset`] like the training/pruning budgets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServeConfig {
+    /// batching worker threads, each owning one executor + arena
+    pub workers: usize,
+    /// dispatch a micro-batch as soon as it holds this many requests
+    pub max_batch: usize,
+    /// dispatch at latest this long after the first request of a batch
+    pub max_wait_us: u64,
+    /// bounded queue capacity; a full queue rejects (backpressure)
+    pub queue_cap: usize,
+    /// intra-batch executor threads (1 = each worker runs its batch
+    /// sequentially on its long-lived, allocation-free executor; >1 =
+    /// `execute_batch_parallel` inside the worker, which trades per-batch
+    /// setup cost — scoped thread spawns + fresh arenas — for parallel
+    /// batch execution; only worth it when per-image compute dominates)
+    pub batch_threads: usize,
+}
+
+impl ServeConfig {
+    pub fn preset(p: Preset) -> Self {
+        match p {
+            Preset::Smoke => ServeConfig {
+                workers: 1,
+                max_batch: 4,
+                max_wait_us: 200,
+                queue_cap: 64,
+                batch_threads: 1,
+            },
+            Preset::Quick => ServeConfig {
+                workers: 2,
+                max_batch: 8,
+                max_wait_us: 500,
+                queue_cap: 256,
+                batch_threads: 1,
+            },
+            Preset::Full => ServeConfig {
+                workers: 4,
+                max_batch: 16,
+                max_wait_us: 1000,
+                queue_cap: 1024,
+                batch_threads: 2,
+            },
+        }
+    }
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig::preset(Preset::Quick)
+    }
+}
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Preset {
     /// CI-speed: exercises every code path in seconds
@@ -390,6 +445,22 @@ impl Preset {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn serve_presets_scale_and_stay_sane() {
+        for p in [Preset::Smoke, Preset::Quick, Preset::Full] {
+            let c = ServeConfig::preset(p);
+            assert!(c.workers >= 1);
+            assert!(c.max_batch >= 1);
+            assert!(c.queue_cap >= c.max_batch);
+            assert!(c.batch_threads >= 1);
+        }
+        assert_eq!(ServeConfig::default(), ServeConfig::preset(Preset::Quick));
+        assert!(
+            ServeConfig::preset(Preset::Full).max_batch
+                > ServeConfig::preset(Preset::Smoke).max_batch
+        );
+    }
 
     #[test]
     fn admm_preset_has_compressed_rho_ramp() {

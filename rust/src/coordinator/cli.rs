@@ -13,13 +13,18 @@
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::Preset;
-use crate::mobile::engine::{Executor, Fmap, KERNEL_KINDS};
+use crate::config::{Preset, ServeConfig};
+use crate::mobile::engine::{Executor, Fmap, KernelKind, KERNEL_KINDS};
 use crate::mobile::ir::ModelIR;
-use crate::mobile::plan::PassManager;
+use crate::mobile::plan::{compile_plan, ExecutionPlan, PassManager};
+use crate::mobile::synth;
 use crate::pruning::Scheme;
 use crate::report::human_bytes;
 use crate::rng::Pcg32;
+use crate::serve::artifact;
+use crate::serve::loadgen::{self, LoadGenConfig, LoadMode};
+use crate::serve::registry::{PlanKey, PlanRegistry};
+use crate::serve::server::Server;
 
 use super::{default_threads, experiments, Ctx, Method};
 
@@ -119,6 +124,24 @@ impl Args {
         ctx.threads = self.threads()?;
         Ok(ctx)
     }
+
+    fn flag_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flags.get(name) {
+            Some(v) => v
+                .parse::<usize>()
+                .with_context(|| format!("--{name} must be an integer")),
+            None => Ok(default),
+        }
+    }
+
+    fn flag_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.flags.get(name) {
+            Some(v) => v
+                .parse::<u64>()
+                .with_context(|| format!("--{name} must be an integer")),
+            None => Ok(default),
+        }
+    }
 }
 
 const HELP: &str = "\
@@ -135,6 +158,14 @@ commands:
   exp       <table1|table2|table3|table4|table5|fig3|sweep|all> [--preset ..]
             (sweep = host-engine parallel prune sweep; no artifacts needed)
   pipeline  --model <id> [--scheme ..] [--rate N]   end-to-end demo
+  serve     [--spec vgg|res] [--hw N] [--classes N] [--rate N]
+            [--workers N] [--batch N] [--wait-us N] [--queue N]
+            [--batch-threads N] [--plan-threads N] [--clients N]
+            [--qps N] [--requests N] [--kernel dense|sparse|tiled]
+            [--artifact <path>] [--seed N]
+            dynamic-batching inference server on a synthetic spec
+            (no PJRT/artifacts needed); --artifact saves/loads the
+            compiled plan and verifies the save->load round trip
   models                                            list models in manifest
   help
 common flags: --artifacts <dir> (default ./artifacts), --preset (default quick),
@@ -142,6 +173,146 @@ common flags: --artifacts <dir> (default ./artifacts), --preset (default quick),
                              default min(cores, 4); results are identical
                              at any thread count)
 ";
+
+/// `repro serve`: compile-or-load a plan through the registry, stand up
+/// the dynamic-batching server, drive it with the seeded load generator,
+/// and print the serving report.
+fn serve_cmd(args: &Args) -> Result<()> {
+    let spec_kind = args
+        .flags
+        .get("spec")
+        .map(|s| s.as_str())
+        .unwrap_or("vgg")
+        .to_string();
+    let hw = args.flag_usize("hw", 16)?;
+    let classes = args.flag_usize("classes", 10)?;
+    let rate = args.rate()?;
+    let plan_threads = args.flag_usize("plan-threads", 1)?;
+    let seed = args.flag_u64("seed", 42)?;
+    let mut cfg = ServeConfig::preset(args.preset()?);
+    cfg.workers = args.flag_usize("workers", cfg.workers)?;
+    cfg.max_batch = args.flag_usize("batch", cfg.max_batch)?;
+    cfg.max_wait_us = args.flag_u64("wait-us", cfg.max_wait_us)?;
+    cfg.queue_cap = args.flag_usize("queue", cfg.queue_cap)?;
+    cfg.batch_threads =
+        args.flag_usize("batch-threads", cfg.batch_threads)?;
+    let requests = args.flag_usize("requests", 64)?;
+    let clients = args.flag_usize("clients", 8)?;
+    let kernel = KernelKind::parse(
+        args.flags
+            .get("kernel")
+            .map(|s| s.as_str())
+            .unwrap_or("sparse"),
+    )?;
+    let mode = match args.flags.get("qps") {
+        Some(q) => LoadMode::Open {
+            qps: q.parse().context("--qps must be a number")?,
+        },
+        None => LoadMode::Closed { clients },
+    };
+
+    // the id encodes every flag the compiled plan depends on, so the
+    // stale-artifact guard below catches any drift in spec, geometry,
+    // pruning rate, class count, or seed
+    let model_id = format!(
+        "serve_{spec_kind}{hw}_c{classes}_r{}m_s{seed}",
+        (rate * 1000.0).round() as u64
+    );
+    let build_spec = || -> Result<ExecutionPlan> {
+        let (spec, mut params) = match spec_kind.as_str() {
+            "vgg" => {
+                synth::vgg_style(&model_id, hw, classes, &[16, 32], seed)
+            }
+            "res" => {
+                synth::res_style(&model_id, hw, classes, &[8, 16], seed)
+            }
+            other => bail!("unknown --spec {other:?} (vgg|res)"),
+        };
+        synth::pattern_prune(&spec, &mut params, 1.0 / rate);
+        compile_plan(ModelIR::build(&spec, &params)?, plan_threads)
+    };
+
+    let registry = PlanRegistry::new(4);
+    let key = PlanKey::new(&model_id, "pattern", rate, plan_threads);
+    let artifact_path = args.flags.get("artifact").cloned();
+    let t = crate::util::Stopwatch::start();
+    let plan = registry.get_or_build(&key, || match &artifact_path {
+        Some(p) if std::path::Path::new(p).exists() => {
+            let plan = artifact::load(p)?;
+            // a stale artifact for a different spec must not be served
+            // under this run's flags
+            if plan.ir.model_id != model_id || plan.threads != plan_threads
+            {
+                bail!(
+                    "artifact {p} holds model {:?} compiled for {} \
+                     thread(s), but the requested flags describe \
+                     {model_id:?} at {plan_threads} thread(s); delete \
+                     it or pass a different --artifact path",
+                    plan.ir.model_id,
+                    plan.threads
+                );
+            }
+            println!(
+                "loaded plan artifact {p} ({} layers, arena {})",
+                plan.layers.len(),
+                human_bytes(plan.stats.arena_bytes)
+            );
+            Ok(plan)
+        }
+        Some(p) => {
+            let plan = build_spec()?;
+            artifact::save(&plan, p)?;
+            let loaded = artifact::load(p)?;
+            artifact::verify_roundtrip(&plan, &loaded, 4, seed)?;
+            let bytes =
+                std::fs::metadata(p).map(|m| m.len()).unwrap_or(0);
+            println!(
+                "artifact round-trip OK: {p} ({bytes} bytes, \
+                 bit-identical outputs)"
+            );
+            Ok(loaded)
+        }
+        None => build_spec(),
+    })?;
+    println!("plan {key} ready in {:.2} ms", t.ms());
+
+    let server = Server::start(plan.clone(), kernel, &cfg);
+    let handle = server.handle();
+    let lg = LoadGenConfig {
+        mode,
+        requests,
+        seed,
+    };
+    let load = loadgen::run(&handle, plan.in_dims, &lg);
+    let report = server.shutdown();
+    println!(
+        "{}",
+        report
+            .table(&format!(
+                "serve {model_id} ({} workers, batch {} / {} us window, \
+                 kernel {})",
+                cfg.workers,
+                cfg.max_batch,
+                cfg.max_wait_us,
+                kernel.name()
+            ))
+            .render()
+    );
+    println!("{}", report.batch_table("batch-size histogram").render());
+    println!(
+        "loadgen: {requests} issued, {} completed, {} rejected, \
+         {:.1} req/s over {:.2} s",
+        load.completed, load.rejected, load.achieved_qps, load.wall_secs
+    );
+    let rs = registry.stats();
+    println!(
+        "registry: {} ready / cap {}, {} hits, {} misses, \
+         {} coalesced, {} evictions",
+        rs.ready, rs.capacity, rs.hits, rs.misses, rs.coalesced,
+        rs.evictions
+    );
+    Ok(())
+}
 
 pub fn main() -> Result<()> {
     let args = parse_args().inspect_err(|_| {
@@ -321,6 +492,7 @@ pub fn main() -> Result<()> {
             }
             Ok(())
         }
+        "serve" => serve_cmd(&args),
         "pipeline" => {
             let ctx = args.ctx()?;
             let model = args.model()?;

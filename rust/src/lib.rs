@@ -16,6 +16,6 @@ pub mod admm;
 pub mod train;
 pub mod baselines;
 pub mod mobile;
+pub mod serve;
 pub mod coordinator;
 pub mod report;
-pub mod bench_harness;

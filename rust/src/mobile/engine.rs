@@ -18,7 +18,7 @@
 //! reference kernel by property tests below and in
 //! rust/tests/mobile_integration.rs.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::config::Act;
 use crate::tensor::{Chw, Tensor};
@@ -507,6 +507,17 @@ impl<'p> Executor<'p> {
                 p.in_dims.hw
             );
         }
+        // Fmap fields are pub, so a caller can hand us dims that disagree
+        // with the buffer; a bail here beats a copy_from_slice panic
+        if img.data.len() != p.in_dims.elems() {
+            bail!(
+                "image buffer holds {} elems, dims ({}, {}hw) need {}",
+                img.data.len(),
+                img.c,
+                img.hw,
+                p.in_dims.elems()
+            );
+        }
         if out.len() != p.ir.classes {
             bail!(
                 "logits slice len {} != {} classes",
@@ -636,27 +647,65 @@ impl<'p> Executor<'p> {
     }
 
     /// Sequential batch entry point: amortizes the arena across frames.
-    pub fn execute_batch(&mut self, imgs: &[Fmap]) -> Vec<Vec<f32>> {
-        imgs.iter().map(|img| self.execute(img)).collect()
+    /// Errs (instead of panicking) on an empty batch or any image whose
+    /// dims do not match the plan input.
+    pub fn execute_batch(
+        &mut self,
+        imgs: &[Fmap],
+    ) -> Result<Vec<Vec<f32>>> {
+        if imgs.is_empty() {
+            bail!("execute_batch: empty batch");
+        }
+        let classes = self.plan.ir.classes;
+        let mut out = Vec::with_capacity(imgs.len());
+        for (i, img) in imgs.iter().enumerate() {
+            let mut logits = vec![0.0f32; classes];
+            self.execute_into(img, &mut logits)
+                .with_context(|| format!("batch image {i}"))?;
+            out.push(logits);
+        }
+        Ok(out)
     }
 }
 
 /// Throughput entry point: shard `imgs` across `workers` scoped threads,
 /// each with its own executor (one arena allocation per worker per call).
 /// Compile the plan with `threads = 1` for this mode so per-layer and
-/// per-image parallelism do not multiply.
+/// per-image parallelism do not multiply. Errs on an empty batch or any
+/// image whose dims do not match the plan input (checked up front, so no
+/// worker starts on a doomed batch).
 pub fn execute_batch_parallel(
     plan: &ExecutionPlan,
     kind: KernelKind,
     imgs: &[Fmap],
     workers: usize,
-) -> Vec<Vec<f32>> {
-    let w = workers.max(1).min(imgs.len().max(1));
+) -> Result<Vec<Vec<f32>>> {
+    if imgs.is_empty() {
+        bail!("execute_batch_parallel: empty batch");
+    }
+    for (i, img) in imgs.iter().enumerate() {
+        if img.c != plan.in_dims.c
+            || img.hw != plan.in_dims.hw
+            || img.data.len() != plan.in_dims.elems()
+        {
+            bail!(
+                "batch image {i} ({}, {}hw, {} elems) does not match \
+                 plan input ({}, {}hw, {} elems)",
+                img.c,
+                img.hw,
+                img.data.len(),
+                plan.in_dims.c,
+                plan.in_dims.hw,
+                plan.in_dims.elems()
+            );
+        }
+    }
+    let w = workers.max(1).min(imgs.len());
     if w <= 1 {
         return Executor::new(plan, kind).execute_batch(imgs);
     }
     let chunk = imgs.len().div_ceil(w);
-    let mut results: Vec<Vec<Vec<f32>>> = Vec::new();
+    let mut results: Vec<Result<Vec<Vec<f32>>>> = Vec::new();
     std::thread::scope(|s| {
         let handles: Vec<_> = imgs
             .chunks(chunk)
@@ -671,7 +720,11 @@ pub fn execute_batch_parallel(
             .map(|h| h.join().expect("batch worker panicked"))
             .collect();
     });
-    results.into_iter().flatten().collect()
+    let mut out = Vec::with_capacity(imgs.len());
+    for r in results {
+        out.extend(r?);
+    }
+    Ok(out)
 }
 
 // ---------------------------------------------------------------------------

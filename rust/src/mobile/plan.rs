@@ -293,6 +293,251 @@ impl ExecutionPlan {
     pub fn classes(&self) -> usize {
         self.ir.classes
     }
+
+    /// Structural integrity check for plans that did not come out of
+    /// [`PassManager::compile`] — the artifact loader
+    /// (`crate::serve::artifact`) must not trust bytes from disk, so it
+    /// re-establishes here every invariant the executor's unsafe output
+    /// aliasing and arena sizing rely on: per-layer exec_order
+    /// permutations, block partitions, payload/style bounds, and schedule
+    /// slot/layer indices.
+    pub fn validate(&self) -> Result<()> {
+        for (li, lp) in self.layers.iter().enumerate() {
+            if lp.conv >= self.ir.convs.len() {
+                bail!("layer {li}: conv index {} out of range", lp.conv);
+            }
+            // the dense reference kernel walks conv.w by the layer's
+            // geometry, so the two must agree exactly
+            let ci = &self.ir.convs[lp.conv];
+            if ci.a != lp.a
+                || ci.c != lp.c
+                || ci.kh != lp.kh
+                || ci.kw != lp.kw
+                || ci.stride != lp.stride
+                || ci.in_hw != lp.in_hw
+                || ci.out_hw != lp.out_hw
+                || ci.w.shape()
+                    != [lp.a, lp.c, lp.kh, lp.kw].as_slice()
+            {
+                bail!(
+                    "layer {li}: geometry disagrees with conv {}",
+                    lp.conv
+                );
+            }
+            // stride drives div_ceil in x_range; pad/out_hw must be the
+            // SAME-padding values compile would derive
+            if lp.stride == 0 {
+                bail!("layer {li}: zero stride");
+            }
+            let (out, pad) = same_pad_lo(lp.in_hw, lp.kh, lp.stride);
+            if out != lp.out_hw || pad != lp.pad {
+                bail!(
+                    "layer {li}: pad {}/out_hw {} inconsistent with \
+                     SAME geometry ({pad}/{out})",
+                    lp.pad,
+                    lp.out_hw
+                );
+            }
+            // arity before allocation: a decoded lp.a is untrusted, so
+            // reject a mismatch before sizing anything by it
+            if lp.exec_order.len() != lp.a {
+                bail!("layer {li}: exec_order arity != {} filters", lp.a);
+            }
+            if lp.bias.len() != lp.a {
+                bail!("layer {li}: bias arity != {} filters", lp.a);
+            }
+            // exec_order must be a duplicate-free permutation of 0..a
+            // (the OutPlanes race-freedom argument)
+            let mut seen = vec![false; lp.a];
+            if !lp.exec_order.iter().all(|&f| {
+                f < lp.a && !std::mem::replace(&mut seen[f], true)
+            }) {
+                bail!("layer {li}: exec_order is not a permutation");
+            }
+            // blocks partition exec_order contiguously
+            let mut pos = 0usize;
+            for b in &lp.blocks {
+                if b.span.start != pos || b.span.end < b.span.start {
+                    bail!("layer {li}: blocks do not partition exec_order");
+                }
+                pos = b.span.end;
+            }
+            if pos != lp.exec_order.len() {
+                bail!("layer {li}: blocks do not cover exec_order");
+            }
+            // filter_ranges cover kernels contiguously, one per filter
+            if lp.filter_ranges.len() != lp.a {
+                bail!("layer {li}: filter_ranges arity");
+            }
+            let mut kpos = 0usize;
+            for r in &lp.filter_ranges {
+                if r.start != kpos || r.end < r.start {
+                    bail!("layer {li}: filter_ranges not contiguous");
+                }
+                kpos = r.end;
+            }
+            if kpos != lp.kernels.len() {
+                bail!("layer {li}: filter_ranges do not cover kernels");
+            }
+            if lp.style_rows.len() != lp.styles.len() {
+                bail!("layer {li}: style_rows/styles arity");
+            }
+            for k in &lp.kernels {
+                let style = k.style as usize;
+                if style >= lp.styles.len() {
+                    bail!("layer {li}: kernel style {style} out of range");
+                }
+                if (k.ch as usize) >= lp.c {
+                    bail!("layer {li}: kernel channel {} out of range", k.ch);
+                }
+                let taps = lp.styles[style].count_ones() as usize;
+                if k.off as usize + taps > lp.payload.len() {
+                    bail!("layer {li}: kernel payload out of bounds");
+                }
+            }
+        }
+        if self.steps.len() != self.dims.len() {
+            bail!("steps/dims arity mismatch");
+        }
+        for (si, step) in self.steps.iter().enumerate() {
+            match step {
+                PlanStep::Conv { layer } => {
+                    if *layer >= self.layers.len() {
+                        bail!("step {si}: conv layer {layer} out of range");
+                    }
+                }
+                PlanStep::Proj { layer, slot } => {
+                    if *layer >= self.layers.len()
+                        || *slot >= self.slot_sizes.len()
+                    {
+                        bail!("step {si}: proj layer/slot out of range");
+                    }
+                }
+                PlanStep::Save { slot } | PlanStep::Add { slot } => {
+                    if *slot >= self.slot_sizes.len() {
+                        bail!("step {si}: slot {slot} out of range");
+                    }
+                }
+                _ => {}
+            }
+        }
+        if !matches!(self.steps.last(), Some(PlanStep::Fc)) {
+            bail!("plan does not end in an fc step");
+        }
+        // replay the schedule's shape chain (what lower_schedule
+        // established at compile time): every conv input must match the
+        // running feature-map dims, so step reads always fit the
+        // fmap-sized arena buffers
+        let mut cur = self.in_dims;
+        for (si, (step, d)) in
+            self.steps.iter().zip(&self.dims).enumerate()
+        {
+            let expect = match step {
+                PlanStep::Conv { layer } => {
+                    let lp = &self.layers[*layer];
+                    if lp.c != cur.c || lp.in_hw != cur.hw {
+                        bail!(
+                            "step {si}: conv expects ({}, {}hw), chain \
+                             has ({}, {}hw)",
+                            lp.c,
+                            lp.in_hw,
+                            cur.c,
+                            cur.hw
+                        );
+                    }
+                    StepDims {
+                        c: lp.a,
+                        hw: lp.out_hw,
+                    }
+                }
+                PlanStep::Pool => StepDims {
+                    c: cur.c,
+                    hw: cur.hw / 2,
+                },
+                _ => cur,
+            };
+            if *d != expect {
+                bail!(
+                    "step {si}: recorded dims ({}, {}hw) != derived \
+                     ({}, {}hw)",
+                    d.c,
+                    d.hw,
+                    expect.c,
+                    expect.hw
+                );
+            }
+            cur = expect;
+        }
+        // fc head: the executor indexes fc_w rows by class and reads
+        // fc_w.cols() gap entries, so mismatched decoded tensors must
+        // fail here, not panic mid-inference
+        let classes = self.ir.classes;
+        if self.ir.fc_w.shape().len() != 2
+            || self.ir.fc_w.rows() != classes
+            || self.ir.fc_b.len() != classes
+        {
+            bail!(
+                "fc head {:?}/{:?} does not match {classes} classes",
+                self.ir.fc_w.shape(),
+                self.ir.fc_b.shape()
+            );
+        }
+        if self.ir.fc_w.cols() > self.gap_len {
+            bail!(
+                "fc input dim {} exceeds gap buffer {}",
+                self.ir.fc_w.cols(),
+                self.gap_len
+            );
+        }
+        // arena sizing must equal the schedule-derived maximum (what the
+        // compiler computes), so a corrupt size can neither starve the
+        // ping-pong buffers nor balloon the allocation
+        let max_elems = self
+            .dims
+            .iter()
+            .map(|d| d.elems())
+            .fold(self.in_dims.elems(), usize::max);
+        if self.fmap_elems != max_elems {
+            bail!(
+                "fmap_elems {} != schedule maximum {max_elems}",
+                self.fmap_elems
+            );
+        }
+        // every other arena input is schedule-derivable too; recompute
+        // them exactly as lower_schedule does (slot/layer indices were
+        // range-checked above)
+        let mut slots = vec![0usize; self.slot_sizes.len()];
+        let mut proj_scratch = 0usize;
+        let mut gap = 0usize;
+        for (step, d) in self.steps.iter().zip(&self.dims) {
+            match step {
+                PlanStep::Save { slot } => {
+                    slots[*slot] = slots[*slot].max(d.elems());
+                }
+                PlanStep::Proj { layer, slot } => {
+                    let out = self.layers[*layer].out_elems();
+                    slots[*slot] = slots[*slot].max(out);
+                    proj_scratch = proj_scratch.max(out);
+                }
+                PlanStep::Gap => gap = gap.max(d.c),
+                _ => {}
+            }
+        }
+        if self.slot_sizes != slots
+            || self.proj_scratch_elems != proj_scratch
+            || self.gap_len != gap
+        {
+            bail!(
+                "arena sizing (slots {:?}, proj {}, gap {}) disagrees \
+                 with the schedule (slots {slots:?}, proj \
+                 {proj_scratch}, gap {gap})",
+                self.slot_sizes,
+                self.proj_scratch_elems,
+                self.gap_len
+            );
+        }
+        Ok(())
+    }
 }
 
 /// The pass pipeline. Passes run in a fixed order (reorder → compress →
@@ -688,6 +933,57 @@ mod tests {
         assert_eq!(arena.alloc_events(), 0);
         arena.ping.slice_mut(plan.fmap_elems + 1);
         assert_eq!(arena.alloc_events(), 1);
+    }
+
+    #[test]
+    fn validate_accepts_compiled_plans_and_catches_tampering() {
+        use super::super::synth;
+        let (spec, params) = synth::res_style("val", 8, 4, &[4, 6], 2);
+        let ir = ModelIR::build(&spec, &params).unwrap();
+        let plan = compile_plan(ir, 2).unwrap();
+        plan.validate().unwrap();
+        // duplicate filter in a layer's schedule -> two worker blocks
+        // could alias one output plane
+        let mut bad = plan.clone();
+        bad.layers[0].exec_order[0] = bad.layers[0].exec_order[1];
+        assert!(bad.validate().is_err());
+        // schedule step pointing past the layer table
+        let mut bad = plan.clone();
+        for s in bad.steps.iter_mut() {
+            if let PlanStep::Conv { layer } = s {
+                *layer = bad.layers.len();
+                break;
+            }
+        }
+        assert!(bad.validate().is_err());
+        // kernel payload offset past the packed buffer
+        let mut bad = plan.clone();
+        if let Some(k) = bad.layers[0].kernels.first_mut() {
+            k.off = u32::MAX;
+        }
+        assert!(bad.validate().is_err());
+        // bias shorter than the filter count would panic o.fill(bias[f])
+        let mut bad = plan.clone();
+        bad.layers[0].bias.pop();
+        assert!(bad.validate().is_err());
+        // fc head narrower than the class count
+        let mut bad = plan.clone();
+        bad.ir.fc_b = crate::tensor::Tensor::zeros(&[1]);
+        assert!(bad.validate().is_err());
+        // ballooned arena sizing
+        let mut bad = plan.clone();
+        bad.fmap_elems += 1;
+        assert!(bad.validate().is_err());
+        // truncated block partition
+        let mut bad = plan;
+        bad.layers[0].blocks.pop();
+        if bad.layers[0].blocks.is_empty() {
+            bad.layers[0].blocks.push(FilterBlock {
+                span: 0..0,
+                cost: 0,
+            });
+        }
+        assert!(bad.validate().is_err());
     }
 
     #[test]

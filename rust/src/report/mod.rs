@@ -101,6 +101,16 @@ pub fn secs(x: f64) -> String {
     format!("{x:.2} s")
 }
 
+/// Microsecond latency cell for the serving-tier tables.
+pub fn us(x: f64) -> String {
+    format!("{x:.0} us")
+}
+
+/// Requests-per-second cell for the serving-tier tables.
+pub fn qps(x: f64) -> String {
+    format!("{x:.1} req/s")
+}
+
 /// Humanized byte count for plan/arena stats ("512 B", "3.4 KiB",
 /// "1.2 MiB").
 pub fn human_bytes(n: usize) -> String {
@@ -148,6 +158,8 @@ mod tests {
         assert_eq!(pct(0.941), "94.1%");
         assert_eq!(rate(16.0), "16.0x");
         assert_eq!(secs(1.234), "1.23 s");
+        assert_eq!(us(412.6), "413 us");
+        assert_eq!(qps(87.25), "87.2 req/s");
         assert_eq!(loss_cell(0.941, 0.942), "-0.1%");
         assert_eq!(loss_cell(0.941, 0.930), "+1.1%");
         assert_eq!(human_bytes(512), "512 B");

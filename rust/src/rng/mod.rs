@@ -96,6 +96,16 @@ impl Pcg32 {
     pub fn uniform_pixel(&mut self) -> f32 {
         self.below(256) as f32 / 255.0
     }
+
+    /// Exponential variate with the given mean (> 0): the Poisson
+    /// interarrival gaps of the open-loop load generator
+    /// (`serve::loadgen`).
+    pub fn exponential(&mut self, mean: f32) -> f32 {
+        // 1 - uniform() lies in (0, 1], so ln() is finite and the variate
+        // is non-negative
+        let u = 1.0 - self.uniform();
+        -mean * u.ln()
+    }
 }
 
 #[cfg(test)]
@@ -187,6 +197,20 @@ mod tests {
             let q = (p * 255.0).round() / 255.0;
             assert!((p - q).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn exponential_moments_and_support() {
+        let mut r = Pcg32::seeded(23);
+        let n = 20_000;
+        let mut mean = 0.0f64;
+        for _ in 0..n {
+            let x = r.exponential(2.0);
+            assert!(x >= 0.0 && x.is_finite(), "x={x}");
+            mean += x as f64;
+        }
+        mean /= n as f64;
+        assert!((mean - 2.0).abs() < 0.1, "mean={mean}");
     }
 
     #[test]

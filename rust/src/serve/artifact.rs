@@ -1,0 +1,968 @@
+//! Versioned, checksummed binary serialization of a compiled
+//! [`ExecutionPlan`] — the deployable *plan artifact*.
+//!
+//! The expensive part of mobile deployment is the
+//! [`PassManager`](crate::mobile::plan::PassManager) lowering (measured in
+//! `bench_mobile`/`bench_serve`); an artifact pays it once. Layout, all
+//! little-endian:
+//!
+//! ```text
+//! magic  b"RPLN"
+//! u32    FORMAT_VERSION
+//! sections, each framed as (u32 id, u64 byte length, payload):
+//!   1 IR        model id, op stream, conv tensors + pattern masks, fc head
+//!   2 LAYERS    per layer: packed payload buffer, kernel headers,
+//!               row-grouped codelets, filter schedule, worker blocks
+//!   3 SCHEDULE  lowered steps + per-step dims + arena sizing
+//!   4 REPORT    compile report (pass gains; feeds the cost model)
+//!   5 STATS     plan stats (byte footprints, block/thread counts)
+//! u64    FNV-1a checksum of every preceding byte
+//! ```
+//!
+//! Loading is strict: bad magic, unknown version, checksum mismatch,
+//! section framing drift, truncation, or trailing bytes are all hard
+//! errors, the codelet section is cross-checked against a recomputation
+//! from the style table, and the reconstructed plan must pass
+//! [`ExecutionPlan::validate`]. The round-trip guarantee — an executor
+//! over `load(save(plan))` produces **bit-identical** outputs to one over
+//! `plan` — is asserted by [`verify_roundtrip`], `tests/serve_integration.rs`,
+//! and a CI smoke step.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::Act;
+use crate::mobile::engine::{Executor, KERNEL_KINDS};
+use crate::mobile::ir::{ConvIR, IrOp, ModelIR};
+use crate::mobile::passes::{self, CompileReport, LayerReport, StyleRows};
+use crate::mobile::plan::{
+    ExecutionPlan, FilterBlock, LayerPlan, PackedKernel, PlanStats,
+    PlanStep, StepDims,
+};
+use crate::tensor::Tensor;
+use crate::util::Stopwatch;
+
+/// Bump on any incompatible layout change; loaders reject other versions.
+pub const FORMAT_VERSION: u32 = 1;
+
+const MAGIC: &[u8; 4] = b"RPLN";
+
+const SEC_IR: u32 = 1;
+const SEC_LAYERS: u32 = 2;
+const SEC_SCHEDULE: u32 = 3;
+const SEC_REPORT: u32 = 4;
+const SEC_STATS: u32 = 5;
+
+/// FNV-1a 64-bit over `bytes` (no external crates offline; collision
+/// resistance is not a goal — this catches disk/transport corruption).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// Little-endian byte cursor
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn usz(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    fn i64v(&mut self, v: i64) {
+        self.u64(v as u64);
+    }
+
+    fn f32v(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+
+    fn f32s(&mut self, xs: &[f32]) {
+        self.usz(xs.len());
+        for &x in xs {
+            self.f32v(x);
+        }
+    }
+
+    fn str_(&mut self, s: &str) {
+        self.usz(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    fn tensor(&mut self, t: &Tensor) {
+        self.usz(t.shape().len());
+        for &d in t.shape() {
+            self.usz(d);
+        }
+        self.f32s(t.data());
+    }
+
+    fn section(&mut self, id: u32, body: Writer) {
+        self.u32(id);
+        self.u64(body.buf.len() as u64);
+        self.buf.extend_from_slice(&body.buf);
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!(
+                "artifact truncated: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.remaining()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn usz(&mut self) -> Result<usize> {
+        Ok(self.u64()? as usize)
+    }
+
+    /// Collection length, capped by the bytes actually left in this
+    /// reader: every element consumes at least `min_encoded` bytes of
+    /// input, so any larger count is guaranteed truncation — reject it
+    /// before a `Vec::with_capacity` can reserve a multiple of the file
+    /// size on garbage. (Scalar size fields like `fmap_elems` go through
+    /// plain [`Reader::usz`]: arenas are legitimately larger than the
+    /// weight file, and validate() pins them to the schedule.)
+    fn count(&mut self, min_encoded: usize) -> Result<usize> {
+        let v = self.u64()?;
+        let cap = (self.remaining() / min_encoded.max(1)) as u64;
+        if v > cap {
+            bail!(
+                "artifact corrupt: count {v} exceeds remaining data \
+                 ({} bytes / {min_encoded} per element)",
+                self.remaining()
+            );
+        }
+        Ok(v as usize)
+    }
+
+    fn i64v(&mut self) -> Result<i64> {
+        Ok(self.u64()? as i64)
+    }
+
+    fn f32v(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.count(4)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f32v()?);
+        }
+        Ok(out)
+    }
+
+    fn str_(&mut self) -> Result<String> {
+        let n = self.count(1)?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .context("artifact corrupt: non-utf8 string")
+    }
+
+    fn tensor(&mut self) -> Result<Tensor> {
+        let ndim = self.count(8)?;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(self.usz()?);
+        }
+        let data = self.f32s()?;
+        Tensor::from_vec(&shape, data)
+            .context("artifact corrupt: tensor shape/data mismatch")
+    }
+
+    /// Open section `id`, returning a sub-reader clamped to its length.
+    fn section(&mut self, id: u32) -> Result<Reader<'a>> {
+        let got = self.u32()?;
+        if got != id {
+            bail!("artifact corrupt: expected section {id}, found {got}");
+        }
+        let len = self.usz()?;
+        Ok(Reader::new(self.take(len)?))
+    }
+
+    fn finish_section(self, id: u32) -> Result<()> {
+        if self.remaining() != 0 {
+            bail!(
+                "artifact corrupt: section {id} has {} unread bytes",
+                self.remaining()
+            );
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Encode
+// ---------------------------------------------------------------------------
+
+fn act_tag(a: Act) -> u8 {
+    match a {
+        Act::None => 0,
+        Act::Relu => 1,
+    }
+}
+
+fn act_from(tag: u8) -> Result<Act> {
+    Ok(match tag {
+        0 => Act::None,
+        1 => Act::Relu,
+        other => bail!("artifact corrupt: unknown activation tag {other}"),
+    })
+}
+
+fn encode_ir(ir: &ModelIR) -> Writer {
+    let mut w = Writer::default();
+    w.str_(&ir.model_id);
+    w.usz(ir.in_hw);
+    w.usz(ir.classes);
+    w.usz(ir.convs.len());
+    for c in &ir.convs {
+        w.usz(c.op_idx);
+        w.usz(c.a);
+        w.usz(c.c);
+        w.usz(c.kh);
+        w.usz(c.kw);
+        w.usz(c.stride);
+        w.u8(act_tag(c.act));
+        w.usz(c.in_hw);
+        w.usz(c.out_hw);
+        w.tensor(&c.w);
+        w.tensor(&c.bias);
+        w.usz(c.pattern.len());
+        for &p in &c.pattern {
+            w.u16(p);
+        }
+        w.str_(&c.tag);
+        w.u8(c.is_proj as u8);
+    }
+    w.usz(ir.ops.len());
+    for op in &ir.ops {
+        match op {
+            IrOp::Conv(ci) => {
+                w.u8(0);
+                w.usz(*ci);
+            }
+            IrOp::Pool => w.u8(1),
+            IrOp::Save { tag } => {
+                w.u8(2);
+                w.str_(tag);
+            }
+            IrOp::Proj(ci) => {
+                w.u8(3);
+                w.usz(*ci);
+            }
+            IrOp::Add { tag } => {
+                w.u8(4);
+                w.str_(tag);
+            }
+            IrOp::Relu => w.u8(5),
+            IrOp::Gap => w.u8(6),
+            IrOp::Fc => w.u8(7),
+        }
+    }
+    w.tensor(&ir.fc_w);
+    w.tensor(&ir.fc_b);
+    w
+}
+
+fn decode_ir(r: &mut Reader<'_>) -> Result<ModelIR> {
+    let model_id = r.str_()?;
+    let in_hw = r.usz()?;
+    let classes = r.usz()?;
+    let n_convs = r.count(64)?;
+    let mut convs = Vec::with_capacity(n_convs);
+    for _ in 0..n_convs {
+        let op_idx = r.usz()?;
+        let a = r.usz()?;
+        let c = r.usz()?;
+        let kh = r.usz()?;
+        let kw = r.usz()?;
+        let stride = r.usz()?;
+        let act = act_from(r.u8()?)?;
+        let c_in_hw = r.usz()?;
+        let c_out_hw = r.usz()?;
+        let wt = r.tensor()?;
+        let bias = r.tensor()?;
+        let n_pat = r.count(2)?;
+        let mut pattern = Vec::with_capacity(n_pat);
+        for _ in 0..n_pat {
+            pattern.push(r.u16()?);
+        }
+        let tag = r.str_()?;
+        let is_proj = r.u8()? != 0;
+        convs.push(ConvIR {
+            op_idx,
+            a,
+            c,
+            kh,
+            kw,
+            stride,
+            act,
+            in_hw: c_in_hw,
+            out_hw: c_out_hw,
+            w: wt,
+            bias,
+            pattern,
+            tag,
+            is_proj,
+        });
+    }
+    let n_ops = r.count(1)?;
+    let mut ops = Vec::with_capacity(n_ops);
+    for _ in 0..n_ops {
+        let op = match r.u8()? {
+            0 => IrOp::Conv(r.usz()?),
+            1 => IrOp::Pool,
+            2 => IrOp::Save { tag: r.str_()? },
+            3 => IrOp::Proj(r.usz()?),
+            4 => IrOp::Add { tag: r.str_()? },
+            5 => IrOp::Relu,
+            6 => IrOp::Gap,
+            7 => IrOp::Fc,
+            other => bail!("artifact corrupt: unknown ir op tag {other}"),
+        };
+        ops.push(op);
+    }
+    let fc_w = r.tensor()?;
+    let fc_b = r.tensor()?;
+    Ok(ModelIR {
+        model_id,
+        in_hw,
+        classes,
+        convs,
+        ops,
+        fc_w,
+        fc_b,
+    })
+}
+
+fn encode_style_rows(w: &mut Writer, rows: &StyleRows) {
+    w.usz(rows.len());
+    for (ky, taps) in rows {
+        w.usz(*ky);
+        w.usz(taps.len());
+        for &(kx, slot) in taps {
+            w.usz(kx);
+            w.usz(slot);
+        }
+    }
+}
+
+fn decode_style_rows(r: &mut Reader<'_>) -> Result<StyleRows> {
+    let n = r.count(16)?;
+    let mut rows = Vec::with_capacity(n);
+    for _ in 0..n {
+        let ky = r.usz()?;
+        let n_taps = r.count(16)?;
+        let mut taps = Vec::with_capacity(n_taps);
+        for _ in 0..n_taps {
+            let kx = r.usz()?;
+            let slot = r.usz()?;
+            taps.push((kx, slot));
+        }
+        rows.push((ky, taps));
+    }
+    Ok(rows)
+}
+
+fn encode_layers(layers: &[LayerPlan]) -> Writer {
+    let mut w = Writer::default();
+    w.usz(layers.len());
+    for lp in layers {
+        w.usz(lp.conv);
+        w.usz(lp.a);
+        w.usz(lp.c);
+        w.usz(lp.kh);
+        w.usz(lp.kw);
+        w.usz(lp.stride);
+        w.usz(lp.in_hw);
+        w.usz(lp.out_hw);
+        w.i64v(lp.pad);
+        w.u8(act_tag(lp.act));
+        w.f32s(&lp.bias);
+        w.f32s(&lp.payload);
+        w.usz(lp.kernels.len());
+        for k in &lp.kernels {
+            w.u32(k.ch);
+            w.u16(k.style);
+            w.u32(k.off);
+        }
+        w.usz(lp.filter_ranges.len());
+        for r in &lp.filter_ranges {
+            w.usz(r.start);
+            w.usz(r.end);
+        }
+        w.usz(lp.styles.len());
+        for &s in &lp.styles {
+            w.u16(s);
+        }
+        w.usz(lp.style_rows.len());
+        for rows in &lp.style_rows {
+            encode_style_rows(&mut w, rows);
+        }
+        w.usz(lp.exec_order.len());
+        for &f in &lp.exec_order {
+            w.usz(f);
+        }
+        w.usz(lp.blocks.len());
+        for b in &lp.blocks {
+            w.usz(b.span.start);
+            w.usz(b.span.end);
+            w.u64(b.cost);
+        }
+    }
+    w
+}
+
+fn decode_layers(r: &mut Reader<'_>) -> Result<Vec<LayerPlan>> {
+    let n = r.count(64)?;
+    let mut layers = Vec::with_capacity(n);
+    for li in 0..n {
+        let conv = r.usz()?;
+        let a = r.usz()?;
+        let c = r.usz()?;
+        let kh = r.usz()?;
+        let kw = r.usz()?;
+        // kh/kw feed loop bounds (row_group below, kernel inner loops)
+        // and the u16 style mask holds at most 16 taps — reject garbage
+        // before it can spin or overflow a shift
+        if kh == 0 || kw == 0 || kh.saturating_mul(kw) > 16 {
+            bail!(
+                "artifact corrupt: layer {li} kernel geometry {kh}x{kw} \
+                 (the pattern mask supports at most 16 taps)"
+            );
+        }
+        let stride = r.usz()?;
+        let in_hw = r.usz()?;
+        let out_hw = r.usz()?;
+        let pad = r.i64v()?;
+        let act = act_from(r.u8()?)?;
+        let bias = r.f32s()?;
+        let payload = r.f32s()?;
+        let n_kernels = r.count(10)?;
+        let mut kernels = Vec::with_capacity(n_kernels);
+        for _ in 0..n_kernels {
+            let ch = r.u32()?;
+            let style = r.u16()?;
+            let off = r.u32()?;
+            kernels.push(PackedKernel { ch, style, off });
+        }
+        let n_ranges = r.count(16)?;
+        let mut filter_ranges = Vec::with_capacity(n_ranges);
+        for _ in 0..n_ranges {
+            let start = r.usz()?;
+            let end = r.usz()?;
+            filter_ranges.push(start..end);
+        }
+        let n_styles = r.count(2)?;
+        let mut styles = Vec::with_capacity(n_styles);
+        for _ in 0..n_styles {
+            styles.push(r.u16()?);
+        }
+        let n_rows = r.count(8)?;
+        let mut style_rows = Vec::with_capacity(n_rows);
+        for _ in 0..n_rows {
+            style_rows.push(decode_style_rows(r)?);
+        }
+        // the codelet section must agree with a recomputation from the
+        // style table — a drifted row grouping would silently mis-index
+        // the packed payload
+        if style_rows.len() != styles.len() {
+            bail!("artifact corrupt: layer {li} codelet arity");
+        }
+        for (si, (&pat, rows)) in
+            styles.iter().zip(&style_rows).enumerate()
+        {
+            if *rows != passes::row_group(pat, kh, kw) {
+                bail!(
+                    "artifact corrupt: layer {li} style {si} codelets \
+                     disagree with the style table"
+                );
+            }
+        }
+        let n_order = r.count(8)?;
+        let mut exec_order = Vec::with_capacity(n_order);
+        for _ in 0..n_order {
+            exec_order.push(r.usz()?);
+        }
+        let n_blocks = r.count(24)?;
+        let mut blocks = Vec::with_capacity(n_blocks);
+        for _ in 0..n_blocks {
+            let start = r.usz()?;
+            let end = r.usz()?;
+            let cost = r.u64()?;
+            blocks.push(FilterBlock {
+                span: start..end,
+                cost,
+            });
+        }
+        layers.push(LayerPlan {
+            conv,
+            a,
+            c,
+            kh,
+            kw,
+            stride,
+            in_hw,
+            out_hw,
+            pad,
+            act,
+            bias,
+            payload,
+            kernels,
+            filter_ranges,
+            styles,
+            style_rows,
+            exec_order,
+            blocks,
+        });
+    }
+    Ok(layers)
+}
+
+fn encode_schedule(p: &ExecutionPlan) -> Writer {
+    let mut w = Writer::default();
+    w.usz(p.steps.len());
+    for s in &p.steps {
+        match s {
+            PlanStep::Conv { layer } => {
+                w.u8(0);
+                w.usz(*layer);
+            }
+            PlanStep::Pool => w.u8(1),
+            PlanStep::Save { slot } => {
+                w.u8(2);
+                w.usz(*slot);
+            }
+            PlanStep::Proj { layer, slot } => {
+                w.u8(3);
+                w.usz(*layer);
+                w.usz(*slot);
+            }
+            PlanStep::Add { slot } => {
+                w.u8(4);
+                w.usz(*slot);
+            }
+            PlanStep::Relu => w.u8(5),
+            PlanStep::Gap => w.u8(6),
+            PlanStep::Fc => w.u8(7),
+        }
+    }
+    w.usz(p.dims.len());
+    for d in &p.dims {
+        w.usz(d.c);
+        w.usz(d.hw);
+    }
+    w.usz(p.in_dims.c);
+    w.usz(p.in_dims.hw);
+    w.usz(p.slot_sizes.len());
+    for &s in &p.slot_sizes {
+        w.usz(s);
+    }
+    w.usz(p.fmap_elems);
+    w.usz(p.proj_scratch_elems);
+    w.usz(p.gap_len);
+    w.usz(p.threads);
+    w
+}
+
+struct ScheduleSection {
+    steps: Vec<PlanStep>,
+    dims: Vec<StepDims>,
+    in_dims: StepDims,
+    slot_sizes: Vec<usize>,
+    fmap_elems: usize,
+    proj_scratch_elems: usize,
+    gap_len: usize,
+    threads: usize,
+}
+
+fn decode_schedule(r: &mut Reader<'_>) -> Result<ScheduleSection> {
+    let n_steps = r.count(1)?;
+    let mut steps = Vec::with_capacity(n_steps);
+    for _ in 0..n_steps {
+        let step = match r.u8()? {
+            0 => PlanStep::Conv { layer: r.usz()? },
+            1 => PlanStep::Pool,
+            2 => PlanStep::Save { slot: r.usz()? },
+            3 => PlanStep::Proj {
+                layer: r.usz()?,
+                slot: r.usz()?,
+            },
+            4 => PlanStep::Add { slot: r.usz()? },
+            5 => PlanStep::Relu,
+            6 => PlanStep::Gap,
+            7 => PlanStep::Fc,
+            other => bail!("artifact corrupt: unknown step tag {other}"),
+        };
+        steps.push(step);
+    }
+    let n_dims = r.count(16)?;
+    let mut dims = Vec::with_capacity(n_dims);
+    for _ in 0..n_dims {
+        let c = r.usz()?;
+        let hw = r.usz()?;
+        dims.push(StepDims { c, hw });
+    }
+    let in_c = r.usz()?;
+    let in_hw = r.usz()?;
+    let n_slots = r.count(8)?;
+    let mut slot_sizes = Vec::with_capacity(n_slots);
+    for _ in 0..n_slots {
+        slot_sizes.push(r.usz()?);
+    }
+    Ok(ScheduleSection {
+        steps,
+        dims,
+        in_dims: StepDims { c: in_c, hw: in_hw },
+        slot_sizes,
+        fmap_elems: r.usz()?,
+        proj_scratch_elems: r.usz()?,
+        gap_len: r.usz()?,
+        threads: r.usz()?,
+    })
+}
+
+fn encode_report(rep: &CompileReport) -> Writer {
+    let mut w = Writer::default();
+    w.usz(rep.layers.len());
+    for l in &rep.layers {
+        w.usz(l.dense_macs);
+        w.usz(l.sparse_macs);
+        w.usz(l.dense_bytes);
+        w.usz(l.compressed_bytes);
+        w.usz(l.styles);
+        w.usz(l.switches_before);
+        w.usz(l.switches_after);
+        w.usz(l.loads_naive);
+        w.usz(l.loads_lre);
+    }
+    w
+}
+
+fn decode_report(r: &mut Reader<'_>) -> Result<CompileReport> {
+    let n = r.count(72)?;
+    let mut layers = Vec::with_capacity(n);
+    for _ in 0..n {
+        layers.push(LayerReport {
+            dense_macs: r.usz()?,
+            sparse_macs: r.usz()?,
+            dense_bytes: r.usz()?,
+            compressed_bytes: r.usz()?,
+            styles: r.usz()?,
+            switches_before: r.usz()?,
+            switches_after: r.usz()?,
+            loads_naive: r.usz()?,
+            loads_lre: r.usz()?,
+        });
+    }
+    Ok(CompileReport { layers })
+}
+
+fn encode_stats(s: &PlanStats) -> Writer {
+    // pass_ms is intentionally dropped: wall times of the original compile
+    // are not plan state, and a loaded plan reports its own load time
+    let mut w = Writer::default();
+    w.usz(s.payload_bytes);
+    w.usz(s.header_bytes);
+    w.usz(s.arena_bytes);
+    w.usz(s.n_blocks);
+    w.usz(s.threads);
+    w
+}
+
+/// Serialize `plan` to its canonical artifact byte form.
+pub fn encode_plan(plan: &ExecutionPlan) -> Vec<u8> {
+    let mut w = Writer::default();
+    w.buf.extend_from_slice(MAGIC);
+    w.u32(FORMAT_VERSION);
+    w.section(SEC_IR, encode_ir(&plan.ir));
+    w.section(SEC_LAYERS, encode_layers(&plan.layers));
+    w.section(SEC_SCHEDULE, encode_schedule(plan));
+    w.section(SEC_REPORT, encode_report(&plan.report));
+    w.section(SEC_STATS, encode_stats(&plan.stats));
+    let sum = fnv1a64(&w.buf);
+    w.u64(sum);
+    w.buf
+}
+
+/// Deserialize and validate an artifact produced by [`encode_plan`].
+pub fn decode_plan(bytes: &[u8]) -> Result<ExecutionPlan> {
+    let t = Stopwatch::start();
+    if bytes.len() < MAGIC.len() + 4 + 8 {
+        bail!("artifact truncated: {} bytes", bytes.len());
+    }
+    let (body, tail) = bytes.split_at(bytes.len() - 8);
+    let stored = u64::from_le_bytes(tail.try_into().unwrap());
+    let computed = fnv1a64(body);
+    if stored != computed {
+        bail!(
+            "artifact checksum mismatch: stored {stored:#018x}, \
+             computed {computed:#018x}"
+        );
+    }
+    let mut r = Reader::new(body);
+    if r.take(4)? != MAGIC {
+        bail!("not a plan artifact (bad magic)");
+    }
+    let version = r.u32()?;
+    if version != FORMAT_VERSION {
+        bail!(
+            "unsupported plan artifact version {version} \
+             (this build reads {FORMAT_VERSION})"
+        );
+    }
+    let mut sec = r.section(SEC_IR)?;
+    let ir = decode_ir(&mut sec)?;
+    sec.finish_section(SEC_IR)?;
+    let mut sec = r.section(SEC_LAYERS)?;
+    let layers = decode_layers(&mut sec)?;
+    sec.finish_section(SEC_LAYERS)?;
+    let mut sec = r.section(SEC_SCHEDULE)?;
+    let sched = decode_schedule(&mut sec)?;
+    sec.finish_section(SEC_SCHEDULE)?;
+    let mut sec = r.section(SEC_REPORT)?;
+    let report = decode_report(&mut sec)?;
+    sec.finish_section(SEC_REPORT)?;
+    let mut sec = r.section(SEC_STATS)?;
+    let payload_bytes = sec.usz()?;
+    let header_bytes = sec.usz()?;
+    let arena_bytes = sec.usz()?;
+    let n_blocks = sec.usz()?;
+    let stat_threads = sec.usz()?;
+    sec.finish_section(SEC_STATS)?;
+    if r.remaining() != 0 {
+        bail!("artifact corrupt: {} trailing bytes", r.remaining());
+    }
+    let plan = ExecutionPlan {
+        ir,
+        layers,
+        steps: sched.steps,
+        dims: sched.dims,
+        in_dims: sched.in_dims,
+        slot_sizes: sched.slot_sizes,
+        fmap_elems: sched.fmap_elems,
+        proj_scratch_elems: sched.proj_scratch_elems,
+        gap_len: sched.gap_len,
+        threads: sched.threads,
+        report,
+        stats: PlanStats {
+            pass_ms: vec![("artifact-load", t.ms())],
+            payload_bytes,
+            header_bytes,
+            arena_bytes,
+            n_blocks,
+            threads: stat_threads,
+        },
+    };
+    plan.validate()?;
+    Ok(plan)
+}
+
+/// Write `plan` to `path` (atomically: temp file + rename, so a torn
+/// write never leaves a half-artifact where a registry might load it).
+pub fn save(plan: &ExecutionPlan, path: impl AsRef<Path>) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let bytes = encode_plan(plan);
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, &bytes)
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming into {}", path.display()))?;
+    Ok(())
+}
+
+/// Read, checksum-verify, and validate a plan artifact from `path`.
+pub fn load(path: impl AsRef<Path>) -> Result<ExecutionPlan> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading plan artifact {}", path.display()))?;
+    decode_plan(&bytes)
+        .with_context(|| format!("loading plan artifact {}", path.display()))
+}
+
+/// Prove the round-trip guarantee on `probes` seeded random images: the
+/// loaded plan's executor must produce **bit-identical** logits to the
+/// original's, for every kernel in the registry.
+pub fn verify_roundtrip(
+    original: &ExecutionPlan,
+    loaded: &ExecutionPlan,
+    probes: usize,
+    seed: u64,
+) -> Result<()> {
+    for kind in KERNEL_KINDS {
+        let mut a = Executor::new(original, kind);
+        let mut b = Executor::new(loaded, kind);
+        for i in 0..probes {
+            // probes come from the canonical request-trace generator, so
+            // round-trip verification exercises exactly what serving does
+            let img = super::loadgen::request_image(
+                original.in_dims,
+                seed,
+                i as u64,
+            );
+            let want = a.execute(&img);
+            let got = b.execute(&img);
+            if want
+                .iter()
+                .zip(&got)
+                .any(|(x, y)| x.to_bits() != y.to_bits())
+            {
+                bail!(
+                    "artifact round-trip drift: probe {i} ({}) differs \
+                     from the in-memory plan",
+                    kind.name()
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mobile::plan::compile_plan;
+    use crate::mobile::synth;
+
+    fn small_plan(threads: usize) -> ExecutionPlan {
+        let (spec, mut params) =
+            synth::vgg_style("art_vgg", 8, 4, &[4, 6], 5);
+        synth::pattern_prune(&spec, &mut params, 0.25);
+        let ir = ModelIR::build(&spec, &params).unwrap();
+        compile_plan(ir, threads).unwrap()
+    }
+
+    #[test]
+    fn encode_is_canonical_and_decodes() {
+        let plan = small_plan(2);
+        let bytes = encode_plan(&plan);
+        let back = decode_plan(&bytes).unwrap();
+        // canonical form: re-encoding the decoded plan is byte-identical
+        assert_eq!(encode_plan(&back), bytes);
+        assert_eq!(back.threads, plan.threads);
+        assert_eq!(back.layers.len(), plan.layers.len());
+        assert_eq!(back.slot_sizes, plan.slot_sizes);
+        assert_eq!(back.fmap_elems, plan.fmap_elems);
+        verify_roundtrip(&plan, &back, 3, 42).unwrap();
+    }
+
+    #[test]
+    fn corruption_is_rejected() {
+        let plan = small_plan(1);
+        let bytes = encode_plan(&plan);
+        // flip one payload byte -> checksum must catch it
+        let mut bad = bytes.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x40;
+        let err = decode_plan(&bad).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+        // truncation
+        assert!(decode_plan(&bytes[..bytes.len() - 9]).is_err());
+        assert!(decode_plan(&bytes[..4]).is_err());
+        // bad magic (checksum recomputed so the magic check itself fires)
+        let mut nm = bytes.clone();
+        nm[0] = b'X';
+        let blen = nm.len() - 8;
+        let sum = fnv1a64(&nm[..blen]);
+        nm[blen..].copy_from_slice(&sum.to_le_bytes());
+        let err = decode_plan(&nm).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+        // future version
+        let mut nv = bytes.clone();
+        nv[4..8].copy_from_slice(&99u32.to_le_bytes());
+        let blen = nv.len() - 8;
+        let sum = fnv1a64(&nv[..blen]);
+        nv[blen..].copy_from_slice(&sum.to_le_bytes());
+        let err = decode_plan(&nv).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn save_load_file_roundtrip() {
+        let plan = small_plan(2);
+        let dir = std::env::temp_dir()
+            .join(format!("repro_artifact_{}", std::process::id()));
+        let path = dir.join("plan.rpln");
+        save(&plan, &path).unwrap();
+        let back = load(&path).unwrap();
+        verify_roundtrip(&plan, &back, 2, 7).unwrap();
+        // the loader reports its own timing, not the compile passes
+        assert_eq!(back.stats.pass_ms.len(), 1);
+        assert_eq!(back.stats.pass_ms[0].0, "artifact-load");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fnv_is_stable() {
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+}

@@ -1,0 +1,292 @@
+//! Dynamic micro-batching primitives: a bounded MPMC queue with explicit
+//! admission control and the batch-formation state machine.
+//!
+//! [`BoundedQueue`] is the server's single request queue (std `Mutex` +
+//! `Condvar`; no async runtime). Producers [`BoundedQueue::push`] and get
+//! an explicit [`PushError::Full`] back when the queue is at capacity —
+//! backpressure is a visible signal, never an unbounded buffer. Consumers
+//! call [`BoundedQueue::pop_batch`], which implements the batcher state
+//! machine:
+//!
+//! 1. **idle** — block until a first item arrives (or the queue closes);
+//! 2. **filling** — drain immediately-available items up to
+//!    [`BatchPolicy::max_batch`];
+//! 3. **waiting** — if the batch is still short, wait up to
+//!    [`BatchPolicy::max_wait`] past the *first* item for stragglers, so a
+//!    lone request never stalls longer than the window;
+//! 4. **dispatch** — return the batch (never empty while the queue is
+//!    open).
+//!
+//! Multiple workers can sit in `pop_batch` concurrently; the lock is
+//! released while waiting, so batches form in parallel under load.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Micro-batch formation knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// dispatch as soon as this many requests are in hand
+    pub max_batch: usize,
+    /// dispatch at latest this long after the first request of the batch
+    pub max_wait: Duration,
+}
+
+impl BatchPolicy {
+    pub fn new(max_batch: usize, max_wait_us: u64) -> Self {
+        BatchPolicy {
+            max_batch: max_batch.max(1),
+            max_wait: Duration::from_micros(max_wait_us),
+        }
+    }
+}
+
+/// Why a push was refused.
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// the queue is at capacity — admission control rejects the request
+    /// (the item is handed back so the caller can respond to its client)
+    Full(T),
+    /// the queue is shutting down
+    Closed(T),
+}
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded MPMC queue with condvar wakeups and explicit rejection.
+pub struct BoundedQueue<T> {
+    state: Mutex<QueueState<T>>,
+    nonempty: Condvar,
+    cap: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(cap: usize) -> Self {
+        BoundedQueue {
+            state: Mutex::new(QueueState {
+                items: VecDeque::new(),
+                closed: false,
+            }),
+            nonempty: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Enqueue, or reject with [`PushError::Full`] when at capacity /
+    /// [`PushError::Closed`] after [`BoundedQueue::close`]. Returns the
+    /// queue depth after the push.
+    pub fn push(&self, item: T) -> Result<usize, PushError<T>> {
+        let mut g = self.state.lock().unwrap();
+        if g.closed {
+            return Err(PushError::Closed(item));
+        }
+        if g.items.len() >= self.cap {
+            return Err(PushError::Full(item));
+        }
+        g.items.push_back(item);
+        let depth = g.items.len();
+        drop(g);
+        self.nonempty.notify_all();
+        Ok(depth)
+    }
+
+    /// Close the queue: further pushes fail, consumers drain what is left
+    /// and then see `None`.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.nonempty.notify_all();
+    }
+
+    /// Block for the next micro-batch per `policy`, with the batch
+    /// window anchored at `Instant::now()` when the first item is
+    /// drained. `None` once the queue is closed *and* drained; otherwise
+    /// the batch holds 1..=max_batch items.
+    pub fn pop_batch(&self, policy: &BatchPolicy) -> Option<Vec<T>> {
+        self.pop_batch_by(policy, |_| Instant::now())
+    }
+
+    /// [`BoundedQueue::pop_batch`] with an explicit window anchor: the
+    /// batch dispatches at latest `max_wait` past `anchor(first item)`.
+    /// The server anchors at the first request's *enqueue* time, so a
+    /// request that already waited in a backlog is never further delayed
+    /// by the straggler window.
+    pub fn pop_batch_by(
+        &self,
+        policy: &BatchPolicy,
+        anchor: impl Fn(&T) -> Instant,
+    ) -> Option<Vec<T>> {
+        let mut g = self.state.lock().unwrap();
+        // idle: wait for the first item
+        loop {
+            if !g.items.is_empty() {
+                break;
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.nonempty.wait(g).unwrap();
+        }
+        // filling: take whatever is already here
+        let mut batch = Vec::with_capacity(policy.max_batch);
+        while batch.len() < policy.max_batch {
+            match g.items.pop_front() {
+                Some(x) => batch.push(x),
+                None => break,
+            }
+        }
+        // waiting: hold the window open for stragglers
+        if batch.len() < policy.max_batch
+            && policy.max_wait > Duration::ZERO
+        {
+            let deadline = anchor(&batch[0]) + policy.max_wait;
+            loop {
+                if batch.len() >= policy.max_batch || g.closed {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (g2, timeout) = self
+                    .nonempty
+                    .wait_timeout(g, deadline - now)
+                    .unwrap();
+                g = g2;
+                while batch.len() < policy.max_batch {
+                    match g.items.pop_front() {
+                        Some(x) => batch.push(x),
+                        None => break,
+                    }
+                }
+                if timeout.timed_out() {
+                    break;
+                }
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn push_pop_fifo_up_to_max_batch() {
+        let q = BoundedQueue::new(16);
+        for i in 0..6 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.len(), 6);
+        let p = BatchPolicy::new(4, 0);
+        let b = q.pop_batch(&p).unwrap();
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        let b = q.pop_batch(&p).unwrap();
+        assert_eq!(b, vec![4, 5]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn full_queue_rejects_with_item_back() {
+        let q = BoundedQueue::new(2);
+        q.push("a").unwrap();
+        q.push("b").unwrap();
+        match q.push("c") {
+            Err(PushError::Full(item)) => assert_eq!(item, "c"),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.capacity(), 2);
+    }
+
+    #[test]
+    fn close_drains_then_ends() {
+        let q = BoundedQueue::new(8);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        q.close();
+        match q.push(3) {
+            Err(PushError::Closed(item)) => assert_eq!(item, 3),
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        let p = BatchPolicy::new(8, 0);
+        assert_eq!(q.pop_batch(&p).unwrap(), vec![1, 2]);
+        assert!(q.pop_batch(&p).is_none());
+    }
+
+    #[test]
+    fn waiting_state_collects_stragglers() {
+        let q = Arc::new(BoundedQueue::new(8));
+        q.push(0u32).unwrap();
+        let q2 = q.clone();
+        let producer = std::thread::spawn(move || {
+            // lands inside the 500ms window after the first item
+            std::thread::sleep(Duration::from_millis(30));
+            q2.push(1).unwrap();
+            q2.push(2).unwrap();
+        });
+        // max_batch 3: the batch completes as soon as the stragglers land
+        let p = BatchPolicy::new(3, 500_000);
+        let b = q.pop_batch(&p).unwrap();
+        producer.join().unwrap();
+        assert_eq!(b, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn window_expiry_dispatches_partial_batch() {
+        let q = BoundedQueue::new(8);
+        q.push(7u32).unwrap();
+        // nothing else arrives: a 1ms window must still dispatch
+        let p = BatchPolicy::new(4, 1_000);
+        let b = q.pop_batch(&p).unwrap();
+        assert_eq!(b, vec![7]);
+    }
+
+    #[test]
+    fn stale_anchor_skips_the_straggler_window() {
+        // a request that already sat in a backlog opens no fresh window:
+        // the anchored deadline is in the past, so dispatch is immediate
+        let q = BoundedQueue::new(8);
+        q.push(1u32).unwrap();
+        let anchored_in_past =
+            Instant::now() - Duration::from_millis(100);
+        let p = BatchPolicy::new(4, 50_000);
+        let t = Instant::now();
+        let b = q.pop_batch_by(&p, |_| anchored_in_past).unwrap();
+        assert_eq!(b, vec![1]);
+        assert!(
+            t.elapsed() < Duration::from_millis(40),
+            "stale anchor must not wait the full window"
+        );
+    }
+
+    #[test]
+    fn blocked_consumer_wakes_on_push() {
+        let q = Arc::new(BoundedQueue::new(4));
+        let q2 = q.clone();
+        let consumer = std::thread::spawn(move || {
+            q2.pop_batch(&BatchPolicy::new(2, 1_000)).unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        q.push(9u32).unwrap();
+        let b = consumer.join().unwrap();
+        assert_eq!(b, vec![9]);
+    }
+}

@@ -1,0 +1,214 @@
+//! Seeded load generation against a [`ServeHandle`] — the measurement
+//! half of the serving tier.
+//!
+//! Two standard load models:
+//!
+//! * **closed-loop** ([`LoadMode::Closed`]): `clients` synchronous client
+//!   threads, each submitting its next request only after the previous
+//!   response (classic think-time-zero closed system; throughput is
+//!   latency-bound);
+//! * **open-loop** ([`LoadMode::Open`]): one dispatcher paces submissions
+//!   at a target QPS with exponential (Poisson) interarrival gaps,
+//!   independent of completions — the model that exposes queueing collapse
+//!   and admission-control rejections.
+//!
+//! Every request image is a pure function of `(seed, request id)` via
+//! [`request_image`] ([`Pcg32::split_stream`]), so a trace is bit-for-bit
+//! reproducible regardless of client interleaving — the property the
+//! serving determinism tests lean on.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::mobile::engine::Fmap;
+use crate::mobile::plan::StepDims;
+use crate::rng::Pcg32;
+
+use super::server::{ServeHandle, SubmitError};
+
+/// Load model for a run.
+#[derive(Clone, Copy, Debug)]
+pub enum LoadMode {
+    /// `clients` synchronous closed-loop clients
+    Closed { clients: usize },
+    /// open-loop Poisson arrivals at `qps`
+    Open { qps: f64 },
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct LoadGenConfig {
+    pub mode: LoadMode,
+    /// total requests to issue
+    pub requests: usize,
+    /// trace seed: request `i`'s image is `request_image(dims, seed, i)`
+    pub seed: u64,
+}
+
+/// Outcome of one generated request.
+#[derive(Clone, Debug)]
+pub struct RequestOutcome {
+    /// trace index (== image id fed to [`request_image`])
+    pub trace_id: u64,
+    /// logits, when the request completed
+    pub logits: Option<Vec<f32>>,
+    /// set when admission control bounced the request
+    pub rejected: bool,
+}
+
+/// Aggregate result of a load run.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    /// one entry per trace id, in trace order
+    pub outcomes: Vec<RequestOutcome>,
+    pub completed: u64,
+    pub rejected: u64,
+    pub wall_secs: f64,
+    pub achieved_qps: f64,
+}
+
+/// The deterministic request trace: image `id` under `seed` for a plan
+/// with input `dims`. Pure in `(dims, seed, id)`.
+pub fn request_image(dims: StepDims, seed: u64, id: u64) -> Fmap {
+    let mut rng = Pcg32::split_stream(seed, id);
+    Fmap {
+        c: dims.c,
+        hw: dims.hw,
+        data: (0..dims.elems()).map(|_| rng.uniform()).collect(),
+    }
+}
+
+/// Drive `handle` with the configured load; blocks until every issued
+/// request resolved (response, rejection, or cancellation).
+pub fn run(
+    handle: &ServeHandle,
+    dims: StepDims,
+    cfg: &LoadGenConfig,
+) -> LoadReport {
+    let t0 = Instant::now();
+    let mut outcomes: Vec<RequestOutcome> = match cfg.mode {
+        LoadMode::Closed { clients } => {
+            run_closed(handle, dims, cfg, clients.max(1))
+        }
+        LoadMode::Open { qps } => run_open(handle, dims, cfg, qps),
+    };
+    let wall_secs = t0.elapsed().as_secs_f64();
+    outcomes.sort_by_key(|o| o.trace_id);
+    let completed =
+        outcomes.iter().filter(|o| o.logits.is_some()).count() as u64;
+    let rejected = outcomes.iter().filter(|o| o.rejected).count() as u64;
+    LoadReport {
+        outcomes,
+        completed,
+        rejected,
+        wall_secs,
+        achieved_qps: if wall_secs > 0.0 {
+            completed as f64 / wall_secs
+        } else {
+            0.0
+        },
+    }
+}
+
+fn run_closed(
+    handle: &ServeHandle,
+    dims: StepDims,
+    cfg: &LoadGenConfig,
+    clients: usize,
+) -> Vec<RequestOutcome> {
+    let results = Mutex::new(Vec::with_capacity(cfg.requests));
+    std::thread::scope(|s| {
+        for client in 0..clients {
+            let results = &results;
+            let handle = handle.clone();
+            s.spawn(move || {
+                // client k owns trace ids k, k+C, k+2C, ... — the id set
+                // (and so the image set) is independent of timing
+                let mut id = client as u64;
+                while (id as usize) < cfg.requests {
+                    let img = request_image(dims, cfg.seed, id);
+                    let outcome = match handle.infer(img) {
+                        Ok(resp) => RequestOutcome {
+                            trace_id: id,
+                            logits: Some(resp.logits),
+                            rejected: false,
+                        },
+                        Err(e) => RequestOutcome {
+                            trace_id: id,
+                            logits: None,
+                            rejected: matches!(
+                                e.downcast_ref::<SubmitError>(),
+                                Some(SubmitError::Rejected)
+                            ),
+                        },
+                    };
+                    results.lock().unwrap().push(outcome);
+                    id += clients as u64;
+                }
+            });
+        }
+    });
+    results.into_inner().unwrap()
+}
+
+fn run_open(
+    handle: &ServeHandle,
+    dims: StepDims,
+    cfg: &LoadGenConfig,
+    qps: f64,
+) -> Vec<RequestOutcome> {
+    let qps = qps.max(1e-3);
+    let mut gaps = Pcg32::split_stream(cfg.seed, u64::MAX);
+    let mut pending = Vec::new();
+    let mut outcomes = Vec::with_capacity(cfg.requests);
+    let mut next_at = Instant::now();
+    for id in 0..cfg.requests as u64 {
+        let now = Instant::now();
+        if next_at > now {
+            std::thread::sleep(next_at - now);
+        }
+        let img = request_image(dims, cfg.seed, id);
+        match handle.submit(img) {
+            Ok(ticket) => pending.push((id, ticket)),
+            Err(e) => outcomes.push(RequestOutcome {
+                trace_id: id,
+                logits: None,
+                rejected: matches!(e, SubmitError::Rejected),
+            }),
+        }
+        let gap_secs = gaps.exponential(1.0 / qps as f32);
+        next_at += Duration::from_secs_f64(gap_secs as f64);
+    }
+    for (id, ticket) in pending {
+        outcomes.push(match ticket.wait() {
+            Ok(resp) => RequestOutcome {
+                trace_id: id,
+                logits: Some(resp.logits),
+                rejected: false,
+            },
+            Err(_) => RequestOutcome {
+                trace_id: id,
+                logits: None,
+                rejected: false,
+            },
+        });
+    }
+    outcomes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_images_are_pure_in_seed_and_id() {
+        let dims = StepDims { c: 3, hw: 8 };
+        let a = request_image(dims, 9, 4);
+        let b = request_image(dims, 9, 4);
+        assert_eq!(a.data, b.data);
+        assert_eq!(a.data.len(), 3 * 8 * 8);
+        let c = request_image(dims, 9, 5);
+        assert_ne!(a.data, c.data, "distinct ids must differ");
+        let d = request_image(dims, 10, 4);
+        assert_ne!(a.data, d.data, "distinct seeds must differ");
+    }
+}

@@ -1,0 +1,40 @@
+//! Serving tier: plan artifacts, a compiled-plan registry, and a
+//! dynamic-batching inference server (DESIGN.md §11).
+//!
+//! The paper's end state is that users "directly benefit from compressed
+//! models" without re-running the pruning pipeline — i.e. pruned models
+//! are *deployed and served*. This subsystem is that missing tier on top
+//! of the mobile plan/executor split:
+//!
+//! * [`artifact`] — versioned, checksummed binary serialization of an
+//!   [`ExecutionPlan`](crate::mobile::plan::ExecutionPlan), so the
+//!   expensive `PassManager` lowering is paid once per deployment
+//!   (strict round-trip guarantee: loaded plans produce bit-identical
+//!   inference outputs);
+//! * [`registry`] — a concurrent `(model, scheme, rate, threads)` →
+//!   plan cache with single-flight misses and LRU eviction;
+//! * [`batcher`] — bounded request queue with explicit admission control
+//!   plus the micro-batch formation state machine (`max_batch` /
+//!   `max_wait_us`);
+//! * [`server`] — the multi-worker request loop over std
+//!   threads/channels (no async runtime), routing per-request responses
+//!   and folding latency/batch metrics into [`stats`];
+//! * [`loadgen`] — seeded open/closed-loop load generation for benches,
+//!   tests, and the `repro serve` CLI;
+//! * [`stats`] — latency percentiles, batch histograms, and the shared
+//!   bench harness.
+//!
+//! Everything here is artifact-free and PJRT-free: the CLI serves
+//! synthetic specs (`mobile::synth`) end to end on a bare machine.
+
+pub mod artifact;
+pub mod batcher;
+pub mod loadgen;
+pub mod registry;
+pub mod server;
+pub mod stats;
+
+pub use artifact::{load as load_plan, save as save_plan};
+pub use registry::{PlanKey, PlanRegistry};
+pub use server::{ServeHandle, Server, SubmitError};
+pub use stats::{ServeReport, ServeStats};

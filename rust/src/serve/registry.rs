@@ -1,0 +1,430 @@
+//! Concurrent compiled-plan cache with single-flight misses and LRU
+//! eviction.
+//!
+//! A deployment fleet serves many `(model, scheme, rate, threads)`
+//! configurations; compiling an [`ExecutionPlan`] is the expensive step
+//! (the whole `PassManager` lowering), so it must happen **at most once
+//! per key** even when many requests miss simultaneously. The registry
+//! does not know how plans are produced — callers pass a build closure
+//! (compile from a spec, or load a [`super::artifact`]) and the registry
+//! guarantees:
+//!
+//! * **hit**: a cached `Arc<ExecutionPlan>` is returned without building;
+//! * **miss**: exactly one caller runs the closure (single-flight); every
+//!   concurrent caller for the same key blocks on a condvar and receives
+//!   the same `Arc`;
+//! * **failure**: the builder's error propagates to it alone, the
+//!   in-flight marker is removed, and blocked callers retry (the next one
+//!   becomes the builder);
+//! * **eviction**: beyond `capacity` ready plans, the least-recently-used
+//!   entry is dropped (in-flight builds are never evicted).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::Result;
+
+use crate::mobile::plan::ExecutionPlan;
+
+/// Cache key for one servable configuration. `rate` is quantized to
+/// milli-units so the key is `Eq`/`Ord` without float comparisons.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct PlanKey {
+    pub model: String,
+    pub scheme: String,
+    pub rate_milli: u64,
+    pub threads: usize,
+}
+
+impl PlanKey {
+    pub fn new(
+        model: &str,
+        scheme: &str,
+        rate: f64,
+        threads: usize,
+    ) -> Self {
+        PlanKey {
+            model: model.to_string(),
+            scheme: scheme.to_string(),
+            rate_milli: (rate.max(0.0) * 1000.0).round() as u64,
+            threads,
+        }
+    }
+
+    pub fn rate(&self) -> f64 {
+        self.rate_milli as f64 / 1000.0
+    }
+}
+
+impl std::fmt::Display for PlanKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}/{}@{:.1}x/t{}",
+            self.model,
+            self.scheme,
+            self.rate(),
+            self.threads
+        )
+    }
+}
+
+enum Slot {
+    Ready { plan: Arc<ExecutionPlan>, last_used: u64 },
+    Building,
+}
+
+/// Clears a key's in-flight `Building` marker (and wakes waiters) unless
+/// disarmed — the builder's panic-safety net.
+struct BuildGuard<'a> {
+    reg: &'a PlanRegistry,
+    key: &'a PlanKey,
+    armed: bool,
+}
+
+impl Drop for BuildGuard<'_> {
+    fn drop(&mut self) {
+        if self.armed {
+            self.reg.remove_building_marker(self.key);
+        }
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    slots: BTreeMap<PlanKey, Slot>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    coalesced: u64,
+    evictions: u64,
+}
+
+/// Point-in-time registry counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RegistryStats {
+    pub ready: usize,
+    pub building: usize,
+    pub capacity: usize,
+    pub hits: u64,
+    /// builds started (one per single-flight miss)
+    pub misses: u64,
+    /// callers that waited on someone else's in-flight build
+    pub coalesced: u64,
+    pub evictions: u64,
+}
+
+/// Concurrent `(model, scheme, rate, threads) -> Arc<ExecutionPlan>`
+/// cache; see the module docs for the miss/eviction contract.
+pub struct PlanRegistry {
+    inner: Mutex<Inner>,
+    ready_cv: Condvar,
+    capacity: usize,
+}
+
+impl PlanRegistry {
+    /// `capacity` bounds the number of *ready* plans kept resident.
+    pub fn new(capacity: usize) -> Self {
+        PlanRegistry {
+            inner: Mutex::new(Inner::default()),
+            ready_cv: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Fetch `key`, running `build` at most once across all concurrent
+    /// callers when it is absent.
+    pub fn get_or_build(
+        &self,
+        key: &PlanKey,
+        build: impl FnOnce() -> Result<ExecutionPlan>,
+    ) -> Result<Arc<ExecutionPlan>> {
+        let mut g = self.inner.lock().unwrap();
+        let mut waited = false;
+        loop {
+            let cached = match g.slots.get(key) {
+                Some(Slot::Ready { plan, .. }) => Some(plan.clone()),
+                Some(Slot::Building) => {
+                    if !waited {
+                        waited = true;
+                        g.coalesced += 1;
+                    }
+                    g = self.ready_cv.wait(g).unwrap();
+                    continue;
+                }
+                None => None,
+            };
+            match cached {
+                Some(plan) => {
+                    g.tick += 1;
+                    let tick = g.tick;
+                    if let Some(Slot::Ready { last_used, .. }) =
+                        g.slots.get_mut(key)
+                    {
+                        *last_used = tick;
+                    }
+                    g.hits += 1;
+                    return Ok(plan);
+                }
+                None => {
+                    g.slots.insert(key.clone(), Slot::Building);
+                    g.misses += 1;
+                    break;
+                }
+            }
+        }
+        drop(g);
+        // expensive: compile or artifact-load, outside the lock. The
+        // guard clears the Building marker on *any* exit that did not
+        // install a Ready plan — error return or panic unwind — so a
+        // failed builder can never wedge the key for the waiters.
+        let mut guard = BuildGuard {
+            reg: self,
+            key,
+            armed: true,
+        };
+        let plan = Arc::new(build()?);
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        g.slots.insert(
+            key.clone(),
+            Slot::Ready {
+                plan: plan.clone(),
+                last_used: tick,
+            },
+        );
+        self.evict_lru(&mut g);
+        drop(g);
+        guard.armed = false;
+        self.ready_cv.notify_all();
+        Ok(plan)
+    }
+
+    fn remove_building_marker(&self, key: &PlanKey) {
+        let mut g = self.inner.lock().unwrap();
+        if matches!(g.slots.get(key), Some(Slot::Building)) {
+            g.slots.remove(key);
+        }
+        drop(g);
+        self.ready_cv.notify_all();
+    }
+
+    fn evict_lru(&self, g: &mut Inner) {
+        loop {
+            let ready = g
+                .slots
+                .iter()
+                .filter(|(_, s)| matches!(s, Slot::Ready { .. }))
+                .count();
+            if ready <= self.capacity {
+                return;
+            }
+            let victim = g
+                .slots
+                .iter()
+                .filter_map(|(k, s)| match s {
+                    Slot::Ready { last_used, .. } => {
+                        Some((*last_used, k.clone()))
+                    }
+                    Slot::Building => None,
+                })
+                .min()
+                .map(|(_, k)| k);
+            match victim {
+                Some(k) => {
+                    g.slots.remove(&k);
+                    g.evictions += 1;
+                }
+                None => return,
+            }
+        }
+    }
+
+    /// Drop a specific entry (e.g. after its artifact was republished).
+    /// No-op for in-flight builds.
+    pub fn evict(&self, key: &PlanKey) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if matches!(g.slots.get(key), Some(Slot::Ready { .. })) {
+            g.slots.remove(key);
+            g.evictions += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn stats(&self) -> RegistryStats {
+        let g = self.inner.lock().unwrap();
+        let ready = g
+            .slots
+            .values()
+            .filter(|s| matches!(s, Slot::Ready { .. }))
+            .count();
+        RegistryStats {
+            ready,
+            building: g.slots.len() - ready,
+            capacity: self.capacity,
+            hits: g.hits,
+            misses: g.misses,
+            coalesced: g.coalesced,
+            evictions: g.evictions,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mobile::ir::ModelIR;
+    use crate::mobile::plan::compile_plan;
+    use crate::mobile::synth;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn build_plan(seed: u64) -> Result<ExecutionPlan> {
+        let (spec, mut params) =
+            synth::vgg_style("reg_vgg", 8, 4, &[4], seed);
+        synth::pattern_prune(&spec, &mut params, 0.25);
+        compile_plan(ModelIR::build(&spec, &params)?, 1)
+    }
+
+    #[test]
+    fn key_quantizes_rate() {
+        let a = PlanKey::new("m", "pattern", 8.0, 2);
+        let b = PlanKey::new("m", "pattern", 8.0001, 2);
+        assert_eq!(a, b);
+        assert_eq!(a.rate(), 8.0);
+        let c = PlanKey::new("m", "pattern", 8.1, 2);
+        assert_ne!(a, c);
+        assert!(format!("{a}").contains("pattern"));
+    }
+
+    #[test]
+    fn hit_returns_same_arc_without_rebuilding() {
+        let reg = PlanRegistry::new(4);
+        let key = PlanKey::new("m", "pattern", 8.0, 1);
+        let builds = AtomicUsize::new(0);
+        let a = reg
+            .get_or_build(&key, || {
+                builds.fetch_add(1, Ordering::SeqCst);
+                build_plan(1)
+            })
+            .unwrap();
+        let b = reg
+            .get_or_build(&key, || {
+                builds.fetch_add(1, Ordering::SeqCst);
+                build_plan(1)
+            })
+            .unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(builds.load(Ordering::SeqCst), 1);
+        let s = reg.stats();
+        assert_eq!((s.hits, s.misses, s.ready), (1, 1, 1));
+    }
+
+    #[test]
+    fn concurrent_misses_single_flight() {
+        let reg = PlanRegistry::new(4);
+        let key = PlanKey::new("m", "pattern", 8.0, 1);
+        let builds = AtomicUsize::new(0);
+        let plans = Mutex::new(Vec::new());
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    let p = reg
+                        .get_or_build(&key, || {
+                            builds.fetch_add(1, Ordering::SeqCst);
+                            // hold the build long enough that the other
+                            // threads observe the Building slot
+                            std::thread::sleep(
+                                std::time::Duration::from_millis(40),
+                            );
+                            build_plan(1)
+                        })
+                        .unwrap();
+                    plans.lock().unwrap().push(p);
+                });
+            }
+        });
+        assert_eq!(builds.load(Ordering::SeqCst), 1, "single flight");
+        let plans = plans.into_inner().unwrap();
+        assert_eq!(plans.len(), 8);
+        assert!(plans.iter().all(|p| Arc::ptr_eq(p, &plans[0])));
+        let s = reg.stats();
+        assert_eq!(s.misses, 1, "exactly one build started");
+        assert_eq!(s.hits, 7, "every non-builder resolved to a hit");
+    }
+
+    #[test]
+    fn failed_build_propagates_and_allows_retry() {
+        let reg = PlanRegistry::new(4);
+        let key = PlanKey::new("m", "pattern", 8.0, 1);
+        let err = reg
+            .get_or_build(&key, || anyhow::bail!("synthetic build failure"))
+            .unwrap_err();
+        assert!(err.to_string().contains("synthetic"));
+        assert_eq!(reg.stats().ready, 0);
+        assert_eq!(reg.stats().building, 0);
+        // the key is buildable again afterwards
+        let p = reg.get_or_build(&key, || build_plan(1)).unwrap();
+        assert_eq!(p.threads, 1);
+    }
+
+    #[test]
+    fn panicking_build_does_not_wedge_the_key() {
+        let reg = PlanRegistry::new(4);
+        let key = PlanKey::new("m", "pattern", 8.0, 1);
+        let unwound = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                let _ = reg.get_or_build(&key, || panic!("builder died"));
+            }),
+        );
+        assert!(unwound.is_err());
+        // the Building marker was cleared by the drop guard: the key is
+        // immediately buildable again, no waiter can hang on it
+        assert_eq!(reg.stats().building, 0);
+        let p = reg.get_or_build(&key, || build_plan(1)).unwrap();
+        assert_eq!(p.threads, 1);
+    }
+
+    #[test]
+    fn lru_eviction_beyond_capacity() {
+        let reg = PlanRegistry::new(2);
+        let k1 = PlanKey::new("m1", "pattern", 8.0, 1);
+        let k2 = PlanKey::new("m2", "pattern", 8.0, 1);
+        let k3 = PlanKey::new("m3", "pattern", 8.0, 1);
+        reg.get_or_build(&k1, || build_plan(1)).unwrap();
+        reg.get_or_build(&k2, || build_plan(2)).unwrap();
+        // touch k1 so k2 is the LRU
+        reg.get_or_build(&k1, || build_plan(1)).unwrap();
+        reg.get_or_build(&k3, || build_plan(3)).unwrap();
+        let s = reg.stats();
+        assert_eq!(s.ready, 2);
+        assert_eq!(s.evictions, 1);
+        // k2 was evicted: fetching it builds again
+        let builds = AtomicUsize::new(0);
+        reg.get_or_build(&k2, || {
+            builds.fetch_add(1, Ordering::SeqCst);
+            build_plan(2)
+        })
+        .unwrap();
+        assert_eq!(builds.load(Ordering::SeqCst), 1);
+        // ... and k1 was not: no rebuild
+        reg.get_or_build(&k1, || {
+            builds.fetch_add(1, Ordering::SeqCst);
+            build_plan(1)
+        })
+        .unwrap();
+        assert_eq!(builds.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn explicit_evict() {
+        let reg = PlanRegistry::new(4);
+        let key = PlanKey::new("m", "pattern", 4.0, 1);
+        reg.get_or_build(&key, || build_plan(1)).unwrap();
+        assert!(reg.evict(&key));
+        assert!(!reg.evict(&key));
+        assert_eq!(reg.stats().ready, 0);
+    }
+}

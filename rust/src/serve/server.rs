@@ -1,0 +1,446 @@
+//! In-process multi-worker inference server with dynamic micro-batching.
+//!
+//! [`Server::start`] spawns `workers` std threads over one shared
+//! [`BoundedQueue`]; each worker owns an [`Executor`] (arena allocated
+//! once) and loops: form a micro-batch via the
+//! [`batcher`](crate::serve::batcher) state machine (up to
+//! `max_batch`, at most `max_wait_us` past the first request), execute it,
+//! route each response back through its request's own channel. No async
+//! runtime — the whole serving tier is std threads + channels, matching
+//! the rest of the crate.
+//!
+//! Admission control is explicit: the queue is bounded at `queue_cap` and
+//! a full queue rejects with [`SubmitError::Rejected`] instead of
+//! buffering without bound (the load generator counts these). Per-model
+//! latency/throughput stats (p50/p95/p99, batch-size histogram) accumulate
+//! in [`ServeStats`] and surface through
+//! [`Server::shutdown`]/[`ServeStats::report`].
+//!
+//! Determinism: a request's logits depend only on its image — batching,
+//! worker count, and batch windows never change outputs (asserted across
+//! 1/2/4 workers in `tests/serve_determinism.rs`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::ServeConfig;
+use crate::mobile::engine::{
+    execute_batch_parallel, Executor, Fmap, KernelKind,
+};
+use crate::mobile::plan::{ExecutionPlan, StepDims};
+
+use super::batcher::{BatchPolicy, BoundedQueue, PushError};
+use super::stats::{ServeReport, ServeStats};
+
+/// One queued inference request: the image plus everything needed to
+/// route and time its response.
+pub struct ServeRequest {
+    pub id: u64,
+    pub img: Fmap,
+    pub enqueued: Instant,
+    tx: mpsc::Sender<ServeResponse>,
+}
+
+/// A completed inference.
+#[derive(Clone, Debug)]
+pub struct ServeResponse {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    /// submit -> batch formation
+    pub queue_us: u64,
+    /// submit -> response
+    pub total_us: u64,
+    /// size of the micro-batch this request rode in
+    pub batch: usize,
+}
+
+/// Why a submit was refused (before any work happened).
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// bounded queue at capacity — explicit backpressure, try again later
+    Rejected,
+    /// image dims do not match the plan input
+    BadShape {
+        got: (usize, usize),
+        want: (usize, usize),
+    },
+    /// image buffer length disagrees with its own dims (`Fmap` fields
+    /// are pub) — caught here so it can never panic a worker
+    BadLength { got: usize, want: usize },
+    /// the server is shutting down
+    Closed,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Rejected => {
+                write!(f, "request rejected: queue at capacity")
+            }
+            SubmitError::BadShape { got, want } => write!(
+                f,
+                "image ({}, {}hw) does not match plan input ({}, {}hw)",
+                got.0, got.1, want.0, want.1
+            ),
+            SubmitError::BadLength { got, want } => write!(
+                f,
+                "image buffer holds {got} elems, plan input needs {want}"
+            ),
+            SubmitError::Closed => write!(f, "server is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Claim on an in-flight request; [`Ticket::wait`] blocks for the
+/// response.
+pub struct Ticket {
+    pub id: u64,
+    rx: mpsc::Receiver<ServeResponse>,
+}
+
+impl Ticket {
+    /// Block until the response arrives. Errs if the request's batch
+    /// failed or the server dropped it during shutdown.
+    pub fn wait(self) -> Result<ServeResponse> {
+        self.rx.recv().map_err(|_| {
+            anyhow!("request {} canceled before a response", self.id)
+        })
+    }
+}
+
+struct Shared {
+    queue: BoundedQueue<ServeRequest>,
+    stats: ServeStats,
+    next_id: AtomicU64,
+    in_dims: StepDims,
+}
+
+/// Cloneable client handle: submit requests, read live stats.
+#[derive(Clone)]
+pub struct ServeHandle {
+    shared: Arc<Shared>,
+}
+
+impl ServeHandle {
+    /// Enqueue one image; returns a [`Ticket`] or an explicit
+    /// [`SubmitError`] (shape mismatch / backpressure / shutdown).
+    pub fn submit(&self, img: Fmap) -> Result<Ticket, SubmitError> {
+        let want = self.shared.in_dims;
+        if img.c != want.c || img.hw != want.hw {
+            return Err(SubmitError::BadShape {
+                got: (img.c, img.hw),
+                want: (want.c, want.hw),
+            });
+        }
+        if img.data.len() != want.elems() {
+            return Err(SubmitError::BadLength {
+                got: img.data.len(),
+                want: want.elems(),
+            });
+        }
+        let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let req = ServeRequest {
+            id,
+            img,
+            enqueued: Instant::now(),
+            tx,
+        };
+        // count the submit before the push: a worker can complete the
+        // request before push() even returns, and a live report must
+        // never show completed > submitted
+        self.shared.stats.submit();
+        match self.shared.queue.push(req) {
+            Ok(_) => Ok(Ticket { id, rx }),
+            Err(PushError::Full(_)) => {
+                self.shared.stats.reject();
+                Err(SubmitError::Rejected)
+            }
+            Err(PushError::Closed(_)) => {
+                self.shared.stats.unsubmit();
+                Err(SubmitError::Closed)
+            }
+        }
+    }
+
+    /// Submit and block for the response (closed-loop client path).
+    pub fn infer(&self, img: Fmap) -> Result<ServeResponse> {
+        let ticket = self.submit(img)?;
+        ticket.wait()
+    }
+
+    /// Snapshot the stats without stopping the server.
+    pub fn report(&self, elapsed_secs: f64) -> ServeReport {
+        self.shared.stats.report(elapsed_secs)
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue.len()
+    }
+}
+
+/// The serving engine: owns the worker threads; dropped via
+/// [`Server::shutdown`] for an orderly drain + final report.
+pub struct Server {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    started: Instant,
+}
+
+impl Server {
+    /// Spawn the worker pool over `plan`. The plan is shared read-only
+    /// (`Arc`); each worker builds its own executor + arena once.
+    pub fn start(
+        plan: Arc<ExecutionPlan>,
+        kernel: KernelKind,
+        cfg: &ServeConfig,
+    ) -> Server {
+        let shared = Arc::new(Shared {
+            queue: BoundedQueue::new(cfg.queue_cap),
+            stats: ServeStats::new(),
+            next_id: AtomicU64::new(0),
+            in_dims: plan.in_dims,
+        });
+        let policy = BatchPolicy::new(cfg.max_batch, cfg.max_wait_us);
+        let batch_threads = cfg.batch_threads.max(1);
+        let workers = (0..cfg.workers.max(1))
+            .map(|i| {
+                let plan = plan.clone();
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("serve-worker-{i}"))
+                    .spawn(move || {
+                        worker_loop(
+                            &plan,
+                            kernel,
+                            &shared,
+                            &policy,
+                            batch_threads,
+                        )
+                    })
+                    .expect("spawning serve worker")
+            })
+            .collect();
+        Server {
+            shared,
+            workers,
+            started: Instant::now(),
+        }
+    }
+
+    pub fn handle(&self) -> ServeHandle {
+        ServeHandle {
+            shared: self.shared.clone(),
+        }
+    }
+
+    /// Stop accepting requests, drain the queue, join the workers, and
+    /// return the final report over the whole serving window.
+    pub fn shutdown(self) -> ServeReport {
+        self.shared.queue.close();
+        for w in self.workers {
+            w.join().expect("serve worker panicked");
+        }
+        self.shared
+            .stats
+            .report(self.started.elapsed().as_secs_f64())
+    }
+}
+
+fn worker_loop(
+    plan: &ExecutionPlan,
+    kernel: KernelKind,
+    shared: &Shared,
+    policy: &BatchPolicy,
+    batch_threads: usize,
+) {
+    // the long-lived executor (arena allocated once) only serves the
+    // sequential path; the parallel path shards each batch across fresh
+    // scoped executors inside execute_batch_parallel
+    let mut ex = if batch_threads <= 1 {
+        Some(Executor::new(plan, kernel))
+    } else {
+        None
+    };
+    // window anchored at the first request's enqueue time: a backlogged
+    // request is never further delayed by the straggler window
+    while let Some(batch) =
+        shared.queue.pop_batch_by(policy, |r| r.enqueued)
+    {
+        if batch.is_empty() {
+            continue;
+        }
+        let formed = Instant::now();
+        let n = batch.len();
+        shared.stats.batch_dispatched(n);
+        let mut metas = Vec::with_capacity(n);
+        let mut imgs = Vec::with_capacity(n);
+        for req in batch {
+            metas.push((req.id, req.enqueued, req.tx));
+            imgs.push(req.img);
+        }
+        let outs = match ex.as_mut() {
+            Some(ex) => ex.execute_batch(&imgs),
+            None => {
+                execute_batch_parallel(plan, kernel, &imgs, batch_threads)
+            }
+        };
+        match outs {
+            Ok(outs) => {
+                for ((id, enqueued, tx), logits) in
+                    metas.into_iter().zip(outs)
+                {
+                    let queue_us = formed
+                        .saturating_duration_since(enqueued)
+                        .as_micros() as u64;
+                    let total_us =
+                        enqueued.elapsed().as_micros() as u64;
+                    shared.stats.complete(total_us, queue_us);
+                    // a departed client is not an error: drop its response
+                    let _ = tx.send(ServeResponse {
+                        id,
+                        logits,
+                        queue_us,
+                        total_us,
+                        batch: n,
+                    });
+                }
+            }
+            Err(_) => {
+                // shape errors are caught at submit; an execute error here
+                // cancels the whole batch (clients see recv disconnect)
+                shared.stats.error_batch(n);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mobile::ir::ModelIR;
+    use crate::mobile::plan::compile_plan;
+    use crate::mobile::synth;
+
+    fn tiny_plan() -> Arc<ExecutionPlan> {
+        let (spec, mut params) =
+            synth::vgg_style("srv_vgg", 8, 4, &[4, 6], 31);
+        synth::pattern_prune(&spec, &mut params, 0.25);
+        Arc::new(
+            compile_plan(ModelIR::build(&spec, &params).unwrap(), 1)
+                .unwrap(),
+        )
+    }
+
+    fn img_for(plan: &ExecutionPlan, seed: u64) -> Fmap {
+        crate::serve::loadgen::request_image(plan.in_dims, seed, 0)
+    }
+
+    #[test]
+    fn serves_and_matches_direct_executor() {
+        let plan = tiny_plan();
+        let cfg = ServeConfig {
+            workers: 2,
+            max_batch: 4,
+            max_wait_us: 200,
+            queue_cap: 32,
+            batch_threads: 1,
+        };
+        let server =
+            Server::start(plan.clone(), KernelKind::PatternScalar, &cfg);
+        let handle = server.handle();
+        let mut direct =
+            Executor::new(&plan, KernelKind::PatternScalar);
+        for seed in 0..10u64 {
+            let img = img_for(&plan, seed);
+            let want = direct.execute(&img);
+            let resp = handle.infer(img).unwrap();
+            assert_eq!(resp.logits, want, "seed {seed}");
+            assert!(resp.batch >= 1);
+            assert!(resp.total_us >= resp.queue_us);
+        }
+        let report = server.shutdown();
+        assert_eq!(report.completed, 10);
+        assert_eq!(report.rejected, 0);
+        assert_eq!(report.errors, 0);
+        assert_eq!(report.dispatched(), 10);
+    }
+
+    #[test]
+    fn bad_shape_is_rejected_at_submit() {
+        let plan = tiny_plan();
+        let server = Server::start(
+            plan.clone(),
+            KernelKind::PatternScalar,
+            &ServeConfig::preset(crate::config::Preset::Smoke),
+        );
+        let handle = server.handle();
+        let bad = Fmap::zeros(1, 3);
+        match handle.submit(bad) {
+            Err(SubmitError::BadShape { got, want }) => {
+                assert_eq!(got, (1, 3));
+                assert_eq!(want, (plan.in_dims.c, plan.in_dims.hw));
+            }
+            other => panic!("expected BadShape, got {:?}", other.is_ok()),
+        }
+        // right dims, wrong buffer length (Fmap fields are pub): must be
+        // refused at submit, never panic a worker
+        let mut hollow = Fmap::zeros(plan.in_dims.c, plan.in_dims.hw);
+        hollow.data.truncate(1);
+        match handle.submit(hollow) {
+            Err(SubmitError::BadLength { got, want }) => {
+                assert_eq!(got, 1);
+                assert_eq!(want, plan.in_dims.elems());
+            }
+            other => {
+                panic!("expected BadLength, got {:?}", other.is_ok())
+            }
+        }
+        let report = server.shutdown();
+        assert_eq!(report.completed, 0);
+    }
+
+    #[test]
+    fn shutdown_drains_inflight_requests() {
+        let plan = tiny_plan();
+        let cfg = ServeConfig {
+            workers: 1,
+            max_batch: 8,
+            max_wait_us: 0,
+            queue_cap: 64,
+            batch_threads: 1,
+        };
+        let server =
+            Server::start(plan.clone(), KernelKind::PatternScalar, &cfg);
+        let handle = server.handle();
+        let tickets: Vec<Ticket> = (0..16)
+            .map(|s| handle.submit(img_for(&plan, s)).unwrap())
+            .collect();
+        let report = server.shutdown();
+        assert_eq!(report.completed, 16);
+        for t in tickets {
+            assert_eq!(t.wait().unwrap().logits.len(), plan.classes());
+        }
+    }
+
+    #[test]
+    fn closed_server_refuses_submits() {
+        let plan = tiny_plan();
+        let server = Server::start(
+            plan.clone(),
+            KernelKind::PatternScalar,
+            &ServeConfig::preset(crate::config::Preset::Smoke),
+        );
+        let handle = server.handle();
+        server.shutdown();
+        match handle.submit(Fmap::zeros(3, 8)) {
+            Err(SubmitError::Closed) => {}
+            other => panic!("expected Closed, got {:?}", other.is_ok()),
+        }
+    }
+}

@@ -1,0 +1,397 @@
+//! Serving metrics + the in-tree bench harness.
+//!
+//! [`ServeStats`] is the server's shared metrics sink: every worker folds
+//! per-response latencies (end-to-end and queue wait) and per-batch sizes
+//! into it, and [`ServeStats::report`] snapshots a [`ServeReport`] with
+//! nearest-rank p50/p95/p99 percentiles, a batch-size histogram, and
+//! throughput — the numbers `repro serve` and `bench_serve` print.
+//!
+//! The module also hosts the criterion-replacement bench helpers
+//! ([`bench`], [`section`], [`BenchResult`]) shared by all
+//! `rust/benches/*.rs`; they moved here from the old top-level
+//! `bench_harness` module when the serving tier became their primary
+//! consumer (criterion is unavailable offline).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::report::Table;
+use crate::rng::Pcg32;
+
+/// Latency samples kept resident per series; beyond this the recorder
+/// switches to uniform reservoir sampling, so a long-running server's
+/// memory and `report()` cost stay bounded no matter how many requests
+/// it has served.
+pub const SAMPLE_CAP: usize = 1 << 16;
+
+fn reservoir(samples: &mut Vec<u64>, rng: &mut Pcg32, seen: u64, v: u64) {
+    if samples.len() < SAMPLE_CAP {
+        samples.push(v);
+    } else {
+        // classic Algorithm R: keep v with probability CAP/seen
+        let j = (rng.next_u64() % seen) as usize;
+        if j < SAMPLE_CAP {
+            samples[j] = v;
+        }
+    }
+}
+
+/// Percentile summary over a set of microsecond samples (nearest-rank).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LatencySummary {
+    pub n: usize,
+    pub mean_us: f64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+}
+
+impl LatencySummary {
+    /// Nearest-rank percentiles over `samples` (consumed; order-free).
+    pub fn from_samples(mut samples: Vec<u64>) -> Self {
+        if samples.is_empty() {
+            return LatencySummary::default();
+        }
+        samples.sort_unstable();
+        let n = samples.len();
+        let mean_us =
+            samples.iter().map(|&s| s as f64).sum::<f64>() / n as f64;
+        let rank = |q: f64| -> u64 {
+            let idx = ((q * n as f64).ceil() as usize)
+                .saturating_sub(1)
+                .min(n - 1);
+            samples[idx]
+        };
+        LatencySummary {
+            n,
+            mean_us,
+            p50_us: rank(0.50),
+            p95_us: rank(0.95),
+            p99_us: rank(0.99),
+            max_us: samples[n - 1],
+        }
+    }
+}
+
+struct StatsInner {
+    total_us: Vec<u64>,
+    queue_us: Vec<u64>,
+    /// reservoir positions; fixed seed — the *sampled* latency sets are
+    /// scheduling-dependent anyway and are excluded from the
+    /// deterministic counters
+    rng: Pcg32,
+    batch_hist: BTreeMap<usize, u64>,
+    submitted: u64,
+    completed: u64,
+    rejected: u64,
+    errors: u64,
+}
+
+impl Default for StatsInner {
+    fn default() -> Self {
+        StatsInner {
+            total_us: Vec::new(),
+            queue_us: Vec::new(),
+            rng: Pcg32::seeded(0x57A7_5EED),
+            batch_hist: BTreeMap::new(),
+            submitted: 0,
+            completed: 0,
+            rejected: 0,
+            errors: 0,
+        }
+    }
+}
+
+/// Shared, thread-safe serving metrics sink (one per [`crate::serve::server::Server`]).
+#[derive(Default)]
+pub struct ServeStats {
+    inner: Mutex<StatsInner>,
+}
+
+impl ServeStats {
+    pub fn new() -> Self {
+        ServeStats::default()
+    }
+
+    /// A request is about to enter the queue. Counted *before* the push,
+    /// so a live snapshot can never observe `completed > submitted`;
+    /// refused pushes take it back via [`ServeStats::reject`] /
+    /// [`ServeStats::unsubmit`].
+    pub fn submit(&self) {
+        self.inner.lock().unwrap().submitted += 1;
+    }
+
+    /// A pre-counted request bounced off the full queue (admission
+    /// control): moves it from `submitted` to `rejected`.
+    pub fn reject(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.submitted -= 1;
+        g.rejected += 1;
+    }
+
+    /// A pre-counted request was refused for a non-backpressure reason
+    /// (server shutting down): takes the submit back without counting a
+    /// rejection.
+    pub fn unsubmit(&self) {
+        self.inner.lock().unwrap().submitted -= 1;
+    }
+
+    /// A whole batch failed to execute (its `n` requests get no response).
+    pub fn error_batch(&self, n: usize) {
+        self.inner.lock().unwrap().errors += n as u64;
+    }
+
+    /// One response completed: end-to-end and queue-wait micros
+    /// (reservoir-sampled past [`SAMPLE_CAP`]).
+    pub fn complete(&self, total_us: u64, queue_us: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.completed += 1;
+        let seen = g.completed;
+        let inner = &mut *g;
+        reservoir(&mut inner.total_us, &mut inner.rng, seen, total_us);
+        reservoir(&mut inner.queue_us, &mut inner.rng, seen, queue_us);
+    }
+
+    /// One micro-batch of `size` requests was dispatched.
+    pub fn batch_dispatched(&self, size: usize) {
+        let mut g = self.inner.lock().unwrap();
+        *g.batch_hist.entry(size).or_insert(0) += 1;
+    }
+
+    /// Snapshot everything into a report; `elapsed_secs` is the serving
+    /// window the throughput is computed over.
+    pub fn report(&self, elapsed_secs: f64) -> ServeReport {
+        let g = self.inner.lock().unwrap();
+        let batch_hist: Vec<(usize, u64)> =
+            g.batch_hist.iter().map(|(&s, &c)| (s, c)).collect();
+        let batches: u64 = batch_hist.iter().map(|&(_, c)| c).sum();
+        let batched_reqs: u64 =
+            batch_hist.iter().map(|&(s, c)| s as u64 * c).sum();
+        ServeReport {
+            submitted: g.submitted,
+            completed: g.completed,
+            rejected: g.rejected,
+            errors: g.errors,
+            elapsed_secs,
+            throughput_rps: if elapsed_secs > 0.0 {
+                g.completed as f64 / elapsed_secs
+            } else {
+                0.0
+            },
+            latency: LatencySummary::from_samples(g.total_us.clone()),
+            queue: LatencySummary::from_samples(g.queue_us.clone()),
+            batch_hist,
+            mean_batch: if batches > 0 {
+                batched_reqs as f64 / batches as f64
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
+/// Snapshot of one serving window: counters, latency percentiles, and the
+/// batch-size histogram.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub errors: u64,
+    pub elapsed_secs: f64,
+    pub throughput_rps: f64,
+    /// end-to-end latency (submit -> response)
+    pub latency: LatencySummary,
+    /// queue wait (submit -> batch formation)
+    pub queue: LatencySummary,
+    /// (batch size, dispatch count)
+    pub batch_hist: Vec<(usize, u64)>,
+    pub mean_batch: f64,
+}
+
+impl ServeReport {
+    /// Requests dispatched through the batcher (must equal `completed +
+    /// errors` once the server drained).
+    pub fn dispatched(&self) -> u64 {
+        self.batch_hist.iter().map(|&(s, c)| s as u64 * c).sum()
+    }
+
+    /// The timing-free part of the report: bit-comparable across runs and
+    /// worker counts (the serving determinism tests assert on this).
+    pub fn deterministic_counters(&self) -> (u64, u64, u64, u64, u64) {
+        (
+            self.submitted,
+            self.completed,
+            self.rejected,
+            self.errors,
+            self.dispatched(),
+        )
+    }
+
+    /// Render the per-model serving summary as a table.
+    pub fn table(&self, title: &str) -> Table {
+        let mut t = Table::new(
+            title,
+            &[
+                "completed", "rejected", "errors", "rps", "mean batch",
+                "p50", "p95", "p99", "max",
+            ],
+        );
+        t.row(&[
+            format!("{}", self.completed),
+            format!("{}", self.rejected),
+            format!("{}", self.errors),
+            format!("{:.1}", self.throughput_rps),
+            format!("{:.2}", self.mean_batch),
+            format!("{} us", self.latency.p50_us),
+            format!("{} us", self.latency.p95_us),
+            format!("{} us", self.latency.p99_us),
+            format!("{} us", self.latency.max_us),
+        ]);
+        t
+    }
+
+    /// Render the batch-size histogram as a table.
+    pub fn batch_table(&self, title: &str) -> Table {
+        let mut t = Table::new(title, &["batch size", "dispatches"]);
+        for &(size, count) in &self.batch_hist {
+            t.row(&[format!("{size}"), format!("{count}")]);
+        }
+        t
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bench harness (criterion is unavailable offline)
+// ---------------------------------------------------------------------------
+
+/// Mean ± stddev of one benched closure, in a stable, grep-friendly shape.
+pub struct BenchResult {
+    pub name: String,
+    pub mean_ms: f64,
+    pub std_ms: f64,
+    pub reps: usize,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "bench {:44} {:>10.4} ms ± {:>8.4} (n={})",
+            self.name, self.mean_ms, self.std_ms, self.reps
+        );
+    }
+}
+
+/// Time `f` for `reps` repetitions after `warmup` calls.
+pub fn bench(
+    name: &str,
+    warmup: usize,
+    reps: usize,
+    mut f: impl FnMut(),
+) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    let mean = samples.iter().sum::<f64>() / reps as f64;
+    let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>()
+        / reps as f64;
+    let r = BenchResult {
+        name: name.into(),
+        mean_ms: mean,
+        std_ms: var.sqrt(),
+        reps,
+    };
+    r.print();
+    r
+}
+
+/// Section header for grouping bench output.
+pub fn section(title: &str) {
+    println!("\n### {title}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let r = bench("sleep-free", 1, 5, || {
+            std::hint::black_box((0..1000).sum::<usize>());
+        });
+        assert!(r.mean_ms >= 0.0);
+        assert!(r.std_ms >= 0.0);
+        assert_eq!(r.reps, 5);
+    }
+
+    #[test]
+    fn latency_summary_nearest_rank() {
+        let s = LatencySummary::from_samples((1..=100).collect());
+        assert_eq!(s.n, 100);
+        assert_eq!(s.p50_us, 50);
+        assert_eq!(s.p95_us, 95);
+        assert_eq!(s.p99_us, 99);
+        assert_eq!(s.max_us, 100);
+        assert!((s.mean_us - 50.5).abs() < 1e-9);
+        // tiny sample: every percentile collapses to the only value
+        let one = LatencySummary::from_samples(vec![7]);
+        assert_eq!((one.p50_us, one.p99_us, one.max_us), (7, 7, 7));
+        assert_eq!(LatencySummary::from_samples(vec![]).n, 0);
+    }
+
+    #[test]
+    fn reservoir_caps_resident_samples() {
+        let st = ServeStats::new();
+        let n = SAMPLE_CAP as u64 + 500;
+        for i in 0..n {
+            st.submit();
+            st.complete(i, i / 2);
+        }
+        let r = st.report(1.0);
+        assert_eq!(r.completed, n);
+        // resident sample count is capped; percentiles stay plausible
+        assert_eq!(r.latency.n, SAMPLE_CAP);
+        assert_eq!(r.queue.n, SAMPLE_CAP);
+        assert!(r.latency.max_us < n);
+    }
+
+    #[test]
+    fn stats_fold_and_report() {
+        let st = ServeStats::new();
+        // 7 offered: 5 accepted, 1 rejected (backpressure), 1 refused at
+        // shutdown — submitted must settle on the accepted count
+        for _ in 0..7 {
+            st.submit();
+        }
+        st.reject();
+        st.unsubmit();
+        st.batch_dispatched(2);
+        st.batch_dispatched(2);
+        st.complete(100, 10);
+        st.complete(200, 20);
+        st.complete(300, 30);
+        st.complete(400, 40);
+        st.error_batch(1);
+        let r = st.report(2.0);
+        assert_eq!(r.submitted, 5);
+        assert_eq!(r.completed, 4);
+        assert_eq!(r.rejected, 1);
+        assert_eq!(r.errors, 1);
+        assert_eq!(r.dispatched(), 4);
+        assert!((r.throughput_rps - 2.0).abs() < 1e-9);
+        assert!((r.mean_batch - 2.0).abs() < 1e-9);
+        assert_eq!(r.latency.max_us, 400);
+        assert_eq!(r.queue.p50_us, 20);
+        let rendered = r.table("serve").render();
+        assert!(rendered.contains("completed"));
+        assert!(r.batch_table("hist").render().contains("batch size"));
+    }
+}

@@ -154,7 +154,7 @@ fn batch_entry_points_match_single_frame_path() {
     let mut ex = Executor::new(&plan, KernelKind::PatternScalar);
     let single: Vec<Vec<f32>> =
         imgs.iter().map(|i| ex.execute(i)).collect();
-    let batch = ex.execute_batch(&imgs);
+    let batch = ex.execute_batch(&imgs).unwrap();
     assert_eq!(batch, single);
     for workers in [1usize, 2, 3, 8] {
         let par = execute_batch_parallel(
@@ -162,9 +162,56 @@ fn batch_entry_points_match_single_frame_path() {
             KernelKind::PatternScalar,
             &imgs,
             workers,
-        );
+        )
+        .unwrap();
         assert_eq!(par, single, "workers={workers}");
     }
+}
+
+#[test]
+fn batch_entry_points_err_on_empty_batch() {
+    let (spec, params) = synth::vgg_style("be", 8, 4, &[4], 77);
+    let plan =
+        compile_plan(ModelIR::build(&spec, &params).unwrap(), 1).unwrap();
+    let mut ex = Executor::new(&plan, KernelKind::PatternScalar);
+    let err = ex.execute_batch(&[]).unwrap_err().to_string();
+    assert!(err.contains("empty batch"), "{err}");
+    let err =
+        execute_batch_parallel(&plan, KernelKind::PatternScalar, &[], 4)
+            .unwrap_err()
+            .to_string();
+    assert!(err.contains("empty batch"), "{err}");
+}
+
+#[test]
+fn batch_entry_points_err_on_mismatched_images() {
+    let (spec, params) = synth::vgg_style("bm", 8, 4, &[4], 78);
+    let plan =
+        compile_plan(ModelIR::build(&spec, &params).unwrap(), 1).unwrap();
+    // image 1 of the batch has the wrong spatial dims
+    let imgs = vec![rand_image(3, 8, 1), rand_image(3, 4, 2)];
+    let mut ex = Executor::new(&plan, KernelKind::PatternScalar);
+    let err = ex.execute_batch(&imgs).unwrap_err();
+    assert!(format!("{err:#}").contains("batch image 1"), "{err:#}");
+    let err = execute_batch_parallel(
+        &plan,
+        KernelKind::PatternScalar,
+        &imgs,
+        2,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("batch image 1"), "{err}");
+    // wrong channel count is caught too
+    let imgs = vec![rand_image(2, 8, 3)];
+    assert!(ex.execute_batch(&imgs).is_err());
+    assert!(execute_batch_parallel(
+        &plan,
+        KernelKind::PatternScalar,
+        &imgs,
+        1,
+    )
+    .is_err());
 }
 
 #[test]

@@ -1,0 +1,139 @@
+//! Serving determinism (mirror of `scheduler_determinism.rs` for the
+//! serving tier): the same seed + the same request trace must produce
+//! identical per-request outputs and identical deterministic aggregate
+//! stats at 1, 2, and 4 workers. Batching, batch windows, and worker
+//! scheduling may change *when* a request runs and in which micro-batch —
+//! never *what* it computes.
+
+use std::sync::Arc;
+
+use repro::config::ServeConfig;
+use repro::mobile::engine::{Executor, KernelKind};
+use repro::mobile::ir::ModelIR;
+use repro::mobile::plan::{compile_plan, ExecutionPlan};
+use repro::mobile::synth::{res_style, vgg_style};
+use repro::serve::loadgen::{self, LoadGenConfig, LoadMode};
+use repro::serve::server::Server;
+
+const SEED: u64 = 0x5E27E;
+const REQUESTS: usize = 48;
+
+fn serve_trace(
+    plan: &Arc<ExecutionPlan>,
+    workers: usize,
+) -> (Vec<Vec<f32>>, (u64, u64, u64, u64, u64)) {
+    let cfg = ServeConfig {
+        workers,
+        max_batch: 4,
+        max_wait_us: 500,
+        // >= in-flight requests, so closed-loop clients never hit
+        // admission control and the deterministic counters stay exact
+        queue_cap: 64,
+        batch_threads: 1,
+    };
+    let server =
+        Server::start(plan.clone(), KernelKind::PatternScalar, &cfg);
+    let load = loadgen::run(
+        &server.handle(),
+        plan.in_dims,
+        &LoadGenConfig {
+            mode: LoadMode::Closed { clients: 4 },
+            requests: REQUESTS,
+            seed: SEED,
+        },
+    );
+    let report = server.shutdown();
+    assert_eq!(load.outcomes.len(), REQUESTS);
+    let outputs: Vec<Vec<f32>> = load
+        .outcomes
+        .into_iter()
+        .map(|o| match o.logits {
+            Some(logits) => logits,
+            None => panic!("trace {} unresolved", o.trace_id),
+        })
+        .collect();
+    (outputs, report.deterministic_counters())
+}
+
+#[test]
+fn outputs_and_counters_identical_across_worker_counts() {
+    for (name, plan) in [
+        ("vgg", {
+            let (spec, mut params) =
+                vgg_style("det_srv_vgg", 16, 6, &[6, 10], 7);
+            repro::mobile::synth::pattern_prune(&spec, &mut params, 0.25);
+            Arc::new(
+                compile_plan(ModelIR::build(&spec, &params).unwrap(), 1)
+                    .unwrap(),
+            )
+        }),
+        ("res", {
+            let (spec, mut params) =
+                res_style("det_srv_res", 16, 6, &[6, 8], 9);
+            repro::mobile::synth::pattern_prune(&spec, &mut params, 0.25);
+            Arc::new(
+                compile_plan(ModelIR::build(&spec, &params).unwrap(), 1)
+                    .unwrap(),
+            )
+        }),
+    ] {
+        // ground truth: the trace run through a bare executor
+        let mut direct =
+            Executor::new(&plan, KernelKind::PatternScalar);
+        let want: Vec<Vec<f32>> = (0..REQUESTS as u64)
+            .map(|id| {
+                direct.execute(&loadgen::request_image(
+                    plan.in_dims,
+                    SEED,
+                    id,
+                ))
+            })
+            .collect();
+
+        let (base_out, base_counters) = serve_trace(&plan, 1);
+        assert_eq!(base_out, want, "{name}: served != direct executor");
+        let (submitted, completed, rejected, errors, dispatched) =
+            base_counters;
+        assert_eq!(submitted, REQUESTS as u64, "{name}");
+        assert_eq!(completed, REQUESTS as u64, "{name}");
+        assert_eq!(rejected, 0, "{name}");
+        assert_eq!(errors, 0, "{name}");
+        assert_eq!(dispatched, REQUESTS as u64, "{name}");
+
+        for workers in [2usize, 4] {
+            let (out, counters) = serve_trace(&plan, workers);
+            // bit-identical logits per trace id
+            for (id, (a, b)) in base_out.iter().zip(&out).enumerate() {
+                assert_eq!(a.len(), b.len());
+                for (j, (x, y)) in a.iter().zip(b).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "{name}: trace {id} logit {j} differs at \
+                         {workers} workers"
+                    );
+                }
+            }
+            assert_eq!(
+                counters, base_counters,
+                "{name}: aggregate stats differ at {workers} workers"
+            );
+        }
+    }
+}
+
+/// The request trace itself is reproducible: regenerating it yields
+/// bit-identical images, so two whole runs (not just worker counts)
+/// agree.
+#[test]
+fn whole_run_repeats_bit_identically() {
+    let (spec, mut params) = vgg_style("det_srv_rep", 8, 4, &[4, 6], 3);
+    repro::mobile::synth::pattern_prune(&spec, &mut params, 0.25);
+    let plan = Arc::new(
+        compile_plan(ModelIR::build(&spec, &params).unwrap(), 1).unwrap(),
+    );
+    let (a, ca) = serve_trace(&plan, 2);
+    let (b, cb) = serve_trace(&plan, 2);
+    assert_eq!(a, b);
+    assert_eq!(ca, cb);
+}

@@ -1,0 +1,197 @@
+//! Serving-tier integration (artifact-free: synthetic specs, no PJRT).
+//!
+//! Covers the ISSUE acceptance criteria end to end: the plan-artifact
+//! round trip must yield **bit-identical** inference outputs vs the
+//! freshly compiled plan (across kernels and both spec families), the
+//! registry must single-flight concurrent misses, and the server must
+//! reproduce direct-executor outputs under batched concurrent load with
+//! working admission control.
+
+use std::sync::Arc;
+
+use repro::config::ServeConfig;
+use repro::mobile::engine::{Executor, KernelKind, KERNEL_KINDS};
+use repro::mobile::ir::ModelIR;
+use repro::mobile::plan::{compile_plan, ExecutionPlan};
+use repro::mobile::synth;
+use repro::serve::artifact;
+use repro::serve::loadgen::{self, LoadGenConfig, LoadMode};
+use repro::serve::registry::{PlanKey, PlanRegistry};
+use repro::serve::server::Server;
+
+fn pruned_plan(
+    res: bool,
+    threads: usize,
+    seed: u64,
+) -> ExecutionPlan {
+    let (spec, mut params) = if res {
+        synth::res_style("sv_res", 16, 6, &[6, 8], seed)
+    } else {
+        synth::vgg_style("sv_vgg", 16, 6, &[6, 10], seed)
+    };
+    synth::pattern_prune(&spec, &mut params, 0.25);
+    compile_plan(ModelIR::build(&spec, &params).unwrap(), threads)
+        .unwrap()
+}
+
+/// The tentpole guarantee: save -> load -> execute is bit-identical to
+/// the in-memory plan, for every kernel, on both spec families.
+#[test]
+fn artifact_roundtrip_outputs_bit_identical() {
+    for res in [false, true] {
+        let plan = pruned_plan(res, 2, 11);
+        let bytes = artifact::encode_plan(&plan);
+        let loaded = artifact::decode_plan(&bytes).unwrap();
+        loaded.validate().unwrap();
+        for kind in KERNEL_KINDS {
+            let mut a = Executor::new(&plan, kind);
+            let mut b = Executor::new(&loaded, kind);
+            for i in 0..4u64 {
+                let img =
+                    loadgen::request_image(plan.in_dims, 500 + i, i);
+                let want = a.execute(&img);
+                let got = b.execute(&img);
+                assert_eq!(want.len(), got.len());
+                for (j, (x, y)) in want.iter().zip(&got).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "res={res} {:?} probe {i} logit {j}: {x} vs {y}",
+                        kind
+                    );
+                }
+            }
+        }
+        // helper wrapper agrees
+        artifact::verify_roundtrip(&plan, &loaded, 3, 99).unwrap();
+    }
+}
+
+#[test]
+fn artifact_file_roundtrip_and_strictness() {
+    let plan = pruned_plan(false, 1, 13);
+    let dir = std::env::temp_dir().join(format!(
+        "repro_serve_it_{}",
+        std::process::id()
+    ));
+    let path = dir.join("vgg.rpln");
+    artifact::save(&plan, &path).unwrap();
+    let loaded = artifact::load(&path).unwrap();
+    artifact::verify_roundtrip(&plan, &loaded, 2, 3).unwrap();
+    // strictness: flip one byte anywhere -> load must fail loudly
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 3;
+    bytes[mid] ^= 0x01;
+    std::fs::write(&path, &bytes).unwrap();
+    let err = artifact::load(&path).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("checksum"),
+        "expected checksum failure, got: {err:#}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Loaded plans slot into the registry + server exactly like compiled
+/// ones: the compile cost is paid once, then every fetch is a hit.
+#[test]
+fn registry_serves_artifact_loaded_plans() {
+    let dir = std::env::temp_dir().join(format!(
+        "repro_serve_reg_{}",
+        std::process::id()
+    ));
+    let path = dir.join("plan.rpln");
+    let fresh = pruned_plan(false, 1, 17);
+    artifact::save(&fresh, &path).unwrap();
+
+    let registry = PlanRegistry::new(2);
+    let key = PlanKey::new("sv_vgg", "pattern", 4.0, 1);
+    let plan = registry
+        .get_or_build(&key, || artifact::load(&path))
+        .unwrap();
+    // second fetch: hit, same Arc, no load
+    let again = registry
+        .get_or_build(&key, || panic!("must not rebuild on a hit"))
+        .unwrap();
+    assert!(Arc::ptr_eq(&plan, &again));
+    let s = registry.stats();
+    assert_eq!((s.hits, s.misses), (1, 1));
+
+    // the loaded plan serves traffic with outputs matching the fresh one
+    let server = Server::start(
+        plan,
+        KernelKind::PatternScalar,
+        &ServeConfig {
+            workers: 2,
+            max_batch: 4,
+            max_wait_us: 200,
+            queue_cap: 64,
+            batch_threads: 1,
+        },
+    );
+    let load = loadgen::run(
+        &server.handle(),
+        fresh.in_dims,
+        &LoadGenConfig {
+            mode: LoadMode::Closed { clients: 4 },
+            requests: 24,
+            seed: 77,
+        },
+    );
+    let report = server.shutdown();
+    assert_eq!(load.completed, 24);
+    assert_eq!(report.errors, 0);
+    let mut direct = Executor::new(&fresh, KernelKind::PatternScalar);
+    for o in &load.outcomes {
+        let img = loadgen::request_image(fresh.in_dims, 77, o.trace_id);
+        assert_eq!(
+            o.logits.as_deref().unwrap(),
+            direct.execute(&img).as_slice(),
+            "trace {}",
+            o.trace_id
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Open-loop mode at an intentionally silly QPS against a tiny queue:
+/// admission control must reject explicitly rather than buffer without
+/// bound, and every outcome must be accounted for.
+#[test]
+fn open_loop_backpressure_is_explicit() {
+    let plan = Arc::new(pruned_plan(false, 1, 19));
+    let server = Server::start(
+        plan.clone(),
+        KernelKind::PatternScalar,
+        &ServeConfig {
+            workers: 1,
+            max_batch: 2,
+            max_wait_us: 0,
+            queue_cap: 2,
+            batch_threads: 1,
+        },
+    );
+    let handle = server.handle();
+    let load = loadgen::run(
+        &handle,
+        plan.in_dims,
+        &LoadGenConfig {
+            mode: LoadMode::Open { qps: 1e6 },
+            requests: 64,
+            seed: 5,
+        },
+    );
+    let report = server.shutdown();
+    assert_eq!(load.outcomes.len(), 64, "every request has an outcome");
+    assert_eq!(load.completed + load.rejected, 64);
+    assert_eq!(report.completed, load.completed);
+    assert_eq!(report.rejected, load.rejected);
+    // completed requests still carry correct logits
+    let mut direct = Executor::new(&plan, KernelKind::PatternScalar);
+    for o in load.outcomes.iter().filter(|o| o.logits.is_some()) {
+        let img = loadgen::request_image(plan.in_dims, 5, o.trace_id);
+        assert_eq!(
+            o.logits.as_deref().unwrap(),
+            direct.execute(&img).as_slice()
+        );
+    }
+}
