@@ -54,6 +54,14 @@ fn serve_walkthrough() -> Result<()> {
         plan.stats.payload_bytes,
         plan.stats.arena_bytes
     );
+    // every layer carries a baked kernel choice (analytic here; `repro
+    // deploy --kernel auto` or `compile_plan_tuned` races real codelets)
+    for (i, lp) in plan.layers.iter().enumerate() {
+        println!(
+            "[deploy]   layer {i}: {:>3} filters @ {:>2}x{:<2} -> kernel {}",
+            lp.a, lp.in_hw, lp.in_hw, lp.choice
+        );
+    }
 
     // plan artifact: save once, redeploy without recompiling
     let dir = std::env::temp_dir()

@@ -1,41 +1,48 @@
-//! Serving-tier bench: compile-once-vs-load plan artifacts, and
-//! dynamic-batching throughput swept over batch window × worker counts
-//! under closed-loop concurrent load (ISSUE acceptance: batching must
-//! beat single-request serving at >= 8 concurrent clients on the
-//! synthetic VGG spec).
+//! Serving-tier bench: compile-once-vs-load plan artifacts, dynamic
+//! batching throughput swept over batch window × worker counts under
+//! closed-loop concurrent load, and tuned-plan serving with per-layer
+//! auto kernel dispatch. Results (with an environment fingerprint) land
+//! in `BENCH_serve.json`; set `BENCH_SMOKE=1` for the cheap CI shape.
 
 use std::sync::Arc;
 
 use repro::config::ServeConfig;
-use repro::mobile::engine::KernelKind;
+use repro::mobile::costmodel::TuneConfig;
+use repro::mobile::engine::{KernelKind, KernelSel};
 use repro::mobile::ir::ModelIR;
-use repro::mobile::plan::{compile_plan, ExecutionPlan};
+use repro::mobile::plan::{
+    compile_plan, compile_plan_tuned, ExecutionPlan,
+};
 use repro::mobile::synth;
 use repro::serve::artifact;
 use repro::serve::loadgen::{self, LoadGenConfig, LoadMode};
 use repro::serve::server::Server;
-use repro::serve::stats::{bench, section};
+use repro::serve::stats::{section, BenchLog};
 
 const CLIENTS: usize = 8;
-const REQUESTS: usize = 96;
 
-fn serve_qps(plan: &Arc<ExecutionPlan>, cfg: &ServeConfig) -> f64 {
-    let server =
-        Server::start(plan.clone(), KernelKind::PatternScalar, cfg);
+fn serve_qps(
+    plan: &Arc<ExecutionPlan>,
+    kernel: KernelSel,
+    cfg: &ServeConfig,
+    requests: usize,
+) -> f64 {
+    let server = Server::start(plan.clone(), kernel, cfg);
     let load = loadgen::run(
         &server.handle(),
         plan.in_dims,
         &LoadGenConfig {
             mode: LoadMode::Closed { clients: CLIENTS },
-            requests: REQUESTS,
+            requests,
             seed: 42,
         },
     );
     let report = server.shutdown();
     assert_eq!(report.errors, 0);
     println!(
-        "serve  w={} batch={:<2} wait={:>4}us bt={}   {:>8.1} req/s   \
-         p95 {:>6} us   mean batch {:.2}",
+        "serve  k={:<14} w={} batch={:<2} wait={:>4}us bt={}   \
+         {:>8.1} req/s   p95 {:>6} us   mean batch {:.2}",
+        kernel.name(),
         cfg.workers,
         cfg.max_batch,
         cfg.max_wait_us,
@@ -48,6 +55,11 @@ fn serve_qps(plan: &Arc<ExecutionPlan>, cfg: &ServeConfig) -> f64 {
 }
 
 fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let requests = if smoke { 32 } else { 96 };
+    let mut log =
+        BenchLog::new(if smoke { "serve-smoke" } else { "serve" });
+
     let in_hw = 32;
     let (spec, mut params) =
         synth::vgg_style("bench_serve_vgg", in_hw, 10, &[32, 64], 9);
@@ -55,22 +67,25 @@ fn main() {
     let ir = ModelIR::build(&spec, &params).unwrap();
 
     section("plan compile vs artifact load (pay lowering once)");
-    let mut pool: Vec<_> = (0..13).map(|_| ir.clone()).collect();
-    bench("compile_plan (PassManager lowering)", 2, 10, || {
+    let (reps, warm) = if smoke { (4, 1) } else { (10, 2) };
+    let mut pool: Vec<_> =
+        (0..reps + warm + 1).map(|_| ir.clone()).collect();
+    log.bench("compile_plan (PassManager lowering)", warm, reps, || {
         let ir = pool.pop().expect("clone pool exhausted");
         std::hint::black_box(compile_plan(ir, 1).unwrap());
     });
-    let plan = Arc::new(compile_plan(ir, 1).unwrap());
+    let plan = Arc::new(compile_plan(ir.clone(), 1).unwrap());
     let bytes = artifact::encode_plan(&plan);
     println!(
         "artifact size: {} bytes ({} layers)",
         bytes.len(),
         plan.layers.len()
     );
-    bench("artifact encode", 2, 10, || {
+    log.metric("artifact_bytes", bytes.len() as f64);
+    log.bench("artifact encode", warm, reps, || {
         std::hint::black_box(artifact::encode_plan(&plan));
     });
-    bench("artifact decode (validated load)", 2, 10, || {
+    log.bench("artifact decode (validated load)", warm, reps, || {
         std::hint::black_box(artifact::decode_plan(&bytes).unwrap());
     });
     let dir = std::env::temp_dir()
@@ -84,11 +99,13 @@ fn main() {
 
     section(format!(
         "dynamic batching vs single-request serving \
-         ({CLIENTS} closed-loop clients, {REQUESTS} requests)"
+         ({CLIENTS} closed-loop clients, {requests} requests)"
     )
     .as_str());
+    let scalar = KernelSel::Uniform(KernelKind::PatternScalar);
     let single = serve_qps(
         &plan,
+        scalar,
         &ServeConfig {
             workers: 1,
             max_batch: 1,
@@ -96,10 +113,12 @@ fn main() {
             queue_cap: 256,
             batch_threads: 1,
         },
+        requests,
     );
     // same executor-thread budget: isolates batch formation itself
     let batched = serve_qps(
         &plan,
+        scalar,
         &ServeConfig {
             workers: 1,
             max_batch: 8,
@@ -107,10 +126,12 @@ fn main() {
             queue_cap: 256,
             batch_threads: 1,
         },
+        requests,
     );
     // the full serving tier: batching + intra-batch parallel execution
     let batched_par = serve_qps(
         &plan,
+        scalar,
         &ServeConfig {
             workers: 1,
             max_batch: 8,
@@ -118,6 +139,7 @@ fn main() {
             queue_cap: 256,
             batch_threads: 4,
         },
+        requests,
     );
     println!(
         "batch formation alone (1 executor thread): {:.2}x; \
@@ -126,13 +148,51 @@ fn main() {
         batched / single.max(1e-9),
         batched_par / single.max(1e-9)
     );
+    log.metric("qps_single", single);
+    log.metric("qps_batched", batched);
+    log.metric("qps_batched_parallel", batched_par);
+    log.metric("batching_speedup", batched / single.max(1e-9));
+    log.metric(
+        "batching_parallel_speedup",
+        batched_par / single.max(1e-9),
+    );
+
+    section("tuned plan + per-layer auto kernel dispatch");
+    let cfg =
+        if smoke { TuneConfig::smoke() } else { TuneConfig::default() };
+    let (tuned, report) = compile_plan_tuned(ir, 1, cfg).unwrap();
+    println!("autotuned {} layers", report.layers.len());
+    let tuned = Arc::new(tuned);
+    let serve_cfg = ServeConfig {
+        workers: 1,
+        max_batch: 8,
+        max_wait_us: 500,
+        queue_cap: 256,
+        batch_threads: 1,
+    };
+    let qps_scalar = serve_qps(&tuned, scalar, &serve_cfg, requests);
+    let qps_auto =
+        serve_qps(&tuned, KernelSel::Auto, &serve_cfg, requests);
+    println!(
+        "auto (tuned codelets) over uniform scalar: {:.2}x",
+        qps_auto / qps_scalar.max(1e-9)
+    );
+    log.metric("qps_tuned_scalar", qps_scalar);
+    log.metric("qps_tuned_auto", qps_auto);
+    log.metric(
+        "auto_over_scalar_speedup",
+        qps_auto / qps_scalar.max(1e-9),
+    );
 
     section("batch window x worker sweep");
-    for workers in [1usize, 2, 4] {
+    let sweep_workers: &[usize] =
+        if smoke { &[1, 2] } else { &[1, 2, 4] };
+    for &workers in sweep_workers {
         for max_batch in [1usize, 4, 8] {
             for wait_us in [0u64, 200, 1000] {
                 serve_qps(
                     &plan,
+                    scalar,
                     &ServeConfig {
                         workers,
                         max_batch,
@@ -140,8 +200,11 @@ fn main() {
                         queue_cap: 256,
                         batch_threads: if max_batch > 1 { 2 } else { 1 },
                     },
+                    requests,
                 );
             }
         }
     }
+
+    log.write("BENCH_serve.json").unwrap();
 }

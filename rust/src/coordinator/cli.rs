@@ -14,9 +14,12 @@
 use anyhow::{bail, Context, Result};
 
 use crate::config::{Preset, ServeConfig};
-use crate::mobile::engine::{Executor, Fmap, KernelKind, KERNEL_KINDS};
+use crate::mobile::costmodel::{TuneConfig, TuneReport};
+use crate::mobile::engine::{Executor, Fmap, KernelSel, KERNEL_KINDS};
 use crate::mobile::ir::ModelIR;
-use crate::mobile::plan::{compile_plan, ExecutionPlan, PassManager};
+use crate::mobile::plan::{
+    compile_plan, compile_plan_tuned, ExecutionPlan, PassManager,
+};
 use crate::mobile::synth;
 use crate::pruning::Scheme;
 use crate::report::human_bytes;
@@ -155,13 +158,20 @@ commands:
   retrain   --model <id> --scheme .. --rate ..      full prune+retrain row
   eval      --model <id>                            pre-trained accuracy
   deploy    --model <id> [--rate N] [--threads N]   compile plan + executor report
+            [--kernel auto|dense|sparse|tiled|vec|vec-tiled]
+            (auto = run the plan-time autotuner and print its per-layer
+            table; a named kernel times just that one; no flag compares
+            every kernel and prints the analytic per-layer choices)
   exp       <table1|table2|table3|table4|table5|fig3|sweep|all> [--preset ..]
             (sweep = host-engine parallel prune sweep; no artifacts needed)
   pipeline  --model <id> [--scheme ..] [--rate N]   end-to-end demo
   serve     [--spec vgg|res] [--hw N] [--classes N] [--rate N]
             [--workers N] [--batch N] [--wait-us N] [--queue N]
             [--batch-threads N] [--plan-threads N] [--clients N]
-            [--qps N] [--requests N] [--kernel dense|sparse|tiled]
+            [--qps N] [--requests N]
+            [--kernel auto|dense|sparse|tiled|vec|vec-tiled]
+            (auto = autotune the plan at compile time, then dispatch
+            each layer to its tuned codelet)
             [--artifact <path>] [--seed N]
             dynamic-batching inference server on a synthetic spec
             (no PJRT/artifacts needed); --artifact saves/loads the
@@ -173,6 +183,30 @@ common flags: --artifacts <dir> (default ./artifacts), --preset (default quick),
                              default min(cores, 4); results are identical
                              at any thread count)
 ";
+
+/// Print the per-layer autotuner results table: layer geometry, the
+/// winning [`KernelChoice`](crate::mobile::costmodel::KernelChoice), and
+/// how many candidate codelets were raced for it.
+fn print_tune_table(plan: &ExecutionPlan, report: &TuneReport) {
+    println!(
+        "  autotuner: {:>5}  {:>10}  {:<34}  {}",
+        "layer", "geometry", "chosen kernel", "candidates"
+    );
+    for lt in &report.layers {
+        let lp = &plan.layers[lt.layer];
+        // KernelChoice's Display ignores width flags; pad the rendered
+        // string so the table stays aligned
+        let chosen = lt.chosen.to_string();
+        println!(
+            "  autotuner: {:>5}  {:>4}x{:<3}s{}  {chosen:<34}  {}",
+            lt.layer,
+            lp.a,
+            lp.in_hw,
+            lp.stride,
+            lt.timings.len()
+        );
+    }
+}
 
 /// `repro serve`: compile-or-load a plan through the registry, stand up
 /// the dynamic-batching server, drive it with the seeded load generator,
@@ -198,12 +232,16 @@ fn serve_cmd(args: &Args) -> Result<()> {
         args.flag_usize("batch-threads", cfg.batch_threads)?;
     let requests = args.flag_usize("requests", 64)?;
     let clients = args.flag_usize("clients", 8)?;
-    let kernel = KernelKind::parse(
+    let kernel = KernelSel::parse(
         args.flags
             .get("kernel")
             .map(|s| s.as_str())
             .unwrap_or("sparse"),
     )?;
+    // `--kernel auto` serves per-layer tuned codelets, so the plan must
+    // be compiled through the autotuner (and cached under a key that can
+    // never alias the analytic plan)
+    let tune = matches!(kernel, KernelSel::Auto);
     let mode = match args.flags.get("qps") {
         Some(q) => LoadMode::Open {
             qps: q.parse().context("--qps must be a number")?,
@@ -229,11 +267,22 @@ fn serve_cmd(args: &Args) -> Result<()> {
             other => bail!("unknown --spec {other:?} (vgg|res)"),
         };
         synth::pattern_prune(&spec, &mut params, 1.0 / rate);
-        compile_plan(ModelIR::build(&spec, &params)?, plan_threads)
+        let ir = ModelIR::build(&spec, &params)?;
+        if tune {
+            let (plan, report) =
+                compile_plan_tuned(ir, plan_threads, TuneConfig::default())?;
+            print_tune_table(&plan, &report);
+            Ok(plan)
+        } else {
+            compile_plan(ir, plan_threads)
+        }
     };
 
     let registry = PlanRegistry::new(4);
-    let key = PlanKey::new(&model_id, "pattern", rate, plan_threads);
+    let mut key = PlanKey::new(&model_id, "pattern", rate, plan_threads);
+    if tune {
+        key = key.tuned();
+    }
     let artifact_path = args.flags.get("artifact").cloned();
     let t = crate::util::Stopwatch::start();
     let plan = registry.get_or_build(&key, || match &artifact_path {
@@ -387,6 +436,10 @@ pub fn main() -> Result<()> {
         "deploy" => {
             let ctx = args.ctx()?;
             let model = args.model()?;
+            let sel = match args.flags.get("kernel") {
+                Some(k) => Some(KernelSel::parse(k)?),
+                None => None,
+            };
             let (params, _, comp, _, _) = ctx.prune(
                 model,
                 args.method()?,
@@ -395,8 +448,12 @@ pub fn main() -> Result<()> {
             )?;
             let spec = ctx.rt.model(model)?.clone();
             let t = crate::util::Stopwatch::start();
-            let plan = PassManager::new(ctx.threads)
-                .compile(ModelIR::build(&spec, &params)?)?;
+            let mut pm = PassManager::new(ctx.threads);
+            if matches!(sel, Some(KernelSel::Auto)) {
+                pm = pm.with_tuning(TuneConfig::default());
+            }
+            let (plan, tune_report) =
+                pm.compile_reported(ModelIR::build(&spec, &params)?)?;
             let plan_ms = t.ms();
             let rep = &plan.report;
             println!(
@@ -434,6 +491,22 @@ pub fn main() -> Result<()> {
             for (name, ms) in &plan.stats.pass_ms {
                 println!("    pass {name:14} {ms:9.3} ms");
             }
+            match &tune_report {
+                Some(rep) => print_tune_table(&plan, rep),
+                None => {
+                    println!(
+                        "  per-layer kernel choices (analytic; pass \
+                         --kernel auto to autotune):"
+                    );
+                    for (i, lp) in plan.layers.iter().enumerate() {
+                        let chosen = lp.choice.to_string();
+                        println!(
+                            "    layer {i:>2}  {:>4}x{:<3}s{}  {chosen}",
+                            lp.a, lp.in_hw, lp.stride
+                        );
+                    }
+                }
+            }
             let mut rng = Pcg32::seeded(7);
             let img = Fmap {
                 c: 3,
@@ -442,8 +515,18 @@ pub fn main() -> Result<()> {
                     .map(|_| rng.uniform())
                     .collect(),
             };
-            for kind in KERNEL_KINDS {
-                let mut ex = Executor::new(&plan, kind);
+            // no --kernel: compare every registered kernel; --kernel:
+            // time exactly the requested selection (auto = per-layer
+            // dispatch through the baked choices)
+            let sels: Vec<KernelSel> = match sel {
+                Some(s) => vec![s],
+                None => KERNEL_KINDS
+                    .into_iter()
+                    .map(KernelSel::Uniform)
+                    .collect(),
+            };
+            for s in sels {
+                let mut ex = Executor::with_sel(&plan, s);
                 for _ in 0..3 {
                     ex.execute(&img);
                 }

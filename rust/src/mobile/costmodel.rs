@@ -1,16 +1,39 @@
-//! Analytical mobile cost model: translates per-layer operation and byte
-//! counts into Samsung-Galaxy-S10-class latencies for the Fig. 3
-//! comparison (we have no physical S10 — DESIGN.md §2).
+//! Mobile cost modeling: the calibrated analytical latency model for the
+//! Fig. 3 comparison (we have no physical S10 — DESIGN.md §2), plus the
+//! kernel-shape side of the cost question — the per-layer
+//! [`KernelChoice`] with its analytic defaults and the plan-time
+//! empirical autotuner (DESIGN.md §12).
 //!
-//! Calibration strategy: per-framework *dense* execution efficiencies are
-//! fit so the dense ResNet-18/ImageNet frame times land in the ranges the
-//! paper reports for TFLite/TVM/MNN; our framework's *additional* gains
-//! then come only from the measured compiler-pass outputs (sparse MACs,
-//! compressed bytes, LRE load reduction, reorder regularity) — i.e. the
-//! speedup side of Fig. 3 is produced by the passes, not by calibration.
+//! Calibration strategy (analytical model): per-framework *dense*
+//! execution efficiencies are fit so the dense ResNet-18/ImageNet frame
+//! times land in the ranges the paper reports for TFLite/TVM/MNN; our
+//! framework's *additional* gains then come only from the measured
+//! compiler-pass outputs (sparse MACs, compressed bytes, LRE load
+//! reduction, reorder regularity) — i.e. the speedup side of Fig. 3 is
+//! produced by the passes, not by calibration.
+//!
+//! Autotuner strategy: the seed's Pallas GEMM (python/compile/kernels/
+//! matmul.py) sizes its grid by capping each block at a default and
+//! rounding small dimensions up to the hardware alignment.
+//! [`analytic_row_tile`] ports that heuristic to the conv codelets (cap
+//! the output-row band at [`ROW_TILE_CAP`], align to the lane width,
+//! size by an L1 budget), and [`autotune_layer`] replaces the static
+//! table with measurement: at plan-compile time each candidate
+//! (kernel-kind, row-tile, filter-block) shape is timed on the layer's
+//! *real packed payload* with the plan's *real thread blocks*, and the
+//! winner is baked into the plan. Autotuning picks shapes only — every
+//! pattern kernel produces bit-identical planes (see `engine`), so a
+//! noisy timer can never change results.
 
-use super::ir::ModelIR;
+use crate::rng::Pcg32;
+use crate::tensor::Chw;
+use crate::util::Stopwatch;
+
+use super::engine::{self, KernelKind, OutPlanes};
+use super::ir::{ConvIR, ModelIR};
 use super::passes::CompileReport;
+use super::plan::LayerPlan;
+use super::simd::LANES;
 
 /// A mobile SoC target (peak numbers are fp32-effective, not marketing).
 #[derive(Clone, Copy, Debug)]
@@ -238,6 +261,241 @@ pub fn filter_exec_cost(c: &super::ir::ConvIR, f: usize) -> u64 {
     }
     let plane = (c.out_hw * c.out_hw) as u64;
     taps * plane + kernels * (plane / 4 + 8) + 64
+}
+
+// ---------------------------------------------------------------------------
+// Kernel choice: analytic defaults + plan-time empirical autotuner
+// ---------------------------------------------------------------------------
+
+/// The conv kernel shape baked into a [`LayerPlan`]: which registry
+/// kernel runs the layer and the cache-tile parameters the tiled
+/// kernels read. Carried through the plan artifact (section 6 of the
+/// `serve::artifact` format) so serve traffic runs the tuned codelets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelChoice {
+    pub kind: KernelKind,
+    /// output-row tile height for the row-tiled kernels (≥ 1)
+    pub row_tile: u16,
+    /// filters per cache group in the vec-tiled kernel (≥ 1)
+    pub fblock: u16,
+    /// true when an empirical autotuning run picked this choice (false
+    /// for the analytic default)
+    pub tuned: bool,
+}
+
+impl std::fmt::Display for KernelChoice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} rt={} fb={}{}",
+            self.kind.name(),
+            self.row_tile,
+            self.fblock,
+            if self.tuned { " (tuned)" } else { "" }
+        )
+    }
+}
+
+/// L1 budget for one input row band, bytes: half a typical 32 KiB L1D,
+/// leaving the other half for the output rows and payload stream.
+const L1_BAND_BYTES: usize = 16 * 1024;
+
+/// Cap on the row tile (the seed GEMM's block-size-default spirit).
+pub const ROW_TILE_CAP: usize = 64;
+
+/// Cap on the vec-tiled filter group.
+const FBLOCK_CAP: usize = 8;
+
+fn round_up(x: usize, m: usize) -> usize {
+    x.div_ceil(m) * m
+}
+
+/// Analytic output-row tile: size the revisited input band to the L1
+/// budget, align up to the lane width, cap at [`ROW_TILE_CAP`] — the
+/// port of the seed GEMM's `min(BLOCK, round_up(dim, align))` rule.
+pub fn analytic_row_tile(in_hw: usize, kh: usize, stride: usize) -> u16 {
+    // one output band of height T touches T*stride + kh input rows
+    let budget_rows = L1_BAND_BYTES / (4 * in_hw.max(1));
+    let tile = budget_rows.saturating_sub(kh) / stride.max(1);
+    round_up(tile.max(1), LANES / 2).min(ROW_TILE_CAP) as u16
+}
+
+/// Analytic per-layer default (no measurement): vectorized codelets
+/// whenever a full lane fits in an output row, with cache tiling once
+/// the plane outgrows the L1 band. This is what `compile_plan` bakes
+/// in; the autotuner overrides it when enabled.
+pub fn default_choice(c: &ConvIR) -> KernelChoice {
+    let row_tile = analytic_row_tile(c.in_hw, c.kh, c.stride);
+    let fblock = FBLOCK_CAP.min(c.a.max(1)) as u16;
+    let kind = if c.out_hw < LANES {
+        KernelKind::PatternScalar
+    } else if (row_tile as usize) < c.out_hw {
+        KernelKind::PatternVecTiled
+    } else {
+        KernelKind::PatternVec
+    };
+    KernelChoice {
+        kind,
+        row_tile,
+        fblock,
+        tuned: false,
+    }
+}
+
+/// Autotuner effort knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct TuneConfig {
+    /// timed executions per candidate per round (after one warm-up)
+    pub reps: usize,
+    /// measurement rounds; each candidate keeps its best round, so
+    /// transient noise in one round cannot crown a loser
+    pub rounds: usize,
+}
+
+impl Default for TuneConfig {
+    fn default() -> Self {
+        TuneConfig { reps: 3, rounds: 2 }
+    }
+}
+
+impl TuneConfig {
+    /// Cheapest useful setting (CI smoke): one round, one rep.
+    pub fn smoke() -> Self {
+        TuneConfig { reps: 1, rounds: 1 }
+    }
+}
+
+/// One layer's autotuning outcome: the winner plus every candidate's
+/// best measured time (for the `repro deploy` table).
+#[derive(Clone, Debug)]
+pub struct LayerTune {
+    pub layer: usize,
+    pub chosen: KernelChoice,
+    /// (candidate, best ms over rounds), in search order
+    pub timings: Vec<(KernelChoice, f64)>,
+}
+
+/// Whole-plan autotuning outcome, returned alongside the plan by
+/// `PassManager` when tuning is enabled.
+#[derive(Clone, Debug, Default)]
+pub struct TuneReport {
+    pub layers: Vec<LayerTune>,
+}
+
+/// Candidate (kernel-kind, row-tile, filter-block) shapes for one
+/// layer: the scalar baseline, straight vec, analytic tiled, and a
+/// small grid of vec-tiled shapes around the analytic tile.
+fn candidates(c: &ConvIR) -> Vec<KernelChoice> {
+    let analytic = default_choice(c);
+    let rt = analytic.row_tile;
+    let mk = |kind, row_tile, fblock| KernelChoice {
+        kind,
+        row_tile,
+        fblock,
+        tuned: false,
+    };
+    let mut v = vec![
+        mk(KernelKind::PatternScalar, rt, 1),
+        mk(KernelKind::PatternVec, rt, 1),
+        mk(KernelKind::PatternTiled, rt, 1),
+    ];
+    let mut tiles = vec![rt];
+    for t in [LANES as u16, (2 * LANES) as u16] {
+        if t != rt && (t as usize) <= ROW_TILE_CAP {
+            tiles.push(t);
+        }
+    }
+    let fbs: &[u16] = &[2, analytic.fblock.max(1)];
+    for &t in &tiles {
+        for &fb in fbs {
+            let cand = mk(KernelKind::PatternVecTiled, t, fb);
+            if !v.contains(&cand) {
+                v.push(cand);
+            }
+        }
+    }
+    v
+}
+
+/// Execute one full layer with `kind`, mirroring the executor's block
+/// dispatch (block 0 on the calling thread, the rest on scoped
+/// workers) so the measurement sees the plan's real (layer,
+/// thread-count) shape.
+fn run_layer_once(
+    c: &ConvIR,
+    lp: &LayerPlan,
+    kind: KernelKind,
+    x: Chw<'_>,
+    out: &mut [f32],
+) {
+    let planes = OutPlanes::new(out, lp.out_hw * lp.out_hw);
+    let k = engine::kernel(kind);
+    if lp.blocks.len() <= 1 {
+        if let Some(b) = lp.blocks.first() {
+            k.run_block(c, lp, b, x, &planes);
+        }
+    } else {
+        std::thread::scope(|s| {
+            for b in &lp.blocks[1..] {
+                let pr = &planes;
+                s.spawn(move || k.run_block(c, lp, b, x, pr));
+            }
+            k.run_block(c, lp, &lp.blocks[0], x, &planes);
+        });
+    }
+}
+
+/// Empirical plan-time autotuner for one layer: times every candidate
+/// shape on the layer's real packed payload and block partition, bakes
+/// the winner into `lp.choice`, and returns the full timing table.
+///
+/// The input fmap is synthetic (seeded, per-layer stream) — only time
+/// is measured, and kernel results are data-independent bit-identical
+/// across candidates, so the tuner can never change numerics.
+pub fn autotune_layer(
+    c: &ConvIR,
+    lp: &mut LayerPlan,
+    layer: usize,
+    cfg: &TuneConfig,
+) -> LayerTune {
+    let cands = candidates(c);
+    let mut best_ms = vec![f64::INFINITY; cands.len()];
+    let mut rng = Pcg32::new(0x5eed, layer as u64);
+    let xdata: Vec<f32> = (0..lp.c * lp.in_hw * lp.in_hw)
+        .map(|_| rng.normal())
+        .collect();
+    let x = Chw::new(lp.c, lp.in_hw, &xdata);
+    let mut out = vec![0.0f32; lp.out_elems()];
+    let reps = cfg.reps.max(1);
+    for _round in 0..cfg.rounds.max(1) {
+        for (ci, cand) in cands.iter().enumerate() {
+            lp.choice = *cand;
+            // one warm-up pulls the payload and fmap into cache
+            run_layer_once(c, lp, cand.kind, x, &mut out);
+            let t = Stopwatch::start();
+            for _ in 0..reps {
+                run_layer_once(c, lp, cand.kind, x, &mut out);
+            }
+            let ms = t.ms() / reps as f64;
+            if ms < best_ms[ci] {
+                best_ms[ci] = ms;
+            }
+        }
+    }
+    let mut winner = 0;
+    for i in 1..cands.len() {
+        if best_ms[i] < best_ms[winner] {
+            winner = i;
+        }
+    }
+    let mut chosen = cands[winner];
+    chosen.tuned = true;
+    lp.choice = chosen;
+    LayerTune {
+        layer,
+        chosen,
+        timings: cands.into_iter().zip(best_ms).collect(),
+    }
 }
 
 /// Predicted end-to-end single-frame latency (ms).

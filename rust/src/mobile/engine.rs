@@ -7,11 +7,21 @@
 //! through the plan-sized buffer [`Arena`] (zero heap allocations per
 //! inference after construction), and conv layers dispatch through the
 //! [`ConvKernel`] registry — a dense reference kernel, the pattern-sparse
-//! scalar kernel consuming the packed payload + row-grouped codelets, and a
-//! row-tiled variant. Conv layers run multi-threaded via
-//! `std::thread::scope` across the plan's cost-balanced per-thread filter
-//! blocks; [`Executor::execute_batch`] and [`execute_batch_parallel`] cover
-//! throughput scenarios.
+//! scalar kernel consuming the packed payload + row-grouped codelets, a
+//! row-tiled variant, and the width-vectorized [`PatternVec`] /
+//! [`PatternVecTiled`] kernels built on [`super::simd`] (DESIGN.md §12).
+//! Dispatch is either uniform ([`KernelSel::Uniform`]) or per layer
+//! through the [`KernelChoice`](super::costmodel::KernelChoice) the plan
+//! compiler baked into each [`LayerPlan`] ([`KernelSel::Auto`]). Conv
+//! layers run multi-threaded via `std::thread::scope` across the plan's
+//! cost-balanced per-thread filter blocks; [`Executor::execute_batch`]
+//! and [`execute_batch_parallel`] cover throughput scenarios.
+//!
+//! All pattern kernels add each output element's taps in the identical
+//! kernel → row → tap order with identical rounding (no FMA
+//! contraction), so switching kernel kind — including what the
+//! autotuner picks — never changes results bit for bit (property-tested
+//! below).
 //!
 //! Numerics are verified against the PJRT `fwd_eval` artifact in
 //! rust/tests/pjrt_parity.rs (with `--features pjrt`) and against the dense
@@ -25,8 +35,10 @@ use crate::tensor::{Chw, Tensor};
 
 use super::ir::{ConvIR, ModelIR};
 use super::plan::{
-    self, Arena, ExecutionPlan, FilterBlock, LayerPlan, PlanStep,
+    self, Arena, ExecutionPlan, FilterBlock, LayerPlan, PackedKernel,
+    PlanStep,
 };
+use super::simd::axpy_row;
 
 pub use super::passes::StyleRows;
 pub use super::plan::same_pad_lo;
@@ -172,12 +184,18 @@ pub enum KernelKind {
     PatternScalar,
     /// pattern-sparse with output-row tiling (locality on large fmaps)
     PatternTiled,
+    /// pattern-sparse with width-lane vectorized tap codelets
+    PatternVec,
+    /// vectorized codelets plus output-row / filter-group cache tiling
+    PatternVecTiled,
 }
 
-pub const KERNEL_KINDS: [KernelKind; 3] = [
+pub const KERNEL_KINDS: [KernelKind; 5] = [
     KernelKind::DenseRef,
     KernelKind::PatternScalar,
     KernelKind::PatternTiled,
+    KernelKind::PatternVec,
+    KernelKind::PatternVecTiled,
 ];
 
 impl KernelKind {
@@ -188,16 +206,57 @@ impl KernelKind {
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s {
             "dense" => KernelKind::DenseRef,
-            "sparse" | "pattern" => KernelKind::PatternScalar,
+            "sparse" | "pattern" | "scalar" => KernelKind::PatternScalar,
             "tiled" => KernelKind::PatternTiled,
-            _ => bail!("unknown kernel {s:?} (dense|sparse|tiled)"),
+            "vec" => KernelKind::PatternVec,
+            "vec-tiled" | "vectiled" => KernelKind::PatternVecTiled,
+            _ => bail!(
+                "unknown kernel {s:?} \
+                 (dense|scalar|tiled|vec|vec-tiled)"
+            ),
         })
+    }
+}
+
+/// How the executor picks the conv kernel for each layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelSel {
+    /// force one kernel kind for every layer
+    Uniform(KernelKind),
+    /// per-layer dispatch through the
+    /// [`KernelChoice`](super::costmodel::KernelChoice) baked into the
+    /// plan — analytic defaults, or the autotuner's winners on a tuned
+    /// plan
+    Auto,
+}
+
+impl From<KernelKind> for KernelSel {
+    fn from(k: KernelKind) -> Self {
+        KernelSel::Uniform(k)
+    }
+}
+
+impl KernelSel {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "auto" => KernelSel::Auto,
+            _ => KernelSel::Uniform(KernelKind::parse(s)?),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelSel::Auto => "auto",
+            KernelSel::Uniform(k) => k.name(),
+        }
     }
 }
 
 static DENSE_REF: DenseRef = DenseRef;
 static PATTERN_SCALAR: PatternScalar = PatternScalar;
 static PATTERN_TILED: PatternTiled = PatternTiled;
+static PATTERN_VEC: PatternVec = PatternVec;
+static PATTERN_VEC_TILED: PatternVecTiled = PatternVecTiled;
 
 /// Resolve a kernel implementation from the registry.
 pub fn kernel(kind: KernelKind) -> &'static dyn ConvKernel {
@@ -205,6 +264,8 @@ pub fn kernel(kind: KernelKind) -> &'static dyn ConvKernel {
         KernelKind::DenseRef => &DENSE_REF,
         KernelKind::PatternScalar => &PATTERN_SCALAR,
         KernelKind::PatternTiled => &PATTERN_TILED,
+        KernelKind::PatternVec => &PATTERN_VEC,
+        KernelKind::PatternVecTiled => &PATTERN_VEC_TILED,
     }
 }
 
@@ -343,10 +404,10 @@ impl ConvKernel for PatternScalar {
 
 /// Pattern-sparse kernel with output-row tiling: kernels revisit a small
 /// band of input rows while it is cache-hot instead of streaming the whole
-/// plane per kernel.
+/// plane per kernel. The tile height comes from the layer's
+/// [`KernelChoice`](super::costmodel::KernelChoice) — the analytic
+/// L1-band default, or whatever the autotuner measured as fastest.
 pub struct PatternTiled;
-
-const ROW_TILE: usize = 8;
 
 impl ConvKernel for PatternTiled {
     fn name(&self) -> &'static str {
@@ -362,13 +423,14 @@ impl ConvKernel for PatternTiled {
         out: &OutPlanes<'_>,
     ) {
         let ihw = lp.in_hw as i64;
+        let row_tile = (lp.choice.row_tile as usize).max(1);
         for &f in &lp.exec_order[block.span.clone()] {
             // Safety: block filters are disjoint across threads.
             let o = unsafe { out.plane_mut(f) };
             o.fill(lp.bias[f]);
             let mut oy0 = 0;
             while oy0 < lp.out_hw {
-                let oy1 = (oy0 + ROW_TILE).min(lp.out_hw);
+                let oy1 = (oy0 + row_tile).min(lp.out_hw);
                 for k in &lp.kernels[lp.filter_ranges[f].clone()] {
                     let xin = x.plane(k.ch as usize);
                     let pay = &lp.payload[k.off as usize..];
@@ -405,21 +467,172 @@ impl ConvKernel for PatternTiled {
     }
 }
 
+/// All codelets of filter `f` restricted to output rows `[oy0, oy1)`,
+/// each tap streamed as a width-lane [`axpy_row`]. The valid output-x
+/// window is hoisted per tap (it is row-invariant), so the hot loop is
+/// pure slicing + vector arithmetic.
+///
+/// Per output element the taps accumulate in kernel → row → tap order —
+/// the same order as [`PatternScalar`] — with one rounded multiply and
+/// one rounded add each, so all pattern kernels agree bit for bit.
+#[inline]
+fn vec_filter(
+    lp: &LayerPlan,
+    kernels: &[PackedKernel],
+    x: Chw<'_>,
+    o: &mut [f32],
+    ihw: i64,
+    oy0: usize,
+    oy1: usize,
+) {
+    for k in kernels {
+        let xin = x.plane(k.ch as usize);
+        let pay = &lp.payload[k.off as usize..];
+        for (ky, taps) in &lp.style_rows[k.style as usize] {
+            let dy = *ky as i64 - lp.pad;
+            for (kx, slot) in taps {
+                let wv = pay[*slot];
+                let dx = *kx as i64 - lp.pad;
+                let (ox0, ox1) = x_range(lp.out_hw, lp.stride, dx, ihw);
+                if ox0 >= ox1 {
+                    continue;
+                }
+                for oy in oy0..oy1 {
+                    let iy = (oy * lp.stride) as i64 + dy;
+                    if iy < 0 || iy >= ihw {
+                        continue;
+                    }
+                    let irow = iy as usize * lp.in_hw;
+                    let orow = oy * lp.out_hw;
+                    let ix0 = (irow as i64
+                        + (ox0 * lp.stride) as i64
+                        + dx) as usize;
+                    axpy_row(
+                        &mut o[orow + ox0..orow + ox1],
+                        &xin[ix0..],
+                        wv,
+                        lp.stride,
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Width-vectorized pattern kernel: every row codelet streams
+/// [`LANES`](super::simd::LANES)-wide fmap vectors through
+/// [`axpy_row`]; border columns and widths that do not divide the lane
+/// width fall back to the scalar tail inside the codelet.
+pub struct PatternVec;
+
+impl ConvKernel for PatternVec {
+    fn name(&self) -> &'static str {
+        "pattern-vec"
+    }
+
+    fn run_block(
+        &self,
+        _c: &ConvIR,
+        lp: &LayerPlan,
+        block: &FilterBlock,
+        x: Chw<'_>,
+        out: &OutPlanes<'_>,
+    ) {
+        let ihw = lp.in_hw as i64;
+        for &f in &lp.exec_order[block.span.clone()] {
+            // Safety: block filters are disjoint across threads.
+            let o = unsafe { out.plane_mut(f) };
+            o.fill(lp.bias[f]);
+            vec_filter(
+                lp,
+                &lp.kernels[lp.filter_ranges[f].clone()],
+                x,
+                o,
+                ihw,
+                0,
+                lp.out_hw,
+            );
+            finish_plane(lp.act, o);
+        }
+    }
+}
+
+/// Vectorized codelets plus two cache-level tilings driven by the
+/// layer's [`KernelChoice`](super::costmodel::KernelChoice): output rows
+/// in bands of `row_tile` (the input row band is revisited while hot)
+/// and filters in groups of `fblock` (an output-channel block streams
+/// the same input band before it is evicted).
+pub struct PatternVecTiled;
+
+impl ConvKernel for PatternVecTiled {
+    fn name(&self) -> &'static str {
+        "pattern-vec-tiled"
+    }
+
+    fn run_block(
+        &self,
+        _c: &ConvIR,
+        lp: &LayerPlan,
+        block: &FilterBlock,
+        x: Chw<'_>,
+        out: &OutPlanes<'_>,
+    ) {
+        let ihw = lp.in_hw as i64;
+        let row_tile = (lp.choice.row_tile as usize).max(1);
+        let fblock = (lp.choice.fblock as usize).max(1);
+        let filters = &lp.exec_order[block.span.clone()];
+        for group in filters.chunks(fblock) {
+            // Safety (all three plane_mut uses): block filters are
+            // disjoint across threads, and within this thread the
+            // borrows are sequential — each ends before the next
+            // plane_mut call.
+            for &f in group {
+                let o = unsafe { out.plane_mut(f) };
+                o.fill(lp.bias[f]);
+            }
+            let mut oy0 = 0;
+            while oy0 < lp.out_hw {
+                let oy1 = (oy0 + row_tile).min(lp.out_hw);
+                for &f in group {
+                    let o = unsafe { out.plane_mut(f) };
+                    vec_filter(
+                        lp,
+                        &lp.kernels[lp.filter_ranges[f].clone()],
+                        x,
+                        o,
+                        ihw,
+                        oy0,
+                        oy1,
+                    );
+                }
+                oy0 = oy1;
+            }
+            for &f in group {
+                finish_plane(lp.act, unsafe { out.plane_mut(f) });
+            }
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Executor
 // ---------------------------------------------------------------------------
 
-/// Run one conv layer: dispatch the plan's filter blocks to the kernel,
+/// Run one conv layer: dispatch the plan's filter blocks to the kernel
+/// (`forced`, or the layer's baked
+/// [`KernelChoice`](super::costmodel::KernelChoice) when `forced` is
+/// `None`),
 /// spawning scoped workers when the plan was compiled for multiple
 /// threads. Block 0 always runs on the calling thread.
 fn run_conv(
     p: &ExecutionPlan,
-    kernel: &'static dyn ConvKernel,
+    forced: Option<&'static dyn ConvKernel>,
     layer: usize,
     x: Chw<'_>,
     out: &mut [f32],
 ) {
     let lp = &p.layers[layer];
+    let kernel = forced.unwrap_or_else(|| kernel(lp.choice.kind));
     let c = &p.ir.convs[lp.conv];
     let plane = lp.out_hw * lp.out_hw;
     debug_assert!(out.len() >= lp.a * plane);
@@ -463,15 +676,30 @@ fn max_pool2(x: Chw<'_>, out: &mut [f32]) {
 /// tests with a counting global allocator).
 pub struct Executor<'p> {
     plan: &'p ExecutionPlan,
-    kernel: &'static dyn ConvKernel,
+    /// `None` = auto: per-layer dispatch through the plan's choices
+    kernel: Option<&'static dyn ConvKernel>,
     arena: Arena,
 }
 
 impl<'p> Executor<'p> {
     pub fn new(plan: &'p ExecutionPlan, kind: KernelKind) -> Self {
+        Executor::with_sel(plan, KernelSel::Uniform(kind))
+    }
+
+    /// Executor that dispatches each conv layer through its baked
+    /// [`KernelChoice`](super::costmodel::KernelChoice).
+    pub fn auto(plan: &'p ExecutionPlan) -> Self {
+        Executor::with_sel(plan, KernelSel::Auto)
+    }
+
+    pub fn with_sel(plan: &'p ExecutionPlan, sel: KernelSel) -> Self {
+        let forced = match sel {
+            KernelSel::Uniform(kind) => Some(kernel(kind)),
+            KernelSel::Auto => None,
+        };
         Executor {
             plan,
-            kernel: kernel(kind),
+            kernel: forced,
             arena: Arena::for_plan(plan),
         }
     }
@@ -481,7 +709,10 @@ impl<'p> Executor<'p> {
     }
 
     pub fn kernel_name(&self) -> &'static str {
-        self.kernel.name()
+        match self.kernel {
+            Some(k) => k.name(),
+            None => "auto",
+        }
     }
 
     /// Arena growth events since construction (0 ⇔ no heap allocation on
@@ -676,10 +907,11 @@ impl<'p> Executor<'p> {
 /// worker starts on a doomed batch).
 pub fn execute_batch_parallel(
     plan: &ExecutionPlan,
-    kind: KernelKind,
+    kind: impl Into<KernelSel>,
     imgs: &[Fmap],
     workers: usize,
 ) -> Result<Vec<Vec<f32>>> {
+    let sel = kind.into();
     if imgs.is_empty() {
         bail!("execute_batch_parallel: empty batch");
     }
@@ -702,7 +934,7 @@ pub fn execute_batch_parallel(
     }
     let w = workers.max(1).min(imgs.len());
     if w <= 1 {
-        return Executor::new(plan, kind).execute_batch(imgs);
+        return Executor::with_sel(plan, sel).execute_batch(imgs);
     }
     let chunk = imgs.len().div_ceil(w);
     let mut results: Vec<Result<Vec<Vec<f32>>>> = Vec::new();
@@ -711,7 +943,7 @@ pub fn execute_batch_parallel(
             .chunks(chunk)
             .map(|ch| {
                 s.spawn(move || {
-                    Executor::new(plan, kind).execute_batch(ch)
+                    Executor::with_sel(plan, sel).execute_batch(ch)
                 })
             })
             .collect();
@@ -886,10 +1118,18 @@ mod tests {
         }
     }
 
-    /// Property (paper §V-C semantics preservation): the planned sparse
-    /// kernels reproduce the dense reference to 1e-4 across randomized
-    /// pattern masks, strides {1,2}, kernel sizes {1,3}, and
-    /// fully-pruned (pattern = 0) kernels.
+    /// Property (paper §V-C semantics preservation): every planned
+    /// sparse kernel — scalar, tiled, and both vectorized variants —
+    /// reproduces the dense reference *exactly* across randomized
+    /// pattern masks, strides {1,2}, kernel sizes {1,3}, fully-pruned
+    /// (pattern = 0) kernels, and fmap widths that do not divide the
+    /// lane width (the vectorized codelets' scalar tail).
+    ///
+    /// Exact `==` is the right bar: per output element every kernel
+    /// accumulates taps in the same kernel → row → tap order with the
+    /// same separate-multiply-then-add rounding, and the dense
+    /// reference only adds extra `0.0 * x` terms for pruned taps —
+    /// which can flip the sign of a zero but never change a value.
     #[test]
     fn prop_sparse_kernels_match_dense_reference() {
         check("sparse-vs-dense-kernels", 2024, 60, 8, |g| {
@@ -897,19 +1137,23 @@ mod tests {
             let stride = 1 + g.rng.below(2);
             let a = g.dim_up_to(6);
             let cch = g.dim_up_to(4);
-            let in_hw = 2 + g.rng.below(9);
+            // up to 21: well past LANES, and usually not a multiple of it
+            let in_hw = 2 + g.rng.below(20);
             let c = random_pruned_conv(g.rng, a, cch, ksz, stride, in_hw);
             let threads = 1 + g.rng.below(3);
             let lp = LayerPlan::for_conv(&c, threads);
             let xdata = g.vec_f32(cch * in_hw * in_hw);
             let x = Chw::new(cch, in_hw, &xdata);
             let dense = run_kernel_full(KernelKind::DenseRef, &c, &lp, x);
-            for kind in
-                [KernelKind::PatternScalar, KernelKind::PatternTiled]
-            {
+            for kind in [
+                KernelKind::PatternScalar,
+                KernelKind::PatternTiled,
+                KernelKind::PatternVec,
+                KernelKind::PatternVecTiled,
+            ] {
                 let got = run_kernel_full(kind, &c, &lp, x);
                 for (i, (ge, de)) in got.iter().zip(&dense).enumerate() {
-                    if (ge - de).abs() > 1e-4 {
+                    if ge != de {
                         return Err(format!(
                             "{:?} diverges at {i}: {ge} vs {de} \
                              (k={ksz} s={stride} a={a} c={cch} hw={in_hw})",
@@ -920,6 +1164,111 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// Property (the autotuner's determinism story): kernel choice is a
+    /// pure shape decision. All four pattern kernels produce
+    /// bit-identical output planes for *any* (row_tile, fblock) tile
+    /// shape, so autotuning can swap kernels and tiles freely without
+    /// ever changing results.
+    #[test]
+    fn prop_pattern_kernels_bit_identical() {
+        check("pattern-kernels-bit-identical", 777, 50, 8, |g| {
+            let ksz = if g.rng.below(2) == 0 { 1 } else { 3 };
+            let stride = 1 + g.rng.below(2);
+            let a = g.dim_up_to(6);
+            let cch = g.dim_up_to(4);
+            let in_hw = 2 + g.rng.below(20);
+            let c = random_pruned_conv(g.rng, a, cch, ksz, stride, in_hw);
+            let threads = 1 + g.rng.below(3);
+            let mut lp = LayerPlan::for_conv(&c, threads);
+            // adversarial tile shapes, including degenerate 1x1 tiles
+            // and tiles larger than the plane
+            lp.choice.row_tile =
+                1 + g.rng.below(2 * lp.out_hw + 1) as u16;
+            lp.choice.fblock = 1 + g.rng.below(a + 2) as u16;
+            let xdata = g.vec_f32(cch * in_hw * in_hw);
+            let x = Chw::new(cch, in_hw, &xdata);
+            let want =
+                run_kernel_full(KernelKind::PatternScalar, &c, &lp, x);
+            for kind in [
+                KernelKind::PatternTiled,
+                KernelKind::PatternVec,
+                KernelKind::PatternVecTiled,
+            ] {
+                let got = run_kernel_full(kind, &c, &lp, x);
+                for (i, (ge, we)) in got.iter().zip(&want).enumerate() {
+                    if ge.to_bits() != we.to_bits() {
+                        return Err(format!(
+                            "{:?} bit-drifts at {i}: {ge:?} vs {we:?} \
+                             (rt={} fb={} k={ksz} s={stride} hw={in_hw})",
+                            kind, lp.choice.row_tile, lp.choice.fblock
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// End-to-end parity across all four pruning schemes: a model pruned
+    /// with each scheme compiles and executes identically under every
+    /// pattern kernel (bit-identical logits vs the scalar kernel, exact
+    /// equality vs dense).
+    #[test]
+    fn all_pruning_schemes_execute_identically_across_kernels() {
+        use crate::mobile::synth;
+        use crate::pruning::Scheme;
+        for scheme in [
+            Scheme::Irregular,
+            Scheme::Filter,
+            Scheme::Column,
+            Scheme::Pattern,
+        ] {
+            let (spec, mut params) =
+                synth::vgg_style("parity_vgg", 12, 5, &[4, 6], 17);
+            synth::scheme_prune(&spec, &mut params, scheme, 0.3);
+            let ir = ModelIR::build(&spec, &params).unwrap();
+            let p = plan::compile_plan(ir, 2).unwrap();
+            let mut rng = Pcg32::seeded(99);
+            let mut img = Fmap::zeros(p.in_dims.c, p.in_dims.hw);
+            for v in img.data.iter_mut() {
+                *v = rng.normal();
+            }
+            let dense =
+                Executor::new(&p, KernelKind::DenseRef).execute(&img);
+            let want =
+                Executor::new(&p, KernelKind::PatternScalar).execute(&img);
+            assert_eq!(
+                dense,
+                want,
+                "{}: scalar vs dense",
+                scheme.name()
+            );
+            for kind in [
+                KernelKind::PatternTiled,
+                KernelKind::PatternVec,
+                KernelKind::PatternVecTiled,
+            ] {
+                let got = Executor::new(&p, kind).execute(&img);
+                assert_eq!(
+                    want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{}: {} vs scalar",
+                    scheme.name(),
+                    kind.name()
+                );
+            }
+            // per-layer auto dispatch is one of the above kernels per
+            // layer, so it must land on the same bits too
+            let auto = Executor::auto(&p).execute(&img);
+            assert_eq!(
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                auto.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{}: auto vs scalar",
+                scheme.name()
+            );
+        }
     }
 
     /// A fully connectivity-pruned layer (every pattern = 0) must still

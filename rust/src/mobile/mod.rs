@@ -16,7 +16,10 @@
 //!   arena sizing;
 //! * [`engine`] — the thin multi-threaded executor over a plan, with a
 //!   [`engine::ConvKernel`] registry (dense reference, pattern-sparse
-//!   scalar, row-tiled) and batch entry points;
+//!   scalar, row-tiled, and width-vectorized variants) and batch entry
+//!   points;
+//! * [`simd`] — the fixed-width f32 lane arithmetic behind the
+//!   vectorized kernels (auto-vectorized, no intrinsics);
 //! * [`costmodel`] — a calibrated analytical model translating the pass
 //!   outputs into Kryo-485/Adreno-640-class latencies for the Fig. 3
 //!   comparison (DESIGN.md §2 and §5 document the substitution);
@@ -28,4 +31,5 @@ pub mod engine;
 pub mod ir;
 pub mod passes;
 pub mod plan;
+pub mod simd;
 pub mod synth;

@@ -26,7 +26,7 @@ use crate::config::Act;
 use crate::tensor::ScratchBuf;
 use crate::util::Stopwatch;
 
-use super::costmodel;
+use super::costmodel::{self, KernelChoice, TuneConfig, TuneReport};
 use super::ir::{CompressedLayer, ConvIR, IrOp, ModelIR};
 use super::passes::{self, CompileReport, StyleRows};
 
@@ -87,6 +87,9 @@ pub struct LayerPlan {
     pub exec_order: Vec<usize>,
     /// per-thread partition of `exec_order` (cost-balanced, non-empty)
     pub blocks: Vec<FilterBlock>,
+    /// conv kernel shape for auto dispatch: the analytic default, or
+    /// the autotuner's measured winner on a tuned plan
+    pub choice: KernelChoice,
 }
 
 impl LayerPlan {
@@ -153,6 +156,7 @@ impl LayerPlan {
             style_rows,
             exec_order,
             blocks,
+            choice: costmodel::default_choice(c),
         }
     }
 
@@ -382,6 +386,17 @@ impl ExecutionPlan {
             if lp.style_rows.len() != lp.styles.len() {
                 bail!("layer {li}: style_rows/styles arity");
             }
+            // tile parameters drive loop strides in the tiled kernels;
+            // zero would spin forever, so reject it at load time even
+            // though the kernels also clamp defensively
+            if lp.choice.row_tile == 0 || lp.choice.fblock == 0 {
+                bail!(
+                    "layer {li}: kernel choice has zero tile \
+                     (row_tile {}, fblock {})",
+                    lp.choice.row_tile,
+                    lp.choice.fblock
+                );
+            }
             for k in &lp.kernels {
                 let style = k.style as usize;
                 if style >= lp.styles.len() {
@@ -542,19 +557,39 @@ impl ExecutionPlan {
 
 /// The pass pipeline. Passes run in a fixed order (reorder → compress →
 /// pack/row-group → schedule lowering), each timed into
-/// [`PlanStats::pass_ms`].
+/// [`PlanStats::pass_ms`]. With [`PassManager::with_tuning`] an extra
+/// autotune pass measures candidate kernel shapes per layer on the real
+/// packed payload and bakes the winners into the plan.
 pub struct PassManager {
     threads: usize,
+    tune: Option<TuneConfig>,
 }
 
 impl PassManager {
     pub fn new(threads: usize) -> Self {
         PassManager {
             threads: threads.max(1),
+            tune: None,
         }
     }
 
+    /// Enable the empirical kernel autotuner
+    /// ([`costmodel::autotune_layer`]) as a final compile pass.
+    pub fn with_tuning(mut self, cfg: TuneConfig) -> Self {
+        self.tune = Some(cfg);
+        self
+    }
+
     pub fn compile(&self, ir: ModelIR) -> Result<ExecutionPlan> {
+        self.compile_reported(ir).map(|(plan, _)| plan)
+    }
+
+    /// Compile and also return the autotuner's timing tables (empty
+    /// `None` unless [`PassManager::with_tuning`] was set).
+    pub fn compile_reported(
+        &self,
+        ir: ModelIR,
+    ) -> Result<(ExecutionPlan, Option<TuneReport>)> {
         let mut pass_ms = Vec::new();
 
         let t = Stopwatch::start();
@@ -575,7 +610,7 @@ impl PassManager {
         pass_ms.push(("schedule", t.ms()));
 
         let t = Stopwatch::start();
-        let layers: Vec<LayerPlan> = ir
+        let mut layers: Vec<LayerPlan> = ir
             .convs
             .iter()
             .zip(orders.iter())
@@ -591,6 +626,27 @@ impl PassManager {
             })
             .collect();
         pass_ms.push(("pack+rowgroup", t.ms()));
+
+        // empirical kernel autotuning runs last: it needs the packed
+        // payload and the thread-block partition exactly as the
+        // executor will see them
+        let tune_report = self.tune.as_ref().map(|cfg| {
+            let t = Stopwatch::start();
+            let tuned = layers
+                .iter_mut()
+                .enumerate()
+                .map(|(i, lp)| {
+                    costmodel::autotune_layer(
+                        &ir.convs[lp.conv],
+                        lp,
+                        i,
+                        cfg,
+                    )
+                })
+                .collect();
+            pass_ms.push(("autotune", t.ms()));
+            TuneReport { layers: tuned }
+        });
 
         let report = CompileReport::build(&ir, &compressed, &orders);
 
@@ -613,26 +669,45 @@ impl PassManager {
             threads: self.threads,
         };
 
-        Ok(ExecutionPlan {
-            ir,
-            layers,
-            steps: sched.steps,
-            dims: sched.dims,
-            in_dims: sched.in_dims,
-            slot_sizes: sched.slot_sizes,
-            fmap_elems: sched.fmap_elems,
-            proj_scratch_elems: sched.proj_scratch_elems,
-            gap_len: sched.gap_len,
-            threads: self.threads,
-            report,
-            stats,
-        })
+        Ok((
+            ExecutionPlan {
+                ir,
+                layers,
+                steps: sched.steps,
+                dims: sched.dims,
+                in_dims: sched.in_dims,
+                slot_sizes: sched.slot_sizes,
+                fmap_elems: sched.fmap_elems,
+                proj_scratch_elems: sched.proj_scratch_elems,
+                gap_len: sched.gap_len,
+                threads: self.threads,
+                report,
+                stats,
+            },
+            tune_report,
+        ))
     }
 }
 
-/// Compile `ir` into an execution plan for `threads` worker threads.
+/// Compile `ir` into an execution plan for `threads` worker threads
+/// (analytic kernel choices; deterministic).
 pub fn compile_plan(ir: ModelIR, threads: usize) -> Result<ExecutionPlan> {
     PassManager::new(threads).compile(ir)
+}
+
+/// Compile with the empirical kernel autotuner enabled: every layer's
+/// measured winning (kernel-kind, row-tile, filter-block) shape is
+/// baked into the plan, and the per-candidate timing tables come back
+/// alongside it.
+pub fn compile_plan_tuned(
+    ir: ModelIR,
+    threads: usize,
+    cfg: TuneConfig,
+) -> Result<(ExecutionPlan, TuneReport)> {
+    let (plan, report) = PassManager::new(threads)
+        .with_tuning(cfg)
+        .compile_reported(ir)?;
+    Ok((plan, report.unwrap_or_default()))
 }
 
 struct Schedule {

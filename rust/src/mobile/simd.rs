@@ -1,0 +1,176 @@
+//! Fixed-width f32 lane arithmetic for the vectorized pattern kernels
+//! (DESIGN.md §12).
+//!
+//! [`F32Lanes`] is a plain `[f32; LANES]` wrapper whose operations are
+//! written as fully unrolled per-lane loops. There are no intrinsics and
+//! no unstable features: the loops are shaped so LLVM's auto-vectorizer
+//! lowers them to the widest SIMD the target baseline offers (SSE2 /
+//! NEON without flags, AVX2 with `-C target-cpu`). `LANES = 8` matches
+//! one AVX2 register and two NEON/SSE registers — wide enough to keep
+//! the vector units busy, narrow enough that border columns handled in
+//! scalar code stay cheap.
+//!
+//! Numerics contract: [`F32Lanes::mul_add`] is a *separate* multiply and
+//! add per lane — deliberately not `f32::mul_add` — so each output
+//! element sees exactly the same rounding sequence as the scalar
+//! kernels. This is what makes kernel choice a pure shape decision:
+//! every pattern kernel produces bit-identical planes (see the
+//! `prop_pattern_kernels_bit_identical` property in `engine`).
+
+/// Lane width of the vectorized kernels, in f32 elements.
+pub const LANES: usize = 8;
+
+/// A fixed-width vector of f32 lanes; the register block of the
+/// vectorized pattern codelets.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct F32Lanes(pub [f32; LANES]);
+
+impl F32Lanes {
+    #[inline(always)]
+    pub fn splat(v: f32) -> Self {
+        F32Lanes([v; LANES])
+    }
+
+    /// Load `LANES` contiguous elements from the front of `s`.
+    #[inline(always)]
+    pub fn load(s: &[f32]) -> Self {
+        let mut v = [0.0f32; LANES];
+        v.copy_from_slice(&s[..LANES]);
+        F32Lanes(v)
+    }
+
+    /// Load `LANES` elements at stride `stride` from the front of `s`
+    /// (`s[0], s[stride], ...`). `s` must hold at least
+    /// `(LANES - 1) * stride + 1` elements.
+    #[inline(always)]
+    pub fn load_strided(s: &[f32], stride: usize) -> Self {
+        let mut v = [0.0f32; LANES];
+        for (i, lane) in v.iter_mut().enumerate() {
+            *lane = s[i * stride];
+        }
+        F32Lanes(v)
+    }
+
+    /// Store the lanes to the front of `d`.
+    #[inline(always)]
+    pub fn store(self, d: &mut [f32]) {
+        d[..LANES].copy_from_slice(&self.0);
+    }
+
+    /// Per-lane `self + w * x` as a rounded multiply followed by a
+    /// rounded add (never a fused multiply-add), matching the scalar
+    /// kernels' `o += w * x` bit for bit.
+    #[inline(always)]
+    pub fn mul_add(self, w: f32, x: F32Lanes) -> Self {
+        let mut v = self.0;
+        for (lane, xv) in v.iter_mut().zip(x.0) {
+            *lane += w * xv;
+        }
+        F32Lanes(v)
+    }
+
+    /// Per-lane maximum with a scalar (the ReLU epilogue shape).
+    #[inline(always)]
+    pub fn max(self, floor: f32) -> Self {
+        let mut v = self.0;
+        for lane in v.iter_mut() {
+            *lane = lane.max(floor);
+        }
+        F32Lanes(v)
+    }
+}
+
+/// Vectorized tap codelet — the inner loop of the pattern-vec kernels:
+/// `o[i] += w * x[i * stride]` for every `i`, `LANES` outputs at a time
+/// with a scalar tail. `o` and `x` are pre-sliced by the caller so that
+/// `o.len()` outputs are written and `x` holds the matching strided
+/// inputs (`x.len() >= (o.len() - 1) * stride + 1`).
+///
+/// Each element is updated by one rounded multiply and one rounded add
+/// in ascending index order, exactly as the scalar kernels do — the
+/// vectorization changes instruction shape, never results.
+#[inline]
+pub fn axpy_row(o: &mut [f32], x: &[f32], w: f32, stride: usize) {
+    let n = o.len();
+    let mut i = 0;
+    if stride == 1 {
+        while i + LANES <= n {
+            let acc = F32Lanes::load(&o[i..])
+                .mul_add(w, F32Lanes::load(&x[i..]));
+            acc.store(&mut o[i..]);
+            i += LANES;
+        }
+        for (ov, xv) in o[i..].iter_mut().zip(&x[i..n]) {
+            *ov += w * xv;
+        }
+    } else {
+        let mut ix = 0;
+        while i + LANES <= n {
+            let acc = F32Lanes::load(&o[i..])
+                .mul_add(w, F32Lanes::load_strided(&x[ix..], stride));
+            acc.store(&mut o[i..]);
+            i += LANES;
+            ix += LANES * stride;
+        }
+        for ov in o[i..].iter_mut() {
+            *ov += w * x[ix];
+            ix += stride;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn lane_ops_match_scalar() {
+        let a: Vec<f32> = (0..LANES).map(|i| i as f32 * 0.5).collect();
+        let b: Vec<f32> = (0..LANES).map(|i| 1.0 - i as f32).collect();
+        let got = F32Lanes::load(&a).mul_add(2.0, F32Lanes::load(&b));
+        for i in 0..LANES {
+            assert_eq!(got.0[i], a[i] + 2.0 * b[i]);
+        }
+        let m = got.max(0.0);
+        for i in 0..LANES {
+            assert_eq!(m.0[i], (a[i] + 2.0 * b[i]).max(0.0));
+        }
+        assert_eq!(F32Lanes::splat(3.0).0, [3.0; LANES]);
+    }
+
+    #[test]
+    fn strided_load_gathers() {
+        let s: Vec<f32> = (0..32).map(|i| i as f32).collect();
+        let v = F32Lanes::load_strided(&s, 3);
+        for i in 0..LANES {
+            assert_eq!(v.0[i], (3 * i) as f32);
+        }
+    }
+
+    #[test]
+    fn axpy_row_is_bit_identical_to_scalar_loop() {
+        let mut rng = Pcg32::seeded(9);
+        for stride in 1..=3usize {
+            // odd lengths exercise the scalar tail
+            for n in [0usize, 1, 5, 8, 9, 16, 23] {
+                let w = rng.normal();
+                let x: Vec<f32> = (0..n.saturating_sub(1) * stride + 1)
+                    .map(|_| rng.normal())
+                    .collect();
+                let base: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+                let mut want = base.clone();
+                for (i, ov) in want.iter_mut().enumerate() {
+                    *ov += w * x[i * stride];
+                }
+                let mut got = base;
+                axpy_row(&mut got, &x, w, stride);
+                assert_eq!(
+                    got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "stride={stride} n={n}"
+                );
+            }
+        }
+    }
+}

@@ -225,19 +225,31 @@ pub fn res_style(
     (spec, params)
 }
 
-/// Pattern-prune every prunable conv of `spec` in place at remaining-weight
-/// ratio `alpha` (4-of-9 patterns + connectivity, paper §IV-D).
-pub fn pattern_prune(spec: &ModelSpec, params: &mut [Tensor], alpha: f64) {
+/// Prune every prunable conv of `spec` in place with `scheme` at
+/// remaining-weight ratio `alpha` (the kernel parity tests run every
+/// scheme through the same compile + execute path).
+pub fn scheme_prune(
+    spec: &ModelSpec,
+    params: &mut [Tensor],
+    scheme: Scheme,
+    alpha: f64,
+) {
     for (_, op) in spec.prunable_convs() {
         let shape = LayerShape::from_conv(op);
         let wg = params[op.w]
             .clone()
             .reshape(&[shape.p, shape.q()])
             .unwrap();
-        let pr = project(Scheme::Pattern, &wg, &shape, alpha).unwrap();
+        let pr = project(scheme, &wg, &shape, alpha).unwrap();
         let s4 = params[op.w].shape().to_vec();
         params[op.w] = pr.w.clone().reshape(&s4).unwrap();
     }
+}
+
+/// Pattern-prune every prunable conv of `spec` in place at remaining-weight
+/// ratio `alpha` (4-of-9 patterns + connectivity, paper §IV-D).
+pub fn pattern_prune(spec: &ModelSpec, params: &mut [Tensor], alpha: f64) {
+    scheme_prune(spec, params, Scheme::Pattern, alpha);
 }
 
 #[cfg(test)]

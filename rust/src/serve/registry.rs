@@ -34,6 +34,11 @@ pub struct PlanKey {
     pub scheme: String,
     pub rate_milli: u64,
     pub threads: usize,
+    /// whether the plan was compiled with the empirical kernel autotuner
+    /// — tuned and analytic plans carry different baked
+    /// [`KernelChoice`](crate::mobile::costmodel::KernelChoice)s and
+    /// must never alias in the cache
+    pub tuned: bool,
 }
 
 impl PlanKey {
@@ -48,7 +53,14 @@ impl PlanKey {
             scheme: scheme.to_string(),
             rate_milli: (rate.max(0.0) * 1000.0).round() as u64,
             threads,
+            tuned: false,
         }
+    }
+
+    /// Mark the key as an autotuned-plan configuration.
+    pub fn tuned(mut self) -> Self {
+        self.tuned = true;
+        self
     }
 
     pub fn rate(&self) -> f64 {
@@ -60,11 +72,12 @@ impl std::fmt::Display for PlanKey {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{}/{}@{:.1}x/t{}",
+            "{}/{}@{:.1}x/t{}{}",
             self.model,
             self.scheme,
             self.rate(),
-            self.threads
+            self.threads,
+            if self.tuned { "/tuned" } else { "" }
         )
     }
 }
@@ -297,6 +310,21 @@ mod tests {
         let c = PlanKey::new("m", "pattern", 8.1, 2);
         assert_ne!(a, c);
         assert!(format!("{a}").contains("pattern"));
+    }
+
+    #[test]
+    fn tuned_key_never_aliases_analytic() {
+        let a = PlanKey::new("m", "pattern", 8.0, 2);
+        let t = PlanKey::new("m", "pattern", 8.0, 2).tuned();
+        assert_ne!(a, t);
+        assert!(format!("{t}").contains("tuned"));
+        assert!(!format!("{a}").contains("tuned"));
+        // both fit in the cache side by side
+        let reg = PlanRegistry::new(4);
+        let pa = reg.get_or_build(&a, || build_plan(1)).unwrap();
+        let pt = reg.get_or_build(&t, || build_plan(1)).unwrap();
+        assert!(!Arc::ptr_eq(&pa, &pt));
+        assert_eq!(reg.stats().ready, 2);
     }
 
     #[test]

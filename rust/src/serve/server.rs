@@ -28,7 +28,7 @@ use anyhow::{anyhow, Result};
 
 use crate::config::ServeConfig;
 use crate::mobile::engine::{
-    execute_batch_parallel, Executor, Fmap, KernelKind,
+    execute_batch_parallel, Executor, Fmap, KernelSel,
 };
 use crate::mobile::plan::{ExecutionPlan, StepDims};
 
@@ -195,11 +195,18 @@ pub struct Server {
 impl Server {
     /// Spawn the worker pool over `plan`. The plan is shared read-only
     /// (`Arc`); each worker builds its own executor + arena once.
+    ///
+    /// `kernel` takes a [`KernelKind`](crate::mobile::engine::KernelKind)
+    /// (uniform across layers) or a [`KernelSel`] — pass
+    /// [`KernelSel::Auto`] to dispatch each layer through the kernel
+    /// choice baked into the plan (the autotuner's winners on a tuned
+    /// plan).
     pub fn start(
         plan: Arc<ExecutionPlan>,
-        kernel: KernelKind,
+        kernel: impl Into<KernelSel>,
         cfg: &ServeConfig,
     ) -> Server {
+        let kernel = kernel.into();
         let shared = Arc::new(Shared {
             queue: BoundedQueue::new(cfg.queue_cap),
             stats: ServeStats::new(),
@@ -254,7 +261,7 @@ impl Server {
 
 fn worker_loop(
     plan: &ExecutionPlan,
-    kernel: KernelKind,
+    kernel: KernelSel,
     shared: &Shared,
     policy: &BatchPolicy,
     batch_threads: usize,
@@ -263,7 +270,7 @@ fn worker_loop(
     // sequential path; the parallel path shards each batch across fresh
     // scoped executors inside execute_batch_parallel
     let mut ex = if batch_threads <= 1 {
-        Some(Executor::new(plan, kernel))
+        Some(Executor::with_sel(plan, kernel))
     } else {
         None
     };
@@ -323,6 +330,7 @@ fn worker_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mobile::engine::KernelKind;
     use crate::mobile::ir::ModelIR;
     use crate::mobile::plan::compile_plan;
     use crate::mobile::synth;
@@ -369,6 +377,30 @@ mod tests {
         assert_eq!(report.rejected, 0);
         assert_eq!(report.errors, 0);
         assert_eq!(report.dispatched(), 10);
+    }
+
+    #[test]
+    fn auto_kernel_serving_matches_direct_executor() {
+        let plan = tiny_plan();
+        let cfg = ServeConfig {
+            workers: 2,
+            max_batch: 4,
+            max_wait_us: 200,
+            queue_cap: 32,
+            batch_threads: 1,
+        };
+        let server = Server::start(plan.clone(), KernelSel::Auto, &cfg);
+        let handle = server.handle();
+        let mut direct = Executor::auto(&plan);
+        for seed in 0..6u64 {
+            let img = img_for(&plan, seed);
+            let want = direct.execute(&img);
+            let resp = handle.infer(img).unwrap();
+            assert_eq!(resp.logits, want, "seed {seed}");
+        }
+        let report = server.shutdown();
+        assert_eq!(report.completed, 6);
+        assert_eq!(report.errors, 0);
     }
 
     #[test]

@@ -18,6 +18,7 @@ use std::time::Instant;
 
 use crate::report::Table;
 use crate::rng::Pcg32;
+use crate::util::json::Json;
 
 /// Latency samples kept resident per series; beyond this the recorder
 /// switches to uniform reservoir sampling, so a long-running server's
@@ -267,10 +268,16 @@ impl ServeReport {
 // Bench harness (criterion is unavailable offline)
 // ---------------------------------------------------------------------------
 
-/// Mean ± stddev of one benched closure, in a stable, grep-friendly shape.
+/// Mean/median ± stddev of one benched closure, in a stable,
+/// grep-friendly shape.
+#[derive(Clone, Debug)]
 pub struct BenchResult {
     pub name: String,
     pub mean_ms: f64,
+    /// median over the timed repetitions — the steady-state number the
+    /// speedup claims in `BENCH_*.json` are computed from (robust to a
+    /// single preempted rep in a way the mean is not)
+    pub median_ms: f64,
     pub std_ms: f64,
     pub reps: usize,
 }
@@ -279,7 +286,7 @@ impl BenchResult {
     pub fn print(&self) {
         println!(
             "bench {:44} {:>10.4} ms ± {:>8.4} (n={})",
-            self.name, self.mean_ms, self.std_ms, self.reps
+            self.name, self.median_ms, self.std_ms, self.reps
         );
     }
 }
@@ -303,9 +310,17 @@ pub fn bench(
     let mean = samples.iter().sum::<f64>() / reps as f64;
     let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>()
         / reps as f64;
+    let mut sorted = samples.clone();
+    sorted.sort_by(f64::total_cmp);
+    let median = if sorted.len() % 2 == 1 {
+        sorted[sorted.len() / 2]
+    } else {
+        (sorted[sorted.len() / 2 - 1] + sorted[sorted.len() / 2]) / 2.0
+    };
     let r = BenchResult {
         name: name.into(),
         mean_ms: mean,
+        median_ms: median,
         std_ms: var.sqrt(),
         reps,
     };
@@ -316,6 +331,115 @@ pub fn bench(
 /// Section header for grouping bench output.
 pub fn section(title: &str) {
     println!("\n### {title}");
+}
+
+/// Machine-readable bench recorder behind the `BENCH_*.json` files the
+/// CI uploads as workflow artifacts: every [`bench`] run through
+/// [`BenchLog::bench`] is kept, named scalar metrics (speedups, scaling
+/// ratios) land next to them, and [`BenchLog::write`] emits one JSON
+/// document stamped with an environment fingerprint so numbers from
+/// different machines are never compared blindly.
+pub struct BenchLog {
+    name: String,
+    results: Vec<BenchResult>,
+    metrics: Vec<(String, f64)>,
+}
+
+impl BenchLog {
+    pub fn new(name: &str) -> Self {
+        BenchLog {
+            name: name.into(),
+            results: Vec::new(),
+            metrics: Vec::new(),
+        }
+    }
+
+    /// Run [`bench`] and record its result.
+    pub fn bench(
+        &mut self,
+        name: &str,
+        warmup: usize,
+        reps: usize,
+        f: impl FnMut(),
+    ) -> BenchResult {
+        let r = bench(name, warmup, reps, f);
+        self.results.push(r.clone());
+        r
+    }
+
+    /// Record an already-run result (e.g. one timed by hand).
+    pub fn push(&mut self, r: BenchResult) {
+        self.results.push(r);
+    }
+
+    /// Record a named scalar (speedup, ratio, throughput).
+    pub fn metric(&mut self, name: &str, value: f64) {
+        self.metrics.push((name.into(), value));
+    }
+
+    /// Median of a recorded result by name (for speedup math on top of
+    /// already-benched entries).
+    pub fn median_of(&self, name: &str) -> Option<f64> {
+        self.results
+            .iter()
+            .find(|r| r.name == name)
+            .map(|r| r.median_ms)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut results = Vec::with_capacity(self.results.len());
+        for r in &self.results {
+            let mut o = BTreeMap::new();
+            o.insert("name".into(), Json::Str(r.name.clone()));
+            o.insert("mean_ms".into(), Json::Num(r.mean_ms));
+            o.insert("median_ms".into(), Json::Num(r.median_ms));
+            o.insert("std_ms".into(), Json::Num(r.std_ms));
+            o.insert("reps".into(), Json::Num(r.reps as f64));
+            results.push(Json::Obj(o));
+        }
+        let mut metrics = BTreeMap::new();
+        for (k, v) in &self.metrics {
+            metrics.insert(k.clone(), Json::Num(*v));
+        }
+        let mut doc = BTreeMap::new();
+        doc.insert("bench".into(), Json::Str(self.name.clone()));
+        doc.insert("env".into(), env_fingerprint());
+        doc.insert("results".into(), Json::Arr(results));
+        doc.insert("metrics".into(), Json::Obj(metrics));
+        Json::Obj(doc)
+    }
+
+    /// Write the log to `path` and print where it went.
+    pub fn write(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, format!("{}\n", self.to_json()))?;
+        println!("bench log -> {}", path.display());
+        Ok(())
+    }
+}
+
+/// The machine/build context a bench number is only valid within.
+fn env_fingerprint() -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("os".into(), Json::Str(std::env::consts::OS.into()));
+    o.insert("arch".into(), Json::Str(std::env::consts::ARCH.into()));
+    o.insert(
+        "family".into(),
+        Json::Str(std::env::consts::FAMILY.into()),
+    );
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    o.insert("hw_threads".into(), Json::Num(threads as f64));
+    o.insert(
+        "crate_version".into(),
+        Json::Str(env!("CARGO_PKG_VERSION").into()),
+    );
+    o.insert(
+        "debug_assertions".into(),
+        Json::Bool(cfg!(debug_assertions)),
+    );
+    Json::Obj(o)
 }
 
 #[cfg(test)]
@@ -330,6 +454,44 @@ mod tests {
         assert!(r.mean_ms >= 0.0);
         assert!(r.std_ms >= 0.0);
         assert_eq!(r.reps, 5);
+    }
+
+    #[test]
+    fn bench_log_round_trips_through_json() {
+        let mut log = BenchLog::new("unit");
+        log.bench("warm-noop", 0, 4, || {
+            std::hint::black_box((0..100).sum::<usize>());
+        });
+        log.push(BenchResult {
+            name: "handmade".into(),
+            mean_ms: 2.0,
+            median_ms: 1.5,
+            std_ms: 0.1,
+            reps: 3,
+        });
+        log.metric("speedup", 1.75);
+        assert_eq!(log.median_of("handmade"), Some(1.5));
+        assert_eq!(log.median_of("missing"), None);
+        let doc = Json::parse(&log.to_json().to_string()).unwrap();
+        assert_eq!(doc.get("bench").unwrap().as_str().unwrap(), "unit");
+        let env = doc.get("env").unwrap();
+        assert!(env.get("hw_threads").unwrap().as_usize().unwrap() >= 1);
+        assert!(!env.get("os").unwrap().as_str().unwrap().is_empty());
+        let results = doc.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(
+            results[1].get("median_ms").unwrap().as_f64().unwrap(),
+            1.5
+        );
+        assert_eq!(
+            doc.get("metrics")
+                .unwrap()
+                .get("speedup")
+                .unwrap()
+                .as_f64()
+                .unwrap(),
+            1.75
+        );
     }
 
     #[test]
