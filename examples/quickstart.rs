@@ -4,9 +4,11 @@
 //!
 //! 1. **Serving tier (artifact-free, always runs)** — compile a pruned
 //!    synthetic VGG into an `ExecutionPlan`, save/load it as a
-//!    checksummed plan artifact (bit-identical round trip), then serve a
-//!    seeded closed-loop trace through the dynamic-batching server and
-//!    print the latency/batch report.
+//!    checksummed plan artifact (bit-identical round trip), serve a
+//!    seeded closed-loop trace through the dynamic-batching server, then
+//!    multiplex two differently-pruned tenants through the multi-tenant
+//!    gateway (priority classes + per-tenant reports) and print the
+//!    latency/batch reports.
 //! 2. **PJRT pipeline (needs `artifacts/`)** — dataset generation,
 //!    pre-training, the four pruning schemes of Fig. 1 (ASCII),
 //!    privacy-preserving ADMM pruning on synthetic data, and masked
@@ -34,7 +36,8 @@ use repro::mobile::synth;
 use repro::pruning::{self, LayerShape, Scheme};
 use repro::runtime::Runtime;
 use repro::serve::artifact;
-use repro::serve::loadgen::{self, LoadGenConfig, LoadMode};
+use repro::serve::gateway::{Gateway, Priority, TenantConfig};
+use repro::serve::loadgen::{self, LoadGenConfig, LoadMode, TenantLoad};
 use repro::serve::server::Server;
 use repro::train::{self, params::init_params};
 
@@ -77,11 +80,14 @@ fn serve_walkthrough() -> Result<()> {
     );
     std::fs::remove_dir_all(&dir).ok();
 
-    // dynamic-batching server under a seeded closed-loop trace
+    // dynamic-batching server under a seeded closed-loop trace; the
+    // builder is the one way to stand a server up
     let plan = Arc::new(loaded);
     let cfg = ServeConfig::preset(Preset::Smoke);
-    let server =
-        Server::start(plan.clone(), KernelKind::PatternScalar, &cfg);
+    let server = Server::builder(plan.clone())
+        .config(&cfg)
+        .kernel(KernelKind::PatternScalar)
+        .spawn();
     let load = loadgen::run(
         &server.handle(),
         plan.in_dims,
@@ -99,6 +105,54 @@ fn serve_walkthrough() -> Result<()> {
         report.latency.p95_us,
         report.mean_batch
     );
+
+    // multi-tenant gateway: two tenants with their own pruned plans and
+    // priority classes share one worker pool; a seeded virtual-time
+    // trace is replayed deterministically and each tenant gets its own
+    // latency/batch report
+    println!("=== multi-tenant gateway (two tenants, one pool) ===");
+    let (spec_b, mut params_b) =
+        synth::res_style("qs_res", 16, 10, &[8, 12], 2);
+    synth::pattern_prune(&spec_b, &mut params_b, 1.0 / 4.0);
+    let plan_b =
+        Arc::new(compile_plan(ModelIR::build(&spec_b, &params_b)?, 1)?);
+    let gateway = Gateway::builder()
+        .workers(2)
+        .max_batch(4)
+        .max_wait_us(200)
+        .tenant(
+            TenantConfig::new("vgg8x").priority(Priority::High),
+            plan.clone(),
+            KernelKind::PatternScalar,
+        )
+        .tenant(
+            TenantConfig::new("res4x").priority(Priority::Low),
+            plan_b.clone(),
+            KernelKind::PatternScalar,
+        )
+        .spawn()?;
+    let loads = [
+        TenantLoad::new("vgg8x", 48.0, 24),
+        TenantLoad::new("res4x", 16.0, 8),
+    ];
+    let trace = loadgen::multi_tenant_trace(&loads, None, 42);
+    let gw_load =
+        loadgen::replay(&gateway.handle(), &loads, &trace, 42, 0.0)?;
+    let gw_report = gateway.shutdown();
+    for c in &gw_load.per_tenant {
+        let t = gw_report.tenant(&c.tenant).expect("tenant report");
+        println!(
+            "[gateway] tenant {:<6} ({:<6}): {} issued, {} completed, \
+             p95 {} us, mean batch {:.2}",
+            c.tenant,
+            t.priority.name(),
+            c.issued,
+            c.completed,
+            t.report.latency.p95_us,
+            t.report.mean_batch
+        );
+    }
+    println!();
     Ok(())
 }
 

@@ -15,7 +15,8 @@ use repro::mobile::plan::{
 };
 use repro::mobile::synth;
 use repro::serve::artifact;
-use repro::serve::loadgen::{self, LoadGenConfig, LoadMode};
+use repro::serve::gateway::{Gateway, Priority, TenantConfig};
+use repro::serve::loadgen::{self, LoadGenConfig, LoadMode, TenantLoad};
 use repro::serve::server::Server;
 use repro::serve::stats::{section, BenchLog};
 
@@ -27,7 +28,10 @@ fn serve_qps(
     cfg: &ServeConfig,
     requests: usize,
 ) -> f64 {
-    let server = Server::start(plan.clone(), kernel, cfg);
+    let server = Server::builder(plan.clone())
+        .config(cfg)
+        .kernel(kernel)
+        .spawn();
     let load = loadgen::run(
         &server.handle(),
         plan.in_dims,
@@ -205,6 +209,50 @@ fn main() {
             }
         }
     }
+
+    section("multi-tenant gateway (shared worker pool, skewed load)");
+    let names = ["hot", "warm", "cold"];
+    let prios = [Priority::High, Priority::Normal, Priority::Low];
+    let qps = loadgen::skewed_qps(512.0, names.len(), 1.0);
+    let mut builder = Gateway::builder()
+        .workers(2)
+        .max_batch(8)
+        .max_wait_us(500)
+        .batch_threads(1);
+    let mut loads = Vec::new();
+    for (ti, name) in names.iter().enumerate() {
+        builder = builder.tenant(
+            TenantConfig::new(name).priority(prios[ti]).queue_cap(256),
+            plan.clone(),
+            scalar,
+        );
+        loads.push(TenantLoad::new(name, qps[ti], requests));
+    }
+    let trace = loadgen::multi_tenant_trace(&loads, None, 42);
+    let gateway = builder.spawn().unwrap();
+    let gw_load =
+        loadgen::replay(&gateway.handle(), &loads, &trace, 42, 0.0)
+            .unwrap();
+    let gw_report = gateway.shutdown();
+    assert_eq!(gw_load.shed + gw_load.rejected, 0);
+    for c in &gw_load.per_tenant {
+        let qps = c.completed as f64 / gw_load.wall_secs.max(1e-9);
+        let t = gw_report.tenant(&c.tenant).expect("tenant report");
+        println!(
+            "gateway tenant {:<5} ({:<6}): {:>8.1} req/s   p95 {:>6} us \
+             mean batch {:.2}",
+            c.tenant,
+            t.priority.name(),
+            qps,
+            t.report.latency.p95_us,
+            t.report.mean_batch
+        );
+        log.metric(&format!("gateway_qps_{}", c.tenant), qps);
+    }
+    log.metric(
+        "gateway_qps_total",
+        gw_load.completed as f64 / gw_load.wall_secs.max(1e-9),
+    );
 
     log.write("BENCH_serve.json").unwrap();
 }

@@ -421,6 +421,40 @@ impl Default for ServeConfig {
     }
 }
 
+/// Shared-pool knobs for the multi-tenant gateway
+/// (`serve::gateway::Gateway`). Queue capacity, priority, admission, and
+/// memory budgets are *per tenant* (`serve::gateway::TenantConfig`) —
+/// this is only the worker pool + micro-batch shape every tenant shares.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GatewayConfig {
+    /// worker threads shared across all tenants
+    pub workers: usize,
+    /// micro-batch cap per dispatch (batches are single-tenant)
+    pub max_batch: usize,
+    /// straggler window past the head-of-queue enqueue time
+    pub max_wait_us: u64,
+    /// intra-batch executor threads (as in [`ServeConfig`])
+    pub batch_threads: usize,
+}
+
+impl GatewayConfig {
+    pub fn preset(p: Preset) -> Self {
+        let s = ServeConfig::preset(p);
+        GatewayConfig {
+            workers: s.workers,
+            max_batch: s.max_batch,
+            max_wait_us: s.max_wait_us,
+            batch_threads: s.batch_threads,
+        }
+    }
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        GatewayConfig::preset(Preset::Quick)
+    }
+}
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Preset {
     /// CI-speed: exercises every code path in seconds
@@ -459,6 +493,17 @@ mod tests {
         assert!(
             ServeConfig::preset(Preset::Full).max_batch
                 > ServeConfig::preset(Preset::Smoke).max_batch
+        );
+        // the gateway pool inherits the serve preset's shape
+        for p in [Preset::Smoke, Preset::Quick, Preset::Full] {
+            let g = GatewayConfig::preset(p);
+            let s = ServeConfig::preset(p);
+            assert_eq!(g.workers, s.workers);
+            assert_eq!(g.max_batch, s.max_batch);
+        }
+        assert_eq!(
+            GatewayConfig::default(),
+            GatewayConfig::preset(Preset::Quick)
         );
     }
 

@@ -11,9 +11,11 @@
 //! repro pipeline --model res_sv10 --scheme pattern --rate 8  (end-to-end)
 //! ```
 
+use std::sync::Arc;
+
 use anyhow::{bail, Context, Result};
 
-use crate::config::{Preset, ServeConfig};
+use crate::config::{GatewayConfig, Preset, ServeConfig};
 use crate::mobile::costmodel::{TuneConfig, TuneReport};
 use crate::mobile::engine::{Executor, Fmap, KernelSel, KERNEL_KINDS};
 use crate::mobile::ir::ModelIR;
@@ -25,8 +27,10 @@ use crate::pruning::Scheme;
 use crate::report::human_bytes;
 use crate::rng::Pcg32;
 use crate::serve::artifact;
+use crate::serve::error::ServeError;
+use crate::serve::gateway::{Gateway, Priority, TenantConfig};
 use crate::serve::loadgen::{self, LoadGenConfig, LoadMode};
-use crate::serve::registry::{PlanKey, PlanRegistry};
+use crate::serve::registry::{PlanKey, PlanRegistry, ShardedRegistry};
 use crate::serve::server::Server;
 
 use super::{default_threads, experiments, Ctx, Method};
@@ -145,6 +149,44 @@ impl Args {
             None => Ok(default),
         }
     }
+
+    fn flag_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flags.get(name) {
+            Some(v) => v
+                .parse::<f64>()
+                .with_context(|| format!("--{name} must be a number")),
+            None => Ok(default),
+        }
+    }
+}
+
+/// Flags shared by every command that compiles and runs an execution
+/// plan (`deploy`, `serve`): one parse path so the commands can never
+/// drift in how they read `--threads/--workers/--kernel/--scheme/--rate`.
+struct SharedServeFlags {
+    /// plan-compile (and pruning) worker threads
+    threads: usize,
+    /// serving worker threads
+    workers: usize,
+    /// kernel selection; `None` keeps the command's default
+    kernel: Option<KernelSel>,
+    scheme: Scheme,
+    rate: f64,
+}
+
+impl SharedServeFlags {
+    fn parse(args: &Args, default_workers: usize) -> Result<Self> {
+        Ok(SharedServeFlags {
+            threads: args.threads()?,
+            workers: args.flag_usize("workers", default_workers)?,
+            kernel: match args.flags.get("kernel") {
+                Some(k) => Some(KernelSel::parse(k)?),
+                None => None,
+            },
+            scheme: args.scheme()?,
+            rate: args.rate()?,
+        })
+    }
 }
 
 const HELP: &str = "\
@@ -157,25 +199,35 @@ commands:
             [--method privacy|whole|admm|uniform|oneshot|iterative]
   retrain   --model <id> --scheme .. --rate ..      full prune+retrain row
   eval      --model <id>                            pre-trained accuracy
-  deploy    --model <id> [--rate N] [--threads N]   compile plan + executor report
+  deploy    --model <id> [--scheme ..] [--rate N] [--threads N]
             [--kernel auto|dense|sparse|tiled|vec|vec-tiled]
-            (auto = run the plan-time autotuner and print its per-layer
-            table; a named kernel times just that one; no flag compares
-            every kernel and prints the analytic per-layer choices)
+            compile plan + executor report (auto = run the plan-time
+            autotuner and print its per-layer table; a named kernel
+            times just that one; no flag compares every kernel and
+            prints the analytic per-layer choices)
   exp       <table1|table2|table3|table4|table5|fig3|sweep|all> [--preset ..]
             (sweep = host-engine parallel prune sweep; no artifacts needed)
   pipeline  --model <id> [--scheme ..] [--rate N]   end-to-end demo
-  serve     [--spec vgg|res] [--hw N] [--classes N] [--rate N]
-            [--workers N] [--batch N] [--wait-us N] [--queue N]
-            [--batch-threads N] [--plan-threads N] [--clients N]
+  serve     [--spec vgg|res] [--hw N] [--classes N] [--scheme ..]
+            [--rate N] [--threads N] [--workers N] [--batch N]
+            [--wait-us N] [--queue N] [--batch-threads N] [--clients N]
             [--qps N] [--requests N]
             [--kernel auto|dense|sparse|tiled|vec|vec-tiled]
             (auto = autotune the plan at compile time, then dispatch
-            each layer to its tuned codelet)
+            each layer to its tuned codelet; --threads also sets the
+            plan-compile thread count)
             [--artifact <path>] [--seed N]
             dynamic-batching inference server on a synthetic spec
             (no PJRT/artifacts needed); --artifact saves/loads the
             compiled plan and verifies the save->load round trip
+  serve --tenants N   multi-tenant gateway mode: N synthetic tenants
+            sharing one worker pool, each with its own plan, registry
+            shard, bounded queue, and priority class (cycling
+            high/normal/low); a seeded virtual-time trace splits --qps
+            across tenants zipf(--skew S)-wise and is replayed
+            deterministically ([--pace X] > 0 paces it in wall time);
+            [--admit-qps N] enables per-tenant admission control,
+            [--ramp-us N] adds a diurnal rate ramp of that period
   models                                            list models in manifest
   help
 common flags: --artifacts <dir> (default ./artifacts), --preset (default quick),
@@ -208,10 +260,25 @@ fn print_tune_table(plan: &ExecutionPlan, report: &TuneReport) {
     }
 }
 
+/// Wrap an `anyhow` compile error for the typed registry boundary.
+fn config_err(e: anyhow::Error) -> ServeError {
+    ServeError::Config {
+        msg: format!("{e:#}"),
+    }
+}
+
 /// `repro serve`: compile-or-load a plan through the registry, stand up
 /// the dynamic-batching server, drive it with the seeded load generator,
-/// and print the serving report.
+/// and print the serving report. With `--tenants N` the single server is
+/// replaced by the multi-tenant gateway driven from a seeded
+/// virtual-time trace.
 fn serve_cmd(args: &Args) -> Result<()> {
+    let mut cfg = ServeConfig::preset(args.preset()?);
+    let shared = SharedServeFlags::parse(args, cfg.workers)?;
+    let tenants = args.flag_usize("tenants", 0)?;
+    if tenants > 0 {
+        return serve_tenants_cmd(args, &shared, tenants);
+    }
     let spec_kind = args
         .flags
         .get("spec")
@@ -220,11 +287,8 @@ fn serve_cmd(args: &Args) -> Result<()> {
         .to_string();
     let hw = args.flag_usize("hw", 16)?;
     let classes = args.flag_usize("classes", 10)?;
-    let rate = args.rate()?;
-    let plan_threads = args.flag_usize("plan-threads", 1)?;
     let seed = args.flag_u64("seed", 42)?;
-    let mut cfg = ServeConfig::preset(args.preset()?);
-    cfg.workers = args.flag_usize("workers", cfg.workers)?;
+    cfg.workers = shared.workers;
     cfg.max_batch = args.flag_usize("batch", cfg.max_batch)?;
     cfg.max_wait_us = args.flag_u64("wait-us", cfg.max_wait_us)?;
     cfg.queue_cap = args.flag_usize("queue", cfg.queue_cap)?;
@@ -232,12 +296,10 @@ fn serve_cmd(args: &Args) -> Result<()> {
         args.flag_usize("batch-threads", cfg.batch_threads)?;
     let requests = args.flag_usize("requests", 64)?;
     let clients = args.flag_usize("clients", 8)?;
-    let kernel = KernelSel::parse(
-        args.flags
-            .get("kernel")
-            .map(|s| s.as_str())
-            .unwrap_or("sparse"),
-    )?;
+    let kernel = match shared.kernel {
+        Some(k) => k,
+        None => KernelSel::parse("sparse")?,
+    };
     // `--kernel auto` serves per-layer tuned codelets, so the plan must
     // be compiled through the autotuner (and cached under a key that can
     // never alias the analytic plan)
@@ -251,10 +313,11 @@ fn serve_cmd(args: &Args) -> Result<()> {
 
     // the id encodes every flag the compiled plan depends on, so the
     // stale-artifact guard below catches any drift in spec, geometry,
-    // pruning rate, class count, or seed
+    // scheme, pruning rate, class count, or seed
     let model_id = format!(
-        "serve_{spec_kind}{hw}_c{classes}_r{}m_s{seed}",
-        (rate * 1000.0).round() as u64
+        "serve_{spec_kind}{hw}_c{classes}_{}_r{}m_s{seed}",
+        shared.scheme.name(),
+        (shared.rate * 1000.0).round() as u64
     );
     let build_spec = || -> Result<ExecutionPlan> {
         let (spec, mut params) = match spec_kind.as_str() {
@@ -266,20 +329,33 @@ fn serve_cmd(args: &Args) -> Result<()> {
             }
             other => bail!("unknown --spec {other:?} (vgg|res)"),
         };
-        synth::pattern_prune(&spec, &mut params, 1.0 / rate);
+        synth::scheme_prune(
+            &spec,
+            &mut params,
+            shared.scheme,
+            1.0 / shared.rate,
+        );
         let ir = ModelIR::build(&spec, &params)?;
         if tune {
-            let (plan, report) =
-                compile_plan_tuned(ir, plan_threads, TuneConfig::default())?;
+            let (plan, report) = compile_plan_tuned(
+                ir,
+                shared.threads,
+                TuneConfig::default(),
+            )?;
             print_tune_table(&plan, &report);
             Ok(plan)
         } else {
-            compile_plan(ir, plan_threads)
+            compile_plan(ir, shared.threads)
         }
     };
 
     let registry = PlanRegistry::new(4);
-    let mut key = PlanKey::new(&model_id, "pattern", rate, plan_threads);
+    let mut key = PlanKey::new(
+        &model_id,
+        shared.scheme.name(),
+        shared.rate,
+        shared.threads,
+    );
     if tune {
         key = key.tuned();
     }
@@ -290,16 +366,18 @@ fn serve_cmd(args: &Args) -> Result<()> {
             let plan = artifact::load(p)?;
             // a stale artifact for a different spec must not be served
             // under this run's flags
-            if plan.ir.model_id != model_id || plan.threads != plan_threads
+            if plan.ir.model_id != model_id
+                || plan.threads != shared.threads
             {
-                bail!(
-                    "artifact {p} holds model {:?} compiled for {} \
-                     thread(s), but the requested flags describe \
-                     {model_id:?} at {plan_threads} thread(s); delete \
-                     it or pass a different --artifact path",
-                    plan.ir.model_id,
-                    plan.threads
-                );
+                return Err(ServeError::Config {
+                    msg: format!(
+                        "artifact {p} holds model {:?} compiled for {} \
+                         thread(s), but the requested flags describe \
+                         {model_id:?} at {} thread(s); delete it or \
+                         pass a different --artifact path",
+                        plan.ir.model_id, plan.threads, shared.threads
+                    ),
+                });
             }
             println!(
                 "loaded plan artifact {p} ({} layers, arena {})",
@@ -309,7 +387,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
             Ok(plan)
         }
         Some(p) => {
-            let plan = build_spec()?;
+            let plan = build_spec().map_err(config_err)?;
             artifact::save(&plan, p)?;
             let loaded = artifact::load(p)?;
             artifact::verify_roundtrip(&plan, &loaded, 4, seed)?;
@@ -321,11 +399,14 @@ fn serve_cmd(args: &Args) -> Result<()> {
             );
             Ok(loaded)
         }
-        None => build_spec(),
+        None => build_spec().map_err(config_err),
     })?;
     println!("plan {key} ready in {:.2} ms", t.ms());
 
-    let server = Server::start(plan.clone(), kernel, &cfg);
+    let server = Server::builder(plan.clone())
+        .config(&cfg)
+        .kernel(kernel)
+        .spawn();
     let handle = server.handle();
     let lg = LoadGenConfig {
         mode,
@@ -355,10 +436,180 @@ fn serve_cmd(args: &Args) -> Result<()> {
     );
     let rs = registry.stats();
     println!(
-        "registry: {} ready / cap {}, {} hits, {} misses, \
-         {} coalesced, {} evictions",
-        rs.ready, rs.capacity, rs.hits, rs.misses, rs.coalesced,
+        "registry: {} ready / cap {} ({} resident), {} hits, \
+         {} misses, {} coalesced, {} evictions",
+        rs.ready,
+        rs.capacity,
+        human_bytes(rs.resident_bytes as usize),
+        rs.hits,
+        rs.misses,
+        rs.coalesced,
         rs.evictions
+    );
+    Ok(())
+}
+
+/// `repro serve --tenants N`: compile one synthetic plan per tenant
+/// through its own [`ShardedRegistry`] shard, stand up the gateway over
+/// a shared worker pool, replay a seeded multi-tenant virtual-time
+/// trace against it, and print the per-tenant gateway report.
+fn serve_tenants_cmd(
+    args: &Args,
+    shared: &SharedServeFlags,
+    n_tenants: usize,
+) -> Result<()> {
+    let spec_kind = args
+        .flags
+        .get("spec")
+        .map(|s| s.as_str())
+        .unwrap_or("vgg")
+        .to_string();
+    let hw = args.flag_usize("hw", 16)?;
+    let classes = args.flag_usize("classes", 10)?;
+    let seed = args.flag_u64("seed", 42)?;
+    let requests = args.flag_usize("requests", 64)?;
+    let total_qps = args.flag_f64("qps", 64.0)?;
+    let skew = args.flag_f64("skew", 1.0)?;
+    let pace = args.flag_f64("pace", 0.0)?;
+    let admit_qps = args.flag_f64("admit-qps", f64::INFINITY)?;
+    let ramp_us = args.flag_u64("ramp-us", 0)?;
+    let queue_cap = args.flag_usize("queue", 256)?;
+    let mut cfg = GatewayConfig::preset(args.preset()?);
+    cfg.workers = shared.workers;
+    cfg.max_batch = args.flag_usize("batch", cfg.max_batch)?;
+    cfg.max_wait_us = args.flag_u64("wait-us", cfg.max_wait_us)?;
+    cfg.batch_threads =
+        args.flag_usize("batch-threads", cfg.batch_threads)?;
+    let kernel = match shared.kernel {
+        Some(k) => k,
+        None => KernelSel::parse("sparse")?,
+    };
+
+    let mut registry = ShardedRegistry::new();
+    let names: Vec<String> =
+        (0..n_tenants).map(|ti| format!("t{ti}")).collect();
+    for name in &names {
+        registry.add_tenant(name, 2, u64::MAX)?;
+    }
+    let registry = Arc::new(registry);
+
+    let qps = loadgen::skewed_qps(total_qps, n_tenants, skew);
+    let per_tenant_requests = requests.div_ceil(n_tenants).max(1);
+    let prio = [Priority::High, Priority::Normal, Priority::Low];
+    let mut builder =
+        Gateway::builder().config(&cfg).registry(registry.clone());
+    let mut loads = Vec::with_capacity(n_tenants);
+    let t = crate::util::Stopwatch::start();
+    for (ti, name) in names.iter().enumerate() {
+        let model_id =
+            format!("gw_{spec_kind}{hw}_c{classes}_{name}_s{seed}");
+        let key = PlanKey::new(
+            &model_id,
+            shared.scheme.name(),
+            shared.rate,
+            shared.threads,
+        );
+        // per-tenant seed: every tenant gets genuinely different weights
+        let tseed = seed.wrapping_add(ti as u64);
+        let plan = registry.get_or_build(name, &key, || {
+            let (spec, mut params) = match spec_kind.as_str() {
+                "vgg" => synth::vgg_style(
+                    &model_id,
+                    hw,
+                    classes,
+                    &[16, 32],
+                    tseed,
+                ),
+                "res" => synth::res_style(
+                    &model_id,
+                    hw,
+                    classes,
+                    &[8, 16],
+                    tseed,
+                ),
+                other => {
+                    return Err(ServeError::Config {
+                        msg: format!(
+                            "unknown --spec {other:?} (vgg|res)"
+                        ),
+                    })
+                }
+            };
+            synth::scheme_prune(
+                &spec,
+                &mut params,
+                shared.scheme,
+                1.0 / shared.rate,
+            );
+            let ir =
+                ModelIR::build(&spec, &params).map_err(config_err)?;
+            compile_plan(ir, shared.threads).map_err(config_err)
+        })?;
+        let mut tc = TenantConfig::new(name)
+            .priority(prio[ti % prio.len()])
+            .queue_cap(queue_cap);
+        if admit_qps.is_finite() {
+            tc = tc.admit(admit_qps, 8.0);
+        }
+        builder = builder.tenant(tc, plan, kernel);
+        loads.push(loadgen::TenantLoad::new(
+            name,
+            qps[ti],
+            per_tenant_requests,
+        ));
+    }
+    println!(
+        "compiled {n_tenants} tenant plan(s) in {:.2} ms \
+         (zipf s={skew} share of {total_qps} virtual qps each)",
+        t.ms()
+    );
+
+    let ramp =
+        (ramp_us > 0).then(|| loadgen::DiurnalRamp::new(ramp_us, 0.25));
+    let trace = loadgen::multi_tenant_trace(&loads, ramp, seed);
+    let gateway = builder.spawn()?;
+    let handle = gateway.handle();
+    let load = loadgen::replay(&handle, &loads, &trace, seed, pace)?;
+    let report = gateway.shutdown();
+    println!(
+        "{}",
+        report
+            .table(&format!(
+                "gateway {n_tenants} tenants ({} workers, batch {} / \
+                 {} us window, kernel {})",
+                cfg.workers,
+                cfg.max_batch,
+                cfg.max_wait_us,
+                kernel.name()
+            ))
+            .render()
+    );
+    for c in &load.per_tenant {
+        println!(
+            "  tenant {:>6}: {} issued, {} completed, {} shed, \
+             {} rejected",
+            c.tenant, c.issued, c.completed, c.shed, c.rejected
+        );
+    }
+    println!(
+        "replay: {} events, {} completed, {} shed, {} rejected \
+         in {:.2} s",
+        trace.len(),
+        load.completed,
+        load.shed,
+        load.rejected,
+        load.wall_secs
+    );
+    let total = registry.total();
+    println!(
+        "registry: {} ready across {} shards, {} hits, {} misses, \
+         {} coalesced, {} evictions",
+        total.ready,
+        n_tenants,
+        total.hits,
+        total.misses,
+        total.coalesced,
+        total.evictions
     );
     Ok(())
 }
@@ -434,17 +685,15 @@ pub fn main() -> Result<()> {
             Ok(())
         }
         "deploy" => {
+            let shared = SharedServeFlags::parse(&args, 1)?;
             let ctx = args.ctx()?;
             let model = args.model()?;
-            let sel = match args.flags.get("kernel") {
-                Some(k) => Some(KernelSel::parse(k)?),
-                None => None,
-            };
+            let sel = shared.kernel;
             let (params, _, comp, _, _) = ctx.prune(
                 model,
                 args.method()?,
-                Scheme::Pattern,
-                args.rate()?,
+                shared.scheme,
+                shared.rate,
             )?;
             let spec = ctx.rt.model(model)?.clone();
             let t = crate::util::Stopwatch::start();

@@ -46,6 +46,8 @@ use crate::mobile::plan::{
 use crate::tensor::Tensor;
 use crate::util::Stopwatch;
 
+use super::error::ServeError;
+
 /// Bump on any incompatible layout change; loaders reject other versions.
 /// History: 1 = initial format; 2 = added the TUNING section carrying
 /// per-layer [`KernelChoice`] (kernel kind + tile shapes).
@@ -830,7 +832,15 @@ pub fn encode_plan(plan: &ExecutionPlan) -> Vec<u8> {
 }
 
 /// Deserialize and validate an artifact produced by [`encode_plan`].
-pub fn decode_plan(bytes: &[u8]) -> Result<ExecutionPlan> {
+/// Failures (truncation, checksum, framing, validation) surface as
+/// [`ServeError::Artifact`] with the full cause chain in the message.
+pub fn decode_plan(
+    bytes: &[u8],
+) -> Result<ExecutionPlan, ServeError> {
+    decode_plan_impl(bytes).map_err(|e| ServeError::artifact(&e))
+}
+
+fn decode_plan_impl(bytes: &[u8]) -> Result<ExecutionPlan> {
     let t = Stopwatch::start();
     if bytes.len() < MAGIC.len() + 4 + 8 {
         bail!("artifact truncated: {} bytes", bytes.len());
@@ -910,8 +920,15 @@ pub fn decode_plan(bytes: &[u8]) -> Result<ExecutionPlan> {
 
 /// Write `plan` to `path` (atomically: temp file + rename, so a torn
 /// write never leaves a half-artifact where a registry might load it).
-pub fn save(plan: &ExecutionPlan, path: impl AsRef<Path>) -> Result<()> {
-    let path = path.as_ref();
+pub fn save(
+    plan: &ExecutionPlan,
+    path: impl AsRef<Path>,
+) -> Result<(), ServeError> {
+    save_impl(plan, path.as_ref())
+        .map_err(|e| ServeError::artifact(&e))
+}
+
+fn save_impl(plan: &ExecutionPlan, path: &Path) -> Result<()> {
     if let Some(dir) = path.parent() {
         if !dir.as_os_str().is_empty() {
             std::fs::create_dir_all(dir)?;
@@ -927,11 +944,16 @@ pub fn save(plan: &ExecutionPlan, path: impl AsRef<Path>) -> Result<()> {
 }
 
 /// Read, checksum-verify, and validate a plan artifact from `path`.
-pub fn load(path: impl AsRef<Path>) -> Result<ExecutionPlan> {
-    let path = path.as_ref();
+pub fn load(
+    path: impl AsRef<Path>,
+) -> Result<ExecutionPlan, ServeError> {
+    load_impl(path.as_ref()).map_err(|e| ServeError::artifact(&e))
+}
+
+fn load_impl(path: &Path) -> Result<ExecutionPlan> {
     let bytes = std::fs::read(path)
         .with_context(|| format!("reading plan artifact {}", path.display()))?;
-    decode_plan(&bytes)
+    decode_plan_impl(&bytes)
         .with_context(|| format!("loading plan artifact {}", path.display()))
 }
 
@@ -940,6 +962,16 @@ pub fn load(path: impl AsRef<Path>) -> Result<ExecutionPlan> {
 /// original's, for every kernel in the registry and for the per-layer
 /// auto dispatch through the (possibly tuned) baked kernel choices.
 pub fn verify_roundtrip(
+    original: &ExecutionPlan,
+    loaded: &ExecutionPlan,
+    probes: usize,
+    seed: u64,
+) -> Result<(), ServeError> {
+    verify_roundtrip_impl(original, loaded, probes, seed)
+        .map_err(|e| ServeError::artifact(&e))
+}
+
+fn verify_roundtrip_impl(
     original: &ExecutionPlan,
     loaded: &ExecutionPlan,
     probes: usize,

@@ -1,0 +1,159 @@
+//! The serving tier's single public error type.
+//!
+//! Every fallible public surface in `serve/` — request submission,
+//! ticket waits, registry builds, artifact IO, gateway construction and
+//! admission — reports a [`ServeError`]. The old `SubmitError` /
+//! `PushError` pair and the ad-hoc `anyhow` strings are gone: callers
+//! match one enum, and the distinctions that drive control flow
+//! (backpressure-`Rejected` vs caller-bug `BadShape`, deterministic
+//! admission `Shed` vs timing-dependent queue `Rejected`) stay typed.
+
+/// Why a serving-tier operation failed.
+///
+/// `Rejected`, `Shed`, and `Closed` are *flow* signals — the request was
+/// refused before any work happened and the caller may retry or give up.
+/// `BadShape` / `BadLength` are caller bugs. `Build`, `Artifact`,
+/// `OverBudget`, and `Config` surface deployment problems that used to
+/// be stringly-typed `anyhow` chains (or, for registry builds, panics).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// bounded queue at capacity — explicit backpressure, try again later
+    Rejected,
+    /// per-tenant admission control refused the request (token budget
+    /// exhausted); deterministic under virtual-time replay
+    Shed {
+        /// tenant whose budget was exhausted
+        tenant: String,
+    },
+    /// the gateway has no tenant by this name / index
+    UnknownTenant { tenant: String },
+    /// image dims do not match the plan input
+    BadShape {
+        got: (usize, usize),
+        want: (usize, usize),
+    },
+    /// image buffer length disagrees with its own dims (`Fmap` fields
+    /// are pub) — caught at submit so it can never panic a worker
+    BadLength { got: usize, want: usize },
+    /// the server / gateway is shutting down
+    Closed,
+    /// the request was dropped before a response (batch failed, deadline
+    /// shed, or shutdown raced the in-flight work)
+    Canceled { id: u64 },
+    /// a registry plan build failed (compile or artifact load); the key
+    /// stays buildable — the next caller retries
+    Build { key: String, msg: String },
+    /// plan artifact encode/decode/IO failure
+    Artifact { msg: String },
+    /// a tenant's compiled plan does not fit its memory budget
+    OverBudget {
+        tenant: String,
+        need: u64,
+        budget: u64,
+    },
+    /// invalid serving configuration (duplicate tenant, empty gateway, …)
+    Config { msg: String },
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Rejected => {
+                write!(f, "request rejected: queue at capacity")
+            }
+            ServeError::Shed { tenant } => write!(
+                f,
+                "request shed: tenant {tenant:?} admission budget \
+                 exhausted"
+            ),
+            ServeError::UnknownTenant { tenant } => {
+                write!(f, "unknown tenant {tenant:?}")
+            }
+            ServeError::BadShape { got, want } => write!(
+                f,
+                "image ({}, {}hw) does not match plan input ({}, {}hw)",
+                got.0, got.1, want.0, want.1
+            ),
+            ServeError::BadLength { got, want } => write!(
+                f,
+                "image buffer holds {got} elems, plan input needs {want}"
+            ),
+            ServeError::Closed => write!(f, "server is shutting down"),
+            ServeError::Canceled { id } => {
+                write!(f, "request {id} canceled before a response")
+            }
+            ServeError::Build { key, msg } => {
+                write!(f, "building plan {key} failed: {msg}")
+            }
+            ServeError::Artifact { msg } => {
+                write!(f, "plan artifact error: {msg}")
+            }
+            ServeError::OverBudget {
+                tenant,
+                need,
+                budget,
+            } => write!(
+                f,
+                "tenant {tenant:?} plan needs {need} bytes but its \
+                 memory budget is {budget} bytes"
+            ),
+            ServeError::Config { msg } => {
+                write!(f, "invalid serving config: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+impl ServeError {
+    /// Wrap an `anyhow` chain from the artifact codec as a typed
+    /// [`ServeError::Artifact`] (the full cause chain is preserved in the
+    /// message, so substring checks like "checksum" keep working).
+    pub(crate) fn artifact(err: &anyhow::Error) -> Self {
+        ServeError::Artifact {
+            msg: format!("{err:#}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_keeps_flow_distinctions() {
+        assert!(ServeError::Rejected.to_string().contains("capacity"));
+        assert!(ServeError::Closed.to_string().contains("shutting down"));
+        let shed = ServeError::Shed {
+            tenant: "alice".into(),
+        };
+        assert!(shed.to_string().contains("alice"));
+        assert_ne!(shed, ServeError::Rejected);
+        let bad = ServeError::BadShape {
+            got: (1, 2),
+            want: (3, 4),
+        };
+        assert!(bad.to_string().contains("does not match"));
+        let build = ServeError::Build {
+            key: "m/pattern@8.0x/t1".into(),
+            msg: "boom".into(),
+        };
+        assert!(build.to_string().contains("boom"));
+        let over = ServeError::OverBudget {
+            tenant: "bob".into(),
+            need: 10,
+            budget: 5,
+        };
+        assert!(over.to_string().contains("budget"));
+    }
+
+    #[test]
+    fn is_a_std_error() {
+        fn takes_err<E: std::error::Error + Send + Sync + 'static>(_: E) {}
+        takes_err(ServeError::Rejected);
+        // and therefore converts into anyhow
+        let err = anyhow::Error::from(ServeError::Closed);
+        assert!(err.to_string().contains("shutting down"));
+    }
+}

@@ -1,0 +1,1104 @@
+//! Multi-tenant serving gateway: many `(model, scheme, rate, kernel)`
+//! deployments multiplexed over one worker pool (DESIGN.md §13).
+//!
+//! One [`Gateway`] owns N tenants. Each tenant brings its own compiled
+//! plan + kernel selection, a **bounded queue** (per-tenant
+//! backpressure), a **priority class**, an optional **deadline**, and an
+//! optional **admission budget**. A shared pool of workers picks, at
+//! every dispatch, the highest-priority tenant with the oldest waiting
+//! request, forms a *single-tenant* micro-batch (batches never mix
+//! plans), and executes it on a lazily-built per-`(worker, tenant)`
+//! executor — so a worker that never serves a tenant never pays for its
+//! arena.
+//!
+//! Two shed layers, deliberately split by determinism:
+//!
+//! * **Admission shed** ([`ServeError::Shed`]): a per-tenant token
+//!   bucket refilled in *virtual time* — the `vt_us` timestamps carried
+//!   by the seeded trace ([`super::loadgen::multi_tenant_trace`]) — via
+//!   [`GatewayHandle::submit_at`]. Because refill depends only on the
+//!   trace, shed decisions are a pure function of `(trace, budget)`:
+//!   identical at any worker count, and counted in the deterministic
+//!   counters.
+//! * **Deadline shed** ([`ServeStats::shed_deadline`]): an admitted
+//!   request whose wall-clock deadline passed before dispatch is dropped
+//!   at batch formation (its client observes
+//!   [`ServeError::Canceled`]). Wall-clock dependent, excluded from the
+//!   deterministic counters.
+//!
+//! Per-tenant [`ServeReport`]s (latency percentiles, shed/reject
+//! counters, batch histogram) roll up into a [`GatewayReport`]; when the
+//! gateway is built over a [`ShardedRegistry`], per-tenant registry
+//! counters (hits/misses/evictions/resident bytes) ride along.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::GatewayConfig;
+use crate::mobile::engine::{
+    execute_batch_parallel, Executor, Fmap, KernelSel,
+};
+use crate::mobile::plan::{ExecutionPlan, StepDims};
+use crate::report::Table;
+
+use super::error::ServeError;
+use super::registry::{plan_bytes, RegistryStats, ShardedRegistry};
+use super::server::{check_image, ServeResponse, Ticket};
+use super::stats::{ServeReport, ServeStats};
+
+/// Dispatch priority class. Workers always serve every waiting `High`
+/// request before any `Normal` one, and `Normal` before `Low`; within a
+/// class, the oldest waiting head wins (deadline-aware FIFO).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    High,
+    #[default]
+    Normal,
+    Low,
+}
+
+impl Priority {
+    pub fn rank(self) -> u8 {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Low => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Low => "low",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Priority, ServeError> {
+        match s {
+            "high" => Ok(Priority::High),
+            "normal" => Ok(Priority::Normal),
+            "low" => Ok(Priority::Low),
+            _ => Err(ServeError::Config {
+                msg: format!("unknown priority {s:?} (high|normal|low)"),
+            }),
+        }
+    }
+}
+
+/// Per-tenant deployment knobs. Start from [`TenantConfig::new`] and
+/// chain overrides, mirroring the server/gateway builder style.
+#[derive(Clone, Debug)]
+pub struct TenantConfig {
+    pub name: String,
+    pub priority: Priority,
+    /// bounded queue capacity — a full tenant queue rejects *that
+    /// tenant's* submits without touching anyone else's
+    pub queue_cap: usize,
+    /// admission budget in requests/sec of *virtual* (trace) time;
+    /// `f64::INFINITY` disables the bucket. Only
+    /// [`GatewayHandle::submit_at`] consults it.
+    pub admit_qps: f64,
+    /// token bucket burst capacity, requests
+    pub admit_burst: f64,
+    /// wall-clock dispatch deadline; an admitted request older than this
+    /// at batch formation is shed. 0 disables.
+    pub deadline_us: u64,
+    /// memory budget for this tenant's plan footprint
+    /// ([`plan_bytes`]); exceeding it at spawn is a typed
+    /// [`ServeError::OverBudget`]
+    pub mem_budget: u64,
+}
+
+impl TenantConfig {
+    pub fn new(name: &str) -> Self {
+        TenantConfig {
+            name: name.to_string(),
+            priority: Priority::Normal,
+            queue_cap: 256,
+            admit_qps: f64::INFINITY,
+            admit_burst: 8.0,
+            deadline_us: 0,
+            mem_budget: u64::MAX,
+        }
+    }
+
+    pub fn priority(mut self, p: Priority) -> Self {
+        self.priority = p;
+        self
+    }
+
+    pub fn queue_cap(mut self, cap: usize) -> Self {
+        self.queue_cap = cap.max(1);
+        self
+    }
+
+    /// Cap admission at `qps` requests per virtual second (with `burst`
+    /// tokens of headroom).
+    pub fn admit(mut self, qps: f64, burst: f64) -> Self {
+        self.admit_qps = qps.max(0.0);
+        self.admit_burst = burst.max(1.0);
+        self
+    }
+
+    pub fn deadline_us(mut self, us: u64) -> Self {
+        self.deadline_us = us;
+        self
+    }
+
+    pub fn mem_budget(mut self, bytes: u64) -> Self {
+        self.mem_budget = bytes.max(1);
+        self
+    }
+}
+
+/// Virtual-time token bucket — refill is driven by the trace timestamps
+/// handed to [`GatewayHandle::submit_at`], never the wall clock, so the
+/// admit/shed sequence is a pure function of the trace.
+struct Bucket {
+    tokens: f64,
+    last_vt_us: u64,
+    primed: bool,
+}
+
+struct TenantRt {
+    cfg: TenantConfig,
+    plan: Arc<ExecutionPlan>,
+    kernel: KernelSel,
+    stats: ServeStats,
+    bucket: Mutex<Bucket>,
+}
+
+struct GwRequest {
+    id: u64,
+    img: Fmap,
+    enqueued: Instant,
+    deadline: Option<Instant>,
+    tx: mpsc::Sender<ServeResponse>,
+}
+
+struct GwState {
+    queues: Vec<VecDeque<GwRequest>>,
+    closed: bool,
+}
+
+struct GwShared {
+    state: Mutex<GwState>,
+    work_cv: Condvar,
+    tenants: Vec<TenantRt>,
+    by_name: BTreeMap<String, usize>,
+    next_id: AtomicU64,
+}
+
+impl GwShared {
+    fn tenant_index(&self, name: &str) -> Result<usize, ServeError> {
+        self.by_name.get(name).copied().ok_or_else(|| {
+            ServeError::UnknownTenant {
+                tenant: name.to_string(),
+            }
+        })
+    }
+}
+
+/// Builder for a [`Gateway`]; same shape as
+/// [`ServerBuilder`](super::server::ServerBuilder), plus `tenant()`
+/// registrations.
+pub struct GatewayBuilder {
+    cfg: GatewayConfig,
+    tenants: Vec<(TenantConfig, Arc<ExecutionPlan>, KernelSel)>,
+    registry: Option<Arc<ShardedRegistry>>,
+}
+
+impl GatewayBuilder {
+    /// Bulk-load the pool knobs from a [`GatewayConfig`].
+    pub fn config(mut self, cfg: &GatewayConfig) -> Self {
+        self.cfg = *cfg;
+        self
+    }
+
+    /// Shared worker threads for the whole gateway.
+    pub fn workers(mut self, n: usize) -> Self {
+        self.cfg.workers = n.max(1);
+        self
+    }
+
+    /// Per-dispatch micro-batch cap (batches are single-tenant).
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.cfg.max_batch = n.max(1);
+        self
+    }
+
+    /// Straggler window past a batch's head-of-queue enqueue time.
+    pub fn max_wait_us(mut self, us: u64) -> Self {
+        self.cfg.max_wait_us = us;
+        self
+    }
+
+    /// Intra-batch executor threads (1 = sequential on the lazily-built
+    /// per-`(worker, tenant)` executor).
+    pub fn batch_threads(mut self, n: usize) -> Self {
+        self.cfg.batch_threads = n.max(1);
+        self
+    }
+
+    /// Attach the plan registry the tenants were built through; its
+    /// per-tenant counters (hits/misses/evictions/resident bytes) are
+    /// folded into the final [`GatewayReport`].
+    pub fn registry(mut self, reg: Arc<ShardedRegistry>) -> Self {
+        self.registry = Some(reg);
+        self
+    }
+
+    /// Register one tenant: its deployment knobs, compiled plan, and
+    /// kernel selection.
+    pub fn tenant(
+        mut self,
+        cfg: TenantConfig,
+        plan: Arc<ExecutionPlan>,
+        kernel: impl Into<KernelSel>,
+    ) -> Self {
+        self.tenants.push((cfg, plan, kernel.into()));
+        self
+    }
+
+    /// Validate the fleet and start the worker pool. Typed failures:
+    /// [`ServeError::Config`] (no tenants / duplicate names) and
+    /// [`ServeError::OverBudget`] (a plan that does not fit its tenant's
+    /// memory budget).
+    pub fn spawn(self) -> Result<Gateway, ServeError> {
+        let GatewayBuilder {
+            cfg,
+            tenants,
+            registry,
+        } = self;
+        if tenants.is_empty() {
+            return Err(ServeError::Config {
+                msg: "gateway has no tenants".into(),
+            });
+        }
+        let mut by_name = BTreeMap::new();
+        for (i, (tc, plan, _)) in tenants.iter().enumerate() {
+            if by_name.insert(tc.name.clone(), i).is_some() {
+                return Err(ServeError::Config {
+                    msg: format!("duplicate tenant {:?}", tc.name),
+                });
+            }
+            let need = plan_bytes(plan);
+            if need > tc.mem_budget {
+                return Err(ServeError::OverBudget {
+                    tenant: tc.name.clone(),
+                    need,
+                    budget: tc.mem_budget,
+                });
+            }
+        }
+        let rts: Vec<TenantRt> = tenants
+            .into_iter()
+            .map(|(tc, plan, kernel)| TenantRt {
+                bucket: Mutex::new(Bucket {
+                    tokens: tc.admit_burst,
+                    last_vt_us: 0,
+                    primed: false,
+                }),
+                cfg: tc,
+                plan,
+                kernel,
+                stats: ServeStats::new(),
+            })
+            .collect();
+        let n_tenants = rts.len();
+        let shared = Arc::new(GwShared {
+            state: Mutex::new(GwState {
+                queues: (0..n_tenants).map(|_| VecDeque::new()).collect(),
+                closed: false,
+            }),
+            work_cv: Condvar::new(),
+            tenants: rts,
+            by_name,
+            next_id: AtomicU64::new(0),
+        });
+        let max_batch = cfg.max_batch.max(1);
+        let max_wait = Duration::from_micros(cfg.max_wait_us);
+        let batch_threads = cfg.batch_threads.max(1);
+        let workers = (0..cfg.workers.max(1))
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("gw-worker-{i}"))
+                    .spawn(move || {
+                        worker_loop(
+                            &shared,
+                            max_batch,
+                            max_wait,
+                            batch_threads,
+                        )
+                    })
+                    .expect("spawning gateway worker")
+            })
+            .collect();
+        Ok(Gateway {
+            shared,
+            workers,
+            started: Instant::now(),
+            registry,
+        })
+    }
+}
+
+/// Cloneable client handle onto a running [`Gateway`].
+#[derive(Clone)]
+pub struct GatewayHandle {
+    shared: Arc<GwShared>,
+}
+
+impl GatewayHandle {
+    /// The input dims a tenant's plan expects (for building request
+    /// images).
+    pub fn in_dims(&self, tenant: &str) -> Result<StepDims, ServeError> {
+        let ti = self.shared.tenant_index(tenant)?;
+        Ok(self.shared.tenants[ti].plan.in_dims)
+    }
+
+    /// Submit bypassing admission control (interactive / closed-loop
+    /// clients with no trace clock). Still subject to the tenant's
+    /// bounded queue.
+    pub fn submit(
+        &self,
+        tenant: &str,
+        img: Fmap,
+    ) -> Result<Ticket, ServeError> {
+        let ti = self.shared.tenant_index(tenant)?;
+        self.submit_inner(ti, img, None)
+    }
+
+    /// Submit at virtual time `vt_us` (monotone per tenant, from the
+    /// trace): the tenant's token bucket refills by
+    /// `admit_qps · Δvt` and sheds with a typed [`ServeError::Shed`]
+    /// when empty. Replayed in trace order this is deterministic — the
+    /// shed set depends only on the trace and the budget.
+    pub fn submit_at(
+        &self,
+        tenant: &str,
+        img: Fmap,
+        vt_us: u64,
+    ) -> Result<Ticket, ServeError> {
+        let ti = self.shared.tenant_index(tenant)?;
+        self.submit_inner(ti, img, Some(vt_us))
+    }
+
+    /// Submit and block for the response.
+    pub fn infer(
+        &self,
+        tenant: &str,
+        img: Fmap,
+    ) -> Result<ServeResponse, ServeError> {
+        self.submit(tenant, img)?.wait()
+    }
+
+    /// Live per-tenant stats snapshot.
+    pub fn tenant_report(
+        &self,
+        tenant: &str,
+        elapsed_secs: f64,
+    ) -> Result<ServeReport, ServeError> {
+        let ti = self.shared.tenant_index(tenant)?;
+        Ok(self.shared.tenants[ti].stats.report(elapsed_secs))
+    }
+
+    pub fn queue_depth(
+        &self,
+        tenant: &str,
+    ) -> Result<usize, ServeError> {
+        let ti = self.shared.tenant_index(tenant)?;
+        Ok(self.shared.state.lock().unwrap().queues[ti].len())
+    }
+
+    fn submit_inner(
+        &self,
+        ti: usize,
+        img: Fmap,
+        vt_us: Option<u64>,
+    ) -> Result<Ticket, ServeError> {
+        let t = &self.shared.tenants[ti];
+        check_image(&img, t.plan.in_dims)?;
+        if let Some(vt) = vt_us {
+            if t.cfg.admit_qps.is_finite() && !self.admit(ti, vt) {
+                t.stats.shed();
+                return Err(ServeError::Shed {
+                    tenant: t.cfg.name.clone(),
+                });
+            }
+        }
+        let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let enqueued = Instant::now();
+        let deadline = (t.cfg.deadline_us > 0)
+            .then(|| enqueued + Duration::from_micros(t.cfg.deadline_us));
+        t.stats.submit();
+        let mut g = self.shared.state.lock().unwrap();
+        if g.closed {
+            t.stats.unsubmit();
+            return Err(ServeError::Closed);
+        }
+        if g.queues[ti].len() >= t.cfg.queue_cap {
+            t.stats.reject();
+            return Err(ServeError::Rejected);
+        }
+        g.queues[ti].push_back(GwRequest {
+            id,
+            img,
+            enqueued,
+            deadline,
+            tx,
+        });
+        drop(g);
+        self.shared.work_cv.notify_all();
+        Ok(Ticket::new(id, rx))
+    }
+
+    /// Token-bucket decision in virtual time. A non-monotone `vt` (clock
+    /// replayed out of order) refills nothing rather than going
+    /// backwards.
+    fn admit(&self, ti: usize, vt_us: u64) -> bool {
+        let t = &self.shared.tenants[ti];
+        let mut b = t.bucket.lock().unwrap();
+        if !b.primed {
+            // the first event anchors the clock; the initial burst is the
+            // whole budget
+            b.primed = true;
+            b.last_vt_us = vt_us;
+        } else if vt_us > b.last_vt_us {
+            let dt = (vt_us - b.last_vt_us) as f64 / 1e6;
+            b.tokens =
+                (b.tokens + dt * t.cfg.admit_qps).min(t.cfg.admit_burst);
+            b.last_vt_us = vt_us;
+        }
+        if b.tokens >= 1.0 {
+            b.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Final per-tenant slice of a [`GatewayReport`].
+#[derive(Clone, Debug)]
+pub struct TenantReport {
+    pub name: String,
+    pub priority: Priority,
+    pub report: ServeReport,
+}
+
+/// Everything a gateway run produced, per tenant and rolled up.
+#[derive(Clone, Debug)]
+pub struct GatewayReport {
+    /// tenant registration order
+    pub tenants: Vec<TenantReport>,
+    pub elapsed_secs: f64,
+    /// per-tenant registry counters when the gateway was built over a
+    /// [`ShardedRegistry`] (empty otherwise)
+    pub registry: Vec<(String, RegistryStats)>,
+}
+
+impl GatewayReport {
+    pub fn tenant(&self, name: &str) -> Option<&TenantReport> {
+        self.tenants.iter().find(|t| t.name == name)
+    }
+
+    /// Gateway-level counter roll-up:
+    /// `(submitted, completed, rejected, errors, shed, shed_deadline)`.
+    pub fn totals(&self) -> (u64, u64, u64, u64, u64, u64) {
+        let mut acc = (0, 0, 0, 0, 0, 0);
+        for t in &self.tenants {
+            acc.0 += t.report.submitted;
+            acc.1 += t.report.completed;
+            acc.2 += t.report.rejected;
+            acc.3 += t.report.errors;
+            acc.4 += t.report.shed;
+            acc.5 += t.report.shed_deadline;
+        }
+        acc
+    }
+
+    /// One row per tenant: the fleet operator's overview.
+    pub fn table(&self, title: &str) -> Table {
+        let mut t = Table::new(
+            title,
+            &[
+                "tenant", "prio", "completed", "rejected", "shed",
+                "shed-ddl", "rps", "p50", "p99",
+            ],
+        );
+        for tr in &self.tenants {
+            let r = &tr.report;
+            t.row(&[
+                tr.name.clone(),
+                tr.priority.name().into(),
+                format!("{}", r.completed),
+                format!("{}", r.rejected),
+                format!("{}", r.shed),
+                format!("{}", r.shed_deadline),
+                format!("{:.1}", r.throughput_rps),
+                format!("{} us", r.latency.p50_us),
+                format!("{} us", r.latency.p99_us),
+            ]);
+        }
+        t
+    }
+}
+
+/// The multi-tenant serving engine. Build with [`Gateway::builder`].
+pub struct Gateway {
+    shared: Arc<GwShared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    started: Instant,
+    registry: Option<Arc<ShardedRegistry>>,
+}
+
+impl Gateway {
+    pub fn builder() -> GatewayBuilder {
+        GatewayBuilder {
+            cfg: GatewayConfig::default(),
+            tenants: Vec::new(),
+            registry: None,
+        }
+    }
+
+    pub fn handle(&self) -> GatewayHandle {
+        GatewayHandle {
+            shared: self.shared.clone(),
+        }
+    }
+
+    /// Stop accepting, drain every tenant queue, join the pool, and
+    /// report.
+    pub fn shutdown(self) -> GatewayReport {
+        {
+            let mut g = self.shared.state.lock().unwrap();
+            g.closed = true;
+        }
+        self.shared.work_cv.notify_all();
+        for w in self.workers {
+            w.join().expect("gateway worker panicked");
+        }
+        let elapsed_secs = self.started.elapsed().as_secs_f64();
+        let tenants = self
+            .shared
+            .tenants
+            .iter()
+            .map(|t| TenantReport {
+                name: t.cfg.name.clone(),
+                priority: t.cfg.priority,
+                report: t.stats.report(elapsed_secs),
+            })
+            .collect();
+        GatewayReport {
+            tenants,
+            elapsed_secs,
+            registry: self
+                .registry
+                .map(|r| r.stats())
+                .unwrap_or_default(),
+        }
+    }
+}
+
+/// Pick the tenant to serve next: lowest priority rank first, oldest
+/// head-of-queue within a rank, registration order as the final
+/// tie-break (the `min_by_key` scan order).
+fn pick_tenant(g: &GwState, shared: &GwShared) -> Option<usize> {
+    (0..g.queues.len())
+        .filter(|&ti| !g.queues[ti].is_empty())
+        .min_by_key(|&ti| {
+            (
+                shared.tenants[ti].cfg.priority.rank(),
+                g.queues[ti].front().map(|r| r.enqueued),
+            )
+        })
+}
+
+/// Drop already-expired heads across all tenants (shed-on-overload).
+/// Only called with the state lock held; senders are dropped so waiting
+/// clients observe `Canceled`.
+fn shed_expired(g: &mut GwState, shared: &GwShared, now: Instant) {
+    for (ti, q) in g.queues.iter_mut().enumerate() {
+        while let Some(front) = q.front() {
+            match front.deadline {
+                Some(d) if d <= now => {
+                    q.pop_front();
+                    shared.tenants[ti].stats.shed_deadline();
+                }
+                _ => break,
+            }
+        }
+    }
+}
+
+/// Form the next single-tenant micro-batch, or `None` at drain + close.
+fn next_batch(
+    shared: &GwShared,
+    max_batch: usize,
+    max_wait: Duration,
+) -> Option<(usize, Vec<GwRequest>)> {
+    let mut g = shared.state.lock().unwrap();
+    let ti = loop {
+        // during shutdown everything still queued is served, not shed —
+        // a drained gateway reports completed == submitted
+        if !g.closed {
+            shed_expired(&mut g, shared, Instant::now());
+        }
+        match pick_tenant(&g, shared) {
+            Some(ti) => break ti,
+            None => {
+                if g.closed {
+                    return None;
+                }
+                g = shared.work_cv.wait(g).unwrap();
+            }
+        }
+    };
+    let mut batch = Vec::with_capacity(max_batch);
+    while batch.len() < max_batch {
+        match g.queues[ti].pop_front() {
+            Some(r) => batch.push(r),
+            None => break,
+        }
+    }
+    // straggler window anchored at the head's enqueue time, same
+    // contract as the single-plan batcher: backlogged requests are
+    // never further delayed
+    if batch.len() < max_batch && max_wait > Duration::ZERO {
+        let deadline = batch[0].enqueued + max_wait;
+        loop {
+            if batch.len() >= max_batch || g.closed {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (g2, timeout) = shared
+                .work_cv
+                .wait_timeout(g, deadline - now)
+                .unwrap();
+            g = g2;
+            while batch.len() < max_batch {
+                match g.queues[ti].pop_front() {
+                    Some(r) => batch.push(r),
+                    None => break,
+                }
+            }
+            if timeout.timed_out() {
+                break;
+            }
+        }
+    }
+    Some((ti, batch))
+}
+
+fn worker_loop(
+    shared: &GwShared,
+    max_batch: usize,
+    max_wait: Duration,
+    batch_threads: usize,
+) {
+    // executors are built lazily per (worker, tenant): a worker that
+    // never draws a tenant's batch never allocates that tenant's arena
+    let mut execs: Vec<Option<Executor>> =
+        (0..shared.tenants.len()).map(|_| None).collect();
+    while let Some((ti, batch)) =
+        next_batch(shared, max_batch, max_wait)
+    {
+        if batch.is_empty() {
+            continue;
+        }
+        let t = &shared.tenants[ti];
+        let formed = Instant::now();
+        let n = batch.len();
+        t.stats.batch_dispatched(n);
+        let mut metas = Vec::with_capacity(n);
+        let mut imgs = Vec::with_capacity(n);
+        for req in batch {
+            metas.push((req.id, req.enqueued, req.tx));
+            imgs.push(req.img);
+        }
+        let outs = if batch_threads <= 1 {
+            let ex = execs[ti].get_or_insert_with(|| {
+                Executor::with_sel(&t.plan, t.kernel)
+            });
+            ex.execute_batch(&imgs)
+        } else {
+            execute_batch_parallel(
+                &t.plan,
+                t.kernel,
+                &imgs,
+                batch_threads,
+            )
+        };
+        match outs {
+            Ok(outs) => {
+                for ((id, enqueued, tx), logits) in
+                    metas.into_iter().zip(outs)
+                {
+                    let queue_us = formed
+                        .saturating_duration_since(enqueued)
+                        .as_micros() as u64;
+                    let total_us =
+                        enqueued.elapsed().as_micros() as u64;
+                    t.stats.complete(total_us, queue_us);
+                    let _ = tx.send(ServeResponse {
+                        id,
+                        logits,
+                        queue_us,
+                        total_us,
+                        batch: n,
+                    });
+                }
+            }
+            Err(_) => {
+                t.stats.error_batch(n);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mobile::engine::KernelKind;
+    use crate::mobile::ir::ModelIR;
+    use crate::mobile::plan::compile_plan;
+    use crate::mobile::synth;
+    use crate::serve::loadgen::request_image;
+
+    fn tiny_plan(id: &str, seed: u64) -> Arc<ExecutionPlan> {
+        let (spec, mut params) =
+            synth::vgg_style(id, 8, 4, &[4, 6], seed);
+        synth::pattern_prune(&spec, &mut params, 0.25);
+        Arc::new(
+            compile_plan(ModelIR::build(&spec, &params).unwrap(), 1)
+                .unwrap(),
+        )
+    }
+
+    #[test]
+    fn empty_gateway_is_a_config_error() {
+        match Gateway::builder().spawn() {
+            Err(ServeError::Config { msg }) => {
+                assert!(msg.contains("no tenants"));
+            }
+            _ => panic!("expected Config error"),
+        }
+    }
+
+    #[test]
+    fn duplicate_tenant_is_a_config_error() {
+        let plan = tiny_plan("gw_dup", 1);
+        let res = Gateway::builder()
+            .tenant(
+                TenantConfig::new("a"),
+                plan.clone(),
+                KernelKind::PatternScalar,
+            )
+            .tenant(TenantConfig::new("a"), plan, KernelSel::Auto)
+            .spawn();
+        assert!(matches!(res, Err(ServeError::Config { .. })));
+    }
+
+    #[test]
+    fn over_budget_plan_is_typed() {
+        let plan = tiny_plan("gw_big", 1);
+        let need = plan_bytes(&plan);
+        let res = Gateway::builder()
+            .tenant(
+                TenantConfig::new("tight").mem_budget(need - 1),
+                plan,
+                KernelKind::PatternScalar,
+            )
+            .spawn();
+        match res {
+            Err(ServeError::OverBudget {
+                tenant,
+                need: n,
+                budget,
+            }) => {
+                assert_eq!(tenant, "tight");
+                assert_eq!(n, need);
+                assert_eq!(budget, need - 1);
+            }
+            _ => panic!("expected OverBudget"),
+        }
+    }
+
+    #[test]
+    fn routes_tenants_to_their_own_plans() {
+        let plan_a = tiny_plan("gw_a", 11);
+        let plan_b = tiny_plan("gw_b", 22);
+        let gw = Gateway::builder()
+            .workers(2)
+            .max_batch(4)
+            .max_wait_us(200)
+            .tenant(
+                TenantConfig::new("alice"),
+                plan_a.clone(),
+                KernelKind::PatternScalar,
+            )
+            .tenant(
+                TenantConfig::new("bob").priority(Priority::High),
+                plan_b.clone(),
+                KernelSel::Auto,
+            )
+            .spawn()
+            .unwrap();
+        let h = gw.handle();
+        assert_eq!(h.in_dims("alice").unwrap(), plan_a.in_dims);
+        let mut direct_a =
+            Executor::new(&plan_a, KernelKind::PatternScalar);
+        let mut direct_b = Executor::auto(&plan_b);
+        for seed in 0..6u64 {
+            let img = request_image(plan_a.in_dims, seed, 0);
+            let want = direct_a.execute(&img);
+            assert_eq!(
+                h.infer("alice", img).unwrap().logits,
+                want,
+                "alice seed {seed}"
+            );
+            let img = request_image(plan_b.in_dims, 100 + seed, 0);
+            let want = direct_b.execute(&img);
+            assert_eq!(
+                h.infer("bob", img).unwrap().logits,
+                want,
+                "bob seed {seed}"
+            );
+        }
+        assert!(matches!(
+            h.infer("mallory", Fmap::zeros(1, 1)),
+            Err(ServeError::UnknownTenant { .. })
+        ));
+        assert!(matches!(
+            h.infer("alice", Fmap::zeros(1, 1)),
+            Err(ServeError::BadShape { .. })
+        ));
+        let report = gw.shutdown();
+        let a = report.tenant("alice").unwrap();
+        let b = report.tenant("bob").unwrap();
+        assert_eq!(a.report.completed, 6);
+        assert_eq!(b.report.completed, 6);
+        assert_eq!(b.priority, Priority::High);
+        assert_eq!(report.totals().1, 12);
+        assert!(report.table("gw").render().contains("alice"));
+    }
+
+    #[test]
+    fn virtual_time_admission_sheds_deterministically() {
+        let plan = tiny_plan("gw_admit", 3);
+        // 2-token burst, 1 token per virtual second
+        let mk = || {
+            Gateway::builder()
+                .workers(1)
+                .tenant(
+                    TenantConfig::new("t").admit(1.0, 2.0),
+                    plan.clone(),
+                    KernelKind::PatternScalar,
+                )
+                .spawn()
+                .unwrap()
+        };
+        let run = |gw: &Gateway| -> Vec<bool> {
+            let h = gw.handle();
+            // events at 0s,0s,0s,0s,2.5s: burst admits 2, then sheds 2,
+            // then the refill admits the late one
+            [0u64, 0, 0, 0, 2_500_000]
+                .iter()
+                .enumerate()
+                .map(|(i, &vt)| {
+                    let img =
+                        request_image(plan.in_dims, 9, i as u64);
+                    match h.submit_at("t", img, vt) {
+                        Ok(tk) => {
+                            tk.wait().unwrap();
+                            true
+                        }
+                        Err(ServeError::Shed { tenant }) => {
+                            assert_eq!(tenant, "t");
+                            false
+                        }
+                        Err(e) => panic!("unexpected {e}"),
+                    }
+                })
+                .collect()
+        };
+        let gw1 = mk();
+        let out1 = run(&gw1);
+        assert_eq!(out1, vec![true, true, false, false, true]);
+        let r1 = gw1.shutdown();
+        let gw2 = mk();
+        let out2 = run(&gw2);
+        assert_eq!(out1, out2, "admission is trace-pure");
+        let r2 = gw2.shutdown();
+        let t1 = &r1.tenant("t").unwrap().report;
+        let t2 = &r2.tenant("t").unwrap().report;
+        assert_eq!(t1.shed, 2);
+        assert_eq!(
+            t1.deterministic_counters(),
+            t2.deterministic_counters()
+        );
+    }
+
+    #[test]
+    fn full_tenant_queue_rejects_only_that_tenant() {
+        let plan = tiny_plan("gw_full", 5);
+        let gw = Gateway::builder()
+            .workers(1)
+            .max_batch(1)
+            .max_wait_us(0)
+            .tenant(
+                TenantConfig::new("small").queue_cap(1),
+                plan.clone(),
+                KernelKind::PatternScalar,
+            )
+            .tenant(
+                TenantConfig::new("roomy").queue_cap(64),
+                plan.clone(),
+                KernelKind::PatternScalar,
+            )
+            .spawn()
+            .unwrap();
+        let h = gw.handle();
+        // saturate "small" far past its 1-slot queue; with one worker
+        // draining, some submits must bounce — and "roomy" stays open
+        let mut small_rejected = 0;
+        let mut tickets = Vec::new();
+        for i in 0..64u64 {
+            match h.submit("small", request_image(plan.in_dims, 1, i))
+            {
+                Ok(t) => tickets.push(t),
+                Err(ServeError::Rejected) => small_rejected += 1,
+                Err(e) => panic!("unexpected {e}"),
+            }
+        }
+        assert!(small_rejected > 0, "tiny queue must bounce");
+        for i in 0..4u64 {
+            tickets.push(
+                h.submit("roomy", request_image(plan.in_dims, 2, i))
+                    .unwrap(),
+            );
+        }
+        let report = gw.shutdown();
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        let small = &report.tenant("small").unwrap().report;
+        let roomy = &report.tenant("roomy").unwrap().report;
+        assert_eq!(small.rejected, small_rejected);
+        assert_eq!(roomy.rejected, 0);
+        assert_eq!(roomy.completed, 4);
+        assert_eq!(
+            small.submitted, small.completed,
+            "accepted requests all drained"
+        );
+    }
+
+    #[test]
+    fn deadline_shed_drops_expired_requests() {
+        let plan = tiny_plan("gw_ddl", 7);
+        let gw = Gateway::builder()
+            .workers(1)
+            .max_batch(4)
+            .max_wait_us(0)
+            .tenant(
+                // 1µs deadline: by the time a worker forms a batch the
+                // head is always expired
+                TenantConfig::new("rushed").deadline_us(1),
+                plan.clone(),
+                KernelKind::PatternScalar,
+            )
+            .spawn()
+            .unwrap();
+        let h = gw.handle();
+        let mut tickets = Vec::new();
+        for i in 0..8u64 {
+            tickets
+                .push(h.submit("rushed", request_image(plan.in_dims, 1, i)).unwrap());
+        }
+        // give the worker time to shed/serve everything submitted
+        std::thread::sleep(Duration::from_millis(100));
+        let report = gw.shutdown();
+        let r = &report.tenant("rushed").unwrap().report;
+        assert!(r.shed_deadline > 0, "expired heads must shed");
+        assert_eq!(r.completed + r.shed_deadline, 8);
+        let canceled = tickets
+            .into_iter()
+            .map(Ticket::wait)
+            .filter(|w| {
+                matches!(w, Err(ServeError::Canceled { .. }))
+            })
+            .count() as u64;
+        assert_eq!(canceled, r.shed_deadline);
+    }
+
+    #[test]
+    fn closed_gateway_refuses_submits() {
+        let plan = tiny_plan("gw_closed", 9);
+        let gw = Gateway::builder()
+            .workers(1)
+            .tenant(
+                TenantConfig::new("t"),
+                plan.clone(),
+                KernelKind::PatternScalar,
+            )
+            .spawn()
+            .unwrap();
+        let h = gw.handle();
+        gw.shutdown();
+        assert!(matches!(
+            h.submit("t", request_image(plan.in_dims, 1, 0)),
+            Err(ServeError::Closed)
+        ));
+    }
+
+    #[test]
+    fn priority_orders_pending_dispatch() {
+        let plan = tiny_plan("gw_prio", 13);
+        let gw = Gateway::builder()
+            .workers(1)
+            .max_batch(1)
+            .max_wait_us(0)
+            .tenant(
+                TenantConfig::new("bulk").priority(Priority::Low),
+                plan.clone(),
+                KernelKind::PatternScalar,
+            )
+            .tenant(
+                TenantConfig::new("urgent").priority(Priority::High),
+                plan.clone(),
+                KernelKind::PatternScalar,
+            )
+            .spawn()
+            .unwrap();
+        let h = gw.handle();
+        // interleave submissions into both queues; dispatch order is the
+        // priority policy's business, completion totals are ours
+        let mut tickets = Vec::new();
+        for i in 0..6u64 {
+            tickets.push(
+                h.submit("bulk", request_image(plan.in_dims, 1, i))
+                    .unwrap(),
+            );
+            tickets.push(
+                h.submit("urgent", request_image(plan.in_dims, 2, i))
+                    .unwrap(),
+            );
+        }
+        let report = gw.shutdown();
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        assert_eq!(report.tenant("urgent").unwrap().report.completed, 6);
+        assert_eq!(report.tenant("bulk").unwrap().report.completed, 6);
+        assert_eq!(report.totals().1, 12);
+    }
+}

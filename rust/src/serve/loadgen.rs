@@ -1,7 +1,6 @@
-//! Seeded load generation against a [`ServeHandle`] — the measurement
-//! half of the serving tier.
+//! Seeded load generation — the measurement half of the serving tier.
 //!
-//! Two standard load models:
+//! Against a single-plan [`ServeHandle`], two standard load models:
 //!
 //! * **closed-loop** ([`LoadMode::Closed`]): `clients` synchronous client
 //!   threads, each submitting its next request only after the previous
@@ -12,10 +11,18 @@
 //!   independent of completions — the model that exposes queueing collapse
 //!   and admission-control rejections.
 //!
-//! Every request image is a pure function of `(seed, request id)` via
-//! [`request_image`] ([`Pcg32::split_stream`]), so a trace is bit-for-bit
-//! reproducible regardless of client interleaving — the property the
-//! serving determinism tests lean on.
+//! Against a multi-tenant [`GatewayHandle`], a **trace** model:
+//! [`multi_tenant_trace`] draws per-tenant Poisson arrival streams
+//! (independent [`Pcg32::split_stream`] streams, optional diurnal ramp,
+//! Zipf hot-key skew via [`skewed_qps`]) and stamps every event with a
+//! *virtual-time* microsecond timestamp; [`replay`] feeds the merged
+//! trace through [`GatewayHandle::submit_at`] in trace order, so the
+//! gateway's admission decisions are a pure function of the trace — the
+//! property the gateway determinism tests assert at 1/2/4 workers.
+//!
+//! Every request image is a pure function of `(seed, tenant, id)` via
+//! [`request_image`] / [`tenant_request_image`], so a trace is bit-for-bit
+//! reproducible regardless of client or worker interleaving.
 
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -24,9 +31,12 @@ use crate::mobile::engine::Fmap;
 use crate::mobile::plan::StepDims;
 use crate::rng::Pcg32;
 
-use super::server::{ServeHandle, SubmitError};
+use super::artifact::fnv1a64;
+use super::error::ServeError;
+use super::gateway::GatewayHandle;
+use super::server::ServeHandle;
 
-/// Load model for a run.
+/// Load model for a single-plan run.
 #[derive(Clone, Copy, Debug)]
 pub enum LoadMode {
     /// `clients` synchronous closed-loop clients
@@ -75,6 +85,18 @@ pub fn request_image(dims: StepDims, seed: u64, id: u64) -> Fmap {
         hw: dims.hw,
         data: (0..dims.elems()).map(|_| rng.uniform()).collect(),
     }
+}
+
+/// Per-tenant request stream: image `id` of `tenant` under `seed`. The
+/// tenant name is folded into the stream seed, so tenants sharing a
+/// model never share images.
+pub fn tenant_request_image(
+    dims: StepDims,
+    seed: u64,
+    tenant: &str,
+    id: u64,
+) -> Fmap {
+    request_image(dims, seed ^ fnv1a64(tenant.as_bytes()), id)
 }
 
 /// Drive `handle` with the configured load; blocks until every issued
@@ -135,10 +157,7 @@ fn run_closed(
                         Err(e) => RequestOutcome {
                             trace_id: id,
                             logits: None,
-                            rejected: matches!(
-                                e.downcast_ref::<SubmitError>(),
-                                Some(SubmitError::Rejected)
-                            ),
+                            rejected: matches!(e, ServeError::Rejected),
                         },
                     };
                     results.lock().unwrap().push(outcome);
@@ -172,7 +191,7 @@ fn run_open(
             Err(e) => outcomes.push(RequestOutcome {
                 trace_id: id,
                 logits: None,
-                rejected: matches!(e, SubmitError::Rejected),
+                rejected: matches!(e, ServeError::Rejected),
             }),
         }
         let gap_secs = gaps.exponential(1.0 / qps as f32);
@@ -195,6 +214,253 @@ fn run_open(
     outcomes
 }
 
+// ---------------------------------------------------------------------------
+// Multi-tenant traces
+// ---------------------------------------------------------------------------
+
+/// One tenant's offered load in a multi-tenant trace.
+#[derive(Clone, Debug)]
+pub struct TenantLoad {
+    pub tenant: String,
+    /// mean arrival rate in requests per *virtual* second
+    pub qps: f64,
+    /// events to draw for this tenant
+    pub requests: usize,
+}
+
+impl TenantLoad {
+    pub fn new(tenant: &str, qps: f64, requests: usize) -> Self {
+        TenantLoad {
+            tenant: tenant.to_string(),
+            qps: qps.max(1e-3),
+            requests,
+        }
+    }
+}
+
+/// Sinusoidal diurnal modulation of arrival rates: the instantaneous
+/// rate is `qps · multiplier(vt)`, cycling between `floor · qps` (the
+/// trough) and `qps` (the peak) once per `period_us` of virtual time.
+#[derive(Clone, Copy, Debug)]
+pub struct DiurnalRamp {
+    pub period_us: u64,
+    /// trough fraction of peak rate, in (0, 1]
+    pub floor: f64,
+}
+
+impl DiurnalRamp {
+    pub fn new(period_us: u64, floor: f64) -> Self {
+        DiurnalRamp {
+            period_us: period_us.max(1),
+            floor: floor.clamp(1e-3, 1.0),
+        }
+    }
+
+    /// Rate multiplier at virtual time `vt_us`, in `[floor, 1]`; starts
+    /// at the trough (`vt = 0` is "night").
+    pub fn multiplier(&self, vt_us: u64) -> f64 {
+        let phase = (vt_us % self.period_us) as f64
+            / self.period_us as f64
+            * std::f64::consts::TAU;
+        self.floor + (1.0 - self.floor) * 0.5 * (1.0 - phase.cos())
+    }
+}
+
+/// Zipf-skewed split of `total` QPS across `n` tenants (exponent `s`;
+/// `s = 0` is uniform). Hot-key skew for gateway traces: tenant 0 is the
+/// hot model.
+pub fn skewed_qps(total: f64, n: usize, s: f64) -> Vec<f64> {
+    let n = n.max(1);
+    let weights: Vec<f64> =
+        (0..n).map(|i| 1.0 / ((i + 1) as f64).powf(s)).collect();
+    let norm: f64 = weights.iter().sum();
+    weights.iter().map(|w| total * w / norm).collect()
+}
+
+/// One arrival in a merged multi-tenant trace.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// virtual-time arrival stamp, microseconds
+    pub vt_us: u64,
+    /// index into the [`TenantLoad`] slice the trace was drawn from
+    pub tenant: usize,
+    /// per-tenant request sequence number (feeds
+    /// [`tenant_request_image`])
+    pub id: u64,
+}
+
+/// Draw every tenant's Poisson arrival stream (its own
+/// [`Pcg32::split_stream`] stream, optionally diurnally modulated) and
+/// merge-sort them by `(vt_us, tenant, id)`. Pure in
+/// `(loads, ramp, seed)` — the foundation of gateway replay
+/// determinism.
+pub fn multi_tenant_trace(
+    loads: &[TenantLoad],
+    ramp: Option<DiurnalRamp>,
+    seed: u64,
+) -> Vec<TraceEvent> {
+    let mut events = Vec::with_capacity(
+        loads.iter().map(|l| l.requests).sum::<usize>(),
+    );
+    for (ti, load) in loads.iter().enumerate() {
+        let mut rng = Pcg32::split_stream(seed, ti as u64);
+        let mut vt_us = 0u64;
+        for id in 0..load.requests as u64 {
+            // thinning-free modulation: scale the mean gap by the ramp
+            // at the current virtual time
+            let rate = match ramp {
+                Some(r) => load.qps * r.multiplier(vt_us),
+                None => load.qps,
+            };
+            let gap_secs = rng.exponential(1.0) as f64 / rate.max(1e-9);
+            // strictly advancing stamps keep per-tenant virtual time
+            // monotone for the admission bucket
+            vt_us += ((gap_secs * 1e6).round() as u64).max(1);
+            events.push(TraceEvent {
+                vt_us,
+                tenant: ti,
+                id,
+            });
+        }
+    }
+    events.sort_by_key(|e| (e.vt_us, e.tenant, e.id));
+    events
+}
+
+/// Outcome of one replayed trace event.
+#[derive(Clone, Debug)]
+pub struct GwOutcome {
+    pub tenant: usize,
+    pub trace_id: u64,
+    pub vt_us: u64,
+    pub logits: Option<Vec<f32>>,
+    /// admission-control shed (deterministic)
+    pub shed: bool,
+    /// queue-full rejection (timing-dependent)
+    pub rejected: bool,
+}
+
+/// Per-tenant roll-up of a replayed trace.
+#[derive(Clone, Debug)]
+pub struct TenantCounts {
+    pub tenant: String,
+    pub issued: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub rejected: u64,
+}
+
+/// Aggregate result of a gateway trace replay.
+#[derive(Clone, Debug)]
+pub struct GatewayLoadReport {
+    /// sorted by `(tenant, trace_id)` — directly comparable across runs
+    pub outcomes: Vec<GwOutcome>,
+    /// [`TenantLoad`] order
+    pub per_tenant: Vec<TenantCounts>,
+    pub completed: u64,
+    pub shed: u64,
+    pub rejected: u64,
+    pub wall_secs: f64,
+}
+
+/// Replay a merged trace through [`GatewayHandle::submit_at`] in trace
+/// order. `pace` scales virtual to wall time: `0` replays as fast as
+/// possible (virtual time still drives admission — the deterministic
+/// mode), `1` paces arrivals in real time, `2` at double speed, etc.
+/// Blocks until every admitted request resolved.
+pub fn replay(
+    handle: &GatewayHandle,
+    loads: &[TenantLoad],
+    trace: &[TraceEvent],
+    seed: u64,
+    pace: f64,
+) -> Result<GatewayLoadReport, ServeError> {
+    let t0 = Instant::now();
+    let dims: Vec<StepDims> = loads
+        .iter()
+        .map(|l| handle.in_dims(&l.tenant))
+        .collect::<Result<_, _>>()?;
+    let mut pending = Vec::new();
+    let mut outcomes = Vec::with_capacity(trace.len());
+    for ev in trace {
+        if pace > 0.0 {
+            let target = t0
+                + Duration::from_micros(
+                    (ev.vt_us as f64 / pace) as u64,
+                );
+            let now = Instant::now();
+            if target > now {
+                std::thread::sleep(target - now);
+            }
+        }
+        let name = &loads[ev.tenant].tenant;
+        let img =
+            tenant_request_image(dims[ev.tenant], seed, name, ev.id);
+        match handle.submit_at(name, img, ev.vt_us) {
+            Ok(ticket) => pending.push((*ev, ticket)),
+            Err(ServeError::Shed { .. }) => outcomes.push(GwOutcome {
+                tenant: ev.tenant,
+                trace_id: ev.id,
+                vt_us: ev.vt_us,
+                logits: None,
+                shed: true,
+                rejected: false,
+            }),
+            Err(ServeError::Rejected) => outcomes.push(GwOutcome {
+                tenant: ev.tenant,
+                trace_id: ev.id,
+                vt_us: ev.vt_us,
+                logits: None,
+                shed: false,
+                rejected: true,
+            }),
+            Err(other) => return Err(other),
+        }
+    }
+    for (ev, ticket) in pending {
+        outcomes.push(GwOutcome {
+            tenant: ev.tenant,
+            trace_id: ev.id,
+            vt_us: ev.vt_us,
+            logits: ticket.wait().ok().map(|r| r.logits),
+            shed: false,
+            rejected: false,
+        });
+    }
+    let wall_secs = t0.elapsed().as_secs_f64();
+    outcomes.sort_by_key(|o| (o.tenant, o.trace_id));
+    let per_tenant = loads
+        .iter()
+        .enumerate()
+        .map(|(ti, l)| {
+            let mine =
+                outcomes.iter().filter(|o| o.tenant == ti);
+            let mut c = TenantCounts {
+                tenant: l.tenant.clone(),
+                issued: 0,
+                completed: 0,
+                shed: 0,
+                rejected: 0,
+            };
+            for o in mine {
+                c.issued += 1;
+                c.completed += o.logits.is_some() as u64;
+                c.shed += o.shed as u64;
+                c.rejected += o.rejected as u64;
+            }
+            c
+        })
+        .collect::<Vec<_>>();
+    Ok(GatewayLoadReport {
+        completed: per_tenant.iter().map(|c| c.completed).sum(),
+        shed: per_tenant.iter().map(|c| c.shed).sum(),
+        rejected: per_tenant.iter().map(|c| c.rejected).sum(),
+        outcomes,
+        per_tenant,
+        wall_secs,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -210,5 +476,95 @@ mod tests {
         assert_ne!(a.data, c.data, "distinct ids must differ");
         let d = request_image(dims, 10, 4);
         assert_ne!(a.data, d.data, "distinct seeds must differ");
+    }
+
+    #[test]
+    fn tenant_images_are_pure_and_tenant_distinct() {
+        let dims = StepDims { c: 3, hw: 8 };
+        let a = tenant_request_image(dims, 9, "alice", 4);
+        let b = tenant_request_image(dims, 9, "alice", 4);
+        assert_eq!(a.data, b.data);
+        let c = tenant_request_image(dims, 9, "bob", 4);
+        assert_ne!(
+            a.data, c.data,
+            "tenants sharing a model must not share images"
+        );
+    }
+
+    #[test]
+    fn trace_is_deterministic_sorted_and_complete() {
+        let loads = vec![
+            TenantLoad::new("hot", 100.0, 40),
+            TenantLoad::new("warm", 10.0, 20),
+        ];
+        let ramp = Some(DiurnalRamp::new(2_000_000, 0.25));
+        let t1 = multi_tenant_trace(&loads, ramp, 42);
+        let t2 = multi_tenant_trace(&loads, ramp, 42);
+        assert_eq!(t1, t2, "same seed => identical trace");
+        assert_eq!(t1.len(), 60);
+        assert!(t1.windows(2).all(|w| (
+            w[0].vt_us,
+            w[0].tenant,
+            w[0].id
+        ) <= (w[1].vt_us, w[1].tenant, w[1].id)));
+        // per-tenant ids are each a complete 0..n sequence
+        for (ti, load) in loads.iter().enumerate() {
+            let mut ids: Vec<u64> = t1
+                .iter()
+                .filter(|e| e.tenant == ti)
+                .map(|e| e.id)
+                .collect();
+            ids.sort_unstable();
+            let want: Vec<u64> = (0..load.requests as u64).collect();
+            assert_eq!(ids, want);
+        }
+        let t3 = multi_tenant_trace(&loads, ramp, 43);
+        assert_ne!(t1, t3, "distinct seeds must differ");
+        // the hot tenant's arrivals are denser (larger qps => smaller
+        // mean gap => earlier last stamp for equal counts scaled)
+        let last_hot = t1
+            .iter()
+            .filter(|e| e.tenant == 0)
+            .map(|e| e.vt_us)
+            .max()
+            .unwrap();
+        let last_warm = t1
+            .iter()
+            .filter(|e| e.tenant == 1)
+            .map(|e| e.vt_us)
+            .max()
+            .unwrap();
+        // 40 reqs at ~100qps ≪ 20 reqs at ~10qps in virtual time
+        assert!(last_hot < last_warm);
+    }
+
+    #[test]
+    fn diurnal_ramp_cycles_between_floor_and_peak() {
+        let r = DiurnalRamp::new(1_000_000, 0.2);
+        assert!((r.multiplier(0) - 0.2).abs() < 1e-9, "trough at 0");
+        assert!(
+            (r.multiplier(500_000) - 1.0).abs() < 1e-9,
+            "peak at half period"
+        );
+        assert!(
+            (r.multiplier(1_000_000) - 0.2).abs() < 1e-9,
+            "periodic"
+        );
+        for vt in (0..2_000_000).step_by(50_000) {
+            let m = r.multiplier(vt);
+            assert!((0.2..=1.0).contains(&m));
+        }
+    }
+
+    #[test]
+    fn skewed_qps_is_zipf_and_conserves_total() {
+        let q = skewed_qps(100.0, 4, 1.0);
+        assert_eq!(q.len(), 4);
+        assert!((q.iter().sum::<f64>() - 100.0).abs() < 1e-9);
+        assert!(q[0] > q[1] && q[1] > q[2] && q[2] > q[3]);
+        // harmonic weights: q0/q1 == 2
+        assert!((q[0] / q[1] - 2.0).abs() < 1e-9);
+        let flat = skewed_qps(100.0, 4, 0.0);
+        assert!(flat.iter().all(|&x| (x - 25.0).abs() < 1e-9));
     }
 }

@@ -1,10 +1,11 @@
-//! Serving tier: plan artifacts, a compiled-plan registry, and a
-//! dynamic-batching inference server (DESIGN.md §11).
+//! Serving tier: plan artifacts, compiled-plan registries, a
+//! dynamic-batching server, and a multi-tenant gateway (DESIGN.md
+//! §11/§13).
 //!
 //! The paper's end state is that users "directly benefit from compressed
 //! models" without re-running the pruning pipeline — i.e. pruned models
-//! are *deployed and served*. This subsystem is that missing tier on top
-//! of the mobile plan/executor split:
+//! are *deployed and served*. This subsystem is that tier on top of the
+//! mobile plan/executor split:
 //!
 //! * [`artifact`] — versioned, checksummed binary serialization of an
 //!   [`ExecutionPlan`](crate::mobile::plan::ExecutionPlan), so the
@@ -12,29 +13,39 @@
 //!   (strict round-trip guarantee: loaded plans produce bit-identical
 //!   inference outputs);
 //! * [`registry`] — a concurrent `(model, scheme, rate, threads)` →
-//!   plan cache with single-flight misses and LRU eviction;
-//! * [`batcher`] — bounded request queue with explicit admission control
-//!   plus the micro-batch formation state machine (`max_batch` /
-//!   `max_wait_us`);
-//! * [`server`] — the multi-worker request loop over std
-//!   threads/channels (no async runtime), routing per-request responses
-//!   and folding latency/batch metrics into [`stats`];
-//! * [`loadgen`] — seeded open/closed-loop load generation for benches,
-//!   tests, and the `repro serve` CLI;
+//!   plan cache with single-flight misses, LRU + byte-budget eviction,
+//!   and per-tenant shards ([`ShardedRegistry`]);
+//! * [`server`] — a single-plan multi-worker request loop over std
+//!   threads/channels (no async runtime), built via [`Server::builder`],
+//!   with dynamic micro-batching and explicit queue-full backpressure;
+//! * [`gateway`] — many `(model, scheme, rate, kernel)` tenants
+//!   multiplexed over one worker pool: per-tenant bounded queues,
+//!   priority classes, virtual-time admission control, deadline
+//!   shedding, and per-tenant reports rolled into a gateway report;
+//! * [`loadgen`] — seeded open/closed-loop and multi-tenant trace load
+//!   generation for benches, tests, and the `repro serve` CLI;
 //! * [`stats`] — latency percentiles, batch histograms, and the shared
 //!   bench harness.
 //!
-//! Everything here is artifact-free and PJRT-free: the CLI serves
+//! Every fallible surface here reports the one public [`ServeError`]
+//! enum. Everything is artifact-free and PJRT-free: the CLI serves
 //! synthetic specs (`mobile::synth`) end to end on a bare machine.
 
 pub mod artifact;
-pub mod batcher;
+pub(crate) mod batcher;
+pub mod error;
+pub mod gateway;
 pub mod loadgen;
 pub mod registry;
 pub mod server;
 pub mod stats;
 
 pub use artifact::{load as load_plan, save as save_plan};
-pub use registry::{PlanKey, PlanRegistry};
-pub use server::{ServeHandle, Server, SubmitError};
+pub use error::ServeError;
+pub use gateway::{
+    Gateway, GatewayHandle, GatewayReport, Priority, TenantConfig,
+    TenantReport,
+};
+pub use registry::{PlanKey, PlanRegistry, ShardedRegistry};
+pub use server::{ServeHandle, Server, ServerBuilder};
 pub use stats::{ServeReport, ServeStats};

@@ -1,5 +1,5 @@
-//! Concurrent compiled-plan cache with single-flight misses and LRU
-//! eviction.
+//! Concurrent compiled-plan caches with single-flight misses, LRU + byte
+//! -budget eviction, and per-tenant sharding.
 //!
 //! A deployment fleet serves many `(model, scheme, rate, threads)`
 //! configurations; compiling an [`ExecutionPlan`] is the expensive step
@@ -12,19 +12,37 @@
 //! * **hit**: a cached `Arc<ExecutionPlan>` is returned without building;
 //! * **miss**: exactly one caller runs the closure (single-flight); every
 //!   concurrent caller for the same key blocks on a condvar and receives
-//!   the same `Arc`;
-//! * **failure**: the builder's error propagates to it alone, the
-//!   in-flight marker is removed, and blocked callers retry (the next one
-//!   becomes the builder);
-//! * **eviction**: beyond `capacity` ready plans, the least-recently-used
-//!   entry is dropped (in-flight builds are never evicted).
+//!   the same `Arc` (counted as **coalesced**);
+//! * every lookup resolves as *exactly one* of hit / miss / coalesced, so
+//!   `hits + misses + coalesced == lookups` holds at any concurrency
+//!   (the churn test hammers this invariant);
+//! * **failure**: the builder's error surfaces as a typed
+//!   [`ServeError::Build`] to it alone, the in-flight marker is removed,
+//!   and blocked callers retry (the next one becomes the builder);
+//! * **eviction**: beyond `capacity` ready plans — or beyond the
+//!   registry's byte budget, measured by [`plan_bytes`] — the
+//!   least-recently-used entry is dropped (in-flight builds are never
+//!   evicted, and at least one ready plan always survives).
+//!
+//! [`ShardedRegistry`] gives every gateway tenant its own
+//! [`PlanRegistry`] shard with an independent capacity + memory budget,
+//! so one tenant churning through variants can never evict another
+//! tenant's plans.
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Condvar, Mutex};
 
-use anyhow::Result;
-
 use crate::mobile::plan::ExecutionPlan;
+
+use super::error::ServeError;
+
+/// Resident footprint the registry charges for one plan: packed payload
+/// taps + packed kernel headers + the per-executor arena the plan sizes.
+pub fn plan_bytes(plan: &ExecutionPlan) -> u64 {
+    (plan.stats.payload_bytes
+        + plan.stats.header_bytes
+        + plan.stats.arena_bytes) as u64
+}
 
 /// Cache key for one servable configuration. `rate` is quantized to
 /// milli-units so the key is `Eq`/`Ord` without float comparisons.
@@ -83,7 +101,11 @@ impl std::fmt::Display for PlanKey {
 }
 
 enum Slot {
-    Ready { plan: Arc<ExecutionPlan>, last_used: u64 },
+    Ready {
+        plan: Arc<ExecutionPlan>,
+        last_used: u64,
+        bytes: u64,
+    },
     Building,
 }
 
@@ -107,24 +129,52 @@ impl Drop for BuildGuard<'_> {
 struct Inner {
     slots: BTreeMap<PlanKey, Slot>,
     tick: u64,
+    resident_bytes: u64,
     hits: u64,
     misses: u64,
     coalesced: u64,
     evictions: u64,
 }
 
-/// Point-in-time registry counters.
+/// Point-in-time registry counters. `hits + misses + coalesced` always
+/// equals the number of [`PlanRegistry::get_or_build`] calls that have
+/// returned.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct RegistryStats {
     pub ready: usize,
     pub building: usize,
     pub capacity: usize,
+    /// resident plan footprint, bytes ([`plan_bytes`] summed)
+    pub resident_bytes: u64,
+    /// byte budget (`u64::MAX` = unbounded)
+    pub byte_budget: u64,
     pub hits: u64,
     /// builds started (one per single-flight miss)
     pub misses: u64,
-    /// callers that waited on someone else's in-flight build
+    /// callers that waited on someone else's in-flight build and received
+    /// its plan
     pub coalesced: u64,
     pub evictions: u64,
+}
+
+impl RegistryStats {
+    /// Fold another shard's counters into this one (capacity/budget sum;
+    /// `ready`/`building` sum; counters sum).
+    pub fn absorb(&mut self, other: &RegistryStats) {
+        self.ready += other.ready;
+        self.building += other.building;
+        self.capacity += other.capacity;
+        self.resident_bytes += other.resident_bytes;
+        self.byte_budget = self.byte_budget.saturating_add(other.byte_budget);
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.coalesced += other.coalesced;
+        self.evictions += other.evictions;
+    }
+
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses + self.coalesced
+    }
 }
 
 /// Concurrent `(model, scheme, rate, threads) -> Arc<ExecutionPlan>`
@@ -133,35 +183,45 @@ pub struct PlanRegistry {
     inner: Mutex<Inner>,
     ready_cv: Condvar,
     capacity: usize,
+    byte_budget: u64,
 }
 
 impl PlanRegistry {
-    /// `capacity` bounds the number of *ready* plans kept resident.
+    /// `capacity` bounds the number of *ready* plans kept resident; the
+    /// byte footprint is unbounded.
     pub fn new(capacity: usize) -> Self {
+        Self::with_byte_budget(capacity, u64::MAX)
+    }
+
+    /// Bound both the ready-plan count and their byte footprint
+    /// ([`plan_bytes`] summed); whichever limit is exceeded first evicts
+    /// LRU-wise. A single plan larger than the budget still resides (the
+    /// registry never evicts below one plan) — gateways that need a hard
+    /// refusal check [`plan_bytes`] against the budget at spawn.
+    pub fn with_byte_budget(capacity: usize, byte_budget: u64) -> Self {
         PlanRegistry {
             inner: Mutex::new(Inner::default()),
             ready_cv: Condvar::new(),
             capacity: capacity.max(1),
+            byte_budget: byte_budget.max(1),
         }
     }
 
     /// Fetch `key`, running `build` at most once across all concurrent
-    /// callers when it is absent.
+    /// callers when it is absent. Build failures come back as
+    /// [`ServeError::Build`] carrying the key and the underlying message.
     pub fn get_or_build(
         &self,
         key: &PlanKey,
-        build: impl FnOnce() -> Result<ExecutionPlan>,
-    ) -> Result<Arc<ExecutionPlan>> {
+        build: impl FnOnce() -> Result<ExecutionPlan, ServeError>,
+    ) -> Result<Arc<ExecutionPlan>, ServeError> {
         let mut g = self.inner.lock().unwrap();
         let mut waited = false;
         loop {
             let cached = match g.slots.get(key) {
                 Some(Slot::Ready { plan, .. }) => Some(plan.clone()),
                 Some(Slot::Building) => {
-                    if !waited {
-                        waited = true;
-                        g.coalesced += 1;
-                    }
+                    waited = true;
                     g = self.ready_cv.wait(g).unwrap();
                     continue;
                 }
@@ -176,7 +236,14 @@ impl PlanRegistry {
                     {
                         *last_used = tick;
                     }
-                    g.hits += 1;
+                    // exactly one of hit/miss/coalesced per lookup: a
+                    // caller that waited on someone else's build is
+                    // coalesced, never a hit
+                    if waited {
+                        g.coalesced += 1;
+                    } else {
+                        g.hits += 1;
+                    }
                     return Ok(plan);
                 }
                 None => {
@@ -196,7 +263,20 @@ impl PlanRegistry {
             key,
             armed: true,
         };
-        let plan = Arc::new(build()?);
+        let plan = match build() {
+            Ok(plan) => Arc::new(plan),
+            Err(err) => {
+                // guard drops armed: marker cleared, waiters retry
+                return Err(match err {
+                    b @ ServeError::Build { .. } => b,
+                    other => ServeError::Build {
+                        key: key.to_string(),
+                        msg: other.to_string(),
+                    },
+                });
+            }
+        };
+        let bytes = plan_bytes(&plan);
         let mut g = self.inner.lock().unwrap();
         g.tick += 1;
         let tick = g.tick;
@@ -205,9 +285,11 @@ impl PlanRegistry {
             Slot::Ready {
                 plan: plan.clone(),
                 last_used: tick,
+                bytes,
             },
         );
-        self.evict_lru(&mut g);
+        g.resident_bytes += bytes;
+        self.evict_over_limits(&mut g);
         drop(g);
         guard.armed = false;
         self.ready_cv.notify_all();
@@ -223,14 +305,17 @@ impl PlanRegistry {
         self.ready_cv.notify_all();
     }
 
-    fn evict_lru(&self, g: &mut Inner) {
+    fn evict_over_limits(&self, g: &mut Inner) {
         loop {
             let ready = g
                 .slots
-                .iter()
-                .filter(|(_, s)| matches!(s, Slot::Ready { .. }))
+                .values()
+                .filter(|s| matches!(s, Slot::Ready { .. }))
                 .count();
-            if ready <= self.capacity {
+            let over_count = ready > self.capacity;
+            let over_bytes =
+                g.resident_bytes > self.byte_budget && ready > 1;
+            if !over_count && !over_bytes {
                 return;
             }
             let victim = g
@@ -246,7 +331,11 @@ impl PlanRegistry {
                 .map(|(_, k)| k);
             match victim {
                 Some(k) => {
-                    g.slots.remove(&k);
+                    if let Some(Slot::Ready { bytes, .. }) =
+                        g.slots.remove(&k)
+                    {
+                        g.resident_bytes -= bytes;
+                    }
                     g.evictions += 1;
                 }
                 None => return,
@@ -259,7 +348,10 @@ impl PlanRegistry {
     pub fn evict(&self, key: &PlanKey) -> bool {
         let mut g = self.inner.lock().unwrap();
         if matches!(g.slots.get(key), Some(Slot::Ready { .. })) {
-            g.slots.remove(key);
+            if let Some(Slot::Ready { bytes, .. }) = g.slots.remove(key)
+            {
+                g.resident_bytes -= bytes;
+            }
             g.evictions += 1;
             true
         } else {
@@ -278,11 +370,99 @@ impl PlanRegistry {
             ready,
             building: g.slots.len() - ready,
             capacity: self.capacity,
+            resident_bytes: g.resident_bytes,
+            byte_budget: self.byte_budget,
             hits: g.hits,
             misses: g.misses,
             coalesced: g.coalesced,
             evictions: g.evictions,
         }
+    }
+}
+
+/// Per-tenant plan shards: each tenant gets its own [`PlanRegistry`]
+/// (independent capacity + byte budget), so tenants cannot evict each
+/// other's plans and registry contention splits per tenant. Shards are
+/// registered up front (gateway build time); lookups on unknown tenants
+/// fail typed.
+pub struct ShardedRegistry {
+    shards: BTreeMap<String, PlanRegistry>,
+}
+
+impl Default for ShardedRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ShardedRegistry {
+    pub fn new() -> Self {
+        ShardedRegistry {
+            shards: BTreeMap::new(),
+        }
+    }
+
+    /// Register a tenant shard. Duplicate names are a config error.
+    pub fn add_tenant(
+        &mut self,
+        tenant: &str,
+        capacity: usize,
+        byte_budget: u64,
+    ) -> Result<(), ServeError> {
+        if self.shards.contains_key(tenant) {
+            return Err(ServeError::Config {
+                msg: format!("duplicate tenant {tenant:?}"),
+            });
+        }
+        self.shards.insert(
+            tenant.to_string(),
+            PlanRegistry::with_byte_budget(capacity, byte_budget),
+        );
+        Ok(())
+    }
+
+    pub fn tenants(&self) -> impl Iterator<Item = &str> {
+        self.shards.keys().map(String::as_str)
+    }
+
+    /// A tenant's own shard (typed [`ServeError::UnknownTenant`] when
+    /// absent).
+    pub fn shard(
+        &self,
+        tenant: &str,
+    ) -> Result<&PlanRegistry, ServeError> {
+        self.shards.get(tenant).ok_or_else(|| {
+            ServeError::UnknownTenant {
+                tenant: tenant.to_string(),
+            }
+        })
+    }
+
+    /// [`PlanRegistry::get_or_build`] on the tenant's shard.
+    pub fn get_or_build(
+        &self,
+        tenant: &str,
+        key: &PlanKey,
+        build: impl FnOnce() -> Result<ExecutionPlan, ServeError>,
+    ) -> Result<Arc<ExecutionPlan>, ServeError> {
+        self.shard(tenant)?.get_or_build(key, build)
+    }
+
+    /// Per-tenant counters in deterministic (name) order.
+    pub fn stats(&self) -> Vec<(String, RegistryStats)> {
+        self.shards
+            .iter()
+            .map(|(name, reg)| (name.clone(), reg.stats()))
+            .collect()
+    }
+
+    /// All shards folded into one summary.
+    pub fn total(&self) -> RegistryStats {
+        let mut total = RegistryStats::default();
+        for reg in self.shards.values() {
+            total.absorb(&reg.stats());
+        }
+        total
     }
 }
 
@@ -294,11 +474,12 @@ mod tests {
     use crate::mobile::synth;
     use std::sync::atomic::{AtomicUsize, Ordering};
 
-    fn build_plan(seed: u64) -> Result<ExecutionPlan> {
+    fn build_plan(seed: u64) -> Result<ExecutionPlan, ServeError> {
         let (spec, mut params) =
             synth::vgg_style("reg_vgg", 8, 4, &[4], seed);
         synth::pattern_prune(&spec, &mut params, 0.25);
-        compile_plan(ModelIR::build(&spec, &params)?, 1)
+        let ir = ModelIR::build(&spec, &params).expect("ir");
+        Ok(compile_plan(ir, 1).expect("compile"))
     }
 
     #[test]
@@ -348,6 +529,8 @@ mod tests {
         assert_eq!(builds.load(Ordering::SeqCst), 1);
         let s = reg.stats();
         assert_eq!((s.hits, s.misses, s.ready), (1, 1, 1));
+        assert_eq!(s.resident_bytes, plan_bytes(&a));
+        assert_eq!(s.lookups(), 2);
     }
 
     #[test]
@@ -380,22 +563,40 @@ mod tests {
         assert!(plans.iter().all(|p| Arc::ptr_eq(p, &plans[0])));
         let s = reg.stats();
         assert_eq!(s.misses, 1, "exactly one build started");
-        assert_eq!(s.hits, 7, "every non-builder resolved to a hit");
+        // each lookup resolves as exactly one of hit/miss/coalesced; the
+        // non-builders waited on the in-flight build, so they are
+        // coalesced, not hits (threads that never saw the Building slot
+        // land in hits instead — either way the sum is exact)
+        assert_eq!(s.lookups(), 8);
+        assert_eq!(s.hits + s.coalesced, 7);
     }
 
     #[test]
-    fn failed_build_propagates_and_allows_retry() {
+    fn failed_build_is_typed_and_allows_retry() {
         let reg = PlanRegistry::new(4);
         let key = PlanKey::new("m", "pattern", 8.0, 1);
         let err = reg
-            .get_or_build(&key, || anyhow::bail!("synthetic build failure"))
+            .get_or_build(&key, || {
+                Err(ServeError::Config {
+                    msg: "synthetic build failure".into(),
+                })
+            })
             .unwrap_err();
+        match &err {
+            ServeError::Build { key: k, msg } => {
+                assert!(k.contains("pattern"));
+                assert!(msg.contains("synthetic"));
+            }
+            other => panic!("expected Build, got {other:?}"),
+        }
         assert!(err.to_string().contains("synthetic"));
         assert_eq!(reg.stats().ready, 0);
         assert_eq!(reg.stats().building, 0);
         // the key is buildable again afterwards
         let p = reg.get_or_build(&key, || build_plan(1)).unwrap();
         assert_eq!(p.threads, 1);
+        // the failed lookup still counted as the miss it was
+        assert_eq!(reg.stats().lookups(), 2);
     }
 
     #[test]
@@ -447,12 +648,92 @@ mod tests {
     }
 
     #[test]
-    fn explicit_evict() {
-        let reg = PlanRegistry::new(4);
-        let key = PlanKey::new("m", "pattern", 4.0, 1);
-        reg.get_or_build(&key, || build_plan(1)).unwrap();
-        assert!(reg.evict(&key));
-        assert!(!reg.evict(&key));
-        assert_eq!(reg.stats().ready, 0);
+    fn byte_budget_evicts_lru() {
+        let probe = build_plan(1).unwrap();
+        let one = plan_bytes(&probe);
+        assert!(one > 0);
+        // budget fits exactly one plan (all builds share a shape): the
+        // second insert pushes the first out even though capacity is 8
+        let reg = PlanRegistry::with_byte_budget(8, one);
+        let k1 = PlanKey::new("m1", "pattern", 8.0, 1);
+        let k2 = PlanKey::new("m2", "pattern", 8.0, 1);
+        reg.get_or_build(&k1, || build_plan(1)).unwrap();
+        assert_eq!(reg.stats().resident_bytes, one);
+        reg.get_or_build(&k2, || build_plan(2)).unwrap();
+        let s = reg.stats();
+        assert_eq!(s.ready, 1, "budget holds one plan");
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.resident_bytes, one);
+        // bookkeeping stays exact through explicit eviction too
+        assert!(reg.evict(&k2));
+        assert_eq!(reg.stats().resident_bytes, 0);
+    }
+
+    #[test]
+    fn sharded_registry_isolates_tenants() {
+        let mut sharded = ShardedRegistry::new();
+        sharded.add_tenant("alice", 1, u64::MAX).unwrap();
+        sharded.add_tenant("bob", 4, u64::MAX).unwrap();
+        assert!(matches!(
+            sharded.add_tenant("alice", 1, u64::MAX),
+            Err(ServeError::Config { .. })
+        ));
+        let k1 = PlanKey::new("m1", "pattern", 8.0, 1);
+        let k2 = PlanKey::new("m2", "pattern", 8.0, 1);
+        // alice churns through two keys at capacity 1...
+        sharded.get_or_build("alice", &k1, || build_plan(1)).unwrap();
+        sharded.get_or_build("alice", &k2, || build_plan(2)).unwrap();
+        // ...bob's shard is untouched by alice's eviction
+        sharded.get_or_build("bob", &k1, || build_plan(1)).unwrap();
+        let stats = sharded.stats();
+        assert_eq!(stats.len(), 2);
+        let alice = &stats[0].1;
+        let bob = &stats[1].1;
+        assert_eq!((alice.ready, alice.evictions), (1, 1));
+        assert_eq!((bob.ready, bob.evictions), (1, 0));
+        let total = sharded.total();
+        assert_eq!(total.ready, 2);
+        assert_eq!(total.misses, 3);
+        assert!(matches!(
+            sharded.get_or_build("mallory", &k1, || build_plan(1)),
+            Err(ServeError::UnknownTenant { .. })
+        ));
+    }
+
+    #[test]
+    fn eviction_churn_keeps_counters_consistent() {
+        // N threads hammer more keys than capacity: the single-flight
+        // path must never deadlock, and every lookup must resolve as
+        // exactly one of hit/miss/coalesced
+        const THREADS: usize = 8;
+        const ITERS: usize = 24;
+        let reg = PlanRegistry::new(2);
+        let keys: Vec<PlanKey> = (0..6)
+            .map(|i| PlanKey::new(&format!("m{i}"), "pattern", 8.0, 1))
+            .collect();
+        std::thread::scope(|s| {
+            for t in 0..THREADS {
+                let reg = &reg;
+                let keys = &keys;
+                s.spawn(move || {
+                    for i in 0..ITERS {
+                        // deterministic per-thread walk over the keys,
+                        // skewed so threads collide on hot keys
+                        let k = &keys[(t + i * (1 + t % 3)) % keys.len()];
+                        reg.get_or_build(k, || build_plan(7)).unwrap();
+                    }
+                });
+            }
+        });
+        let s = reg.stats();
+        assert_eq!(
+            s.lookups(),
+            (THREADS * ITERS) as u64,
+            "hits + misses + coalesced must equal lookups \
+             (got {s:?})"
+        );
+        assert_eq!(s.building, 0, "no wedged in-flight markers");
+        assert!(s.ready <= 2, "capacity respected under churn");
+        assert!(s.evictions > 0, "churn actually evicted");
     }
 }

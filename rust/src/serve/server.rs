@@ -1,16 +1,17 @@
 //! In-process multi-worker inference server with dynamic micro-batching.
 //!
-//! [`Server::start`] spawns `workers` std threads over one shared
-//! [`BoundedQueue`]; each worker owns an [`Executor`] (arena allocated
-//! once) and loops: form a micro-batch via the
-//! [`batcher`](crate::serve::batcher) state machine (up to
-//! `max_batch`, at most `max_wait_us` past the first request), execute it,
-//! route each response back through its request's own channel. No async
-//! runtime — the whole serving tier is std threads + channels, matching
-//! the rest of the crate.
+//! Construction is builder-style: [`Server::builder`] takes the plan,
+//! knobs are chained (`.workers(n).max_batch(b).max_wait_us(w)
+//! .kernel(sel)`), and [`ServerBuilder::spawn`] starts the worker pool.
+//! Each worker owns an [`Executor`] (arena allocated once) and loops:
+//! form a micro-batch via the batcher state machine (up to `max_batch`,
+//! at most `max_wait_us` past the first request), execute it, route each
+//! response back through its request's own channel. No async runtime —
+//! the whole serving tier is std threads + channels, matching the rest
+//! of the crate.
 //!
 //! Admission control is explicit: the queue is bounded at `queue_cap` and
-//! a full queue rejects with [`SubmitError::Rejected`] instead of
+//! a full queue rejects with [`ServeError::Rejected`] instead of
 //! buffering without bound (the load generator counts these). Per-model
 //! latency/throughput stats (p50/p95/p99, batch-size histogram) accumulate
 //! in [`ServeStats`] and surface through
@@ -24,8 +25,6 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
-
 use crate::config::ServeConfig;
 use crate::mobile::engine::{
     execute_batch_parallel, Executor, Fmap, KernelSel,
@@ -33,6 +32,7 @@ use crate::mobile::engine::{
 use crate::mobile::plan::{ExecutionPlan, StepDims};
 
 use super::batcher::{BatchPolicy, BoundedQueue, PushError};
+use super::error::ServeError;
 use super::stats::{ServeReport, ServeStats};
 
 /// One queued inference request: the image plus everything needed to
@@ -57,45 +57,6 @@ pub struct ServeResponse {
     pub batch: usize,
 }
 
-/// Why a submit was refused (before any work happened).
-#[derive(Debug, PartialEq, Eq)]
-pub enum SubmitError {
-    /// bounded queue at capacity — explicit backpressure, try again later
-    Rejected,
-    /// image dims do not match the plan input
-    BadShape {
-        got: (usize, usize),
-        want: (usize, usize),
-    },
-    /// image buffer length disagrees with its own dims (`Fmap` fields
-    /// are pub) — caught here so it can never panic a worker
-    BadLength { got: usize, want: usize },
-    /// the server is shutting down
-    Closed,
-}
-
-impl std::fmt::Display for SubmitError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            SubmitError::Rejected => {
-                write!(f, "request rejected: queue at capacity")
-            }
-            SubmitError::BadShape { got, want } => write!(
-                f,
-                "image ({}, {}hw) does not match plan input ({}, {}hw)",
-                got.0, got.1, want.0, want.1
-            ),
-            SubmitError::BadLength { got, want } => write!(
-                f,
-                "image buffer holds {got} elems, plan input needs {want}"
-            ),
-            SubmitError::Closed => write!(f, "server is shutting down"),
-        }
-    }
-}
-
-impl std::error::Error for SubmitError {}
-
 /// Claim on an in-flight request; [`Ticket::wait`] blocks for the
 /// response.
 pub struct Ticket {
@@ -104,13 +65,43 @@ pub struct Ticket {
 }
 
 impl Ticket {
-    /// Block until the response arrives. Errs if the request's batch
-    /// failed or the server dropped it during shutdown.
-    pub fn wait(self) -> Result<ServeResponse> {
-        self.rx.recv().map_err(|_| {
-            anyhow!("request {} canceled before a response", self.id)
-        })
+    pub(crate) fn new(
+        id: u64,
+        rx: mpsc::Receiver<ServeResponse>,
+    ) -> Self {
+        Ticket { id, rx }
     }
+
+    /// Block until the response arrives. Errs with
+    /// [`ServeError::Canceled`] if the request's batch failed or the
+    /// server dropped it during shutdown.
+    pub fn wait(self) -> Result<ServeResponse, ServeError> {
+        self.rx
+            .recv()
+            .map_err(|_| ServeError::Canceled { id: self.id })
+    }
+}
+
+/// Validate an image against a plan's input dims — the shared submit-time
+/// guard for the server and the gateway (a bad buffer must never reach a
+/// worker).
+pub(crate) fn check_image(
+    img: &Fmap,
+    want: StepDims,
+) -> Result<(), ServeError> {
+    if img.c != want.c || img.hw != want.hw {
+        return Err(ServeError::BadShape {
+            got: (img.c, img.hw),
+            want: (want.c, want.hw),
+        });
+    }
+    if img.data.len() != want.elems() {
+        return Err(ServeError::BadLength {
+            got: img.data.len(),
+            want: want.elems(),
+        });
+    }
+    Ok(())
 }
 
 struct Shared {
@@ -128,21 +119,9 @@ pub struct ServeHandle {
 
 impl ServeHandle {
     /// Enqueue one image; returns a [`Ticket`] or an explicit
-    /// [`SubmitError`] (shape mismatch / backpressure / shutdown).
-    pub fn submit(&self, img: Fmap) -> Result<Ticket, SubmitError> {
-        let want = self.shared.in_dims;
-        if img.c != want.c || img.hw != want.hw {
-            return Err(SubmitError::BadShape {
-                got: (img.c, img.hw),
-                want: (want.c, want.hw),
-            });
-        }
-        if img.data.len() != want.elems() {
-            return Err(SubmitError::BadLength {
-                got: img.data.len(),
-                want: want.elems(),
-            });
-        }
+    /// [`ServeError`] (shape mismatch / backpressure / shutdown).
+    pub fn submit(&self, img: Fmap) -> Result<Ticket, ServeError> {
+        check_image(&img, self.shared.in_dims)?;
         let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
         let req = ServeRequest {
@@ -156,20 +135,20 @@ impl ServeHandle {
         // never show completed > submitted
         self.shared.stats.submit();
         match self.shared.queue.push(req) {
-            Ok(_) => Ok(Ticket { id, rx }),
+            Ok(_) => Ok(Ticket::new(id, rx)),
             Err(PushError::Full(_)) => {
                 self.shared.stats.reject();
-                Err(SubmitError::Rejected)
+                Err(ServeError::Rejected)
             }
             Err(PushError::Closed(_)) => {
                 self.shared.stats.unsubmit();
-                Err(SubmitError::Closed)
+                Err(ServeError::Closed)
             }
         }
     }
 
     /// Submit and block for the response (closed-loop client path).
-    pub fn infer(&self, img: Fmap) -> Result<ServeResponse> {
+    pub fn infer(&self, img: Fmap) -> Result<ServeResponse, ServeError> {
         let ticket = self.submit(img)?;
         ticket.wait()
     }
@@ -184,29 +163,82 @@ impl ServeHandle {
     }
 }
 
-/// The serving engine: owns the worker threads; dropped via
-/// [`Server::shutdown`] for an orderly drain + final report.
-pub struct Server {
-    shared: Arc<Shared>,
-    workers: Vec<std::thread::JoinHandle<()>>,
-    started: Instant,
+/// Builder for a [`Server`] — replaces the old positional
+/// `Server::start(plan, kernel, cfg)` signature, so call sites name the
+/// knobs they change and inherit sane defaults for the rest:
+///
+/// ```ignore
+/// let server = Server::builder(plan)
+///     .workers(2)
+///     .max_batch(8)
+///     .max_wait_us(500)
+///     .kernel(KernelSel::Auto)
+///     .spawn();
+/// ```
+///
+/// Defaults come from [`ServeConfig::default`]; [`ServerBuilder::config`]
+/// bulk-loads a preset before individual overrides. The gateway's
+/// [`GatewayBuilder`](super::gateway::GatewayBuilder) follows the same
+/// shape.
+#[derive(Clone)]
+pub struct ServerBuilder {
+    plan: Arc<ExecutionPlan>,
+    kernel: KernelSel,
+    cfg: ServeConfig,
 }
 
-impl Server {
-    /// Spawn the worker pool over `plan`. The plan is shared read-only
-    /// (`Arc`); each worker builds its own executor + arena once.
-    ///
-    /// `kernel` takes a [`KernelKind`](crate::mobile::engine::KernelKind)
-    /// (uniform across layers) or a [`KernelSel`] — pass
-    /// [`KernelSel::Auto`] to dispatch each layer through the kernel
-    /// choice baked into the plan (the autotuner's winners on a tuned
-    /// plan).
-    pub fn start(
-        plan: Arc<ExecutionPlan>,
-        kernel: impl Into<KernelSel>,
-        cfg: &ServeConfig,
-    ) -> Server {
-        let kernel = kernel.into();
+impl ServerBuilder {
+    /// Bulk-load every knob from a [`ServeConfig`] (individual setters
+    /// chained after this still override).
+    pub fn config(mut self, cfg: &ServeConfig) -> Self {
+        self.cfg = *cfg;
+        self
+    }
+
+    /// Batching worker threads (each owns one executor + arena).
+    pub fn workers(mut self, n: usize) -> Self {
+        self.cfg.workers = n.max(1);
+        self
+    }
+
+    /// Dispatch a micro-batch as soon as it holds this many requests.
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.cfg.max_batch = n.max(1);
+        self
+    }
+
+    /// Dispatch at latest this long after the first request of a batch.
+    pub fn max_wait_us(mut self, us: u64) -> Self {
+        self.cfg.max_wait_us = us;
+        self
+    }
+
+    /// Bounded queue capacity; a full queue rejects (backpressure).
+    pub fn queue_cap(mut self, cap: usize) -> Self {
+        self.cfg.queue_cap = cap.max(1);
+        self
+    }
+
+    /// Intra-batch executor threads (1 = sequential on the worker's
+    /// long-lived, allocation-free executor).
+    pub fn batch_threads(mut self, n: usize) -> Self {
+        self.cfg.batch_threads = n.max(1);
+        self
+    }
+
+    /// Kernel selection: a uniform
+    /// [`KernelKind`](crate::mobile::engine::KernelKind) for every
+    /// layer, or [`KernelSel::Auto`] to dispatch each layer through the
+    /// kernel choice baked into the plan (the autotuner's winners on a
+    /// tuned plan).
+    pub fn kernel(mut self, sel: impl Into<KernelSel>) -> Self {
+        self.kernel = sel.into();
+        self
+    }
+
+    /// Spawn the worker pool and start serving.
+    pub fn spawn(self) -> Server {
+        let ServerBuilder { plan, kernel, cfg } = self;
         let shared = Arc::new(Shared {
             queue: BoundedQueue::new(cfg.queue_cap),
             stats: ServeStats::new(),
@@ -237,6 +269,28 @@ impl Server {
             shared,
             workers,
             started: Instant::now(),
+        }
+    }
+}
+
+/// The serving engine: owns the worker threads; dropped via
+/// [`Server::shutdown`] for an orderly drain + final report.
+pub struct Server {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    started: Instant,
+}
+
+impl Server {
+    /// Start configuring a server over `plan` (shared read-only; each
+    /// worker builds its own executor + arena once). Defaults:
+    /// [`ServeConfig::default`] and per-layer [`KernelSel::Auto`]
+    /// dispatch.
+    pub fn builder(plan: Arc<ExecutionPlan>) -> ServerBuilder {
+        ServerBuilder {
+            plan,
+            kernel: KernelSel::Auto,
+            cfg: ServeConfig::default(),
         }
     }
 
@@ -352,15 +406,14 @@ mod tests {
     #[test]
     fn serves_and_matches_direct_executor() {
         let plan = tiny_plan();
-        let cfg = ServeConfig {
-            workers: 2,
-            max_batch: 4,
-            max_wait_us: 200,
-            queue_cap: 32,
-            batch_threads: 1,
-        };
-        let server =
-            Server::start(plan.clone(), KernelKind::PatternScalar, &cfg);
+        let server = Server::builder(plan.clone())
+            .workers(2)
+            .max_batch(4)
+            .max_wait_us(200)
+            .queue_cap(32)
+            .batch_threads(1)
+            .kernel(KernelKind::PatternScalar)
+            .spawn();
         let handle = server.handle();
         let mut direct =
             Executor::new(&plan, KernelKind::PatternScalar);
@@ -382,14 +435,13 @@ mod tests {
     #[test]
     fn auto_kernel_serving_matches_direct_executor() {
         let plan = tiny_plan();
-        let cfg = ServeConfig {
-            workers: 2,
-            max_batch: 4,
-            max_wait_us: 200,
-            queue_cap: 32,
-            batch_threads: 1,
-        };
-        let server = Server::start(plan.clone(), KernelSel::Auto, &cfg);
+        // builder default kernel is KernelSel::Auto
+        let server = Server::builder(plan.clone())
+            .workers(2)
+            .max_batch(4)
+            .max_wait_us(200)
+            .queue_cap(32)
+            .spawn();
         let handle = server.handle();
         let mut direct = Executor::auto(&plan);
         for seed in 0..6u64 {
@@ -406,15 +458,14 @@ mod tests {
     #[test]
     fn bad_shape_is_rejected_at_submit() {
         let plan = tiny_plan();
-        let server = Server::start(
-            plan.clone(),
-            KernelKind::PatternScalar,
-            &ServeConfig::preset(crate::config::Preset::Smoke),
-        );
+        let server = Server::builder(plan.clone())
+            .config(&ServeConfig::preset(crate::config::Preset::Smoke))
+            .kernel(KernelKind::PatternScalar)
+            .spawn();
         let handle = server.handle();
         let bad = Fmap::zeros(1, 3);
         match handle.submit(bad) {
-            Err(SubmitError::BadShape { got, want }) => {
+            Err(ServeError::BadShape { got, want }) => {
                 assert_eq!(got, (1, 3));
                 assert_eq!(want, (plan.in_dims.c, plan.in_dims.hw));
             }
@@ -425,7 +476,7 @@ mod tests {
         let mut hollow = Fmap::zeros(plan.in_dims.c, plan.in_dims.hw);
         hollow.data.truncate(1);
         match handle.submit(hollow) {
-            Err(SubmitError::BadLength { got, want }) => {
+            Err(ServeError::BadLength { got, want }) => {
                 assert_eq!(got, 1);
                 assert_eq!(want, plan.in_dims.elems());
             }
@@ -440,15 +491,13 @@ mod tests {
     #[test]
     fn shutdown_drains_inflight_requests() {
         let plan = tiny_plan();
-        let cfg = ServeConfig {
-            workers: 1,
-            max_batch: 8,
-            max_wait_us: 0,
-            queue_cap: 64,
-            batch_threads: 1,
-        };
-        let server =
-            Server::start(plan.clone(), KernelKind::PatternScalar, &cfg);
+        let server = Server::builder(plan.clone())
+            .workers(1)
+            .max_batch(8)
+            .max_wait_us(0)
+            .queue_cap(64)
+            .kernel(KernelKind::PatternScalar)
+            .spawn();
         let handle = server.handle();
         let tickets: Vec<Ticket> = (0..16)
             .map(|s| handle.submit(img_for(&plan, s)).unwrap())
@@ -463,15 +512,14 @@ mod tests {
     #[test]
     fn closed_server_refuses_submits() {
         let plan = tiny_plan();
-        let server = Server::start(
-            plan.clone(),
-            KernelKind::PatternScalar,
-            &ServeConfig::preset(crate::config::Preset::Smoke),
-        );
+        let server = Server::builder(plan.clone())
+            .config(&ServeConfig::preset(crate::config::Preset::Smoke))
+            .kernel(KernelKind::PatternScalar)
+            .spawn();
         let handle = server.handle();
         server.shutdown();
         match handle.submit(Fmap::zeros(3, 8)) {
-            Err(SubmitError::Closed) => {}
+            Err(ServeError::Closed) => {}
             other => panic!("expected Closed, got {:?}", other.is_ok()),
         }
     }

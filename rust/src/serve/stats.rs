@@ -88,6 +88,8 @@ struct StatsInner {
     completed: u64,
     rejected: u64,
     errors: u64,
+    shed: u64,
+    shed_deadline: u64,
 }
 
 impl Default for StatsInner {
@@ -101,6 +103,8 @@ impl Default for StatsInner {
             completed: 0,
             rejected: 0,
             errors: 0,
+            shed: 0,
+            shed_deadline: 0,
         }
     }
 }
@@ -144,6 +148,22 @@ impl ServeStats {
         self.inner.lock().unwrap().errors += n as u64;
     }
 
+    /// Admission control refused the request before it was submitted
+    /// (per-tenant token budget exhausted). Deterministic under
+    /// virtual-time replay, so it lands in the deterministic counters —
+    /// unlike [`ServeStats::reject`], which depends on physical queue
+    /// occupancy.
+    pub fn shed(&self) {
+        self.inner.lock().unwrap().shed += 1;
+    }
+
+    /// An *admitted* request was dropped at dispatch because its deadline
+    /// had already passed (shed-on-overload). Wall-clock dependent, so it
+    /// is excluded from the deterministic counters.
+    pub fn shed_deadline(&self) {
+        self.inner.lock().unwrap().shed_deadline += 1;
+    }
+
     /// One response completed: end-to-end and queue-wait micros
     /// (reservoir-sampled past [`SAMPLE_CAP`]).
     pub fn complete(&self, total_us: u64, queue_us: u64) {
@@ -175,6 +195,8 @@ impl ServeStats {
             completed: g.completed,
             rejected: g.rejected,
             errors: g.errors,
+            shed: g.shed,
+            shed_deadline: g.shed_deadline,
             elapsed_secs,
             throughput_rps: if elapsed_secs > 0.0 {
                 g.completed as f64 / elapsed_secs
@@ -201,6 +223,10 @@ pub struct ServeReport {
     pub completed: u64,
     pub rejected: u64,
     pub errors: u64,
+    /// admission-control sheds (virtual-time token bucket; deterministic)
+    pub shed: u64,
+    /// deadline sheds of already-admitted requests (wall-clock dependent)
+    pub shed_deadline: u64,
     pub elapsed_secs: f64,
     pub throughput_rps: f64,
     /// end-to-end latency (submit -> response)
@@ -221,12 +247,17 @@ impl ServeReport {
 
     /// The timing-free part of the report: bit-comparable across runs and
     /// worker counts (the serving determinism tests assert on this).
-    pub fn deterministic_counters(&self) -> (u64, u64, u64, u64, u64) {
+    /// Admission `shed` is included — it is a pure function of the trace
+    /// under virtual-time replay; `shed_deadline` is not (wall clock).
+    pub fn deterministic_counters(
+        &self,
+    ) -> (u64, u64, u64, u64, u64, u64) {
         (
             self.submitted,
             self.completed,
             self.rejected,
             self.errors,
+            self.shed,
             self.dispatched(),
         )
     }
@@ -236,13 +267,14 @@ impl ServeReport {
         let mut t = Table::new(
             title,
             &[
-                "completed", "rejected", "errors", "rps", "mean batch",
-                "p50", "p95", "p99", "max",
+                "completed", "rejected", "shed", "errors", "rps",
+                "mean batch", "p50", "p95", "p99", "max",
             ],
         );
         t.row(&[
             format!("{}", self.completed),
             format!("{}", self.rejected),
+            format!("{}", self.shed + self.shed_deadline),
             format!("{}", self.errors),
             format!("{:.1}", self.throughput_rps),
             format!("{:.2}", self.mean_batch),
@@ -542,12 +574,19 @@ mod tests {
         st.complete(300, 30);
         st.complete(400, 40);
         st.error_batch(1);
+        st.shed();
+        st.shed();
+        st.shed_deadline();
         let r = st.report(2.0);
         assert_eq!(r.submitted, 5);
         assert_eq!(r.completed, 4);
         assert_eq!(r.rejected, 1);
         assert_eq!(r.errors, 1);
+        assert_eq!(r.shed, 2);
+        assert_eq!(r.shed_deadline, 1);
         assert_eq!(r.dispatched(), 4);
+        // admission sheds are deterministic; deadline sheds are not
+        assert_eq!(r.deterministic_counters(), (5, 4, 1, 1, 2, 4));
         assert!((r.throughput_rps - 2.0).abs() < 1e-9);
         assert!((r.mean_batch - 2.0).abs() < 1e-9);
         assert_eq!(r.latency.max_us, 400);

@@ -117,17 +117,16 @@ fn registry_serves_artifact_loaded_plans() {
     assert_eq!((s.hits, s.misses), (1, 1));
 
     // the loaded plan serves traffic with outputs matching the fresh one
-    let server = Server::start(
-        plan,
-        KernelKind::PatternScalar,
-        &ServeConfig {
+    let server = Server::builder(plan)
+        .config(&ServeConfig {
             workers: 2,
             max_batch: 4,
             max_wait_us: 200,
             queue_cap: 64,
             batch_threads: 1,
-        },
-    );
+        })
+        .kernel(KernelKind::PatternScalar)
+        .spawn();
     let load = loadgen::run(
         &server.handle(),
         fresh.in_dims,
@@ -159,17 +158,16 @@ fn registry_serves_artifact_loaded_plans() {
 #[test]
 fn open_loop_backpressure_is_explicit() {
     let plan = Arc::new(pruned_plan(false, 1, 19));
-    let server = Server::start(
-        plan.clone(),
-        KernelKind::PatternScalar,
-        &ServeConfig {
+    let server = Server::builder(plan.clone())
+        .config(&ServeConfig {
             workers: 1,
             max_batch: 2,
             max_wait_us: 0,
             queue_cap: 2,
             batch_threads: 1,
-        },
-    );
+        })
+        .kernel(KernelKind::PatternScalar)
+        .spawn();
     let handle = server.handle();
     let load = loadgen::run(
         &handle,
