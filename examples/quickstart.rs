@@ -4,7 +4,9 @@
 //!
 //! 1. **Serving tier (artifact-free, always runs)** — compile a pruned
 //!    synthetic VGG into an `ExecutionPlan`, save/load it as a
-//!    checksummed plan artifact (bit-identical round trip), serve a
+//!    checksummed plan artifact (bit-identical round trip), compile its
+//!    INT8 quantized twin and print the accuracy/size/speed deltas
+//!    (the `repro deploy --quantize` table), serve a
 //!    seeded closed-loop trace through the dynamic-batching server, then
 //!    multiplex two differently-pruned tenants through the multi-tenant
 //!    gateway (priority classes + per-tenant reports) and print the
@@ -29,11 +31,12 @@ use anyhow::Result;
 use repro::admm::{prune_layerwise, DataSource};
 use repro::config::{AdmmConfig, Preset, ServeConfig, TrainConfig};
 use repro::data::SynthVision;
-use repro::mobile::engine::KernelKind;
+use repro::mobile::engine::{Executor, Fmap, KernelKind};
 use repro::mobile::ir::ModelIR;
-use repro::mobile::plan::compile_plan;
+use repro::mobile::plan::{compile_plan, compile_plan_quant};
 use repro::mobile::synth;
 use repro::pruning::{self, LayerShape, Scheme};
+use repro::rng::Pcg32;
 use repro::runtime::Runtime;
 use repro::serve::artifact;
 use repro::serve::gateway::{Gateway, Priority, TenantConfig};
@@ -80,6 +83,57 @@ fn serve_walkthrough() -> Result<()> {
     );
     std::fs::remove_dir_all(&dir).ok();
 
+    // INT8 quantized twin of the same IR: per-filter weight scales are
+    // baked at compile time, activations quantize dynamically at run
+    // time, and i8 x i8 -> i32 accumulation keeps the outputs
+    // bit-reproducible at any thread count. This is the
+    // `repro deploy --spec vgg --quantize` accuracy/size/speed table.
+    println!("=== int8 quantized twin (repro deploy --quantize) ===");
+    let qplan = compile_plan_quant(ModelIR::build(&spec, &params)?, 1)?;
+    println!(
+        "[quantize] payload {} B -> {} B ({:.2}x of f32)",
+        plan.stats.payload_bytes,
+        qplan.stats.payload_bytes,
+        qplan.stats.payload_bytes as f64
+            / plan.stats.payload_bytes.max(1) as f64
+    );
+    let mut fex = Executor::auto(&plan);
+    let mut qex = Executor::auto(&qplan);
+    let mut rng = Pcg32::seeded(5);
+    let probes: Vec<Fmap> = (0..4)
+        .map(|_| Fmap {
+            c: 3,
+            hw: 16,
+            data: (0..3 * 16 * 16).map(|_| rng.uniform()).collect(),
+        })
+        .collect();
+    let mut max_abs = 0.0f32;
+    for img in &probes {
+        for (w, g) in fex.execute(img).iter().zip(&qex.execute(img)) {
+            max_abs = max_abs.max((w - g).abs());
+        }
+    }
+    println!(
+        "[quantize] max abs logit err vs f32 over {} probes: {max_abs:.3e}",
+        probes.len()
+    );
+    fn ms_per_frame(ex: &mut Executor<'_>, img: &Fmap) -> f64 {
+        for _ in 0..2 {
+            ex.execute(img);
+        }
+        let t = std::time::Instant::now();
+        for _ in 0..10 {
+            std::hint::black_box(ex.execute(img));
+        }
+        t.elapsed().as_secs_f64() * 100.0
+    }
+    let f32_ms = ms_per_frame(&mut fex, &probes[0]);
+    let i8_ms = ms_per_frame(&mut qex, &probes[0]);
+    println!(
+        "[quantize] inference {f32_ms:.3} ms/frame (f32) -> \
+         {i8_ms:.3} ms/frame (i8, {:.2}x)\n",
+        f32_ms / i8_ms.max(1e-9)
+    );
     // dynamic-batching server under a seeded closed-loop trace; the
     // builder is the one way to stand a server up
     let plan = Arc::new(loaded);

@@ -6,11 +6,12 @@
 //! thread scaling, and prints the 4-thread speedup explicitly. Group 2 is
 //! the per-scheme cost at full parallelism. Group 3 keeps the original
 //! PJRT per-iteration benches (lenet, problem (3)) and is skipped with a
-//! note when no runtime is available.
+//! note when no runtime is available. Results land in `BENCH_admm.json`
+//! (written before the PJRT early-out so the host groups always record).
 
 use repro::admm::scheduler::{prune_layerwise_par, SchedulerCfg};
 use repro::admm::{prune_layerwise, DataSource};
-use repro::serve::stats::{bench, section};
+use repro::serve::stats::{section, BenchLog};
 use repro::config::AdmmConfig;
 use repro::mobile::synth::vgg_style;
 use repro::pruning::Scheme;
@@ -35,6 +36,7 @@ fn host_cfg(threads: usize) -> SchedulerCfg {
 }
 
 fn main() {
+    let mut log = BenchLog::new("admm");
     // synthetic VGG spec: 6 prunable 3x3 convs over three width stages
     let (spec, params) = vgg_style("vgg_bench", 16, 10, &[8, 16, 32], 1);
 
@@ -42,7 +44,7 @@ fn main() {
     let mut mean_ms = std::collections::BTreeMap::new();
     for threads in [1usize, 2, 4] {
         let cfg = host_cfg(threads);
-        let r = bench(
+        let r = log.bench(
             &format!("prune pattern 8x  {threads} thread(s)"),
             1,
             5,
@@ -66,11 +68,13 @@ fn main() {
         mean_ms[&1] / mean_ms[&2],
         mean_ms[&1] / mean_ms[&4]
     );
+    log.metric("prune_speedup_2t", mean_ms[&1] / mean_ms[&2].max(1e-9));
+    log.metric("prune_speedup_4t", mean_ms[&1] / mean_ms[&4].max(1e-9));
 
     section("host scheduler: per-scheme cost at 4 threads");
     let cfg4 = host_cfg(4);
     for scheme in Scheme::all() {
-        bench(
+        log.bench(
             &format!("prune {} 8x  4 threads", scheme.name()),
             1,
             3,
@@ -93,6 +97,8 @@ fn main() {
     let rt = match Runtime::new("artifacts") {
         Ok(rt) => rt,
         Err(e) => {
+            // the host-scheduler results above are still worth recording
+            log.write("BENCH_admm.json").unwrap();
             println!("\n(skipping PJRT artifact benches: {e})");
             return;
         }
@@ -116,7 +122,7 @@ fn main() {
     }
     section("one ADMM iteration (lenet, layer-wise problem (3), PJRT)");
     for scheme in Scheme::all() {
-        bench(&format!("admm iter {}", scheme.name()), 1, 5, || {
+        log.bench(&format!("admm iter {}", scheme.name()), 1, 5, || {
             std::hint::black_box(
                 prune_layerwise(
                     &rt,
@@ -136,7 +142,7 @@ fn main() {
     for (name, gs) in [("gauss-seidel", true), ("jacobi", false)] {
         let mut c = cfg.clone();
         c.gauss_seidel = gs;
-        bench(&format!("admm iter irregular {name}"), 1, 5, || {
+        log.bench(&format!("admm iter irregular {name}"), 1, 5, || {
             std::hint::black_box(
                 prune_layerwise(
                     &rt,
@@ -151,4 +157,6 @@ fn main() {
             );
         });
     }
+
+    log.write("BENCH_admm.json").unwrap();
 }

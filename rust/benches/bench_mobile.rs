@@ -14,7 +14,9 @@ use repro::mobile::engine::{
     execute_batch_parallel, Executor, Fmap, KernelKind, KERNEL_KINDS,
 };
 use repro::mobile::ir::ModelIR;
-use repro::mobile::plan::{compile_plan, compile_plan_tuned};
+use repro::mobile::plan::{
+    compile_plan, compile_plan_quant, compile_plan_tuned,
+};
 use repro::mobile::synth;
 use repro::rng::Pcg32;
 use repro::serve::stats::{bench, section, BenchLog};
@@ -192,6 +194,31 @@ fn main() {
         );
         log.metric("speedup_autotuned_4t", speedup);
     }
+
+    section("int8 quantized path vs f32 (8x pattern, 4 threads)");
+    let qplan4 = compile_plan_quant(ir.clone(), 4).unwrap();
+    let ratio = qplan4.stats.payload_bytes as f64
+        / plan4.stats.payload_bytes.max(1) as f64;
+    println!(
+        "payload f32 {} B -> i8 {} B ({ratio:.2}x)",
+        plan4.stats.payload_bytes, qplan4.stats.payload_bytes
+    );
+    log.metric("payload_bytes_f32", plan4.stats.payload_bytes as f64);
+    log.metric("payload_bytes_i8", qplan4.stats.payload_bytes as f64);
+    log.metric("payload_ratio_i8", ratio);
+    let mut fex = Executor::auto(&plan4);
+    let f32_r = log.bench("execute f32 auto (4 threads)", warm, reps, || {
+        fex.execute_into(&img, &mut logits).unwrap();
+        std::hint::black_box(&logits);
+    });
+    let mut qex = Executor::auto(&qplan4);
+    let i8_r = log.bench("execute i8 auto (4 threads)", warm, reps, || {
+        qex.execute_into(&img, &mut logits).unwrap();
+        std::hint::black_box(&logits);
+    });
+    let speedup_i8 = f32_r.median_ms / i8_r.median_ms.max(1e-9);
+    println!("speedup i8 over f32 (4 threads, auto): {speedup_i8:.2}x");
+    log.metric("speedup_i8_4t", speedup_i8);
 
     section("sparse executor vs compression rate (4 threads)");
     for rate in [4.0, 8.0, 12.0, 16.0] {

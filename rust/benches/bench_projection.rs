@@ -1,8 +1,9 @@
 //! Bench: Π_Sₙ projection throughput for all four pruning schemes (the
 //! proximal step of every ADMM iteration) at the layer sizes of the model
 //! zoo and at paper-scale (512×4608, ResNet-18's largest 3x3 layer).
+//! Results land in `BENCH_projection.json`.
 
-use repro::serve::stats::{bench, section};
+use repro::serve::stats::{section, BenchLog};
 use repro::pruning::{project, project_par, LayerShape, Scheme};
 use repro::rng::Pcg32;
 use repro::tensor::Tensor;
@@ -13,6 +14,7 @@ fn randw(p: usize, q: usize, seed: u64) -> Tensor {
 }
 
 fn main() {
+    let mut log = BenchLog::new("projection");
     section("projection throughput (proximal step, Eqn. 11)");
     let shapes = [
         ("vgg-mini conv2 (32x288)", 32usize, 32usize),
@@ -28,7 +30,7 @@ fn main() {
         };
         let w = randw(shape.p, shape.q(), 42);
         for scheme in Scheme::all() {
-            bench(
+            log.bench(
                 &format!("{name} {}", scheme.name()),
                 2,
                 10,
@@ -51,7 +53,7 @@ fn main() {
     let w = randw(shape.p, shape.q(), 7);
     for scheme in [Scheme::Pattern, Scheme::Column, Scheme::Irregular] {
         for threads in [1usize, 2, 4] {
-            bench(
+            log.bench(
                 &format!("512x4608 {} par x{threads}", scheme.name()),
                 2,
                 10,
@@ -64,4 +66,6 @@ fn main() {
             );
         }
     }
+
+    log.write("BENCH_projection.json").unwrap();
 }

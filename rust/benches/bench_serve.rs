@@ -11,7 +11,7 @@ use repro::mobile::costmodel::TuneConfig;
 use repro::mobile::engine::{KernelKind, KernelSel};
 use repro::mobile::ir::ModelIR;
 use repro::mobile::plan::{
-    compile_plan, compile_plan_tuned, ExecutionPlan,
+    compile_plan, compile_plan_quant, compile_plan_tuned, ExecutionPlan,
 };
 use repro::mobile::synth;
 use repro::serve::artifact;
@@ -164,7 +164,8 @@ fn main() {
     section("tuned plan + per-layer auto kernel dispatch");
     let cfg =
         if smoke { TuneConfig::smoke() } else { TuneConfig::default() };
-    let (tuned, report) = compile_plan_tuned(ir, 1, cfg).unwrap();
+    let (tuned, report) =
+        compile_plan_tuned(ir.clone(), 1, cfg).unwrap();
     println!("autotuned {} layers", report.layers.len());
     let tuned = Arc::new(tuned);
     let serve_cfg = ServeConfig {
@@ -186,6 +187,31 @@ fn main() {
     log.metric(
         "auto_over_scalar_speedup",
         qps_auto / qps_scalar.max(1e-9),
+    );
+
+    section("int8 quantized plan serving vs f32 (same spec, same load)");
+    let qplan = Arc::new(compile_plan_quant(ir, 1).unwrap());
+    log.metric(
+        "artifact_bytes_i8",
+        artifact::encode_plan(&qplan).len() as f64,
+    );
+    log.metric(
+        "payload_ratio_i8",
+        qplan.stats.payload_bytes as f64
+            / plan.stats.payload_bytes.max(1) as f64,
+    );
+    let qps_f32 = serve_qps(&plan, KernelSel::Auto, &serve_cfg, requests);
+    let qps_quant =
+        serve_qps(&qplan, KernelSel::Auto, &serve_cfg, requests);
+    println!(
+        "quantized serving over f32 (auto dispatch): {:.2}x",
+        qps_quant / qps_f32.max(1e-9)
+    );
+    log.metric("qps_f32_auto", qps_f32);
+    log.metric("qps_quant_auto", qps_quant);
+    log.metric(
+        "quant_over_f32_speedup",
+        qps_quant / qps_f32.max(1e-9),
     );
 
     section("batch window x worker sweep");

@@ -19,9 +19,7 @@ use crate::config::{GatewayConfig, Preset, ServeConfig};
 use crate::mobile::costmodel::{TuneConfig, TuneReport};
 use crate::mobile::engine::{Executor, Fmap, KernelSel, KERNEL_KINDS};
 use crate::mobile::ir::ModelIR;
-use crate::mobile::plan::{
-    compile_plan, compile_plan_tuned, ExecutionPlan, PassManager,
-};
+use crate::mobile::plan::{ElemType, ExecutionPlan, PassManager};
 use crate::mobile::synth;
 use crate::pruning::Scheme;
 use crate::report::human_bytes;
@@ -41,6 +39,9 @@ struct Args {
     positional: Vec<String>,
 }
 
+/// Flags that take no value: present means on.
+const BOOL_FLAGS: &[&str] = &["quantize"];
+
 fn parse_args() -> Result<Args> {
     let mut it = std::env::args().skip(1);
     let Some(cmd) = it.next() else {
@@ -50,6 +51,10 @@ fn parse_args() -> Result<Args> {
     let mut positional = Vec::new();
     while let Some(a) = it.next() {
         if let Some(name) = a.strip_prefix("--") {
+            if BOOL_FLAGS.contains(&name) {
+                flags.insert(name.to_string(), "true".into());
+                continue;
+            }
             let val = it
                 .next()
                 .with_context(|| format!("flag --{name} needs a value"))?;
@@ -158,6 +163,11 @@ impl Args {
             None => Ok(default),
         }
     }
+
+    /// Presence of a valueless flag from [`BOOL_FLAGS`].
+    fn flag_bool(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
 }
 
 /// Flags shared by every command that compiles and runs an execution
@@ -199,12 +209,17 @@ commands:
             [--method privacy|whole|admm|uniform|oneshot|iterative]
   retrain   --model <id> --scheme .. --rate ..      full prune+retrain row
   eval      --model <id>                            pre-trained accuracy
-  deploy    --model <id> [--scheme ..] [--rate N] [--threads N]
+  deploy    --model <id> | --spec vgg|res [--hw N] [--classes N]
+            [--seed N] [--scheme ..] [--rate N] [--threads N]
             [--kernel auto|dense|sparse|tiled|vec|vec-tiled]
+            [--quantize]
             compile plan + executor report (auto = run the plan-time
             autotuner and print its per-layer table; a named kernel
             times just that one; no flag compares every kernel and
-            prints the analytic per-layer choices)
+            prints the analytic per-layer choices); --spec builds a
+            synthetic pruned model so no artifacts are needed;
+            --quantize also compiles the INT8 twin and prints its
+            payload shrink, logits error vs f32, and speed delta
   exp       <table1|table2|table3|table4|table5|fig3|sweep|all> [--preset ..]
             (sweep = host-engine parallel prune sweep; no artifacts needed)
   pipeline  --model <id> [--scheme ..] [--rate N]   end-to-end demo
@@ -216,10 +231,12 @@ commands:
             (auto = autotune the plan at compile time, then dispatch
             each layer to its tuned codelet; --threads also sets the
             plan-compile thread count)
-            [--artifact <path>] [--seed N]
+            [--artifact <path>] [--seed N] [--quantize]
             dynamic-batching inference server on a synthetic spec
             (no PJRT/artifacts needed); --artifact saves/loads the
-            compiled plan and verifies the save->load round trip
+            compiled plan and verifies the save->load round trip;
+            --quantize serves the INT8 plan (cached and persisted
+            under its own registry key / artifact element type)
   serve --tenants N   multi-tenant gateway mode: N synthetic tenants
             sharing one worker pool, each with its own plan, registry
             shard, bounded queue, and priority class (cycling
@@ -228,6 +245,10 @@ commands:
             deterministically ([--pace X] > 0 paces it in wall time);
             [--admit-qps N] enables per-tenant admission control,
             [--ramp-us N] adds a diurnal rate ramp of that period
+  bench diff <baseline.json> <current.json> [--threshold pct]
+            compare two BENCH_*.json logs series-by-series (default
+            threshold 5%); exits nonzero when any series worsened
+            beyond the threshold in its bad direction
   models                                            list models in manifest
   help
 common flags: --artifacts <dir> (default ./artifacts), --preset (default quick),
@@ -304,6 +325,8 @@ fn serve_cmd(args: &Args) -> Result<()> {
     // be compiled through the autotuner (and cached under a key that can
     // never alias the analytic plan)
     let tune = matches!(kernel, KernelSel::Auto);
+    let quantize = args.flag_bool("quantize");
+    let want_elem = if quantize { ElemType::I8 } else { ElemType::F32 };
     let mode = match args.flags.get("qps") {
         Some(q) => LoadMode::Open {
             qps: q.parse().context("--qps must be a number")?,
@@ -336,17 +359,18 @@ fn serve_cmd(args: &Args) -> Result<()> {
             1.0 / shared.rate,
         );
         let ir = ModelIR::build(&spec, &params)?;
-        if tune {
-            let (plan, report) = compile_plan_tuned(
-                ir,
-                shared.threads,
-                TuneConfig::default(),
-            )?;
-            print_tune_table(&plan, &report);
-            Ok(plan)
-        } else {
-            compile_plan(ir, shared.threads)
+        let mut pm = PassManager::new(shared.threads);
+        if quantize {
+            pm = pm.with_quantize();
         }
+        if tune {
+            pm = pm.with_tuning(TuneConfig::default());
+        }
+        let (plan, report) = pm.compile_reported(ir)?;
+        if let Some(report) = &report {
+            print_tune_table(&plan, report);
+        }
+        Ok(plan)
     };
 
     let registry = PlanRegistry::new(4);
@@ -359,6 +383,9 @@ fn serve_cmd(args: &Args) -> Result<()> {
     if tune {
         key = key.tuned();
     }
+    if quantize {
+        key = key.quantized();
+    }
     let artifact_path = args.flags.get("artifact").cloned();
     let t = crate::util::Stopwatch::start();
     let plan = registry.get_or_build(&key, || match &artifact_path {
@@ -368,14 +395,20 @@ fn serve_cmd(args: &Args) -> Result<()> {
             // under this run's flags
             if plan.ir.model_id != model_id
                 || plan.threads != shared.threads
+                || plan.elem != want_elem
             {
                 return Err(ServeError::Config {
                     msg: format!(
                         "artifact {p} holds model {:?} compiled for {} \
-                         thread(s), but the requested flags describe \
-                         {model_id:?} at {} thread(s); delete it or \
-                         pass a different --artifact path",
-                        plan.ir.model_id, plan.threads, shared.threads
+                         thread(s) with {} payload, but the requested \
+                         flags describe {model_id:?} at {} thread(s) \
+                         with {} payload; delete it or pass a \
+                         different --artifact path",
+                        plan.ir.model_id,
+                        plan.threads,
+                        plan.elem.name(),
+                        shared.threads,
+                        want_elem.name()
                     ),
                 });
             }
@@ -484,6 +517,7 @@ fn serve_tenants_cmd(
         Some(k) => k,
         None => KernelSel::parse("sparse")?,
     };
+    let quantize = args.flag_bool("quantize");
 
     let mut registry = ShardedRegistry::new();
     let names: Vec<String> =
@@ -503,12 +537,15 @@ fn serve_tenants_cmd(
     for (ti, name) in names.iter().enumerate() {
         let model_id =
             format!("gw_{spec_kind}{hw}_c{classes}_{name}_s{seed}");
-        let key = PlanKey::new(
+        let mut key = PlanKey::new(
             &model_id,
             shared.scheme.name(),
             shared.rate,
             shared.threads,
         );
+        if quantize {
+            key = key.quantized();
+        }
         // per-tenant seed: every tenant gets genuinely different weights
         let tseed = seed.wrapping_add(ti as u64);
         let plan = registry.get_or_build(name, &key, || {
@@ -543,7 +580,11 @@ fn serve_tenants_cmd(
             );
             let ir =
                 ModelIR::build(&spec, &params).map_err(config_err)?;
-            compile_plan(ir, shared.threads).map_err(config_err)
+            let mut pm = PassManager::new(shared.threads);
+            if quantize {
+                pm = pm.with_quantize();
+            }
+            pm.compile(ir).map_err(config_err)
         })?;
         let mut tc = TenantConfig::new(name)
             .priority(prio[ti % prio.len()])
@@ -610,6 +651,293 @@ fn serve_tenants_cmd(
         total.misses,
         total.coalesced,
         total.evictions
+    );
+    Ok(())
+}
+
+/// `repro deploy`: prune + compile one model and print the full plan
+/// report. The pruned weights come either from the artifacts pipeline
+/// (`--model <id>`) or, with `--spec vgg|res`, from a synthetic
+/// in-Rust spec so the command runs without any artifacts. With
+/// `--quantize` the same IR is additionally compiled through the INT8
+/// pass and the accuracy/size/speed deltas vs the f32 plan are
+/// reported.
+fn deploy_cmd(args: &Args) -> Result<()> {
+    let shared = SharedServeFlags::parse(args, 1)?;
+    let sel = shared.kernel;
+    let quantize = args.flag_bool("quantize");
+    let (model, spec, params, comp) =
+        if let Some(kind) = args.flags.get("spec") {
+            let hw = args.flag_usize("hw", 16)?;
+            let classes = args.flag_usize("classes", 10)?;
+            let seed = args.flag_u64("seed", 42)?;
+            let widths: &[usize] =
+                if kind == "res" { &[8, 16] } else { &[16, 32] };
+            let id = format!("deploy_{kind}{hw}_c{classes}_s{seed}");
+            let (spec, mut params) =
+                synth::spec_by_kind(kind, &id, hw, classes, widths, seed)?;
+            synth::scheme_prune(
+                &spec,
+                &mut params,
+                shared.scheme,
+                1.0 / shared.rate,
+            );
+            (id, spec, params, shared.rate)
+        } else {
+            let ctx = args.ctx()?;
+            let model = args.model()?.to_string();
+            let (params, _, comp, _, _) = ctx.prune(
+                &model,
+                args.method()?,
+                shared.scheme,
+                shared.rate,
+            )?;
+            let spec = ctx.rt.model(&model)?.clone();
+            (model, spec, params, comp)
+        };
+    let ir = ModelIR::build(&spec, &params)?;
+    let t = crate::util::Stopwatch::start();
+    let mut pm = PassManager::new(shared.threads);
+    let tune = matches!(sel, Some(KernelSel::Auto));
+    if tune {
+        pm = pm.with_tuning(TuneConfig::default());
+    }
+    let (plan, tune_report) = pm.compile_reported(ir.clone())?;
+    let plan_ms = t.ms();
+    let rep = &plan.report;
+    println!(
+        "compiled {model} @ {comp:.1}x ({} threads, plan built \
+         in {plan_ms:.2} ms):",
+        plan.threads
+    );
+    println!(
+        "  MACs dense {} -> sparse {} ({:.2}x)",
+        rep.total_dense_macs(),
+        rep.total_sparse_macs(),
+        rep.total_dense_macs() as f64
+            / rep.total_sparse_macs().max(1) as f64
+    );
+    println!(
+        "  weights dense {} -> compressed {} ({:.2}x)",
+        human_bytes(rep.total_dense_bytes()),
+        human_bytes(rep.total_compressed_bytes()),
+        rep.total_dense_bytes() as f64
+            / rep.total_compressed_bytes().max(1) as f64
+    );
+    println!(
+        "  LRE gain {:.2}x, reorder gain {:.2}x",
+        rep.lre_gain(),
+        rep.reorder_gain()
+    );
+    println!(
+        "  plan: payload {} + headers {}, arena {}, {} worker \
+         blocks",
+        human_bytes(plan.stats.payload_bytes),
+        human_bytes(plan.stats.header_bytes),
+        human_bytes(plan.stats.arena_bytes),
+        plan.stats.n_blocks
+    );
+    for (name, ms) in &plan.stats.pass_ms {
+        println!("    pass {name:14} {ms:9.3} ms");
+    }
+    match &tune_report {
+        Some(rep) => print_tune_table(&plan, rep),
+        None => {
+            println!(
+                "  per-layer kernel choices (analytic; pass \
+                 --kernel auto to autotune):"
+            );
+            for (i, lp) in plan.layers.iter().enumerate() {
+                let chosen = lp.choice.to_string();
+                println!(
+                    "    layer {i:>2}  {:>4}x{:<3}s{}  {chosen}",
+                    lp.a, lp.in_hw, lp.stride
+                );
+            }
+        }
+    }
+    let mut rng = Pcg32::seeded(7);
+    let img = Fmap {
+        c: 3,
+        hw: spec.in_hw,
+        data: (0..3 * spec.in_hw * spec.in_hw)
+            .map(|_| rng.uniform())
+            .collect(),
+    };
+    // no --kernel: compare every registered kernel; --kernel:
+    // time exactly the requested selection (auto = per-layer
+    // dispatch through the baked choices)
+    let sels: Vec<KernelSel> = match sel {
+        Some(s) => vec![s],
+        None => KERNEL_KINDS
+            .into_iter()
+            .map(KernelSel::Uniform)
+            .collect(),
+    };
+    for s in sels {
+        let mut ex = Executor::with_sel(&plan, s);
+        for _ in 0..3 {
+            ex.execute(&img);
+        }
+        let t = std::time::Instant::now();
+        for _ in 0..20 {
+            std::hint::black_box(ex.execute(&img));
+        }
+        println!(
+            "  host {:14} inference: {:.3} ms/frame \
+             (arena growths: {})",
+            ex.kernel_name(),
+            t.elapsed().as_secs_f64() * 50.0,
+            ex.alloc_events()
+        );
+    }
+    if quantize {
+        deploy_quant_report(&plan, ir, shared.threads, tune, spec.in_hw)?;
+    }
+    Ok(())
+}
+
+/// Compile the INT8 twin of `f32_plan` from the same IR and print the
+/// `--quantize` deployment report: payload shrink, logits accuracy
+/// deltas vs the bit-exact f32 outputs over seeded probe images, and
+/// steady-state per-frame speed for both plans.
+fn deploy_quant_report(
+    f32_plan: &ExecutionPlan,
+    ir: ModelIR,
+    threads: usize,
+    tune: bool,
+    in_hw: usize,
+) -> Result<()> {
+    let t = crate::util::Stopwatch::start();
+    let mut pm = PassManager::new(threads).with_quantize();
+    if tune {
+        pm = pm.with_tuning(TuneConfig::default());
+    }
+    let (qplan, _) = pm.compile_reported(ir)?;
+    println!(
+        "  int8: per-filter weight scales + dynamic activation \
+         quantization (plan built in {:.2} ms)",
+        t.ms()
+    );
+    println!(
+        "    payload {} -> {} ({:.2}x of f32)",
+        human_bytes(f32_plan.stats.payload_bytes),
+        human_bytes(qplan.stats.payload_bytes),
+        qplan.stats.payload_bytes as f64
+            / f32_plan.stats.payload_bytes.max(1) as f64
+    );
+    let mut fex = Executor::auto(f32_plan);
+    let mut qex = Executor::auto(&qplan);
+    let mut rng = Pcg32::seeded(11);
+    let imgs: Vec<Fmap> = (0..8)
+        .map(|_| Fmap {
+            c: 3,
+            hw: in_hw,
+            data: (0..3 * in_hw * in_hw)
+                .map(|_| rng.uniform())
+                .collect(),
+        })
+        .collect();
+    let mut max_abs = 0.0f32;
+    let mut rel_sum = 0.0f64;
+    let mut rel_n = 0usize;
+    for img in &imgs {
+        let want = fex.execute(img);
+        let got = qex.execute(img);
+        for (w, g) in want.iter().zip(&got) {
+            let abs = (w - g).abs();
+            max_abs = max_abs.max(abs);
+            if w.abs() > 1e-6 {
+                rel_sum += f64::from(abs / w.abs());
+                rel_n += 1;
+            }
+        }
+    }
+    println!(
+        "    logits vs f32 over {} probe images: max abs err \
+         {:.3e}, mean rel err {:.3e}",
+        imgs.len(),
+        max_abs,
+        rel_sum / rel_n.max(1) as f64
+    );
+    fn steady_ms(ex: &mut Executor<'_>, img: &Fmap) -> f64 {
+        for _ in 0..3 {
+            ex.execute(img);
+        }
+        let t = std::time::Instant::now();
+        for _ in 0..20 {
+            std::hint::black_box(ex.execute(img));
+        }
+        t.elapsed().as_secs_f64() * 50.0
+    }
+    let f32_ms = steady_ms(&mut fex, &imgs[0]);
+    let i8_ms = steady_ms(&mut qex, &imgs[0]);
+    println!(
+        "    inference f32 {:.3} ms/frame -> i8 {:.3} ms/frame \
+         ({:.2}x)",
+        f32_ms,
+        i8_ms,
+        f32_ms / i8_ms.max(1e-9)
+    );
+    Ok(())
+}
+
+/// `repro bench diff <baseline.json> <current.json> [--threshold pct]`:
+/// compare two `BENCH_*.json` logs series-by-series and exit nonzero if
+/// any series worsened beyond the threshold in its bad direction.
+fn bench_cmd(args: &Args) -> Result<()> {
+    let sub = args.positional.first().map(|s| s.as_str());
+    if sub != Some("diff") {
+        bail!(
+            "usage: repro bench diff <baseline.json> <current.json> \
+             [--threshold pct]"
+        );
+    }
+    let [base_path, cur_path] = &args.positional[1..] else {
+        bail!(
+            "bench diff takes exactly two positional paths: \
+             <baseline.json> <current.json>"
+        );
+    };
+    let threshold = args.flag_f64("threshold", 5.0)?;
+    let read = |p: &str| -> Result<crate::util::json::Json> {
+        let text = std::fs::read_to_string(p)
+            .with_context(|| format!("reading bench log {p}"))?;
+        crate::util::json::Json::parse(&text)
+            .with_context(|| format!("parsing bench log {p}"))
+    };
+    let base = read(base_path)?;
+    let cur = read(cur_path)?;
+    let diff =
+        crate::serve::stats::diff_bench_logs(&base, &cur, threshold)?;
+    println!(
+        "{}",
+        diff.table(&format!(
+            "bench diff {base_path} -> {cur_path} \
+             (threshold {threshold}%)"
+        ))
+        .render()
+    );
+    if !diff.only_base.is_empty() {
+        println!("  only in baseline: {}", diff.only_base.join(", "));
+    }
+    if !diff.only_cur.is_empty() {
+        println!("  only in current:  {}", diff.only_cur.join(", "));
+    }
+    let regs = diff.regressions();
+    if !regs.is_empty() {
+        let names: Vec<&str> =
+            regs.iter().map(|r| r.name.as_str()).collect();
+        bail!(
+            "{} series regressed beyond {threshold}%: {}",
+            regs.len(),
+            names.join(", ")
+        );
+    }
+    println!(
+        "no regressions beyond {threshold}% across {} compared \
+         series",
+        diff.rows.len()
     );
     Ok(())
 }
@@ -684,115 +1012,8 @@ pub fn main() -> Result<()> {
             );
             Ok(())
         }
-        "deploy" => {
-            let shared = SharedServeFlags::parse(&args, 1)?;
-            let ctx = args.ctx()?;
-            let model = args.model()?;
-            let sel = shared.kernel;
-            let (params, _, comp, _, _) = ctx.prune(
-                model,
-                args.method()?,
-                shared.scheme,
-                shared.rate,
-            )?;
-            let spec = ctx.rt.model(model)?.clone();
-            let t = crate::util::Stopwatch::start();
-            let mut pm = PassManager::new(ctx.threads);
-            if matches!(sel, Some(KernelSel::Auto)) {
-                pm = pm.with_tuning(TuneConfig::default());
-            }
-            let (plan, tune_report) =
-                pm.compile_reported(ModelIR::build(&spec, &params)?)?;
-            let plan_ms = t.ms();
-            let rep = &plan.report;
-            println!(
-                "compiled {model} @ {comp:.1}x ({} threads, plan built \
-                 in {plan_ms:.2} ms):",
-                plan.threads
-            );
-            println!(
-                "  MACs dense {} -> sparse {} ({:.2}x)",
-                rep.total_dense_macs(),
-                rep.total_sparse_macs(),
-                rep.total_dense_macs() as f64
-                    / rep.total_sparse_macs().max(1) as f64
-            );
-            println!(
-                "  weights dense {} -> compressed {} ({:.2}x)",
-                human_bytes(rep.total_dense_bytes()),
-                human_bytes(rep.total_compressed_bytes()),
-                rep.total_dense_bytes() as f64
-                    / rep.total_compressed_bytes().max(1) as f64
-            );
-            println!(
-                "  LRE gain {:.2}x, reorder gain {:.2}x",
-                rep.lre_gain(),
-                rep.reorder_gain()
-            );
-            println!(
-                "  plan: payload {} + headers {}, arena {}, {} worker \
-                 blocks",
-                human_bytes(plan.stats.payload_bytes),
-                human_bytes(plan.stats.header_bytes),
-                human_bytes(plan.stats.arena_bytes),
-                plan.stats.n_blocks
-            );
-            for (name, ms) in &plan.stats.pass_ms {
-                println!("    pass {name:14} {ms:9.3} ms");
-            }
-            match &tune_report {
-                Some(rep) => print_tune_table(&plan, rep),
-                None => {
-                    println!(
-                        "  per-layer kernel choices (analytic; pass \
-                         --kernel auto to autotune):"
-                    );
-                    for (i, lp) in plan.layers.iter().enumerate() {
-                        let chosen = lp.choice.to_string();
-                        println!(
-                            "    layer {i:>2}  {:>4}x{:<3}s{}  {chosen}",
-                            lp.a, lp.in_hw, lp.stride
-                        );
-                    }
-                }
-            }
-            let mut rng = Pcg32::seeded(7);
-            let img = Fmap {
-                c: 3,
-                hw: spec.in_hw,
-                data: (0..3 * spec.in_hw * spec.in_hw)
-                    .map(|_| rng.uniform())
-                    .collect(),
-            };
-            // no --kernel: compare every registered kernel; --kernel:
-            // time exactly the requested selection (auto = per-layer
-            // dispatch through the baked choices)
-            let sels: Vec<KernelSel> = match sel {
-                Some(s) => vec![s],
-                None => KERNEL_KINDS
-                    .into_iter()
-                    .map(KernelSel::Uniform)
-                    .collect(),
-            };
-            for s in sels {
-                let mut ex = Executor::with_sel(&plan, s);
-                for _ in 0..3 {
-                    ex.execute(&img);
-                }
-                let t = std::time::Instant::now();
-                for _ in 0..20 {
-                    std::hint::black_box(ex.execute(&img));
-                }
-                println!(
-                    "  host {:14} inference: {:.3} ms/frame \
-                     (arena growths: {})",
-                    ex.kernel_name(),
-                    t.elapsed().as_secs_f64() * 50.0,
-                    ex.alloc_events()
-                );
-            }
-            Ok(())
-        }
+        "deploy" => deploy_cmd(&args),
+        "bench" => bench_cmd(&args),
         "exp" => {
             let which = args
                 .positional

@@ -29,10 +29,10 @@ use crate::rng::Pcg32;
 use crate::tensor::Chw;
 use crate::util::Stopwatch;
 
-use super::engine::{self, KernelKind, OutPlanes};
+use super::engine::{self, ConvInput, KernelKind, OutPlanes, QuantView};
 use super::ir::{ConvIR, ModelIR};
 use super::passes::CompileReport;
-use super::plan::LayerPlan;
+use super::plan::{ElemType, LayerPlan};
 use super::simd::LANES;
 
 /// A mobile SoC target (peak numbers are fp32-effective, not marketing).
@@ -382,10 +382,22 @@ pub struct TuneReport {
     pub layers: Vec<LayerTune>,
 }
 
+/// Project a baked choice onto the quantized kernel set — applied by
+/// the plan compiler's quantize pass so an i8 plan's per-layer choices
+/// name kernels that can actually consume the payload. Tile parameters
+/// and the tuned bit are preserved.
+pub fn quantized_choice(mut c: KernelChoice) -> KernelChoice {
+    c.kind = c.kind.for_elem(ElemType::I8);
+    c
+}
+
 /// Candidate (kernel-kind, row-tile, filter-block) shapes for one
 /// layer: the scalar baseline, straight vec, analytic tiled, and a
-/// small grid of vec-tiled shapes around the analytic tile.
-fn candidates(c: &ConvIR) -> Vec<KernelChoice> {
+/// small grid of vec-tiled shapes around the analytic tile. On i8
+/// layers the grid is the quantized kernel pair instead — their exact
+/// integer accumulation makes every shape bit-identical, so the race
+/// is purely about speed there too.
+fn candidates(c: &ConvIR, elem: ElemType) -> Vec<KernelChoice> {
     let analytic = default_choice(c);
     let rt = analytic.row_tile;
     let mk = |kind, row_tile, fblock| KernelChoice {
@@ -394,6 +406,14 @@ fn candidates(c: &ConvIR) -> Vec<KernelChoice> {
         fblock,
         tuned: false,
     };
+    if elem == ElemType::I8 {
+        // quant kernels ignore the tile parameters today; keep the
+        // analytic tile so a tiled variant can slot into the same grid
+        return vec![
+            mk(KernelKind::QuantScalar, rt, 1),
+            mk(KernelKind::QuantVec, rt, 1),
+        ];
+    }
     let mut v = vec![
         mk(KernelKind::PatternScalar, rt, 1),
         mk(KernelKind::PatternVec, rt, 1),
@@ -417,7 +437,7 @@ fn candidates(c: &ConvIR) -> Vec<KernelChoice> {
     v
 }
 
-/// Execute one full layer with `kind`, mirroring the executor's block
+/// Execute one full layer with `kind` through the executor's own block
 /// dispatch (block 0 on the calling thread, the rest on scoped
 /// workers) so the measurement sees the plan's real (layer,
 /// thread-count) shape.
@@ -425,24 +445,19 @@ fn run_layer_once(
     c: &ConvIR,
     lp: &LayerPlan,
     kind: KernelKind,
-    x: Chw<'_>,
+    input: ConvInput<'_>,
+    qacc: &mut [i32],
     out: &mut [f32],
 ) {
     let planes = OutPlanes::new(out, lp.out_hw * lp.out_hw);
-    let k = engine::kernel(kind);
-    if lp.blocks.len() <= 1 {
-        if let Some(b) = lp.blocks.first() {
-            k.run_block(c, lp, b, x, &planes);
-        }
-    } else {
-        std::thread::scope(|s| {
-            for b in &lp.blocks[1..] {
-                let pr = &planes;
-                s.spawn(move || k.run_block(c, lp, b, x, pr));
-            }
-            k.run_block(c, lp, &lp.blocks[0], x, &planes);
-        });
-    }
+    engine::dispatch_blocks(
+        c,
+        lp,
+        engine::kernel(kind),
+        input,
+        qacc,
+        &planes,
+    );
 }
 
 /// Empirical plan-time autotuner for one layer: times every candidate
@@ -458,23 +473,52 @@ pub fn autotune_layer(
     layer: usize,
     cfg: &TuneConfig,
 ) -> LayerTune {
-    let cands = candidates(c);
+    let elem = lp.payload.elem();
+    let cands = candidates(c, elem);
     let mut best_ms = vec![f64::INFINITY; cands.len()];
     let mut rng = Pcg32::new(0x5eed, layer as u64);
     let xdata: Vec<f32> = (0..lp.c * lp.in_hw * lp.in_hw)
         .map(|_| rng.normal())
         .collect();
     let x = Chw::new(lp.c, lp.in_hw, &xdata);
+    let mut qbuf: Vec<i8> = Vec::new();
+    let input = match elem {
+        ElemType::F32 => ConvInput::f32(x),
+        ElemType::I8 => {
+            qbuf.resize(xdata.len(), 0);
+            let scale = engine::quantize_activations(&xdata, &mut qbuf);
+            ConvInput {
+                x,
+                qx: Some(QuantView {
+                    data: &qbuf,
+                    scale,
+                }),
+            }
+        }
+    };
+    let mut qacc = match elem {
+        ElemType::F32 => Vec::new(),
+        ElemType::I8 => {
+            vec![0i32; lp.blocks.len().max(1) * lp.out_hw * lp.out_hw]
+        }
+    };
     let mut out = vec![0.0f32; lp.out_elems()];
     let reps = cfg.reps.max(1);
     for _round in 0..cfg.rounds.max(1) {
         for (ci, cand) in cands.iter().enumerate() {
             lp.choice = *cand;
             // one warm-up pulls the payload and fmap into cache
-            run_layer_once(c, lp, cand.kind, x, &mut out);
+            run_layer_once(c, lp, cand.kind, input, &mut qacc, &mut out);
             let t = Stopwatch::start();
             for _ in 0..reps {
-                run_layer_once(c, lp, cand.kind, x, &mut out);
+                run_layer_once(
+                    c,
+                    lp,
+                    cand.kind,
+                    input,
+                    &mut qacc,
+                    &mut out,
+                );
             }
             let ms = t.ms() / reps as f64;
             if ms < best_ms[ci] {
@@ -633,6 +677,22 @@ mod tests {
         let c2 = filter_exec_cost(&c, 2);
         assert!(c0 > c1 && c1 > c2, "{c0} {c1} {c2}");
         assert_eq!(c2, 64);
+    }
+
+    #[test]
+    fn quantized_choice_projects_onto_quant_kernels() {
+        let ch = KernelChoice {
+            kind: KernelKind::PatternVecTiled,
+            row_tile: 16,
+            fblock: 4,
+            tuned: true,
+        };
+        let q = quantized_choice(ch);
+        assert_eq!(q.kind, KernelKind::QuantVec);
+        assert_eq!(q.row_tile, 16);
+        assert_eq!(q.fblock, 4);
+        assert!(q.tuned);
+        assert_eq!(quantized_choice(q), q);
     }
 
     #[test]

@@ -8,8 +8,11 @@
 //! inference after construction), and conv layers dispatch through the
 //! [`ConvKernel`] registry — a dense reference kernel, the pattern-sparse
 //! scalar kernel consuming the packed payload + row-grouped codelets, a
-//! row-tiled variant, and the width-vectorized [`PatternVec`] /
-//! [`PatternVecTiled`] kernels built on [`super::simd`] (DESIGN.md §12).
+//! row-tiled variant, the width-vectorized [`PatternVec`] /
+//! [`PatternVecTiled`] kernels built on [`super::simd`] (DESIGN.md §12),
+//! and — on quantized plans ([`ElemType::I8`]) — the [`QuantScalar`] /
+//! [`QuantVec`] kernels, which consume i8 taps with exact i32
+//! accumulation and requantize to f32 on the way out (DESIGN.md §14).
 //! Dispatch is either uniform ([`KernelSel::Uniform`]) or per layer
 //! through the [`KernelChoice`](super::costmodel::KernelChoice) the plan
 //! compiler baked into each [`LayerPlan`] ([`KernelSel::Auto`]). Conv
@@ -21,7 +24,11 @@
 //! kernel → row → tap order with identical rounding (no FMA
 //! contraction), so switching kernel kind — including what the
 //! autotuner picks — never changes results bit for bit (property-tested
-//! below).
+//! below). The quantized kernels reach the same guarantee by a
+//! different route: i8×i8→i32 accumulation is exact, so their results
+//! are order-insensitive by arithmetic, and the per-tensor activation
+//! scale is computed sequentially on the calling thread
+//! ([`quantize_activations`]) so it never depends on the thread count.
 //!
 //! Numerics are verified against the PJRT `fwd_eval` artifact in
 //! rust/tests/pjrt_parity.rs (with `--features pjrt`) and against the dense
@@ -35,10 +42,10 @@ use crate::tensor::{Chw, Tensor};
 
 use super::ir::{ConvIR, ModelIR};
 use super::plan::{
-    self, Arena, ExecutionPlan, FilterBlock, LayerPlan, PackedKernel,
-    PlanStep,
+    self, Arena, ElemType, ExecutionPlan, FilterBlock, LayerPlan,
+    PackedKernel, PlanStep,
 };
-use super::simd::axpy_row;
+use super::simd::{axpy_row, qaxpy_row};
 
 pub use super::passes::StyleRows;
 pub use super::plan::same_pad_lo;
@@ -160,9 +167,64 @@ impl<'a> OutPlanes<'a> {
 // Conv kernel registry
 // ---------------------------------------------------------------------------
 
+/// Dynamically quantized view of a layer input: the activations of
+/// [`ConvInput::x`] rounded to i8 with one per-tensor `scale`
+/// (`x ≈ data * scale`). Produced by [`quantize_activations`] on the
+/// calling thread before workers fan out, so the mapping never depends
+/// on the thread count.
+#[derive(Clone, Copy)]
+pub struct QuantView<'a> {
+    pub data: &'a [i8],
+    pub scale: f32,
+}
+
+/// Input handed to a conv kernel: the f32 feature map plus, on
+/// quantized plans, its i8 view. f32 kernels read only `x`; quantized
+/// kernels read only `qx` and panic if it is missing — the executor
+/// pairs kernels with payloads through [`KernelKind::for_elem`], so
+/// the mismatch is unreachable from the public API.
+#[derive(Clone, Copy)]
+pub struct ConvInput<'a> {
+    pub x: Chw<'a>,
+    pub qx: Option<QuantView<'a>>,
+}
+
+impl<'a> ConvInput<'a> {
+    /// f32-only input (no quantized view).
+    pub fn f32(x: Chw<'a>) -> Self {
+        ConvInput { x, qx: None }
+    }
+}
+
+/// Dynamic per-tensor activation quantization: symmetric i8 with
+/// `scale = maxabs / 127` (1.0 for an all-zero map; non-finite values
+/// are ignored for the scale and quantize to 0). Runs sequentially on
+/// the calling thread — the scan order is fixed, so the resulting bytes
+/// (and every downstream integer accumulation) are identical at any
+/// thread or worker count.
+pub(crate) fn quantize_activations(src: &[f32], dst: &mut [i8]) -> f32 {
+    debug_assert_eq!(src.len(), dst.len());
+    let mut maxabs = 0.0f32;
+    for &v in src {
+        let a = v.abs();
+        if a.is_finite() && a > maxabs {
+            maxabs = a;
+        }
+    }
+    let scale = if maxabs > 0.0 { maxabs / 127.0 } else { 1.0 };
+    let inv = 1.0 / scale;
+    for (d, &v) in dst.iter_mut().zip(src) {
+        // saturating float→int cast: NaN lands on 0 deterministically
+        *d = (v * inv).round().clamp(-127.0, 127.0) as i8;
+    }
+    scale
+}
+
 /// A conv inner-loop implementation. Kernels compute complete output
 /// planes (bias fill → accumulate → activation) for every filter of the
 /// block they are handed, so blocks parallelize without a fix-up pass.
+/// `acc` is per-block i32 scratch (at least one output plane) used only
+/// by the quantized kernels; the f32 kernels receive an empty slice.
 pub trait ConvKernel: Sync {
     fn name(&self) -> &'static str;
     fn run_block(
@@ -170,7 +232,8 @@ pub trait ConvKernel: Sync {
         c: &ConvIR,
         lp: &LayerPlan,
         block: &FilterBlock,
-        x: Chw<'_>,
+        input: ConvInput<'_>,
+        acc: &mut [i32],
         out: &OutPlanes<'_>,
     );
 }
@@ -188,8 +251,14 @@ pub enum KernelKind {
     PatternVec,
     /// vectorized codelets plus output-row / filter-group cache tiling
     PatternVecTiled,
+    /// quantized pattern-sparse scalar: i8 taps, exact i32 accumulation
+    QuantScalar,
+    /// quantized pattern-sparse with vectorized widening codelets
+    QuantVec,
 }
 
+/// The f32 kernel kinds — the autotuner's candidate grid on f32 plans
+/// and the set every plan artifact round-trip probes.
 pub const KERNEL_KINDS: [KernelKind; 5] = [
     KernelKind::DenseRef,
     KernelKind::PatternScalar,
@@ -197,6 +266,11 @@ pub const KERNEL_KINDS: [KernelKind; 5] = [
     KernelKind::PatternVec,
     KernelKind::PatternVecTiled,
 ];
+
+/// Kernel kinds that consume i8 payloads; f32 selections land on these
+/// through [`KernelKind::for_elem`] on quantized plans.
+pub const QUANT_KERNEL_KINDS: [KernelKind; 2] =
+    [KernelKind::QuantScalar, KernelKind::QuantVec];
 
 impl KernelKind {
     pub fn name(self) -> &'static str {
@@ -210,11 +284,36 @@ impl KernelKind {
             "tiled" => KernelKind::PatternTiled,
             "vec" => KernelKind::PatternVec,
             "vec-tiled" | "vectiled" => KernelKind::PatternVecTiled,
+            "quant" | "quant-scalar" => KernelKind::QuantScalar,
+            "quant-vec" | "qvec" => KernelKind::QuantVec,
             _ => bail!(
                 "unknown kernel {s:?} \
-                 (dense|scalar|tiled|vec|vec-tiled)"
+                 (dense|scalar|tiled|vec|vec-tiled|quant|quant-vec)"
             ),
         })
+    }
+
+    /// Project a selection onto a kernel that can consume `elem`
+    /// payloads: on i8 plans the vector-shaped f32 kinds land on
+    /// [`KernelKind::QuantVec`] and everything else on
+    /// [`KernelKind::QuantScalar`]; on f32 plans the quantized kinds
+    /// map back to their pattern equivalents. Identity whenever the
+    /// kind already matches the element type, so the f32 path is
+    /// untouched by this hook.
+    pub fn for_elem(self, elem: ElemType) -> Self {
+        match elem {
+            ElemType::F32 => match self {
+                KernelKind::QuantScalar => KernelKind::PatternScalar,
+                KernelKind::QuantVec => KernelKind::PatternVec,
+                k => k,
+            },
+            ElemType::I8 => match self {
+                KernelKind::PatternVec
+                | KernelKind::PatternVecTiled
+                | KernelKind::QuantVec => KernelKind::QuantVec,
+                _ => KernelKind::QuantScalar,
+            },
+        }
     }
 }
 
@@ -257,6 +356,8 @@ static PATTERN_SCALAR: PatternScalar = PatternScalar;
 static PATTERN_TILED: PatternTiled = PatternTiled;
 static PATTERN_VEC: PatternVec = PatternVec;
 static PATTERN_VEC_TILED: PatternVecTiled = PatternVecTiled;
+static QUANT_SCALAR: QuantScalar = QuantScalar;
+static QUANT_VEC: QuantVec = QuantVec;
 
 /// Resolve a kernel implementation from the registry.
 pub fn kernel(kind: KernelKind) -> &'static dyn ConvKernel {
@@ -266,6 +367,8 @@ pub fn kernel(kind: KernelKind) -> &'static dyn ConvKernel {
         KernelKind::PatternTiled => &PATTERN_TILED,
         KernelKind::PatternVec => &PATTERN_VEC,
         KernelKind::PatternVecTiled => &PATTERN_VEC_TILED,
+        KernelKind::QuantScalar => &QUANT_SCALAR,
+        KernelKind::QuantVec => &QUANT_VEC,
     }
 }
 
@@ -292,9 +395,11 @@ impl ConvKernel for DenseRef {
         c: &ConvIR,
         lp: &LayerPlan,
         block: &FilterBlock,
-        x: Chw<'_>,
+        input: ConvInput<'_>,
+        _acc: &mut [i32],
         out: &OutPlanes<'_>,
     ) {
+        let x = input.x;
         let ihw = lp.in_hw as i64;
         let w = c.w.data();
         for &f in &lp.exec_order[block.span.clone()] {
@@ -360,9 +465,12 @@ impl ConvKernel for PatternScalar {
         _c: &ConvIR,
         lp: &LayerPlan,
         block: &FilterBlock,
-        x: Chw<'_>,
+        input: ConvInput<'_>,
+        _acc: &mut [i32],
         out: &OutPlanes<'_>,
     ) {
+        let x = input.x;
+        let payload = lp.payload.f32_taps();
         let ihw = lp.in_hw as i64;
         for &f in &lp.exec_order[block.span.clone()] {
             // Safety: block filters are disjoint across threads.
@@ -370,7 +478,7 @@ impl ConvKernel for PatternScalar {
             o.fill(lp.bias[f]);
             for k in &lp.kernels[lp.filter_ranges[f].clone()] {
                 let xin = x.plane(k.ch as usize);
-                let pay = &lp.payload[k.off as usize..];
+                let pay = &payload[k.off as usize..];
                 for (ky, taps) in &lp.style_rows[k.style as usize] {
                     let dy = *ky as i64 - lp.pad;
                     for oy in 0..lp.out_hw {
@@ -419,9 +527,12 @@ impl ConvKernel for PatternTiled {
         _c: &ConvIR,
         lp: &LayerPlan,
         block: &FilterBlock,
-        x: Chw<'_>,
+        input: ConvInput<'_>,
+        _acc: &mut [i32],
         out: &OutPlanes<'_>,
     ) {
+        let x = input.x;
+        let payload = lp.payload.f32_taps();
         let ihw = lp.in_hw as i64;
         let row_tile = (lp.choice.row_tile as usize).max(1);
         for &f in &lp.exec_order[block.span.clone()] {
@@ -433,7 +544,7 @@ impl ConvKernel for PatternTiled {
                 let oy1 = (oy0 + row_tile).min(lp.out_hw);
                 for k in &lp.kernels[lp.filter_ranges[f].clone()] {
                     let xin = x.plane(k.ch as usize);
-                    let pay = &lp.payload[k.off as usize..];
+                    let pay = &payload[k.off as usize..];
                     for (ky, taps) in &lp.style_rows[k.style as usize] {
                         let dy = *ky as i64 - lp.pad;
                         for oy in oy0..oy1 {
@@ -485,9 +596,10 @@ fn vec_filter(
     oy0: usize,
     oy1: usize,
 ) {
+    let payload = lp.payload.f32_taps();
     for k in kernels {
         let xin = x.plane(k.ch as usize);
-        let pay = &lp.payload[k.off as usize..];
+        let pay = &payload[k.off as usize..];
         for (ky, taps) in &lp.style_rows[k.style as usize] {
             let dy = *ky as i64 - lp.pad;
             for (kx, slot) in taps {
@@ -535,9 +647,11 @@ impl ConvKernel for PatternVec {
         _c: &ConvIR,
         lp: &LayerPlan,
         block: &FilterBlock,
-        x: Chw<'_>,
+        input: ConvInput<'_>,
+        _acc: &mut [i32],
         out: &OutPlanes<'_>,
     ) {
+        let x = input.x;
         let ihw = lp.in_hw as i64;
         for &f in &lp.exec_order[block.span.clone()] {
             // Safety: block filters are disjoint across threads.
@@ -574,9 +688,11 @@ impl ConvKernel for PatternVecTiled {
         _c: &ConvIR,
         lp: &LayerPlan,
         block: &FilterBlock,
-        x: Chw<'_>,
+        input: ConvInput<'_>,
+        _acc: &mut [i32],
         out: &OutPlanes<'_>,
     ) {
+        let x = input.x;
         let ihw = lp.in_hw as i64;
         let row_tile = (lp.choice.row_tile as usize).max(1);
         let fblock = (lp.choice.fblock as usize).max(1);
@@ -615,41 +731,233 @@ impl ConvKernel for PatternVecTiled {
 }
 
 // ---------------------------------------------------------------------------
+// Quantized kernels
+// ---------------------------------------------------------------------------
+
+/// Requantize one accumulated i32 plane into its f32 output plane:
+/// `o = acc * s + b`, then the activation epilogue. `s` folds the
+/// filter's weight scale and the input's activation scale.
+#[inline]
+fn requantize_plane(o: &mut [f32], acc: &[i32], s: f32, b: f32, act: Act) {
+    for (ov, &av) in o.iter_mut().zip(acc) {
+        *ov = av as f32 * s + b;
+    }
+    finish_plane(act, o);
+}
+
+/// Quantized pattern-sparse scalar kernel: the same packed-payload walk
+/// as [`PatternScalar`], but taps are i8, products accumulate exactly
+/// in the per-block i32 scratch, and each finished plane is requantized
+/// to f32 in one pass (`acc * weight_scale * input_scale + bias`).
+/// Exact integer accumulation makes the result independent of
+/// evaluation order, so bit-reproducibility holds by arithmetic rather
+/// than by ordering discipline (DESIGN.md §14).
+pub struct QuantScalar;
+
+impl ConvKernel for QuantScalar {
+    fn name(&self) -> &'static str {
+        "quant-scalar"
+    }
+
+    fn run_block(
+        &self,
+        _c: &ConvIR,
+        lp: &LayerPlan,
+        block: &FilterBlock,
+        input: ConvInput<'_>,
+        acc: &mut [i32],
+        out: &OutPlanes<'_>,
+    ) {
+        let q = input
+            .qx
+            .expect("quantized kernel dispatched without an i8 input");
+        let (taps, scales) = lp.payload.i8_taps();
+        let ihw = lp.in_hw as i64;
+        let ihw_sq = lp.in_hw * lp.in_hw;
+        let plane = lp.out_hw * lp.out_hw;
+        let acc = &mut acc[..plane];
+        for &f in &lp.exec_order[block.span.clone()] {
+            acc.fill(0);
+            for k in &lp.kernels[lp.filter_ranges[f].clone()] {
+                let ch = k.ch as usize;
+                let xin = &q.data[ch * ihw_sq..(ch + 1) * ihw_sq];
+                let pay = &taps[k.off as usize..];
+                for (ky, row) in &lp.style_rows[k.style as usize] {
+                    let dy = *ky as i64 - lp.pad;
+                    for oy in 0..lp.out_hw {
+                        let iy = (oy * lp.stride) as i64 + dy;
+                        if iy < 0 || iy >= ihw {
+                            continue;
+                        }
+                        let irow = iy as usize * lp.in_hw;
+                        let orow = oy * lp.out_hw;
+                        for (kx, slot) in row {
+                            let wv = pay[*slot] as i32;
+                            let dx = *kx as i64 - lp.pad;
+                            let (ox0, ox1) =
+                                x_range(lp.out_hw, lp.stride, dx, ihw);
+                            let mut ix = (ox0 * lp.stride) as i64 + dx;
+                            for ox in ox0..ox1 {
+                                acc[orow + ox] +=
+                                    wv * xin[irow + ix as usize] as i32;
+                                ix += lp.stride as i64;
+                            }
+                        }
+                    }
+                }
+            }
+            // Safety: block filters are disjoint across threads.
+            let o = unsafe { out.plane_mut(f) };
+            requantize_plane(
+                o,
+                acc,
+                scales[f] * q.scale,
+                lp.bias[f],
+                lp.act,
+            );
+        }
+    }
+}
+
+/// Quantized vectorized kernel: the [`QuantScalar`] walk with each tap
+/// streamed as a widening [`qaxpy_row`] codelet over the i32 scratch
+/// (and the row-invariant output-x window hoisted per tap, as in
+/// [`vec_filter`]). Same bits as [`QuantScalar`] for free: integer
+/// accumulation is exact, so vector shape cannot change results.
+pub struct QuantVec;
+
+impl ConvKernel for QuantVec {
+    fn name(&self) -> &'static str {
+        "quant-vec"
+    }
+
+    fn run_block(
+        &self,
+        _c: &ConvIR,
+        lp: &LayerPlan,
+        block: &FilterBlock,
+        input: ConvInput<'_>,
+        acc: &mut [i32],
+        out: &OutPlanes<'_>,
+    ) {
+        let q = input
+            .qx
+            .expect("quantized kernel dispatched without an i8 input");
+        let (taps, scales) = lp.payload.i8_taps();
+        let ihw = lp.in_hw as i64;
+        let ihw_sq = lp.in_hw * lp.in_hw;
+        let plane = lp.out_hw * lp.out_hw;
+        let acc = &mut acc[..plane];
+        for &f in &lp.exec_order[block.span.clone()] {
+            acc.fill(0);
+            for k in &lp.kernels[lp.filter_ranges[f].clone()] {
+                let ch = k.ch as usize;
+                let xin = &q.data[ch * ihw_sq..(ch + 1) * ihw_sq];
+                let pay = &taps[k.off as usize..];
+                for (ky, row) in &lp.style_rows[k.style as usize] {
+                    let dy = *ky as i64 - lp.pad;
+                    for (kx, slot) in row {
+                        let wv = pay[*slot] as i32;
+                        let dx = *kx as i64 - lp.pad;
+                        let (ox0, ox1) =
+                            x_range(lp.out_hw, lp.stride, dx, ihw);
+                        if ox0 >= ox1 {
+                            continue;
+                        }
+                        for oy in 0..lp.out_hw {
+                            let iy = (oy * lp.stride) as i64 + dy;
+                            if iy < 0 || iy >= ihw {
+                                continue;
+                            }
+                            let irow = iy as usize * lp.in_hw;
+                            let orow = oy * lp.out_hw;
+                            let ix0 = (irow as i64
+                                + (ox0 * lp.stride) as i64
+                                + dx) as usize;
+                            qaxpy_row(
+                                &mut acc[orow + ox0..orow + ox1],
+                                &xin[ix0..],
+                                wv,
+                                lp.stride,
+                            );
+                        }
+                    }
+                }
+            }
+            // Safety: block filters are disjoint across threads.
+            let o = unsafe { out.plane_mut(f) };
+            requantize_plane(
+                o,
+                acc,
+                scales[f] * q.scale,
+                lp.bias[f],
+                lp.act,
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Executor
 // ---------------------------------------------------------------------------
 
-/// Run one conv layer: dispatch the plan's filter blocks to the kernel
-/// (`forced`, or the layer's baked
-/// [`KernelChoice`](super::costmodel::KernelChoice) when `forced` is
-/// `None`),
-/// spawning scoped workers when the plan was compiled for multiple
-/// threads. Block 0 always runs on the calling thread.
+/// Dispatch one layer's filter blocks to `k`, spawning scoped workers
+/// for blocks past the first (block 0 always runs on the calling
+/// thread). Quantized kernels receive disjoint `qacc.len() / blocks`
+/// i32 scratch chunks — each at least one output plane, because the
+/// arena sizes `qacc` as `threads × max_plane` and the plan never
+/// builds more blocks than threads. f32 kernels receive (and ignore)
+/// empty scratch.
+pub(crate) fn dispatch_blocks(
+    c: &ConvIR,
+    lp: &LayerPlan,
+    k: &'static dyn ConvKernel,
+    input: ConvInput<'_>,
+    qacc: &mut [i32],
+    planes: &OutPlanes<'_>,
+) {
+    if lp.blocks.len() <= 1 {
+        if let Some(b) = lp.blocks.first() {
+            k.run_block(c, lp, b, input, qacc, planes);
+        }
+        return;
+    }
+    let per = (qacc.len() / lp.blocks.len()).max(1);
+    std::thread::scope(|s| {
+        // `&mut []` is 'static by const promotion — the empty default
+        // when qacc itself is empty (f32 dispatch)
+        let mut chunks = qacc.chunks_mut(per);
+        let acc0 = chunks.next().unwrap_or(&mut []);
+        for b in &lp.blocks[1..] {
+            let acc = chunks.next().unwrap_or(&mut []);
+            s.spawn(move || k.run_block(c, lp, b, input, acc, planes));
+        }
+        k.run_block(c, lp, &lp.blocks[0], input, acc0, planes);
+    });
+}
+
+/// Run one conv layer: resolve the kernel kind (`forced`, or the
+/// layer's baked [`KernelChoice`](super::costmodel::KernelChoice) when
+/// `forced` is `None`), project it onto the layer's element type via
+/// [`KernelKind::for_elem`], and dispatch the plan's filter blocks.
 fn run_conv(
     p: &ExecutionPlan,
-    forced: Option<&'static dyn ConvKernel>,
+    forced: Option<KernelKind>,
     layer: usize,
-    x: Chw<'_>,
+    input: ConvInput<'_>,
+    qacc: &mut [i32],
     out: &mut [f32],
 ) {
     let lp = &p.layers[layer];
-    let kernel = forced.unwrap_or_else(|| kernel(lp.choice.kind));
+    let kind = forced
+        .unwrap_or(lp.choice.kind)
+        .for_elem(lp.payload.elem());
+    let k = kernel(kind);
     let c = &p.ir.convs[lp.conv];
     let plane = lp.out_hw * lp.out_hw;
     debug_assert!(out.len() >= lp.a * plane);
     let planes = OutPlanes::new(out, plane);
-    if lp.blocks.len() <= 1 {
-        if let Some(b) = lp.blocks.first() {
-            kernel.run_block(c, lp, b, x, &planes);
-        }
-    } else {
-        std::thread::scope(|s| {
-            for b in &lp.blocks[1..] {
-                let pr = &planes;
-                s.spawn(move || kernel.run_block(c, lp, b, x, pr));
-            }
-            kernel.run_block(c, lp, &lp.blocks[0], x, &planes);
-        });
-    }
+    dispatch_blocks(c, lp, k, input, qacc, &planes);
 }
 
 fn max_pool2(x: Chw<'_>, out: &mut [f32]) {
@@ -676,8 +984,10 @@ fn max_pool2(x: Chw<'_>, out: &mut [f32]) {
 /// tests with a counting global allocator).
 pub struct Executor<'p> {
     plan: &'p ExecutionPlan,
-    /// `None` = auto: per-layer dispatch through the plan's choices
-    kernel: Option<&'static dyn ConvKernel>,
+    /// `None` = auto: per-layer dispatch through the plan's choices.
+    /// Projected onto the plan's element type at dispatch time, so any
+    /// selection is valid on any plan.
+    kernel: Option<KernelKind>,
     arena: Arena,
 }
 
@@ -694,7 +1004,7 @@ impl<'p> Executor<'p> {
 
     pub fn with_sel(plan: &'p ExecutionPlan, sel: KernelSel) -> Self {
         let forced = match sel {
-            KernelSel::Uniform(kind) => Some(kernel(kind)),
+            KernelSel::Uniform(kind) => Some(kind),
             KernelSel::Auto => None,
         };
         Executor {
@@ -708,9 +1018,11 @@ impl<'p> Executor<'p> {
         self.plan
     }
 
+    /// Name of the kernel that actually runs (the forced selection
+    /// projected onto the plan's element type), or `"auto"`.
     pub fn kernel_name(&self) -> &'static str {
         match self.kernel {
-            Some(k) => k.name(),
+            Some(k) => k.for_elem(self.plan.elem).name(),
             None => "auto",
         }
     }
@@ -772,16 +1084,26 @@ impl<'p> Executor<'p> {
                     } else {
                         (&a.pong, &mut a.ping)
                     };
-                    let x = Chw::new(
-                        lp.c,
-                        lp.in_hw,
-                        src.slice(lp.c * lp.in_hw * lp.in_hw),
-                    );
+                    let n = lp.c * lp.in_hw * lp.in_hw;
+                    let x = Chw::new(lp.c, lp.in_hw, src.slice(n));
+                    let qx = if p.elem == ElemType::I8 {
+                        let scale = quantize_activations(
+                            x.data,
+                            &mut a.qin[..n],
+                        );
+                        Some(QuantView {
+                            data: &a.qin[..n],
+                            scale,
+                        })
+                    } else {
+                        None
+                    };
                     run_conv(
                         p,
                         kernel,
                         *layer,
-                        x,
+                        ConvInput { x, qx },
+                        &mut a.qacc,
                         dst.slice_mut(lp.out_elems()),
                     );
                     cur_ping = !cur_ping;
@@ -805,16 +1127,27 @@ impl<'p> Executor<'p> {
                 }
                 PlanStep::Proj { layer, slot } => {
                     let lp = &p.layers[*layer];
-                    let x = Chw::new(
-                        lp.c,
-                        lp.in_hw,
-                        a.slots[*slot].slice(lp.c * lp.in_hw * lp.in_hw),
-                    );
+                    let n = lp.c * lp.in_hw * lp.in_hw;
+                    let x =
+                        Chw::new(lp.c, lp.in_hw, a.slots[*slot].slice(n));
+                    let qx = if p.elem == ElemType::I8 {
+                        let scale = quantize_activations(
+                            x.data,
+                            &mut a.qin[..n],
+                        );
+                        Some(QuantView {
+                            data: &a.qin[..n],
+                            scale,
+                        })
+                    } else {
+                        None
+                    };
                     run_conv(
                         p,
                         kernel,
                         *layer,
-                        x,
+                        ConvInput { x, qx },
+                        &mut a.qacc,
                         a.proj_scratch.slice_mut(lp.out_elems()),
                     );
                     let n = lp.out_elems();
@@ -1040,6 +1373,9 @@ mod tests {
         for kind in KERNEL_KINDS {
             assert_eq!(kernel(kind).name(), kind.name());
         }
+        for kind in QUANT_KERNEL_KINDS {
+            assert_eq!(kernel(kind).name(), kind.name());
+        }
         assert_eq!(
             KernelKind::parse("sparse").unwrap(),
             KernelKind::PatternScalar
@@ -1048,12 +1384,47 @@ mod tests {
             KernelKind::parse("tiled").unwrap(),
             KernelKind::PatternTiled
         );
+        assert_eq!(
+            KernelKind::parse("quant").unwrap(),
+            KernelKind::QuantScalar
+        );
+        assert_eq!(
+            KernelKind::parse("quant-vec").unwrap(),
+            KernelKind::QuantVec
+        );
         assert!(KernelKind::parse("simd").is_err());
         assert_eq!(EngineKind::Dense.kernel(), KernelKind::DenseRef);
         assert_eq!(EngineKind::Sparse.kernel(), KernelKind::PatternScalar);
+        // element projection: identity on matching elem, total otherwise
+        for kind in KERNEL_KINDS {
+            assert_eq!(kind.for_elem(ElemType::F32), kind);
+            let qk = kind.for_elem(ElemType::I8);
+            assert!(
+                QUANT_KERNEL_KINDS.contains(&qk),
+                "{kind:?} -> {qk:?}"
+            );
+        }
+        assert_eq!(
+            KernelKind::PatternVec.for_elem(ElemType::I8),
+            KernelKind::QuantVec
+        );
+        assert_eq!(
+            KernelKind::DenseRef.for_elem(ElemType::I8),
+            KernelKind::QuantScalar
+        );
+        assert_eq!(
+            KernelKind::QuantVec.for_elem(ElemType::F32),
+            KernelKind::PatternVec
+        );
+        assert_eq!(
+            KernelKind::QuantScalar.for_elem(ElemType::F32),
+            KernelKind::PatternScalar
+        );
     }
 
-    /// Run `kind` over every block of a standalone layer plan.
+    /// Run `kind` (projected onto the layer's element type) over every
+    /// block of a standalone layer plan, quantizing the input when the
+    /// payload is i8.
     fn run_kernel_full(
         kind: KernelKind,
         c: &ConvIR,
@@ -1061,10 +1432,24 @@ mod tests {
         x: Chw<'_>,
     ) -> Vec<f32> {
         let mut out = vec![0.0f32; lp.out_elems()];
-        let planes = OutPlanes::new(&mut out, lp.out_hw * lp.out_hw);
-        let k = kernel(kind);
+        let plane = lp.out_hw * lp.out_hw;
+        let planes = OutPlanes::new(&mut out, plane);
+        let mut qbuf = vec![0i8; x.data.len()];
+        let qx = match lp.payload.elem() {
+            ElemType::F32 => None,
+            ElemType::I8 => {
+                let scale = quantize_activations(x.data, &mut qbuf);
+                Some(QuantView {
+                    data: &qbuf,
+                    scale,
+                })
+            }
+        };
+        let input = ConvInput { x, qx };
+        let mut acc = vec![0i32; plane];
+        let k = kernel(kind.for_elem(lp.payload.elem()));
         for b in &lp.blocks {
-            k.run_block(c, lp, b, x, &planes);
+            k.run_block(c, lp, b, input, &mut acc, &planes);
         }
         out
     }
@@ -1203,6 +1588,71 @@ mod tests {
                             "{:?} bit-drifts at {i}: {ge:?} vs {we:?} \
                              (rt={} fb={} k={ksz} s={stride} hw={in_hw})",
                             kind, lp.choice.row_tile, lp.choice.fblock
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Property (DESIGN.md §14): the quantized kernels agree bit for
+    /// bit with each other — exact i32 accumulation makes the result
+    /// order-free, so vector shape cannot drift — and track the f32
+    /// dense reference within the per-filter rounding bound
+    /// `ntaps(f) · 127 · w_scale(f) · x_scale` (half-ulp weight and
+    /// activation rounding per tap), with slack for the f32
+    /// requantize multiply.
+    #[test]
+    fn prop_quant_kernels_bit_identical_and_track_f32() {
+        check("quant-kernels", 4242, 50, 8, |g| {
+            let ksz = if g.rng.below(2) == 0 { 1 } else { 3 };
+            let stride = 1 + g.rng.below(2);
+            let a = g.dim_up_to(6);
+            let cch = g.dim_up_to(4);
+            let in_hw = 2 + g.rng.below(20);
+            let c = random_pruned_conv(g.rng, a, cch, ksz, stride, in_hw);
+            let threads = 1 + g.rng.below(3);
+            let lp = LayerPlan::for_conv(&c, threads);
+            let mut qlp = LayerPlan::for_conv(&c, threads);
+            qlp.quantize();
+            let xdata = g.vec_f32(cch * in_hw * in_hw);
+            let x = Chw::new(cch, in_hw, &xdata);
+            let dense = run_kernel_full(KernelKind::DenseRef, &c, &lp, x);
+            let qs =
+                run_kernel_full(KernelKind::QuantScalar, &c, &qlp, x);
+            let qv = run_kernel_full(KernelKind::QuantVec, &c, &qlp, x);
+            for (i, (sv, vv)) in qs.iter().zip(&qv).enumerate() {
+                if sv.to_bits() != vv.to_bits() {
+                    return Err(format!(
+                        "quant-vec bit-drifts at {i}: {vv:?} vs {sv:?} \
+                         (k={ksz} s={stride} a={a} c={cch} hw={in_hw})"
+                    ));
+                }
+            }
+            let mut xmax = 0.0f32;
+            for &v in &xdata {
+                xmax = xmax.max(v.abs());
+            }
+            let x_scale = if xmax > 0.0 { xmax / 127.0 } else { 1.0 };
+            let (_, scales) = qlp.payload.i8_taps();
+            let plane = qlp.out_hw * qlp.out_hw;
+            for f in 0..a {
+                let mut ntaps = 0usize;
+                for k in &qlp.kernels[qlp.filter_ranges[f].clone()] {
+                    ntaps += qlp.styles[k.style as usize].count_ones()
+                        as usize;
+                }
+                let bound = ntaps as f32 * 127.0 * scales[f] * x_scale
+                    * 1.5
+                    + 1e-4;
+                for i in 0..plane {
+                    let d = (qs[f * plane + i] - dense[f * plane + i])
+                        .abs();
+                    if d > bound {
+                        return Err(format!(
+                            "filter {f} elem {i}: |Δ|={d} > {bound} \
+                             (ntaps={ntaps})"
                         ));
                     }
                 }

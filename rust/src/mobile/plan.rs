@@ -37,6 +37,92 @@ pub fn same_pad_lo(in_hw: usize, k: usize, stride: usize) -> (usize, i64) {
     (out, (pad_total / 2) as i64)
 }
 
+/// Element representation of the packed payload (DESIGN.md §14). `F32`
+/// is the bit-exact default; `I8` stores symmetric per-filter-quantized
+/// taps with an `f32` scale table and executes with exact `i32`
+/// accumulation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElemType {
+    F32,
+    I8,
+}
+
+impl ElemType {
+    pub fn name(self) -> &'static str {
+        match self {
+            ElemType::F32 => "f32",
+            ElemType::I8 => "i8",
+        }
+    }
+}
+
+/// A layer's packed taps, generic over element representation. The
+/// variants deliberately share the slot layout — `taps[k.off + slot]`
+/// addresses the same logical weight in both — so every kernel walks
+/// identical codelets and only the element arithmetic differs.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// full-precision taps (the packing pass output, byte-for-byte the
+    /// pre-refactor `Vec<f32>` payload)
+    F32(Vec<f32>),
+    /// symmetric per-filter quantization: `w ≈ taps as f32 * scales[f]`
+    /// where `f` is the filter owning the kernel the tap belongs to
+    I8 { taps: Vec<i8>, scales: Vec<f32> },
+}
+
+impl Payload {
+    /// Tap count (element layout is identical across representations).
+    pub fn len(&self) -> usize {
+        match self {
+            Payload::F32(v) => v.len(),
+            Payload::I8 { taps, .. } => taps.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn elem(&self) -> ElemType {
+        match self {
+            Payload::F32(_) => ElemType::F32,
+            Payload::I8 { .. } => ElemType::I8,
+        }
+    }
+
+    /// Serialized footprint: 4 bytes per f32 tap, or 1 byte per i8 tap
+    /// plus 4 per per-filter scale.
+    pub fn bytes(&self) -> usize {
+        match self {
+            Payload::F32(v) => 4 * v.len(),
+            Payload::I8 { taps, scales } => taps.len() + 4 * scales.len(),
+        }
+    }
+
+    /// Full-precision taps. Panics on a quantized payload — the executor
+    /// maps every kernel selection onto the plan's element type, so an
+    /// f32 kernel can never be dispatched on an i8 plan.
+    pub fn f32_taps(&self) -> &[f32] {
+        match self {
+            Payload::F32(v) => v,
+            Payload::I8 { .. } => {
+                panic!("f32 tap view requested on an i8 payload")
+            }
+        }
+    }
+
+    /// Quantized taps plus the per-filter scale table (panics on f32,
+    /// mirroring [`Payload::f32_taps`]).
+    pub fn i8_taps(&self) -> (&[i8], &[f32]) {
+        match self {
+            Payload::I8 { taps, scales } => (taps, scales),
+            Payload::F32(_) => {
+                panic!("i8 tap view requested on an f32 payload")
+            }
+        }
+    }
+}
+
 /// Header of one kept kernel in a layer's packed payload buffer: channel,
 /// pattern-style index, and the offset of its taps in
 /// [`LayerPlan::payload`]. The payload length is implicit — it equals the
@@ -74,7 +160,7 @@ pub struct LayerPlan {
     pub act: Act,
     pub bias: Vec<f32>,
     /// all kept kernels' taps, packed back to back
-    pub payload: Vec<f32>,
+    pub payload: Payload,
     /// kept-kernel headers, grouped per filter
     pub kernels: Vec<PackedKernel>,
     /// per original filter index: its span in `kernels`
@@ -149,7 +235,7 @@ impl LayerPlan {
             pad,
             act: c.act,
             bias: comp.bias.clone(),
-            payload,
+            payload: Payload::F32(payload),
             kernels,
             filter_ranges,
             styles,
@@ -170,6 +256,46 @@ impl LayerPlan {
 
     pub fn out_elems(&self) -> usize {
         self.a * self.out_hw * self.out_hw
+    }
+
+    /// Post-training symmetric per-filter quantization of the packed
+    /// payload (DESIGN.md §14): per filter, `scale = maxabs / 127` over
+    /// all of its kept taps (1.0 for an all-zero filter so requantize
+    /// never divides by zero), and every tap becomes
+    /// `round(w / scale)` clamped to ±127. `f32::round` ties away from
+    /// zero deterministically, so the scale table and the i8 taps are a
+    /// pure function of the f32 payload. No-op on an already-quantized
+    /// payload.
+    pub fn quantize(&mut self) {
+        let Payload::F32(taps) = &self.payload else {
+            return;
+        };
+        let mut scales = vec![1.0f32; self.a];
+        for (f, r) in self.filter_ranges.iter().enumerate() {
+            let mut maxabs = 0.0f32;
+            for k in &self.kernels[r.clone()] {
+                let n = self.styles[k.style as usize].count_ones() as usize;
+                for &v in &taps[k.off as usize..k.off as usize + n] {
+                    maxabs = maxabs.max(v.abs());
+                }
+            }
+            if maxabs > 0.0 {
+                scales[f] = maxabs / 127.0;
+            }
+        }
+        let mut q = vec![0i8; taps.len()];
+        for (f, r) in self.filter_ranges.iter().enumerate() {
+            let inv = 1.0 / scales[f];
+            for k in &self.kernels[r.clone()] {
+                let n = self.styles[k.style as usize].count_ones() as usize;
+                let off = k.off as usize;
+                for i in 0..n {
+                    let v = (taps[off + i] * inv).round();
+                    q[off + i] = v.clamp(-127.0, 127.0) as i8;
+                }
+            }
+        }
+        self.payload = Payload::I8 { taps: q, scales };
     }
 }
 
@@ -289,6 +415,9 @@ pub struct ExecutionPlan {
     /// channel count entering Gap
     pub gap_len: usize,
     pub threads: usize,
+    /// element representation of every layer payload (`F32` unless the
+    /// quantize pass ran)
+    pub elem: ElemType,
     pub report: CompileReport,
     pub stats: PlanStats,
 }
@@ -296,6 +425,20 @@ pub struct ExecutionPlan {
 impl ExecutionPlan {
     pub fn classes(&self) -> usize {
         self.ir.classes
+    }
+
+    /// i32 accumulator elements one worker block needs for the widest
+    /// conv output plane (0 on f32 plans — the arena sizes its quantized
+    /// scratch from this, so the f32 path carries no extra footprint).
+    pub fn qacc_elems(&self) -> usize {
+        if self.elem == ElemType::F32 {
+            return 0;
+        }
+        self.layers
+            .iter()
+            .map(|l| l.out_hw * l.out_hw)
+            .max()
+            .unwrap_or(0)
     }
 
     /// Structural integrity check for plans that did not come out of
@@ -408,6 +551,26 @@ impl ExecutionPlan {
                 let taps = lp.styles[style].count_ones() as usize;
                 if k.off as usize + taps > lp.payload.len() {
                     bail!("layer {li}: kernel payload out of bounds");
+                }
+            }
+            // the executor prepares quantized inputs iff plan.elem says
+            // so; a layer disagreeing would hand an f32 kernel an i8
+            // payload (or starve a quant kernel of its input view)
+            if lp.payload.elem() != self.elem {
+                bail!(
+                    "layer {li}: payload is {} but the plan is {}",
+                    lp.payload.elem().name(),
+                    self.elem.name()
+                );
+            }
+            if let Payload::I8 { scales, .. } = &lp.payload {
+                if scales.len() != lp.a {
+                    bail!("layer {li}: scale table arity != {} filters", lp.a);
+                }
+                // requantization multiplies by scale; non-finite or
+                // non-positive scales could only come from corruption
+                if !scales.iter().all(|s| s.is_finite() && *s > 0.0) {
+                    bail!("layer {li}: non-positive quantization scale");
                 }
             }
         }
@@ -563,6 +726,7 @@ impl ExecutionPlan {
 pub struct PassManager {
     threads: usize,
     tune: Option<TuneConfig>,
+    quantize: bool,
 }
 
 impl PassManager {
@@ -570,6 +734,7 @@ impl PassManager {
         PassManager {
             threads: threads.max(1),
             tune: None,
+            quantize: false,
         }
     }
 
@@ -577,6 +742,16 @@ impl PassManager {
     /// ([`costmodel::autotune_layer`]) as a final compile pass.
     pub fn with_tuning(mut self, cfg: TuneConfig) -> Self {
         self.tune = Some(cfg);
+        self
+    }
+
+    /// Enable the post-training INT8 quantization pass
+    /// ([`LayerPlan::quantize`]): per-filter scale tables are computed
+    /// at compile time, every layer's baked kernel choice is remapped
+    /// onto the quantized codelets, and (when tuning is also enabled)
+    /// the autotuner races the quantized candidate grid.
+    pub fn with_quantize(mut self) -> Self {
+        self.quantize = true;
         self
     }
 
@@ -627,6 +802,21 @@ impl PassManager {
             .collect();
         pass_ms.push(("pack+rowgroup", t.ms()));
 
+        // quantization runs after packing (it rewrites the packed taps
+        // in place) and before autotuning (the tuner must race the
+        // payload the executor will actually stream)
+        let elem = if self.quantize {
+            let t = Stopwatch::start();
+            for lp in layers.iter_mut() {
+                lp.quantize();
+                lp.choice = costmodel::quantized_choice(lp.choice);
+            }
+            pass_ms.push(("quantize", t.ms()));
+            ElemType::I8
+        } else {
+            ElemType::F32
+        };
+
         // empirical kernel autotuning runs last: it needs the packed
         // payload and the thread-block partition exactly as the
         // executor will see them
@@ -651,7 +841,7 @@ impl PassManager {
         let report = CompileReport::build(&ir, &compressed, &orders);
 
         let payload_bytes: usize =
-            layers.iter().map(|l| 4 * l.payload.len()).sum();
+            layers.iter().map(|l| l.payload.bytes()).sum();
         let header_bytes: usize = layers
             .iter()
             .map(|l| std::mem::size_of::<PackedKernel>() * l.kernels.len())
@@ -681,6 +871,7 @@ impl PassManager {
                 proj_scratch_elems: sched.proj_scratch_elems,
                 gap_len: sched.gap_len,
                 threads: self.threads,
+                elem,
                 report,
                 stats,
             },
@@ -708,6 +899,16 @@ pub fn compile_plan_tuned(
         .with_tuning(cfg)
         .compile_reported(ir)?;
     Ok((plan, report.unwrap_or_default()))
+}
+
+/// Compile with post-training INT8 quantization: per-filter scale
+/// tables baked at compile time, quantized codelets resolved, the
+/// payload ~4x smaller than [`compile_plan`]'s.
+pub fn compile_plan_quant(
+    ir: ModelIR,
+    threads: usize,
+) -> Result<ExecutionPlan> {
+    PassManager::new(threads).with_quantize().compile(ir)
 }
 
 struct Schedule {
@@ -867,10 +1068,21 @@ pub struct Arena {
     pub slots: Vec<ScratchBuf>,
     pub proj_scratch: ScratchBuf,
     pub gap: ScratchBuf,
+    /// quantized-activation scratch (one i8 per fmap element; empty on
+    /// f32 plans). Sized once here and sliced per conv step, so the
+    /// quantized path keeps the zero-alloc invariant.
+    pub qin: Vec<i8>,
+    /// i32 accumulator planes, one max-sized plane per worker block
+    /// (empty on f32 plans)
+    pub qacc: Vec<i32>,
 }
 
 impl Arena {
     pub fn for_plan(p: &ExecutionPlan) -> Self {
+        let qin_elems = match p.elem {
+            ElemType::F32 => 0,
+            ElemType::I8 => p.fmap_elems,
+        };
         Arena {
             ping: ScratchBuf::with_len(p.fmap_elems),
             pong: ScratchBuf::with_len(p.fmap_elems),
@@ -881,6 +1093,8 @@ impl Arena {
                 .collect(),
             proj_scratch: ScratchBuf::with_len(p.proj_scratch_elems),
             gap: ScratchBuf::with_len(p.gap_len),
+            qin: vec![0; qin_elems],
+            qacc: vec![0; p.threads.max(1) * p.qacc_elems()],
         }
     }
 
@@ -948,8 +1162,8 @@ mod tests {
                 let k = lp.kernels[lp.filter_ranges[f].start + i];
                 assert_eq!(k.ch, *ch);
                 assert_eq!(k.style, *style);
-                let got =
-                    &lp.payload[k.off as usize..k.off as usize + taps.len()];
+                let got = &lp.payload.f32_taps()
+                    [k.off as usize..k.off as usize + taps.len()];
                 assert_eq!(got, taps.as_slice());
                 n += 1;
             }
@@ -957,6 +1171,96 @@ mod tests {
         assert_eq!(n, lp.kernels.len());
         assert_eq!(lp.styles, comp.styles);
         assert_eq!(lp.style_rows.len(), lp.styles.len());
+    }
+
+    #[test]
+    fn quantize_builds_per_filter_scales_and_shrinks_payload() {
+        let c = mk_conv(6, 4, &[0b000011011, 0b110110000, 0]);
+        let mut lp = LayerPlan::for_conv(&c, 2);
+        let f32_taps = lp.payload.f32_taps().to_vec();
+        let f32_bytes = lp.payload.bytes();
+        lp.quantize();
+        assert_eq!(lp.payload.elem(), ElemType::I8);
+        assert_eq!(lp.payload.len(), f32_taps.len());
+        // 1 byte/tap + 4 bytes/filter scale vs 4 bytes/tap
+        assert_eq!(lp.payload.bytes(), f32_taps.len() + 4 * lp.a);
+        assert!(lp.payload.bytes() * 10 <= f32_bytes * 3 + 40 * lp.a);
+        let (q, scales) = lp.payload.i8_taps();
+        assert_eq!(scales.len(), lp.a);
+        for (f, r) in lp.filter_ranges.iter().enumerate() {
+            // scale = maxabs/127 over the filter's kept taps (1.0 when
+            // the filter kept nothing)
+            let mut maxabs = 0.0f32;
+            for k in &lp.kernels[r.clone()] {
+                let n = lp.styles[k.style as usize].count_ones() as usize;
+                for &v in &f32_taps[k.off as usize..k.off as usize + n] {
+                    maxabs = maxabs.max(v.abs());
+                }
+            }
+            if maxabs > 0.0 {
+                assert_eq!(scales[f], maxabs / 127.0, "filter {f}");
+            } else {
+                assert_eq!(scales[f], 1.0, "filter {f}");
+            }
+            // dequantized taps are within half a step of the original
+            for k in &lp.kernels[r.clone()] {
+                let n = lp.styles[k.style as usize].count_ones() as usize;
+                for i in 0..n {
+                    let idx = k.off as usize + i;
+                    let back = q[idx] as f32 * scales[f];
+                    assert!(
+                        (back - f32_taps[idx]).abs() <= scales[f] * 0.5,
+                        "tap {idx}: {} -> {back}",
+                        f32_taps[idx]
+                    );
+                }
+            }
+        }
+        // idempotent: a second call is a no-op
+        let snapshot = q.to_vec();
+        lp.quantize();
+        assert_eq!(lp.payload.i8_taps().0, snapshot.as_slice());
+    }
+
+    #[test]
+    fn quantized_plans_compile_validate_and_report_small_payloads() {
+        use super::super::synth;
+        // wide enough that taps dominate the 4-byte-per-filter scale
+        // tables, as on any real model (the ≤0.3x criterion)
+        let (spec, mut params) =
+            synth::vgg_style("q", 16, 5, &[24, 32], 4);
+        synth::pattern_prune(&spec, &mut params, 0.25);
+        let ir = ModelIR::build(&spec, &params).unwrap();
+        let f32_plan = compile_plan(ir.clone(), 2).unwrap();
+        let q_plan = compile_plan_quant(ir, 2).unwrap();
+        q_plan.validate().unwrap();
+        assert_eq!(q_plan.elem, ElemType::I8);
+        assert!(q_plan.qacc_elems() > 0);
+        assert_eq!(f32_plan.qacc_elems(), 0);
+        // acceptance criterion: quantized payload ≤ 0.3x of the f32 plan
+        assert!(
+            q_plan.stats.payload_bytes * 10
+                <= f32_plan.stats.payload_bytes * 3,
+            "i8 payload {} vs f32 {}",
+            q_plan.stats.payload_bytes,
+            f32_plan.stats.payload_bytes
+        );
+        // a layer whose elem disagrees with the plan must be rejected
+        let mut bad = q_plan.clone();
+        bad.layers[0].payload =
+            Payload::F32(vec![0.0; bad.layers[0].payload.len()]);
+        assert!(bad.validate().is_err());
+        // corrupt scale tables must be rejected
+        let mut bad = q_plan.clone();
+        if let Payload::I8 { scales, .. } = &mut bad.layers[0].payload {
+            scales[0] = -1.0;
+        }
+        assert!(bad.validate().is_err());
+        let mut bad = q_plan;
+        if let Payload::I8 { scales, .. } = &mut bad.layers[0].payload {
+            scales.pop();
+        }
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -119,6 +119,32 @@ pub fn axpy_row(o: &mut [f32], x: &[f32], w: f32, stride: usize) {
     }
 }
 
+/// Quantized tap codelet — the inner loop of the quant-vec kernel:
+/// `acc[i] += w * x[i * stride] as i32` for every `i`. The i8→i32
+/// widening multiply-accumulate is written as a plain indexed loop so
+/// LLVM auto-vectorizes it (pmaddwd-style on x86, smlal on NEON)
+/// without intrinsics, mirroring [`axpy_row`].
+///
+/// Unlike the f32 codelets there is no ordering contract to uphold:
+/// i8×i8 products are at most 16129 in magnitude, so i32 accumulation
+/// is *exact* and any evaluation order produces the same bits. The
+/// quantized kernels are deterministic by arithmetic, not by ordering
+/// discipline (DESIGN.md §14).
+#[inline]
+pub fn qaxpy_row(acc: &mut [i32], x: &[i8], w: i32, stride: usize) {
+    if stride == 1 {
+        for (av, &xv) in acc.iter_mut().zip(x) {
+            *av += w * xv as i32;
+        }
+    } else {
+        let mut ix = 0;
+        for av in acc.iter_mut() {
+            *av += w * x[ix] as i32;
+            ix += stride;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -170,6 +196,29 @@ mod tests {
                     want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
                     "stride={stride} n={n}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn qaxpy_row_matches_scalar_reference() {
+        let mut rng = Pcg32::seeded(21);
+        for stride in 1..=3usize {
+            for n in [0usize, 1, 5, 8, 9, 16, 23] {
+                let w = (rng.below(255) as i32) - 127;
+                let x: Vec<i8> = (0..n.saturating_sub(1) * stride + 1)
+                    .map(|_| (rng.below(255) as i32 - 127) as i8)
+                    .collect();
+                let base: Vec<i32> = (0..n)
+                    .map(|_| rng.below(1000) as i32 - 500)
+                    .collect();
+                let mut want = base.clone();
+                for (i, av) in want.iter_mut().enumerate() {
+                    *av += w * x[i * stride] as i32;
+                }
+                let mut got = base;
+                qaxpy_row(&mut got, &x, w, stride);
+                assert_eq!(got, want, "stride={stride} n={n}");
             }
         }
     }

@@ -8,6 +8,8 @@
 
 use std::collections::BTreeMap;
 
+use anyhow::{bail, Result};
+
 use crate::config::{Act, ConvOp, ModelSpec, Op, ParamSpec};
 use crate::pruning::{project, LayerShape, Scheme};
 use crate::tensor::Tensor;
@@ -225,6 +227,24 @@ pub fn res_style(
     (spec, params)
 }
 
+/// Build a synthetic spec by family name — the CLI's `--spec vgg|res`
+/// switch. Both families use the same input/classes/widths so deploy
+/// and serve runs are comparable across kinds.
+pub fn spec_by_kind(
+    kind: &str,
+    id: &str,
+    in_hw: usize,
+    classes: usize,
+    widths: &[usize],
+    seed: u64,
+) -> Result<(ModelSpec, Vec<Tensor>)> {
+    match kind {
+        "vgg" => Ok(vgg_style(id, in_hw, classes, widths, seed)),
+        "res" => Ok(res_style(id, in_hw, classes, widths, seed)),
+        other => bail!("unknown spec kind {other:?} (vgg|res)"),
+    }
+}
+
 /// Prune every prunable conv of `spec` in place with `scheme` at
 /// remaining-weight ratio `alpha` (the kernel parity tests run every
 /// scheme through the same compile + execute path).
@@ -281,6 +301,18 @@ mod tests {
         assert_eq!(projs[0].stride, 2);
         assert_eq!(projs[0].in_hw, 16);
         assert_eq!(projs[0].out_hw, 8);
+    }
+
+    #[test]
+    fn spec_by_kind_dispatches_and_rejects() {
+        let (v, _) = spec_by_kind("vgg", "k", 8, 4, &[4], 1).unwrap();
+        assert_eq!(v.id, "k");
+        let (r, _) = spec_by_kind("res", "k", 8, 4, &[4], 1).unwrap();
+        assert!(r.ops.iter().any(|o| matches!(o, Op::Add { .. })));
+        let err = spec_by_kind("mlp", "k", 8, 4, &[4], 1)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("vgg|res"), "{err}");
     }
 
     #[test]

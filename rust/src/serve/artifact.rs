@@ -18,6 +18,9 @@
 //!   5 STATS     plan stats (byte footprints, block/thread counts)
 //!   6 TUNING    per-layer kernel choice: kind tag, row tile, filter
 //!               block, tuned flag (analytic default or autotuner winner)
+//!   7 QUANT     element tag (f32/i8); for i8 plans the per-layer i8
+//!               tap payload + per-filter scale table (the LAYERS
+//!               payload field is empty on i8 plans)
 //! u64    FNV-1a checksum of every preceding byte
 //! ```
 //!
@@ -40,18 +43,24 @@ use crate::mobile::engine::{Executor, KernelKind, KERNEL_KINDS};
 use crate::mobile::ir::{ConvIR, IrOp, ModelIR};
 use crate::mobile::passes::{self, CompileReport, LayerReport, StyleRows};
 use crate::mobile::plan::{
-    ExecutionPlan, FilterBlock, LayerPlan, PackedKernel, PlanStats,
-    PlanStep, StepDims,
+    ElemType, ExecutionPlan, FilterBlock, LayerPlan, PackedKernel,
+    Payload, PlanStats, PlanStep, StepDims,
 };
 use crate::tensor::Tensor;
 use crate::util::Stopwatch;
 
 use super::error::ServeError;
 
-/// Bump on any incompatible layout change; loaders reject other versions.
+/// Bump on any incompatible layout change.
 /// History: 1 = initial format; 2 = added the TUNING section carrying
-/// per-layer [`KernelChoice`] (kernel kind + tile shapes).
-pub const FORMAT_VERSION: u32 = 2;
+/// per-layer [`KernelChoice`] (kernel kind + tile shapes); 3 = added
+/// the QUANT section (element tag + i8 payloads + per-filter scales).
+pub const FORMAT_VERSION: u32 = 3;
+
+/// Oldest version this build still reads. v2 artifacts predate
+/// quantization and load as f32-only plans; v1 (pre-TUNING) is
+/// rejected with a clear error.
+pub const MIN_FORMAT_VERSION: u32 = 2;
 
 const MAGIC: &[u8; 4] = b"RPLN";
 
@@ -61,6 +70,7 @@ const SEC_SCHEDULE: u32 = 3;
 const SEC_REPORT: u32 = 4;
 const SEC_STATS: u32 = 5;
 const SEC_TUNING: u32 = 6;
+const SEC_QUANT: u32 = 7;
 
 /// FNV-1a 64-bit over `bytes` (no external crates offline; collision
 /// resistance is not a goal — this catches disk/transport corruption).
@@ -115,6 +125,13 @@ impl Writer {
         self.usz(xs.len());
         for &x in xs {
             self.f32v(x);
+        }
+    }
+
+    fn i8s(&mut self, xs: &[i8]) {
+        self.usz(xs.len());
+        for &x in xs {
+            self.buf.push(x as u8);
         }
     }
 
@@ -220,6 +237,11 @@ impl<'a> Reader<'a> {
             out.push(self.f32v()?);
         }
         Ok(out)
+    }
+
+    fn i8s(&mut self) -> Result<Vec<i8>> {
+        let n = self.count(1)?;
+        Ok(self.take(n)?.iter().map(|&b| b as i8).collect())
     }
 
     fn str_(&mut self) -> Result<String> {
@@ -450,7 +472,12 @@ fn encode_layers(layers: &[LayerPlan]) -> Writer {
         w.i64v(lp.pad);
         w.u8(act_tag(lp.act));
         w.f32s(&lp.bias);
-        w.f32s(&lp.payload);
+        // i8 payloads travel in the QUANT section; the f32 field stays
+        // in the frame (empty) so the v2 layout is a strict subset
+        match &lp.payload {
+            Payload::F32(taps) => w.f32s(taps),
+            Payload::I8 { .. } => w.f32s(&[]),
+        }
         w.usz(lp.kernels.len());
         for k in &lp.kernels {
             w.u32(k.ch);
@@ -508,7 +535,8 @@ fn decode_layers(r: &mut Reader<'_>) -> Result<Vec<LayerPlan>> {
         let pad = r.i64v()?;
         let act = act_from(r.u8()?)?;
         let bias = r.f32s()?;
-        let payload = r.f32s()?;
+        // f32 taps; replaced from the QUANT section on i8 plans
+        let payload = Payload::F32(r.f32s()?);
         let n_kernels = r.count(10)?;
         let mut kernels = Vec::with_capacity(n_kernels);
         for _ in 0..n_kernels {
@@ -744,6 +772,8 @@ fn kind_tag(k: KernelKind) -> u8 {
         KernelKind::PatternTiled => 2,
         KernelKind::PatternVec => 3,
         KernelKind::PatternVecTiled => 4,
+        KernelKind::QuantScalar => 5,
+        KernelKind::QuantVec => 6,
     }
 }
 
@@ -754,8 +784,79 @@ fn kind_from(tag: u8) -> Result<KernelKind> {
         2 => KernelKind::PatternTiled,
         3 => KernelKind::PatternVec,
         4 => KernelKind::PatternVecTiled,
+        5 => KernelKind::QuantScalar,
+        6 => KernelKind::QuantVec,
         other => bail!("artifact corrupt: unknown kernel kind tag {other}"),
     })
+}
+
+fn elem_tag(e: ElemType) -> u8 {
+    match e {
+        ElemType::F32 => 0,
+        ElemType::I8 => 1,
+    }
+}
+
+fn elem_from(tag: u8) -> Result<ElemType> {
+    Ok(match tag {
+        0 => ElemType::F32,
+        1 => ElemType::I8,
+        other => bail!("artifact corrupt: unknown element tag {other}"),
+    })
+}
+
+fn encode_quant(p: &ExecutionPlan) -> Writer {
+    let mut w = Writer::default();
+    w.u8(elem_tag(p.elem));
+    if p.elem == ElemType::I8 {
+        w.usz(p.layers.len());
+        for lp in &p.layers {
+            match &lp.payload {
+                Payload::I8 { taps, scales } => {
+                    w.i8s(taps);
+                    w.f32s(scales);
+                }
+                // unreachable on a validated plan (validate pins every
+                // layer to the plan element); keep the frame parseable
+                Payload::F32(_) => {
+                    w.i8s(&[]);
+                    w.f32s(&[]);
+                }
+            }
+        }
+    }
+    w
+}
+
+fn decode_quant(
+    r: &mut Reader<'_>,
+    layers: &mut [LayerPlan],
+) -> Result<ElemType> {
+    let elem = elem_from(r.u8()?)?;
+    if elem == ElemType::I8 {
+        let n = r.count(16)?;
+        if n != layers.len() {
+            bail!(
+                "artifact corrupt: quant section covers {n} layers, \
+                 plan has {}",
+                layers.len()
+            );
+        }
+        for (li, lp) in layers.iter_mut().enumerate() {
+            let taps = r.i8s()?;
+            let scales = r.f32s()?;
+            if let Payload::F32(f) = &lp.payload {
+                if !f.is_empty() {
+                    bail!(
+                        "artifact corrupt: layer {li} carries both f32 \
+                         and i8 payloads"
+                    );
+                }
+            }
+            lp.payload = Payload::I8 { taps, scales };
+        }
+    }
+    Ok(elem)
 }
 
 fn encode_tuning(layers: &[LayerPlan]) -> Writer {
@@ -826,6 +927,7 @@ pub fn encode_plan(plan: &ExecutionPlan) -> Vec<u8> {
     w.section(SEC_REPORT, encode_report(&plan.report));
     w.section(SEC_STATS, encode_stats(&plan.stats));
     w.section(SEC_TUNING, encode_tuning(&plan.layers));
+    w.section(SEC_QUANT, encode_quant(plan));
     let sum = fnv1a64(&w.buf);
     w.u64(sum);
     w.buf
@@ -859,10 +961,10 @@ fn decode_plan_impl(bytes: &[u8]) -> Result<ExecutionPlan> {
         bail!("not a plan artifact (bad magic)");
     }
     let version = r.u32()?;
-    if version != FORMAT_VERSION {
+    if !(MIN_FORMAT_VERSION..=FORMAT_VERSION).contains(&version) {
         bail!(
             "unsupported plan artifact version {version} \
-             (this build reads {FORMAT_VERSION})"
+             (this build reads {MIN_FORMAT_VERSION}..={FORMAT_VERSION})"
         );
     }
     let mut sec = r.section(SEC_IR)?;
@@ -890,6 +992,15 @@ fn decode_plan_impl(bytes: &[u8]) -> Result<ExecutionPlan> {
     for (lp, choice) in layers.iter_mut().zip(choices) {
         lp.choice = choice;
     }
+    // v2 predates quantization: no QUANT section, always f32
+    let elem = if version >= 3 {
+        let mut sec = r.section(SEC_QUANT)?;
+        let elem = decode_quant(&mut sec, &mut layers)?;
+        sec.finish_section(SEC_QUANT)?;
+        elem
+    } else {
+        ElemType::F32
+    };
     if r.remaining() != 0 {
         bail!("artifact corrupt: {} trailing bytes", r.remaining());
     }
@@ -904,6 +1015,7 @@ fn decode_plan_impl(bytes: &[u8]) -> Result<ExecutionPlan> {
         proj_scratch_elems: sched.proj_scratch_elems,
         gap_len: sched.gap_len,
         threads: sched.threads,
+        elem,
         report,
         stats: PlanStats {
             pass_ms: vec![("artifact-load", t.ms())],
@@ -1023,7 +1135,9 @@ fn verify_roundtrip_impl(
 mod tests {
     use super::*;
     use crate::mobile::costmodel::TuneConfig;
-    use crate::mobile::plan::{compile_plan, compile_plan_tuned};
+    use crate::mobile::plan::{
+        compile_plan, compile_plan_quant, compile_plan_tuned,
+    };
     use crate::mobile::synth;
 
     fn small_plan(threads: usize) -> ExecutionPlan {
@@ -1032,6 +1146,51 @@ mod tests {
         synth::pattern_prune(&spec, &mut params, 0.25);
         let ir = ModelIR::build(&spec, &params).unwrap();
         compile_plan(ir, threads).unwrap()
+    }
+
+    fn small_quant_plan(threads: usize) -> ExecutionPlan {
+        let (spec, mut params) =
+            synth::vgg_style("art_vgg", 8, 4, &[4, 6], 5);
+        synth::pattern_prune(&spec, &mut params, 0.25);
+        let ir = ModelIR::build(&spec, &params).unwrap();
+        compile_plan_quant(ir, threads).unwrap()
+    }
+
+    /// Locate the (id, len, payload) frame of section `id` in an
+    /// encoded artifact; returns the offset of the frame header.
+    fn section_frame(bytes: &[u8], id: u32) -> usize {
+        let body = &bytes[..bytes.len() - 8];
+        let mut pos = 8;
+        while pos < body.len() {
+            let got = u32::from_le_bytes(
+                body[pos..pos + 4].try_into().unwrap(),
+            );
+            let len = u64::from_le_bytes(
+                body[pos + 4..pos + 12].try_into().unwrap(),
+            ) as usize;
+            if got == id {
+                return pos;
+            }
+            pos += 12 + len;
+        }
+        panic!("section {id} not found");
+    }
+
+    fn restamp(bytes: &mut [u8]) {
+        let blen = bytes.len() - 8;
+        let sum = fnv1a64(&bytes[..blen]);
+        bytes[blen..].copy_from_slice(&sum.to_le_bytes());
+    }
+
+    /// Rewrite a v3 f32 artifact into the v2 layout: drop the QUANT
+    /// section, stamp version 2, recompute the checksum.
+    fn downgrade_to_v2(bytes: &[u8]) -> Vec<u8> {
+        let quant = section_frame(bytes, SEC_QUANT);
+        let mut out = bytes[..quant].to_vec();
+        out[4..8].copy_from_slice(&2u32.to_le_bytes());
+        out.extend_from_slice(&[0u8; 8]);
+        restamp(&mut out);
+        out
     }
 
     #[test]
@@ -1113,6 +1272,72 @@ mod tests {
         let err = decode_plan(&v1).unwrap_err().to_string();
         assert!(err.contains("version 1"), "{err}");
         assert!(err.contains("reads 2"), "{err}");
+    }
+
+    #[test]
+    fn v2_artifacts_load_as_f32_only() {
+        let plan = small_plan(2);
+        let v2 = downgrade_to_v2(&encode_plan(&plan));
+        let back = decode_plan(&v2).unwrap();
+        assert_eq!(back.elem, ElemType::F32);
+        assert_eq!(back.layers.len(), plan.layers.len());
+        verify_roundtrip(&plan, &back, 2, 5).unwrap();
+    }
+
+    #[test]
+    fn quantized_plan_roundtrips_bit_identically() {
+        let plan = small_quant_plan(2);
+        assert_eq!(plan.elem, ElemType::I8);
+        let bytes = encode_plan(&plan);
+        let back = decode_plan(&bytes).unwrap();
+        assert_eq!(back.elem, ElemType::I8);
+        // canonical form survives the i8 payload detour
+        assert_eq!(encode_plan(&back), bytes);
+        for (a, b) in plan.layers.iter().zip(&back.layers) {
+            assert_eq!(a.payload.i8_taps(), b.payload.i8_taps());
+        }
+        // save -> load -> execute is bit-identical, every kernel + auto
+        verify_roundtrip(&plan, &back, 3, 21).unwrap();
+        // the artifact carries the shrunken payload on the wire too
+        let f32_plan = small_plan(2);
+        assert!(
+            plan.stats.payload_bytes * 2
+                <= f32_plan.stats.payload_bytes,
+            "i8 {} vs f32 {}",
+            plan.stats.payload_bytes,
+            f32_plan.stats.payload_bytes
+        );
+    }
+
+    #[test]
+    fn corrupt_quant_section_is_rejected() {
+        let plan = small_quant_plan(1);
+        let bytes = encode_plan(&plan);
+        let frame = section_frame(&bytes, SEC_QUANT);
+        // plain bit flip inside QUANT -> the checksum catches it
+        let mut bad = bytes.clone();
+        bad[frame + 13] ^= 0x20;
+        let err = decode_plan(&bad).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+        // unknown element tag, checksum restamped -> strict decode
+        let mut tag = bytes.clone();
+        tag[frame + 12] = 9;
+        restamp(&mut tag);
+        let err = decode_plan(&tag).unwrap_err().to_string();
+        assert!(err.contains("element tag"), "{err}");
+        // shrink the section length field -> framing/truncation
+        let mut tr = bytes.clone();
+        let len = u64::from_le_bytes(
+            tr[frame + 4..frame + 12].try_into().unwrap(),
+        );
+        tr[frame + 4..frame + 12]
+            .copy_from_slice(&(len - 1).to_le_bytes());
+        restamp(&mut tr);
+        let err = decode_plan(&tr).unwrap_err().to_string();
+        assert!(
+            err.contains("truncated") || err.contains("corrupt"),
+            "{err}"
+        );
     }
 
     #[test]

@@ -24,6 +24,8 @@ use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use super::{lock_clean, wait_clean, wait_timeout_clean};
+
 /// Micro-batch formation knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
@@ -81,7 +83,7 @@ impl<T> BoundedQueue<T> {
     }
 
     pub fn len(&self) -> usize {
-        self.state.lock().unwrap().items.len()
+        lock_clean(&self.state).items.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -92,7 +94,7 @@ impl<T> BoundedQueue<T> {
     /// [`PushError::Closed`] after [`BoundedQueue::close`]. Returns the
     /// queue depth after the push.
     pub fn push(&self, item: T) -> Result<usize, PushError<T>> {
-        let mut g = self.state.lock().unwrap();
+        let mut g = lock_clean(&self.state);
         if g.closed {
             return Err(PushError::Closed(item));
         }
@@ -109,7 +111,9 @@ impl<T> BoundedQueue<T> {
     /// Close the queue: further pushes fail, consumers drain what is left
     /// and then see `None`.
     pub fn close(&self) {
-        self.state.lock().unwrap().closed = true;
+        // close must succeed even after a producer/consumer panic, or
+        // shutdown would wedge behind a poisoned lock
+        lock_clean(&self.state).closed = true;
         self.nonempty.notify_all();
     }
 
@@ -131,7 +135,7 @@ impl<T> BoundedQueue<T> {
         policy: &BatchPolicy,
         anchor: impl Fn(&T) -> Instant,
     ) -> Option<Vec<T>> {
-        let mut g = self.state.lock().unwrap();
+        let mut g = lock_clean(&self.state);
         // idle: wait for the first item
         loop {
             if !g.items.is_empty() {
@@ -140,7 +144,7 @@ impl<T> BoundedQueue<T> {
             if g.closed {
                 return None;
             }
-            g = self.nonempty.wait(g).unwrap();
+            g = wait_clean(&self.nonempty, g);
         }
         // filling: take whatever is already here
         let mut batch = Vec::with_capacity(policy.max_batch);
@@ -163,10 +167,11 @@ impl<T> BoundedQueue<T> {
                 if now >= deadline {
                     break;
                 }
-                let (g2, timeout) = self
-                    .nonempty
-                    .wait_timeout(g, deadline - now)
-                    .unwrap();
+                let (g2, timed_out) = wait_timeout_clean(
+                    &self.nonempty,
+                    g,
+                    deadline - now,
+                );
                 g = g2;
                 while batch.len() < policy.max_batch {
                     match g.items.pop_front() {
@@ -174,7 +179,7 @@ impl<T> BoundedQueue<T> {
                         None => break,
                     }
                 }
-                if timeout.timed_out() {
+                if timed_out {
                     break;
                 }
             }

@@ -45,6 +45,7 @@ use crate::report::Table;
 
 use super::error::ServeError;
 use super::registry::{plan_bytes, RegistryStats, ShardedRegistry};
+use super::{lock_clean, wait_clean, wait_timeout_clean};
 use super::server::{check_image, ServeResponse, Ticket};
 use super::stats::{ServeReport, ServeStats};
 
@@ -412,7 +413,7 @@ impl GatewayHandle {
         tenant: &str,
     ) -> Result<usize, ServeError> {
         let ti = self.shared.tenant_index(tenant)?;
-        Ok(self.shared.state.lock().unwrap().queues[ti].len())
+        Ok(lock_clean(&self.shared.state).queues[ti].len())
     }
 
     fn submit_inner(
@@ -437,7 +438,7 @@ impl GatewayHandle {
         let deadline = (t.cfg.deadline_us > 0)
             .then(|| enqueued + Duration::from_micros(t.cfg.deadline_us));
         t.stats.submit();
-        let mut g = self.shared.state.lock().unwrap();
+        let mut g = lock_clean(&self.shared.state);
         if g.closed {
             t.stats.unsubmit();
             return Err(ServeError::Closed);
@@ -463,7 +464,7 @@ impl GatewayHandle {
     /// backwards.
     fn admit(&self, ti: usize, vt_us: u64) -> bool {
         let t = &self.shared.tenants[ti];
-        let mut b = t.bucket.lock().unwrap();
+        let mut b = lock_clean(&t.bucket);
         if !b.primed {
             // the first event anchors the clock; the initial burst is the
             // whole budget
@@ -577,7 +578,9 @@ impl Gateway {
     /// report.
     pub fn shutdown(self) -> GatewayReport {
         {
-            let mut g = self.shared.state.lock().unwrap();
+            // shutdown must drain even after a worker panic left the
+            // state mutex poisoned
+            let mut g = lock_clean(&self.shared.state);
             g.closed = true;
         }
         self.shared.work_cv.notify_all();
@@ -643,7 +646,7 @@ fn next_batch(
     max_batch: usize,
     max_wait: Duration,
 ) -> Option<(usize, Vec<GwRequest>)> {
-    let mut g = shared.state.lock().unwrap();
+    let mut g = lock_clean(&shared.state);
     let ti = loop {
         // during shutdown everything still queued is served, not shed —
         // a drained gateway reports completed == submitted
@@ -656,7 +659,7 @@ fn next_batch(
                 if g.closed {
                     return None;
                 }
-                g = shared.work_cv.wait(g).unwrap();
+                g = wait_clean(&shared.work_cv, g);
             }
         }
     };
@@ -680,10 +683,11 @@ fn next_batch(
             if now >= deadline {
                 break;
             }
-            let (g2, timeout) = shared
-                .work_cv
-                .wait_timeout(g, deadline - now)
-                .unwrap();
+            let (g2, timed_out) = wait_timeout_clean(
+                &shared.work_cv,
+                g,
+                deadline - now,
+            );
             g = g2;
             while batch.len() < max_batch {
                 match g.queues[ti].pop_front() {
@@ -691,7 +695,7 @@ fn next_batch(
                     None => break,
                 }
             }
-            if timeout.timed_out() {
+            if timed_out {
                 break;
             }
         }
@@ -770,7 +774,7 @@ mod tests {
     use super::*;
     use crate::mobile::engine::KernelKind;
     use crate::mobile::ir::ModelIR;
-    use crate::mobile::plan::compile_plan;
+    use crate::mobile::plan::{compile_plan, compile_plan_quant};
     use crate::mobile::synth;
     use crate::serve::loadgen::request_image;
 
@@ -781,6 +785,19 @@ mod tests {
         Arc::new(
             compile_plan(ModelIR::build(&spec, &params).unwrap(), 1)
                 .unwrap(),
+        )
+    }
+
+    fn tiny_quant_plan(id: &str, seed: u64) -> Arc<ExecutionPlan> {
+        let (spec, mut params) =
+            synth::vgg_style(id, 8, 4, &[4, 6], seed);
+        synth::pattern_prune(&spec, &mut params, 0.25);
+        Arc::new(
+            compile_plan_quant(
+                ModelIR::build(&spec, &params).unwrap(),
+                1,
+            )
+            .unwrap(),
         )
     }
 
@@ -890,6 +907,51 @@ mod tests {
         assert_eq!(b.priority, Priority::High);
         assert_eq!(report.totals().1, 12);
         assert!(report.table("gw").render().contains("alice"));
+    }
+
+    #[test]
+    fn quantized_and_f32_tenants_coexist() {
+        // same weights, one tenant serving i8 and one f32: each tenant's
+        // responses match its own plan's direct executor bit for bit
+        let plan_f = tiny_plan("gw_mixed", 17);
+        let plan_q = tiny_quant_plan("gw_mixed", 17);
+        let gw = Gateway::builder()
+            .workers(2)
+            .max_batch(4)
+            .max_wait_us(200)
+            .tenant(
+                TenantConfig::new("full"),
+                plan_f.clone(),
+                KernelSel::Auto,
+            )
+            .tenant(
+                TenantConfig::new("quant"),
+                plan_q.clone(),
+                KernelSel::Auto,
+            )
+            .spawn()
+            .unwrap();
+        let h = gw.handle();
+        let mut direct_f = Executor::auto(&plan_f);
+        let mut direct_q = Executor::auto(&plan_q);
+        for seed in 0..6u64 {
+            let img = request_image(plan_f.in_dims, seed, 0);
+            let want_f = direct_f.execute(&img);
+            let want_q = direct_q.execute(&img);
+            assert_eq!(
+                h.infer("full", img.clone()).unwrap().logits,
+                want_f,
+                "f32 seed {seed}"
+            );
+            assert_eq!(
+                h.infer("quant", img).unwrap().logits,
+                want_q,
+                "i8 seed {seed}"
+            );
+        }
+        let report = gw.shutdown();
+        assert_eq!(report.tenant("full").unwrap().report.completed, 6);
+        assert_eq!(report.tenant("quant").unwrap().report.completed, 6);
     }
 
     #[test]

@@ -40,6 +40,44 @@ pub mod registry;
 pub mod server;
 pub mod stats;
 
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::Duration;
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+///
+/// Serve-tier shared state (registry slots, batcher queues, gateway
+/// tenant tables) is **counter-consistent at every lock release**: each
+/// critical section either completes its bookkeeping or never starts it,
+/// so a poisoned mutex carries valid data and the poison flag is noise
+/// from an unrelated panic (e.g. a panicking plan builder observed by
+/// `catch_unwind` in tests). Recovering keeps the serving tier available
+/// instead of cascading one worker's panic into every caller.
+pub(crate) fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// [`Condvar::wait`] with the same poison-recovery contract as
+/// [`lock_clean`].
+pub(crate) fn wait_clean<'a, T>(
+    cv: &Condvar,
+    g: MutexGuard<'a, T>,
+) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(PoisonError::into_inner)
+}
+
+/// [`Condvar::wait_timeout`] with the same poison-recovery contract as
+/// [`lock_clean`]. Returns the guard and whether the wait timed out.
+pub(crate) fn wait_timeout_clean<'a, T>(
+    cv: &Condvar,
+    g: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, bool) {
+    let (g, res) = cv
+        .wait_timeout(g, dur)
+        .unwrap_or_else(PoisonError::into_inner);
+    (g, res.timed_out())
+}
+
 pub use artifact::{load as load_plan, save as save_plan};
 pub use error::ServeError;
 pub use gateway::{

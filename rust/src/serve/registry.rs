@@ -35,6 +35,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use crate::mobile::plan::ExecutionPlan;
 
 use super::error::ServeError;
+use super::{lock_clean, wait_clean};
 
 /// Resident footprint the registry charges for one plan: packed payload
 /// taps + packed kernel headers + the per-executor arena the plan sizes.
@@ -57,6 +58,12 @@ pub struct PlanKey {
     /// [`KernelChoice`](crate::mobile::costmodel::KernelChoice)s and
     /// must never alias in the cache
     pub tuned: bool,
+    /// whether the plan carries an i8 payload
+    /// ([`ElemType::I8`](crate::mobile::plan::ElemType)) — quantized and
+    /// f32 plans produce different bits and must never alias in the
+    /// cache; the quantized entry also charges ~4x fewer payload bytes
+    /// against the shard budget ([`plan_bytes`])
+    pub quant: bool,
 }
 
 impl PlanKey {
@@ -72,12 +79,19 @@ impl PlanKey {
             rate_milli: (rate.max(0.0) * 1000.0).round() as u64,
             threads,
             tuned: false,
+            quant: false,
         }
     }
 
     /// Mark the key as an autotuned-plan configuration.
     pub fn tuned(mut self) -> Self {
         self.tuned = true;
+        self
+    }
+
+    /// Mark the key as an i8-quantized-plan configuration.
+    pub fn quantized(mut self) -> Self {
+        self.quant = true;
         self
     }
 
@@ -90,12 +104,13 @@ impl std::fmt::Display for PlanKey {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{}/{}@{:.1}x/t{}{}",
+            "{}/{}@{:.1}x/t{}{}{}",
             self.model,
             self.scheme,
             self.rate(),
             self.threads,
-            if self.tuned { "/tuned" } else { "" }
+            if self.tuned { "/tuned" } else { "" },
+            if self.quant { "/i8" } else { "" }
         )
     }
 }
@@ -215,14 +230,14 @@ impl PlanRegistry {
         key: &PlanKey,
         build: impl FnOnce() -> Result<ExecutionPlan, ServeError>,
     ) -> Result<Arc<ExecutionPlan>, ServeError> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_clean(&self.inner);
         let mut waited = false;
         loop {
             let cached = match g.slots.get(key) {
                 Some(Slot::Ready { plan, .. }) => Some(plan.clone()),
                 Some(Slot::Building) => {
                     waited = true;
-                    g = self.ready_cv.wait(g).unwrap();
+                    g = wait_clean(&self.ready_cv, g);
                     continue;
                 }
                 None => None,
@@ -277,7 +292,7 @@ impl PlanRegistry {
             }
         };
         let bytes = plan_bytes(&plan);
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_clean(&self.inner);
         g.tick += 1;
         let tick = g.tick;
         g.slots.insert(
@@ -297,7 +312,10 @@ impl PlanRegistry {
     }
 
     fn remove_building_marker(&self, key: &PlanKey) {
-        let mut g = self.inner.lock().unwrap();
+        // called from BuildGuard::drop during a panic unwind — this is
+        // exactly the path where the mutex may be poisoned, and exactly
+        // the path that must still wake the waiters
+        let mut g = lock_clean(&self.inner);
         if matches!(g.slots.get(key), Some(Slot::Building)) {
             g.slots.remove(key);
         }
@@ -346,7 +364,7 @@ impl PlanRegistry {
     /// Drop a specific entry (e.g. after its artifact was republished).
     /// No-op for in-flight builds.
     pub fn evict(&self, key: &PlanKey) -> bool {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_clean(&self.inner);
         if matches!(g.slots.get(key), Some(Slot::Ready { .. })) {
             if let Some(Slot::Ready { bytes, .. }) = g.slots.remove(key)
             {
@@ -360,7 +378,7 @@ impl PlanRegistry {
     }
 
     pub fn stats(&self) -> RegistryStats {
-        let g = self.inner.lock().unwrap();
+        let g = lock_clean(&self.inner);
         let ready = g
             .slots
             .values()
@@ -470,7 +488,9 @@ impl ShardedRegistry {
 mod tests {
     use super::*;
     use crate::mobile::ir::ModelIR;
-    use crate::mobile::plan::compile_plan;
+    use crate::mobile::plan::{
+        compile_plan, compile_plan_quant, ElemType,
+    };
     use crate::mobile::synth;
     use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -480,6 +500,14 @@ mod tests {
         synth::pattern_prune(&spec, &mut params, 0.25);
         let ir = ModelIR::build(&spec, &params).expect("ir");
         Ok(compile_plan(ir, 1).expect("compile"))
+    }
+
+    fn build_quant_plan(seed: u64) -> Result<ExecutionPlan, ServeError> {
+        let (spec, mut params) =
+            synth::vgg_style("reg_vgg", 8, 4, &[4], seed);
+        synth::pattern_prune(&spec, &mut params, 0.25);
+        let ir = ModelIR::build(&spec, &params).expect("ir");
+        Ok(compile_plan_quant(ir, 1).expect("compile"))
     }
 
     #[test]
@@ -506,6 +534,38 @@ mod tests {
         let pt = reg.get_or_build(&t, || build_plan(1)).unwrap();
         assert!(!Arc::ptr_eq(&pa, &pt));
         assert_eq!(reg.stats().ready, 2);
+    }
+
+    #[test]
+    fn quantized_key_never_aliases_f32() {
+        let a = PlanKey::new("m", "pattern", 8.0, 2);
+        let q = PlanKey::new("m", "pattern", 8.0, 2).quantized();
+        assert_ne!(a, q);
+        assert!(format!("{q}").ends_with("/i8"));
+        assert!(!format!("{a}").contains("i8"));
+        // tuned and quantized compose into a third distinct key
+        let tq = PlanKey::new("m", "pattern", 8.0, 2).tuned().quantized();
+        assert_ne!(tq, q);
+        assert!(format!("{tq}").contains("/tuned/i8"));
+        // both live side by side, and the i8 entry charges fewer
+        // payload bytes against the budget
+        let reg = PlanRegistry::new(4);
+        let pa = reg.get_or_build(&a, || build_plan(1)).unwrap();
+        let pq = reg.get_or_build(&q, || build_quant_plan(1)).unwrap();
+        assert!(!Arc::ptr_eq(&pa, &pq));
+        assert_eq!(pa.elem, ElemType::F32);
+        assert_eq!(pq.elem, ElemType::I8);
+        assert!(
+            pq.stats.payload_bytes < pa.stats.payload_bytes,
+            "i8 {} vs f32 {}",
+            pq.stats.payload_bytes,
+            pa.stats.payload_bytes
+        );
+        assert_eq!(reg.stats().ready, 2);
+        assert_eq!(
+            reg.stats().resident_bytes,
+            plan_bytes(&pa) + plan_bytes(&pq)
+        );
     }
 
     #[test]

@@ -386,7 +386,7 @@ mod tests {
     use super::*;
     use crate::mobile::engine::KernelKind;
     use crate::mobile::ir::ModelIR;
-    use crate::mobile::plan::compile_plan;
+    use crate::mobile::plan::{compile_plan, compile_plan_quant};
     use crate::mobile::synth;
 
     fn tiny_plan() -> Arc<ExecutionPlan> {
@@ -396,6 +396,19 @@ mod tests {
         Arc::new(
             compile_plan(ModelIR::build(&spec, &params).unwrap(), 1)
                 .unwrap(),
+        )
+    }
+
+    fn tiny_quant_plan() -> Arc<ExecutionPlan> {
+        let (spec, mut params) =
+            synth::vgg_style("srv_vgg", 8, 4, &[4, 6], 31);
+        synth::pattern_prune(&spec, &mut params, 0.25);
+        Arc::new(
+            compile_plan_quant(
+                ModelIR::build(&spec, &params).unwrap(),
+                1,
+            )
+            .unwrap(),
         )
     }
 
@@ -452,6 +465,30 @@ mod tests {
         }
         let report = server.shutdown();
         assert_eq!(report.completed, 6);
+        assert_eq!(report.errors, 0);
+    }
+
+    #[test]
+    fn quantized_plan_serving_matches_direct_executor() {
+        let plan = tiny_quant_plan();
+        let server = Server::builder(plan.clone())
+            .workers(2)
+            .max_batch(4)
+            .max_wait_us(200)
+            .queue_cap(32)
+            .spawn();
+        let handle = server.handle();
+        // same-image requests are bit-identical no matter which worker
+        // or batch shape served them: i8 accumulation is exact
+        let mut direct = Executor::auto(&plan);
+        for seed in 0..8u64 {
+            let img = img_for(&plan, seed);
+            let want = direct.execute(&img);
+            let resp = handle.infer(img).unwrap();
+            assert_eq!(resp.logits, want, "seed {seed}");
+        }
+        let report = server.shutdown();
+        assert_eq!(report.completed, 8);
         assert_eq!(report.errors, 0);
     }
 

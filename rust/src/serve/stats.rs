@@ -16,9 +16,13 @@ use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Instant;
 
+use anyhow::{Context, Result};
+
 use crate::report::Table;
 use crate::rng::Pcg32;
 use crate::util::json::Json;
+
+use super::lock_clean;
 
 /// Latency samples kept resident per series; beyond this the recorder
 /// switches to uniform reservoir sampling, so a long-running server's
@@ -125,13 +129,13 @@ impl ServeStats {
     /// refused pushes take it back via [`ServeStats::reject`] /
     /// [`ServeStats::unsubmit`].
     pub fn submit(&self) {
-        self.inner.lock().unwrap().submitted += 1;
+        lock_clean(&self.inner).submitted += 1;
     }
 
     /// A pre-counted request bounced off the full queue (admission
     /// control): moves it from `submitted` to `rejected`.
     pub fn reject(&self) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_clean(&self.inner);
         g.submitted -= 1;
         g.rejected += 1;
     }
@@ -140,12 +144,12 @@ impl ServeStats {
     /// (server shutting down): takes the submit back without counting a
     /// rejection.
     pub fn unsubmit(&self) {
-        self.inner.lock().unwrap().submitted -= 1;
+        lock_clean(&self.inner).submitted -= 1;
     }
 
     /// A whole batch failed to execute (its `n` requests get no response).
     pub fn error_batch(&self, n: usize) {
-        self.inner.lock().unwrap().errors += n as u64;
+        lock_clean(&self.inner).errors += n as u64;
     }
 
     /// Admission control refused the request before it was submitted
@@ -154,20 +158,20 @@ impl ServeStats {
     /// unlike [`ServeStats::reject`], which depends on physical queue
     /// occupancy.
     pub fn shed(&self) {
-        self.inner.lock().unwrap().shed += 1;
+        lock_clean(&self.inner).shed += 1;
     }
 
     /// An *admitted* request was dropped at dispatch because its deadline
     /// had already passed (shed-on-overload). Wall-clock dependent, so it
     /// is excluded from the deterministic counters.
     pub fn shed_deadline(&self) {
-        self.inner.lock().unwrap().shed_deadline += 1;
+        lock_clean(&self.inner).shed_deadline += 1;
     }
 
     /// One response completed: end-to-end and queue-wait micros
     /// (reservoir-sampled past [`SAMPLE_CAP`]).
     pub fn complete(&self, total_us: u64, queue_us: u64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_clean(&self.inner);
         g.completed += 1;
         let seen = g.completed;
         let inner = &mut *g;
@@ -177,14 +181,14 @@ impl ServeStats {
 
     /// One micro-batch of `size` requests was dispatched.
     pub fn batch_dispatched(&self, size: usize) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_clean(&self.inner);
         *g.batch_hist.entry(size).or_insert(0) += 1;
     }
 
     /// Snapshot everything into a report; `elapsed_secs` is the serving
     /// window the throughput is computed over.
     pub fn report(&self, elapsed_secs: f64) -> ServeReport {
-        let g = self.inner.lock().unwrap();
+        let g = lock_clean(&self.inner);
         let batch_hist: Vec<(usize, u64)> =
             g.batch_hist.iter().map(|(&s, &c)| (s, c)).collect();
         let batches: u64 = batch_hist.iter().map(|&(_, c)| c).sum();
@@ -450,6 +454,150 @@ impl BenchLog {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Bench regression diffing (`repro bench diff`)
+// ---------------------------------------------------------------------------
+
+/// One series (timed result or scalar metric) present in both bench
+/// logs being compared.
+#[derive(Clone, Debug)]
+pub struct BenchDelta {
+    pub name: String,
+    pub base: f64,
+    pub cur: f64,
+    /// signed percent change relative to `base` (positive = `cur` is
+    /// larger)
+    pub change_pct: f64,
+    /// direction of goodness for this series (timings/bytes/ratios
+    /// shrink, speedups/throughput grow)
+    pub lower_is_better: bool,
+    /// worsened beyond the threshold in this series' bad direction
+    pub regressed: bool,
+}
+
+/// Outcome of comparing two `BENCH_*.json` documents
+/// ([`diff_bench_logs`]).
+#[derive(Clone, Debug)]
+pub struct BenchDiff {
+    /// series present in both logs, in name order
+    pub rows: Vec<BenchDelta>,
+    /// series only in the baseline (informational, never a regression)
+    pub only_base: Vec<String>,
+    /// series only in the current log (new benches are not regressions)
+    pub only_cur: Vec<String>,
+    pub threshold_pct: f64,
+}
+
+impl BenchDiff {
+    pub fn regressions(&self) -> Vec<&BenchDelta> {
+        self.rows.iter().filter(|r| r.regressed).collect()
+    }
+
+    /// One row per compared series; regressions flagged in the verdict
+    /// column.
+    pub fn table(&self, title: &str) -> Table {
+        let mut t = Table::new(
+            title,
+            &["series", "base", "current", "change", "verdict"],
+        );
+        for r in &self.rows {
+            t.row(&[
+                r.name.clone(),
+                format!("{:.4}", r.base),
+                format!("{:.4}", r.cur),
+                format!("{:+.1}%", r.change_pct),
+                if r.regressed {
+                    "REGRESSED".into()
+                } else {
+                    "ok".into()
+                },
+            ]);
+        }
+        t
+    }
+}
+
+/// Whether a scalar metric improves by shrinking. Timings, footprints,
+/// and compression ratios shrink; speedups and throughput grow.
+fn metric_lower_is_better(name: &str) -> bool {
+    ["ms", "us", "bytes", "ratio", "latency"]
+        .iter()
+        .any(|k| name.contains(k))
+}
+
+/// Pull the comparable series out of one bench-log document: every
+/// result's `median_ms` (lower is better) plus every named metric.
+fn bench_series(doc: &Json) -> Result<BTreeMap<String, (f64, bool)>> {
+    let mut out = BTreeMap::new();
+    for r in doc.get("results")?.as_arr()? {
+        let name = r.get("name")?.as_str()?;
+        let median = r.get("median_ms")?.as_f64()?;
+        out.insert(format!("{name} [median_ms]"), (median, true));
+    }
+    for (name, v) in doc.get("metrics")?.as_obj()? {
+        out.insert(
+            name.clone(),
+            (v.as_f64()?, metric_lower_is_better(name)),
+        );
+    }
+    Ok(out)
+}
+
+/// Compare two bench-log documents (the `BENCH_*.json` shape written by
+/// [`BenchLog::write`]). A series regresses when it worsens by more
+/// than `threshold_pct` percent in its bad direction — slower for
+/// timings, smaller for speedups. Series present in only one document
+/// are reported but never count as regressions, so adding or retiring
+/// a bench does not fail the diff. Bench logs from different
+/// machines/build modes are legitimate inputs — the caller decides
+/// whether the env fingerprints make the comparison meaningful.
+pub fn diff_bench_logs(
+    base: &Json,
+    cur: &Json,
+    threshold_pct: f64,
+) -> Result<BenchDiff> {
+    let base = bench_series(base).context("baseline bench log")?;
+    let cur = bench_series(cur).context("current bench log")?;
+    let threshold_pct = threshold_pct.max(0.0);
+    let mut rows = Vec::new();
+    for (name, &(b, lower)) in &base {
+        let Some(&(c, _)) = cur.get(name) else { continue };
+        // a zero/negative baseline has no meaningful percent change;
+        // report it as unchanged rather than dividing by zero
+        let change_pct = if b.abs() > f64::EPSILON {
+            (c - b) / b.abs() * 100.0
+        } else {
+            0.0
+        };
+        let worsened_pct =
+            if lower { change_pct } else { -change_pct };
+        rows.push(BenchDelta {
+            name: name.clone(),
+            base: b,
+            cur: c,
+            change_pct,
+            lower_is_better: lower,
+            regressed: worsened_pct > threshold_pct,
+        });
+    }
+    let only_base = base
+        .keys()
+        .filter(|k| !cur.contains_key(*k))
+        .cloned()
+        .collect();
+    let only_cur = cur
+        .keys()
+        .filter(|k| !base.contains_key(*k))
+        .cloned()
+        .collect();
+    Ok(BenchDiff {
+        rows,
+        only_base,
+        only_cur,
+        threshold_pct,
+    })
+}
+
 /// The machine/build context a bench number is only valid within.
 fn env_fingerprint() -> Json {
     let mut o = BTreeMap::new();
@@ -524,6 +672,66 @@ mod tests {
                 .unwrap(),
             1.75
         );
+    }
+
+    fn log_with(results: &[(&str, f64)], metrics: &[(&str, f64)]) -> Json {
+        let mut log = BenchLog::new("unit");
+        for &(name, median) in results {
+            log.push(BenchResult {
+                name: name.into(),
+                mean_ms: median,
+                median_ms: median,
+                std_ms: 0.0,
+                reps: 1,
+            });
+        }
+        for &(name, v) in metrics {
+            log.metric(name, v);
+        }
+        Json::parse(&log.to_json().to_string()).unwrap()
+    }
+
+    #[test]
+    fn bench_diff_flags_directional_regressions() {
+        let base = log_with(
+            &[("conv", 10.0), ("retired", 5.0)],
+            &[("speedup_4t", 3.0), ("payload_ratio_i8", 0.30)],
+        );
+        let cur = log_with(
+            &[("conv", 12.0), ("fresh", 1.0)],
+            &[("speedup_4t", 2.0), ("payload_ratio_i8", 0.29)],
+        );
+        let d = diff_bench_logs(&base, &cur, 5.0).unwrap();
+        // conv slowed 20% (> 5%): regression. speedup fell 33%: a
+        // higher-is-better metric regresses by shrinking. the ratio
+        // shrank: improvement for a lower-is-better metric.
+        let names: Vec<&str> = d
+            .regressions()
+            .iter()
+            .map(|r| r.name.as_str())
+            .collect();
+        assert_eq!(names, ["conv [median_ms]", "speedup_4t"]);
+        let ratio = d
+            .rows
+            .iter()
+            .find(|r| r.name == "payload_ratio_i8")
+            .unwrap();
+        assert!(ratio.lower_is_better && !ratio.regressed);
+        // series on one side only are informational, not regressions
+        assert_eq!(d.only_base, ["retired [median_ms]"]);
+        assert_eq!(d.only_cur, ["fresh [median_ms]"]);
+        assert!(d.table("diff").render().contains("REGRESSED"));
+        // generous threshold: nothing regresses
+        assert!(diff_bench_logs(&base, &cur, 50.0)
+            .unwrap()
+            .regressions()
+            .is_empty());
+        // within-threshold drift is not a regression
+        let near = log_with(&[("conv", 10.4)], &[]);
+        assert!(diff_bench_logs(&base, &near, 5.0)
+            .unwrap()
+            .regressions()
+            .is_empty());
     }
 
     #[test]

@@ -1,0 +1,145 @@
+//! INT8 quantized-path determinism (the ISSUE acceptance criteria).
+//!
+//! The quantized path must be bit-reproducible: i8 weights and
+//! per-filter scales are fixed at compile time, activations quantize on
+//! the calling thread, and the i8 x i8 -> i32 accumulation is exact, so
+//! thread count, worker count, and kernel selection must never change a
+//! single output bit. The plan must also survive an artifact v3 round
+//! trip bit-identically, and its payload must be a small fraction of
+//! the f32 plan's.
+
+use repro::mobile::engine::{
+    execute_batch_parallel, Executor, Fmap, KernelSel, KERNEL_KINDS,
+};
+use repro::mobile::ir::ModelIR;
+use repro::mobile::plan::{
+    compile_plan, compile_plan_quant, ElemType, ExecutionPlan,
+};
+use repro::mobile::synth;
+use repro::rng::Pcg32;
+use repro::serve::artifact;
+
+fn quant_plan(kind: &str, threads: usize) -> ExecutionPlan {
+    let (spec, mut params) = synth::spec_by_kind(
+        kind,
+        &format!("qdet_{kind}"),
+        16,
+        10,
+        &[8, 16],
+        7,
+    )
+    .unwrap();
+    synth::pattern_prune(&spec, &mut params, 0.25);
+    compile_plan_quant(ModelIR::build(&spec, &params).unwrap(), threads)
+        .unwrap()
+}
+
+fn images(hw: usize, n: usize, seed: u64) -> Vec<Fmap> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..n)
+        .map(|_| Fmap {
+            c: 3,
+            hw,
+            data: (0..3 * hw * hw).map(|_| rng.normal()).collect(),
+        })
+        .collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn quantized_outputs_bit_identical_across_threads_and_workers() {
+    for kind in ["vgg", "res"] {
+        let imgs = images(16, 6, 0xBEEF);
+        let p1 = quant_plan(kind, 1);
+        assert_eq!(p1.elem, ElemType::I8);
+        let base: Vec<Vec<u32>> = {
+            let mut ex = Executor::auto(&p1);
+            imgs.iter().map(|i| bits(&ex.execute(i))).collect()
+        };
+        for threads in [2usize, 4] {
+            let p = quant_plan(kind, threads);
+            let mut ex = Executor::auto(&p);
+            for (img, want) in imgs.iter().zip(&base) {
+                assert_eq!(
+                    &bits(&ex.execute(img)),
+                    want,
+                    "{kind} @ {threads} threads"
+                );
+            }
+        }
+        for workers in [1usize, 2, 4] {
+            let out = execute_batch_parallel(
+                &p1,
+                KernelSel::Auto,
+                &imgs,
+                workers,
+            )
+            .unwrap();
+            for (o, want) in out.iter().zip(&base) {
+                assert_eq!(&bits(o), want, "{kind} @ {workers} workers");
+            }
+        }
+    }
+}
+
+#[test]
+fn quantized_outputs_identical_across_kernel_selections() {
+    let plan = quant_plan("vgg", 2);
+    let imgs = images(16, 4, 11);
+    let mut auto_ex = Executor::auto(&plan);
+    let want: Vec<Vec<u32>> =
+        imgs.iter().map(|i| bits(&auto_ex.execute(i))).collect();
+    // every uniform selection projects onto the plan's i8 codelets; the
+    // exact integer accumulation makes them all bit-agree
+    for kind in KERNEL_KINDS {
+        let mut ex = Executor::new(&plan, kind);
+        for (img, w) in imgs.iter().zip(&want) {
+            assert_eq!(
+                &bits(&ex.execute(img)),
+                w,
+                "kernel {}",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn quantized_plan_survives_artifact_round_trip() {
+    let plan = quant_plan("vgg", 2);
+    let dir = std::env::temp_dir()
+        .join(format!("repro_qdet_{}", std::process::id()));
+    let path = dir.join("plan.rpln");
+    artifact::save(&plan, &path).unwrap();
+    let loaded = artifact::load(&path).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    assert_eq!(loaded.elem, ElemType::I8);
+    artifact::verify_roundtrip(&plan, &loaded, 3, 5).unwrap();
+    let imgs = images(16, 3, 21);
+    let mut a = Executor::auto(&plan);
+    let mut b = Executor::auto(&loaded);
+    for img in &imgs {
+        assert_eq!(bits(&a.execute(img)), bits(&b.execute(img)));
+    }
+}
+
+#[test]
+fn quantized_payload_is_a_fraction_of_f32() {
+    let (spec, mut params) =
+        synth::vgg_style("qdet_ratio", 16, 10, &[16, 32], 7);
+    synth::pattern_prune(&spec, &mut params, 0.25);
+    let ir = ModelIR::build(&spec, &params).unwrap();
+    let f = compile_plan(ir.clone(), 1).unwrap();
+    let q = compile_plan_quant(ir, 1).unwrap();
+    assert_eq!(f.elem, ElemType::F32);
+    assert_eq!(q.elem, ElemType::I8);
+    assert!(
+        q.stats.payload_bytes * 3 <= f.stats.payload_bytes,
+        "i8 payload {} vs f32 {}",
+        q.stats.payload_bytes,
+        f.stats.payload_bytes
+    );
+}
