@@ -7,9 +7,11 @@
 //!    checksummed plan artifact (bit-identical round trip), compile its
 //!    INT8 quantized twin and print the accuracy/size/speed deltas
 //!    (the `repro deploy --quantize` table), serve a
-//!    seeded closed-loop trace through the dynamic-batching server, then
-//!    multiplex two differently-pruned tenants through the multi-tenant
-//!    gateway (priority classes + per-tenant reports) and print the
+//!    seeded closed-loop trace through the dynamic-batching server,
+//!    arm the deterministic chaos harness (injected worker panics ->
+//!    typed errors + supervised restarts), then multiplex two
+//!    differently-pruned tenants through the multi-tenant gateway
+//!    (priority classes + per-tenant reports) and print the
 //!    latency/batch reports.
 //! 2. **PJRT pipeline (needs `artifacts/`)** — dataset generation,
 //!    pre-training, the four pruning schemes of Fig. 1 (ASCII),
@@ -39,6 +41,7 @@ use repro::pruning::{self, LayerShape, Scheme};
 use repro::rng::Pcg32;
 use repro::runtime::Runtime;
 use repro::serve::artifact;
+use repro::serve::faults::{FaultPlan, FaultSite};
 use repro::serve::gateway::{Gateway, Priority, TenantConfig};
 use repro::serve::loadgen::{self, LoadGenConfig, LoadMode, TenantLoad};
 use repro::serve::server::Server;
@@ -141,7 +144,7 @@ fn serve_walkthrough() -> Result<()> {
     let server = Server::builder(plan.clone())
         .config(&cfg)
         .kernel(KernelKind::PatternScalar)
-        .spawn();
+        .spawn()?;
     let load = loadgen::run(
         &server.handle(),
         plan.in_dims,
@@ -158,6 +161,38 @@ fn serve_walkthrough() -> Result<()> {
         load.achieved_qps,
         report.latency.p95_us,
         report.mean_batch
+    );
+
+    // deterministic chaos: arm the fault injector and watch the
+    // supervisor convert worker panics into typed errors + restarts.
+    // The fault schedule is a pure function of (seed, site, request
+    // id), so the victim set is identical at any worker count — this
+    // is `repro serve --chaos 7` in miniature.
+    println!("=== deterministic chaos (repro serve --chaos 7) ===");
+    let faults =
+        Arc::new(FaultPlan::new(7).rate(FaultSite::WorkerPanic, 150));
+    let chaos_server = Server::builder(plan.clone())
+        .config(&cfg)
+        .kernel(KernelKind::PatternScalar)
+        .chaos(faults.clone())
+        .spawn()?;
+    let chaos_load = loadgen::run(
+        &chaos_server.handle(),
+        plan.in_dims,
+        &LoadGenConfig {
+            mode: LoadMode::Open { qps: 100_000.0 },
+            requests: 32,
+            seed: 42,
+        },
+    );
+    let chaos_report = chaos_server.shutdown();
+    println!("[chaos] {}", faults.summary());
+    println!(
+        "[chaos] {} of 32 completed, {} lost to injected panics, \
+         {} worker restart(s) — typed errors, no hangs\n",
+        chaos_load.completed,
+        chaos_report.worker_lost,
+        chaos_report.restarts
     );
 
     // multi-tenant gateway: two tenants with their own pruned plans and

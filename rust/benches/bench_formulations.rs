@@ -1,17 +1,30 @@
 //! Bench (Table IV): per-iteration runtime of problem (3) (layer-wise)
 //! vs problem (2) (whole-model) on VGG-Mini — the paper reports 4.9x;
 //! the same asymmetry (layer-wise costs N primal solves + N forward
-//! refreshes) must reproduce here.
+//! refreshes) must reproduce here. Results land in
+//! `BENCH_formulations.json` (written even when the PJRT runtime is
+//! unavailable, so CI always gets the artifact).
 
 use repro::admm::{prune_layerwise, prune_whole, DataSource};
-use repro::serve::stats::{bench, section};
 use repro::config::AdmmConfig;
 use repro::pruning::Scheme;
 use repro::runtime::Runtime;
+use repro::serve::stats::{section, BenchLog};
 use repro::train::params::init_params;
 
 fn main() {
-    let rt = Runtime::new("artifacts").expect("run `make artifacts`");
+    let mut log = BenchLog::new("formulations");
+    let rt = match Runtime::new("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            log.write("BENCH_formulations.json").unwrap();
+            println!(
+                "(skipping PJRT formulation benches: {e}; run `make \
+                 artifacts` to see them)"
+            );
+            return;
+        }
+    };
     let model = rt.model("vgg_sv10").unwrap().clone();
     let params = init_params(&model, 1);
     let cfg = AdmmConfig {
@@ -31,7 +44,7 @@ fn main() {
     }
 
     section("Table IV: per-iteration runtime, VGG irregular 16x");
-    let r3 = bench("problem (3) layer-wise iter", 1, 5, || {
+    let r3 = log.bench("problem (3) layer-wise iter", 1, 5, || {
         std::hint::black_box(
             prune_layerwise(
                 &rt,
@@ -45,7 +58,7 @@ fn main() {
             .unwrap(),
         );
     });
-    let r2 = bench("problem (2) whole-model iter", 1, 5, || {
+    let r2 = log.bench("problem (2) whole-model iter", 1, 5, || {
         std::hint::black_box(
             prune_whole(
                 &rt,
@@ -58,10 +71,12 @@ fn main() {
             .unwrap(),
         );
     });
+    let ratio = r3.mean_ms / r2.mean_ms.max(1e-9);
     println!(
-        "\nproblem(3)/problem(2) per-iter ratio: {:.2}x (paper: 4.9x; \
-         < N={} because problem (2) optimizes all weights at once)",
-        r3.mean_ms / r2.mean_ms,
+        "\nproblem(3)/problem(2) per-iter ratio: {ratio:.2}x (paper: \
+         4.9x; < N={} because problem (2) optimizes all weights at once)",
         model.prunable.len()
     );
+    log.metric("layerwise_over_whole_ratio", ratio);
+    log.write("BENCH_formulations.json").unwrap();
 }

@@ -31,7 +31,8 @@ fn serve_qps(
     let server = Server::builder(plan.clone())
         .config(cfg)
         .kernel(kernel)
-        .spawn();
+        .spawn()
+        .unwrap();
     let load = loadgen::run(
         &server.handle(),
         plan.in_dims,

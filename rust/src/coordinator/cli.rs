@@ -26,6 +26,7 @@ use crate::report::human_bytes;
 use crate::rng::Pcg32;
 use crate::serve::artifact;
 use crate::serve::error::ServeError;
+use crate::serve::faults::{FaultPlan, FaultSite, Faults};
 use crate::serve::gateway::{Gateway, Priority, TenantConfig};
 use crate::serve::loadgen::{self, LoadGenConfig, LoadMode};
 use crate::serve::registry::{PlanKey, PlanRegistry, ShardedRegistry};
@@ -232,11 +233,16 @@ commands:
             each layer to its tuned codelet; --threads also sets the
             plan-compile thread count)
             [--artifact <path>] [--seed N] [--quantize]
+            [--chaos <seed>]
             dynamic-batching inference server on a synthetic spec
             (no PJRT/artifacts needed); --artifact saves/loads the
             compiled plan and verifies the save->load round trip;
             --quantize serves the INT8 plan (cached and persisted
-            under its own registry key / artifact element type)
+            under its own registry key / artifact element type);
+            --chaos arms the seeded fault injector: worker panics
+            (supervised + restarted), artifact byte corruption
+            (recompile-from-spec fallback), and slow-executor stalls,
+            all a pure function of (seed, site, request id)
   serve --tenants N   multi-tenant gateway mode: N synthetic tenants
             sharing one worker pool, each with its own plan, registry
             shard, bounded queue, and priority class (cycling
@@ -244,7 +250,9 @@ commands:
             across tenants zipf(--skew S)-wise and is replayed
             deterministically ([--pace X] > 0 paces it in wall time);
             [--admit-qps N] enables per-tenant admission control,
-            [--ramp-us N] adds a diurnal rate ramp of that period
+            [--ramp-us N] adds a diurnal rate ramp of that period;
+            [--chaos <seed>] injects deterministic faults as above,
+            with per-tenant lost/restart counts in the report
   bench diff <baseline.json> <current.json> [--threshold pct]
             compare two BENCH_*.json logs series-by-series (default
             threshold 5%); exits nonzero when any series worsened
@@ -286,6 +294,44 @@ fn config_err(e: anyhow::Error) -> ServeError {
     ServeError::Config {
         msg: format!("{e:#}"),
     }
+}
+
+/// Parse `--chaos <seed>` into an armed [`FaultPlan`] (None when the
+/// flag is absent — the fault hooks then cost one branch).
+fn chaos_flag(args: &Args) -> Result<Faults> {
+    match args.flags.get("chaos") {
+        Some(s) => {
+            let seed: u64 =
+                s.parse().context("--chaos must be a seed (u64)")?;
+            Ok(Some(Arc::new(FaultPlan::new(seed))))
+        }
+        None => Ok(None),
+    }
+}
+
+/// Load a plan artifact with the chaos corruption hook applied: when
+/// the schedule fires [`FaultSite::ArtifactCorrupt`] for this load
+/// attempt, one byte is flipped before decode — exercising the typed
+/// `ServeError::Artifact` path exactly as real disk corruption would.
+fn load_artifact_chaos(
+    path: &str,
+    chaos: &Faults,
+) -> Result<ExecutionPlan, ServeError> {
+    let mut bytes = std::fs::read(path).map_err(|e| {
+        ServeError::Artifact {
+            msg: format!("reading plan artifact {path}: {e}"),
+        }
+    })?;
+    if let Some(plan) = chaos {
+        if plan.fires(FaultSite::ArtifactCorrupt, 0) {
+            plan.corrupt(&mut bytes, 0);
+            println!(
+                "chaos: corrupted one byte of artifact {path} \
+                 before decode"
+            );
+        }
+    }
+    artifact::decode_plan(&bytes)
 }
 
 /// `repro serve`: compile-or-load a plan through the registry, stand up
@@ -342,7 +388,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
         shared.scheme.name(),
         (shared.rate * 1000.0).round() as u64
     );
-    let build_spec = || -> Result<ExecutionPlan> {
+    let build_spec = |quant: bool| -> Result<ExecutionPlan> {
         let (spec, mut params) = match spec_kind.as_str() {
             "vgg" => {
                 synth::vgg_style(&model_id, hw, classes, &[16, 32], seed)
@@ -360,7 +406,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
         );
         let ir = ModelIR::build(&spec, &params)?;
         let mut pm = PassManager::new(shared.threads);
-        if quantize {
+        if quant {
             pm = pm.with_quantize();
         }
         if tune {
@@ -387,10 +433,23 @@ fn serve_cmd(args: &Args) -> Result<()> {
         key = key.quantized();
     }
     let artifact_path = args.flags.get("artifact").cloned();
+    let chaos = chaos_flag(args)?;
     let t = crate::util::Stopwatch::start();
-    let plan = registry.get_or_build(&key, || match &artifact_path {
+    let build_primary = || match &artifact_path {
         Some(p) if std::path::Path::new(p).exists() => {
-            let plan = artifact::load(p)?;
+            let plan = match load_artifact_chaos(p, &chaos) {
+                Ok(plan) => plan,
+                // degraded mode: a corrupt artifact falls back to
+                // recompiling from the spec flags rather than failing
+                Err(ServeError::Artifact { msg }) => {
+                    println!(
+                        "artifact {p} unreadable ({msg}); degraded: \
+                         recompiling the plan from its spec"
+                    );
+                    return build_spec(quantize).map_err(config_err);
+                }
+                Err(e) => return Err(e),
+            };
             // a stale artifact for a different spec must not be served
             // under this run's flags
             if plan.ir.model_id != model_id
@@ -420,7 +479,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
             Ok(plan)
         }
         Some(p) => {
-            let plan = build_spec().map_err(config_err)?;
+            let plan = build_spec(quantize).map_err(config_err)?;
             artifact::save(&plan, p)?;
             let loaded = artifact::load(p)?;
             artifact::verify_roundtrip(&plan, &loaded, 4, seed)?;
@@ -432,14 +491,37 @@ fn serve_cmd(args: &Args) -> Result<()> {
             );
             Ok(loaded)
         }
-        None => build_spec().map_err(config_err),
-    })?;
+        None => build_spec(quantize).map_err(config_err),
+    };
+    let (plan, degraded) = if quantize {
+        // the i8 plan's degraded twin: same flags, f32 payload
+        let mut fb_key = PlanKey::new(
+            &model_id,
+            shared.scheme.name(),
+            shared.rate,
+            shared.threads,
+        );
+        if tune {
+            fb_key = fb_key.tuned();
+        }
+        registry.get_or_build_with_fallback(&key, build_primary, &fb_key, || {
+            build_spec(false).map_err(config_err)
+        })?
+    } else {
+        (registry.get_or_build(&key, build_primary)?, false)
+    };
+    if degraded {
+        println!(
+            "degraded: i8 plan build failed; serving the f32 fallback"
+        );
+    }
     println!("plan {key} ready in {:.2} ms", t.ms());
 
-    let server = Server::builder(plan.clone())
-        .config(&cfg)
-        .kernel(kernel)
-        .spawn();
+    let mut sb = Server::builder(plan.clone()).config(&cfg).kernel(kernel);
+    if let Some(fp) = &chaos {
+        sb = sb.chaos(fp.clone());
+    }
+    let server = sb.spawn()?;
     let handle = server.handle();
     let lg = LoadGenConfig {
         mode,
@@ -479,6 +561,14 @@ fn serve_cmd(args: &Args) -> Result<()> {
         rs.coalesced,
         rs.evictions
     );
+    if let Some(fp) = &chaos {
+        println!("{}", fp.summary());
+        println!(
+            "supervisor: {} request(s) lost to panics, {} worker \
+             restart(s)",
+            report.worker_lost, report.restarts
+        );
+    }
     Ok(())
 }
 
@@ -518,6 +608,7 @@ fn serve_tenants_cmd(
         None => KernelSel::parse("sparse")?,
     };
     let quantize = args.flag_bool("quantize");
+    let chaos = chaos_flag(args)?;
 
     let mut registry = ShardedRegistry::new();
     let names: Vec<String> =
@@ -548,7 +639,7 @@ fn serve_tenants_cmd(
         }
         // per-tenant seed: every tenant gets genuinely different weights
         let tseed = seed.wrapping_add(ti as u64);
-        let plan = registry.get_or_build(name, &key, || {
+        let compile = |quant: bool| -> Result<ExecutionPlan, ServeError> {
             let (spec, mut params) = match spec_kind.as_str() {
                 "vgg" => synth::vgg_style(
                     &model_id,
@@ -581,14 +672,39 @@ fn serve_tenants_cmd(
             let ir =
                 ModelIR::build(&spec, &params).map_err(config_err)?;
             let mut pm = PassManager::new(shared.threads);
-            if quantize {
+            if quant {
                 pm = pm.with_quantize();
             }
             pm.compile(ir).map_err(config_err)
-        })?;
+        };
+        let (plan, degraded) = if quantize {
+            // degraded twin: the same tenant spec compiled to f32
+            let fb_key = PlanKey::new(
+                &model_id,
+                shared.scheme.name(),
+                shared.rate,
+                shared.threads,
+            );
+            registry.get_or_build_with_fallback(
+                name,
+                &key,
+                || compile(true),
+                &fb_key,
+                || compile(false),
+            )?
+        } else {
+            (registry.get_or_build(name, &key, || compile(false))?, false)
+        };
+        if degraded {
+            println!(
+                "  tenant {name}: degraded — i8 build failed, serving \
+                 the f32 fallback"
+            );
+        }
         let mut tc = TenantConfig::new(name)
             .priority(prio[ti % prio.len()])
-            .queue_cap(queue_cap);
+            .queue_cap(queue_cap)
+            .degraded(degraded);
         if admit_qps.is_finite() {
             tc = tc.admit(admit_qps, 8.0);
         }
@@ -608,6 +724,9 @@ fn serve_tenants_cmd(
     let ramp =
         (ramp_us > 0).then(|| loadgen::DiurnalRamp::new(ramp_us, 0.25));
     let trace = loadgen::multi_tenant_trace(&loads, ramp, seed);
+    if let Some(fp) = &chaos {
+        builder = builder.chaos(fp.clone());
+    }
     let gateway = builder.spawn()?;
     let handle = gateway.handle();
     let load = loadgen::replay(&handle, &loads, &trace, seed, pace)?;
@@ -628,8 +747,8 @@ fn serve_tenants_cmd(
     for c in &load.per_tenant {
         println!(
             "  tenant {:>6}: {} issued, {} completed, {} shed, \
-             {} rejected",
-            c.tenant, c.issued, c.completed, c.shed, c.rejected
+             {} rejected, {} lost",
+            c.tenant, c.issued, c.completed, c.shed, c.rejected, c.lost
         );
     }
     println!(
@@ -644,14 +763,29 @@ fn serve_tenants_cmd(
     let total = registry.total();
     println!(
         "registry: {} ready across {} shards, {} hits, {} misses, \
-         {} coalesced, {} evictions",
+         {} coalesced, {} evictions, {} build failures \
+         ({} broken, {} shed fast)",
         total.ready,
         n_tenants,
         total.hits,
         total.misses,
         total.coalesced,
-        total.evictions
+        total.evictions,
+        total.build_failures,
+        total.broken,
+        total.shed_broken
     );
+    if let Some(fp) = &chaos {
+        println!("{}", fp.summary());
+        let lost: u64 =
+            report.tenants.iter().map(|t| t.report.worker_lost).sum();
+        let restarts: u64 =
+            report.tenants.iter().map(|t| t.report.restarts).sum();
+        println!(
+            "supervisor: {lost} request(s) lost to panics, \
+             {restarts} worker restart(s)"
+        );
+    }
     Ok(())
 }
 

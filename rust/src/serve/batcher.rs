@@ -108,6 +108,27 @@ impl<T> BoundedQueue<T> {
         Ok(depth)
     }
 
+    /// Put already-admitted work back at the *front* of the queue (a
+    /// supervisor requeueing the innocent batch-mates of a panicked
+    /// dispatch). Capacity was paid at the original push and closing
+    /// must not drop admitted work, so this bypasses both the cap and
+    /// the closed check — the requeueing worker is still in its pop
+    /// loop, so a drain-in-progress always picks these back up.
+    pub fn requeue(&self, item: T) {
+        let mut g = lock_clean(&self.state);
+        g.items.push_front(item);
+        drop(g);
+        self.nonempty.notify_all();
+    }
+
+    /// Take everything still queued (shutdown leftovers after the
+    /// workers exited), so each item can be failed with a typed error
+    /// instead of a silently dropped channel.
+    pub fn drain(&self) -> Vec<T> {
+        let mut g = lock_clean(&self.state);
+        g.items.drain(..).collect()
+    }
+
     /// Close the queue: further pushes fail, consumers drain what is left
     /// and then see `None`.
     pub fn close(&self) {
@@ -280,6 +301,31 @@ mod tests {
             t.elapsed() < Duration::from_millis(40),
             "stale anchor must not wait the full window"
         );
+    }
+
+    #[test]
+    fn requeue_jumps_the_line_and_ignores_cap_and_close() {
+        let q = BoundedQueue::new(2);
+        q.push(1u32).unwrap();
+        q.push(2).unwrap();
+        // at capacity and even closed, admitted work goes back in front
+        q.close();
+        q.requeue(0);
+        assert_eq!(q.len(), 3);
+        let p = BatchPolicy::new(8, 0);
+        assert_eq!(q.pop_batch(&p).unwrap(), vec![0, 1, 2]);
+        assert!(q.pop_batch(&p).is_none());
+    }
+
+    #[test]
+    fn drain_empties_leftovers() {
+        let q = BoundedQueue::new(4);
+        q.push("a").unwrap();
+        q.push("b").unwrap();
+        q.close();
+        assert_eq!(q.drain(), vec!["a", "b"]);
+        assert!(q.is_empty());
+        assert!(q.drain().is_empty());
     }
 
     #[test]

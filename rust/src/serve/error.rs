@@ -40,6 +40,12 @@ pub enum ServeError {
     /// the request was dropped before a response (batch failed, deadline
     /// shed, or shutdown raced the in-flight work)
     Canceled { id: u64 },
+    /// the dispatching worker panicked while this request was in flight;
+    /// the supervisor failed it typed (never a hung channel), requeued
+    /// its batch-mates, and restarted the worker
+    WorkerLost { id: u64 },
+    /// an OS-level thread spawn failed while standing up a worker pool
+    Spawn { msg: String },
     /// a registry plan build failed (compile or artifact load); the key
     /// stays buildable — the next caller retries
     Build { key: String, msg: String },
@@ -81,6 +87,13 @@ impl std::fmt::Display for ServeError {
             ServeError::Closed => write!(f, "server is shutting down"),
             ServeError::Canceled { id } => {
                 write!(f, "request {id} canceled before a response")
+            }
+            ServeError::WorkerLost { id } => write!(
+                f,
+                "request {id} lost to a worker panic (worker restarted)"
+            ),
+            ServeError::Spawn { msg } => {
+                write!(f, "spawning worker thread failed: {msg}")
             }
             ServeError::Build { key, msg } => {
                 write!(f, "building plan {key} failed: {msg}")
@@ -146,6 +159,11 @@ mod tests {
             budget: 5,
         };
         assert!(over.to_string().contains("budget"));
+        let lost = ServeError::WorkerLost { id: 7 };
+        assert!(lost.to_string().contains("worker panic"));
+        assert_ne!(lost, ServeError::Canceled { id: 7 });
+        let spawn = ServeError::Spawn { msg: "EAGAIN".into() };
+        assert!(spawn.to_string().contains("EAGAIN"));
     }
 
     #[test]

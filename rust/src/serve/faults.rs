@@ -1,0 +1,338 @@
+//! Deterministic fault injection for the serve tier.
+//!
+//! A [`FaultPlan`] is a *seeded chaos schedule*: whether a fault fires
+//! at a given site is a pure function of `(seed, site, sequence#)`,
+//! evaluated through a split PCG stream per decision. Nothing about
+//! wall-clock time, worker count, or batch formation enters the
+//! decision, so the same seed replays the exact same fault set at 1, 2,
+//! or 4 workers — the house determinism invariant extended to failure
+//! behavior.
+//!
+//! Sites ([`FaultSite`]) name *where* a fault can strike:
+//!
+//! - [`FaultSite::WorkerPanic`] — the dispatching worker panics while a
+//!   batch containing the selected request is in flight (sequence# =
+//!   request id). The supervisor in the worker loop catches the unwind,
+//!   fails exactly the selected request with
+//!   [`ServeError::WorkerLost`](super::error::ServeError::WorkerLost),
+//!   requeues its batch-mates, and rebuilds the worker's executors.
+//! - [`FaultSite::ArtifactCorrupt`] — a loaded artifact byte stream is
+//!   corrupted before decode (sequence# = load attempt), exercising the
+//!   typed `ServeError::Artifact` path and recompile-from-spec fallback.
+//! - [`FaultSite::SlowExec`] — the executor stalls for
+//!   [`FaultPlan::stall_us`] before a batch (sequence# = head request
+//!   id). Only wall-clock latency is affected, never results, so the
+//!   deterministic counters are untouched by this site.
+//! - [`FaultSite::BuildFail`] — a plan build returns a synthetic error
+//!   (sequence# = build attempt per key), feeding the registry's
+//!   failure counters and circuit breaker.
+//!
+//! The plan is threaded through `ServerBuilder`/`GatewayBuilder` as an
+//! `Option<Arc<FaultPlan>>` and is **off by default**: every hook takes
+//! the `Option`, and the `None` arm is a branch — no hashing, no RNG,
+//! no atomics on the fault-free path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::rng::Pcg32;
+
+/// Shared handle threaded through the serve builders. `None` disables
+/// every site at zero cost.
+pub type Faults = Option<Arc<FaultPlan>>;
+
+/// Named places where the chaos schedule can strike.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// worker panics mid-dispatch; the selected request is lost
+    WorkerPanic,
+    /// artifact bytes corrupted before decode
+    ArtifactCorrupt,
+    /// executor stalls before a batch (latency only, never results)
+    SlowExec,
+    /// plan build returns a synthetic error
+    BuildFail,
+}
+
+impl FaultSite {
+    pub const ALL: [FaultSite; 4] = [
+        FaultSite::WorkerPanic,
+        FaultSite::ArtifactCorrupt,
+        FaultSite::SlowExec,
+        FaultSite::BuildFail,
+    ];
+
+    fn idx(self) -> usize {
+        match self {
+            FaultSite::WorkerPanic => 0,
+            FaultSite::ArtifactCorrupt => 1,
+            FaultSite::SlowExec => 2,
+            FaultSite::BuildFail => 3,
+        }
+    }
+
+    /// Per-site stream salt: decisions at different sites are drawn
+    /// from unrelated PCG streams even for equal sequence numbers.
+    fn salt(self) -> u64 {
+        [
+            0x9E37_79B9_7F4A_7C15,
+            0xC2B2_AE3D_27D4_EB4F,
+            0x1656_67B1_9E37_79F9,
+            0x27D4_EB2F_1656_67C5,
+        ][self.idx()]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::WorkerPanic => "worker_panic",
+            FaultSite::ArtifactCorrupt => "artifact_corrupt",
+            FaultSite::SlowExec => "slow_exec",
+            FaultSite::BuildFail => "build_fail",
+        }
+    }
+}
+
+/// A seeded, replayable chaos schedule. Construct with
+/// [`FaultPlan::new`], tune per-site rates with the builder methods,
+/// wrap in an `Arc`, and hand it to the serve builders.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    /// per-site fire rate in per-mille (0 = site disabled)
+    rates: [u16; 4],
+    /// stall length for [`FaultSite::SlowExec`]
+    stall_us: u64,
+    /// how many times each site actually struck (telemetry only — the
+    /// schedule itself is pure; these count the acted-on injections)
+    injected: [AtomicU64; 4],
+}
+
+impl FaultPlan {
+    /// A plan with the default chaos mix: panics, stalls, and artifact
+    /// corruption at 30‰ each; build failures off (opt in via
+    /// [`FaultPlan::rate`] so plan standup stays reliable by default).
+    pub fn new(seed: u64) -> Self {
+        FaultPlan {
+            seed,
+            rates: [30, 30, 30, 0],
+            stall_us: 2_000,
+            injected: Default::default(),
+        }
+    }
+
+    /// Override one site's fire rate (per-mille, clamped to 1000).
+    pub fn rate(mut self, site: FaultSite, per_mille: u16) -> Self {
+        self.rates[site.idx()] = per_mille.min(1000);
+        self
+    }
+
+    /// Override the [`FaultSite::SlowExec`] stall length.
+    pub fn stall_us(mut self, us: u64) -> Self {
+        self.stall_us = us;
+        self
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Pure decision: does `site` fire at `seq`? Same `(seed, site,
+    /// seq)` always answers the same — this is the whole determinism
+    /// story. Callers pick a `seq` that is itself reproducible (request
+    /// id, build attempt, load attempt).
+    pub fn fires(&self, site: FaultSite, seq: u64) -> bool {
+        let rate = self.rates[site.idx()];
+        if rate == 0 {
+            return false;
+        }
+        let mut rng = Pcg32::split_stream(self.seed ^ site.salt(), seq);
+        rng.below(1000) < rate as usize
+    }
+
+    /// Record that a fault decided by [`FaultPlan::fires`] was acted
+    /// on. Kept separate from the decision so re-checking a request id
+    /// (e.g. during unwind triage) never double-counts.
+    pub fn record(&self, site: FaultSite) {
+        self.injected[site.idx()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// How often each site actually struck, as `(site, count)` pairs.
+    pub fn injected(&self) -> Vec<(FaultSite, u64)> {
+        FaultSite::ALL
+            .iter()
+            .map(|&s| (s, self.injected[s.idx()].load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    /// One-line summary for reports: `chaos seed=42: worker_panic=3 ...`
+    pub fn summary(&self) -> String {
+        let fired: Vec<String> = self
+            .injected()
+            .into_iter()
+            .filter(|(s, n)| *n > 0 || self.rates[s.idx()] > 0)
+            .map(|(s, n)| format!("{}={n}", s.name()))
+            .collect();
+        format!("chaos seed={}: {}", self.seed, fired.join(" "))
+    }
+
+    /// Stall length used by [`FaultSite::SlowExec`].
+    pub fn stall(&self) -> std::time::Duration {
+        std::time::Duration::from_micros(self.stall_us)
+    }
+
+    /// Deterministically corrupt one byte of `bytes` (position drawn
+    /// from the site stream at `seq`). Records the injection. No-op on
+    /// an empty buffer.
+    pub fn corrupt(&self, bytes: &mut [u8], seq: u64) {
+        if bytes.is_empty() {
+            return;
+        }
+        let mut rng = Pcg32::split_stream(
+            self.seed ^ FaultSite::ArtifactCorrupt.salt(),
+            seq.wrapping_add(1) << 1,
+        );
+        let pos = rng.below(bytes.len());
+        bytes[pos] ^= 0x01 | (rng.below(255) as u8);
+        self.record(FaultSite::ArtifactCorrupt);
+    }
+}
+
+/// Zero-cost hook: does `site` fire at `seq` under `faults`? The
+/// `None` arm is a single branch.
+pub fn fires(faults: &Faults, site: FaultSite, seq: u64) -> bool {
+    match faults {
+        None => false,
+        Some(p) => p.fires(site, seq),
+    }
+}
+
+/// Dispatch-side panic hook: if any id in `ids` is poisoned by the
+/// schedule, panic (inside the supervisor's `catch_unwind`) exactly as
+/// a buggy kernel would. The supervisor triages the unwind.
+pub fn maybe_panic(faults: &Faults, ids: &[u64]) {
+    let Some(p) = faults else { return };
+    if let Some(id) =
+        ids.iter().find(|&&id| p.fires(FaultSite::WorkerPanic, id))
+    {
+        panic!("chaos: injected worker panic on request {id}");
+    }
+}
+
+/// Dispatch-side stall hook: sleep `stall_us` when the site fires for
+/// the batch head. Latency-only — results and deterministic counters
+/// are unaffected.
+pub fn maybe_stall(faults: &Faults, head_id: u64) {
+    let Some(p) = faults else { return };
+    if p.fires(FaultSite::SlowExec, head_id) {
+        p.record(FaultSite::SlowExec);
+        std::thread::sleep(p.stall());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_is_pure_and_seed_sensitive() {
+        let a = FaultPlan::new(42);
+        let b = FaultPlan::new(42);
+        let c = FaultPlan::new(43);
+        let mut diverged = false;
+        for site in FaultSite::ALL {
+            let a = a.rates[site.idx()];
+            assert_eq!(a, b.rates[site.idx()]);
+            let _ = a;
+        }
+        for seq in 0..4096u64 {
+            for site in FaultSite::ALL {
+                assert_eq!(
+                    a.fires(site, seq),
+                    b.fires(site, seq),
+                    "same seed must agree at ({site:?}, {seq})"
+                );
+            }
+            if a.fires(FaultSite::WorkerPanic, seq)
+                != c.fires(FaultSite::WorkerPanic, seq)
+            {
+                diverged = true;
+            }
+        }
+        assert!(diverged, "different seeds never diverged");
+    }
+
+    #[test]
+    fn sites_draw_independent_streams() {
+        let p = FaultPlan::new(7)
+            .rate(FaultSite::WorkerPanic, 500)
+            .rate(FaultSite::BuildFail, 500);
+        let mut differs = false;
+        for seq in 0..512u64 {
+            if p.fires(FaultSite::WorkerPanic, seq)
+                != p.fires(FaultSite::BuildFail, seq)
+            {
+                differs = true;
+                break;
+            }
+        }
+        assert!(differs, "sites share a stream");
+    }
+
+    #[test]
+    fn rates_are_respected() {
+        let off = FaultPlan::new(9).rate(FaultSite::WorkerPanic, 0);
+        let always =
+            FaultPlan::new(9).rate(FaultSite::WorkerPanic, 1000);
+        for seq in 0..256u64 {
+            assert!(!off.fires(FaultSite::WorkerPanic, seq));
+            assert!(always.fires(FaultSite::WorkerPanic, seq));
+        }
+        // ~30/1000 default rate lands in a sane band over 10k draws
+        let p = FaultPlan::new(1);
+        let n = (0..10_000u64)
+            .filter(|&s| p.fires(FaultSite::WorkerPanic, s))
+            .count();
+        assert!((100..=700).contains(&n), "30/1000 rate fired {n}/10000");
+    }
+
+    #[test]
+    fn disabled_handle_never_fires() {
+        let none: Faults = None;
+        for seq in 0..64 {
+            assert!(!fires(&none, FaultSite::WorkerPanic, seq));
+        }
+        maybe_panic(&none, &[1, 2, 3]); // must not panic
+        maybe_stall(&none, 0); // must not sleep
+    }
+
+    #[test]
+    fn maybe_panic_fires_on_poisoned_id() {
+        let p = Arc::new(
+            FaultPlan::new(11).rate(FaultSite::WorkerPanic, 1000),
+        );
+        let faults: Faults = Some(p);
+        let got = std::panic::catch_unwind(|| {
+            maybe_panic(&faults, &[5]);
+        });
+        assert!(got.is_err(), "poisoned id must panic");
+    }
+
+    #[test]
+    fn corrupt_flips_a_byte_deterministically() {
+        let p = FaultPlan::new(3);
+        let orig: Vec<u8> = (0..200u8).collect();
+        let mut a = orig.clone();
+        let mut b = orig.clone();
+        p.corrupt(&mut a, 4);
+        p.corrupt(&mut b, 4);
+        assert_ne!(a, orig, "corruption must change the buffer");
+        assert_eq!(a, b, "same (seed, seq) must corrupt identically");
+        let flipped =
+            a.iter().zip(&orig).filter(|(x, y)| x != y).count();
+        assert_eq!(flipped, 1, "exactly one byte flips");
+        assert_eq!(
+            p.injected()[FaultSite::ArtifactCorrupt.idx()].1,
+            2
+        );
+    }
+}

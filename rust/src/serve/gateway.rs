@@ -44,10 +44,12 @@ use crate::mobile::plan::{ExecutionPlan, StepDims};
 use crate::report::Table;
 
 use super::error::ServeError;
+use super::faults::{self, FaultPlan, Faults};
 use super::registry::{plan_bytes, RegistryStats, ShardedRegistry};
 use super::{lock_clean, wait_clean, wait_timeout_clean};
 use super::server::{check_image, ServeResponse, Ticket};
 use super::stats::{ServeReport, ServeStats};
+use super::supervisor::{self, Meta, RespTx};
 
 /// Dispatch priority class. Workers always serve every waiting `High`
 /// request before any `Normal` one, and `Normal` before `Low`; within a
@@ -111,6 +113,10 @@ pub struct TenantConfig {
     /// ([`plan_bytes`]); exceeding it at spawn is a typed
     /// [`ServeError::OverBudget`]
     pub mem_budget: u64,
+    /// the tenant is serving a fallback plan (i8 build fell back to
+    /// f32, or a corrupt artifact was recompiled from spec); carried
+    /// through to [`TenantReport::degraded`] so fleet reports show it
+    pub degraded: bool,
 }
 
 impl TenantConfig {
@@ -123,6 +129,7 @@ impl TenantConfig {
             admit_burst: 8.0,
             deadline_us: 0,
             mem_budget: u64::MAX,
+            degraded: false,
         }
     }
 
@@ -153,6 +160,12 @@ impl TenantConfig {
         self.mem_budget = bytes.max(1);
         self
     }
+
+    /// Mark the tenant as running in a degraded mode (fallback plan).
+    pub fn degraded(mut self, flag: bool) -> Self {
+        self.degraded = flag;
+        self
+    }
 }
 
 /// Virtual-time token bucket — refill is driven by the trace timestamps
@@ -177,7 +190,7 @@ struct GwRequest {
     img: Fmap,
     enqueued: Instant,
     deadline: Option<Instant>,
-    tx: mpsc::Sender<ServeResponse>,
+    tx: RespTx,
 }
 
 struct GwState {
@@ -210,6 +223,7 @@ pub struct GatewayBuilder {
     cfg: GatewayConfig,
     tenants: Vec<(TenantConfig, Arc<ExecutionPlan>, KernelSel)>,
     registry: Option<Arc<ShardedRegistry>>,
+    faults: Faults,
 }
 
 impl GatewayBuilder {
@@ -252,6 +266,14 @@ impl GatewayBuilder {
         self
     }
 
+    /// Arm a seeded [`FaultPlan`]: workers will deterministically
+    /// panic / stall per the plan's schedule. Off by default; the
+    /// fault-free path pays one `Option` branch per batch.
+    pub fn chaos(mut self, plan: Arc<FaultPlan>) -> Self {
+        self.faults = Some(plan);
+        self
+    }
+
     /// Register one tenant: its deployment knobs, compiled plan, and
     /// kernel selection.
     pub fn tenant(
@@ -273,6 +295,7 @@ impl GatewayBuilder {
             cfg,
             tenants,
             registry,
+            faults,
         } = self;
         if tenants.is_empty() {
             return Err(ServeError::Config {
@@ -323,22 +346,37 @@ impl GatewayBuilder {
         let max_batch = cfg.max_batch.max(1);
         let max_wait = Duration::from_micros(cfg.max_wait_us);
         let batch_threads = cfg.batch_threads.max(1);
-        let workers = (0..cfg.workers.max(1))
-            .map(|i| {
-                let shared = shared.clone();
-                std::thread::Builder::new()
-                    .name(format!("gw-worker-{i}"))
-                    .spawn(move || {
-                        worker_loop(
-                            &shared,
-                            max_batch,
-                            max_wait,
-                            batch_threads,
-                        )
-                    })
-                    .expect("spawning gateway worker")
-            })
-            .collect();
+        let mut workers = Vec::with_capacity(cfg.workers.max(1));
+        for i in 0..cfg.workers.max(1) {
+            let shared = shared.clone();
+            let faults = faults.clone();
+            let spawned = std::thread::Builder::new()
+                .name(format!("gw-worker-{i}"))
+                .spawn(move || {
+                    worker_loop(
+                        &shared,
+                        max_batch,
+                        max_wait,
+                        batch_threads,
+                        faults,
+                    )
+                });
+            match spawned {
+                Ok(h) => workers.push(h),
+                Err(e) => {
+                    // tear down the partial pool before surfacing the
+                    // typed error, so no worker thread leaks
+                    lock_clean(&shared.state).closed = true;
+                    shared.work_cv.notify_all();
+                    for w in workers {
+                        let _ = w.join();
+                    }
+                    return Err(ServeError::Spawn {
+                        msg: e.to_string(),
+                    });
+                }
+            }
+        }
         Ok(Gateway {
             shared,
             workers,
@@ -490,6 +528,9 @@ impl GatewayHandle {
 pub struct TenantReport {
     pub name: String,
     pub priority: Priority,
+    /// the tenant served a fallback plan (i8→f32 or recompiled from
+    /// spec after artifact corruption)
+    pub degraded: bool,
     pub report: ServeReport,
 }
 
@@ -529,8 +570,8 @@ impl GatewayReport {
         let mut t = Table::new(
             title,
             &[
-                "tenant", "prio", "completed", "rejected", "shed",
-                "shed-ddl", "rps", "p50", "p99",
+                "tenant", "prio", "mode", "completed", "rejected",
+                "shed", "shed-ddl", "lost", "rps", "p50", "p99",
             ],
         );
         for tr in &self.tenants {
@@ -538,10 +579,12 @@ impl GatewayReport {
             t.row(&[
                 tr.name.clone(),
                 tr.priority.name().into(),
+                if tr.degraded { "degraded" } else { "ok" }.into(),
                 format!("{}", r.completed),
                 format!("{}", r.rejected),
                 format!("{}", r.shed),
                 format!("{}", r.shed_deadline),
+                format!("{}", r.worker_lost),
                 format!("{:.1}", r.throughput_rps),
                 format!("{} us", r.latency.p50_us),
                 format!("{} us", r.latency.p99_us),
@@ -565,6 +608,7 @@ impl Gateway {
             cfg: GatewayConfig::default(),
             tenants: Vec::new(),
             registry: None,
+            faults: None,
         }
     }
 
@@ -585,7 +629,21 @@ impl Gateway {
         }
         self.shared.work_cv.notify_all();
         for w in self.workers {
-            w.join().expect("gateway worker panicked");
+            // a worker that died to an unsupervised panic must not
+            // wedge shutdown; its queued work is drained typed below
+            let _ = w.join();
+        }
+        // drain guarantee: anything still queued after the pool exited
+        // gets a typed Canceled, never a silently dropped channel
+        let leftovers: Vec<GwRequest> = {
+            let mut g = lock_clean(&self.shared.state);
+            g.queues
+                .iter_mut()
+                .flat_map(|q| q.drain(..))
+                .collect()
+        };
+        for req in leftovers {
+            supervisor::fail_canceled(req.id, &req.tx);
         }
         let elapsed_secs = self.started.elapsed().as_secs_f64();
         let tenants = self
@@ -595,6 +653,7 @@ impl Gateway {
             .map(|t| TenantReport {
                 name: t.cfg.name.clone(),
                 priority: t.cfg.priority,
+                degraded: t.cfg.degraded,
                 report: t.stats.report(elapsed_secs),
             })
             .collect();
@@ -708,6 +767,7 @@ fn worker_loop(
     max_batch: usize,
     max_wait: Duration,
     batch_threads: usize,
+    faults: Faults,
 ) {
     // executors are built lazily per (worker, tenant): a worker that
     // never draws a tenant's batch never allocates that tenant's arena
@@ -722,48 +782,86 @@ fn worker_loop(
         let t = &shared.tenants[ti];
         let formed = Instant::now();
         let n = batch.len();
-        t.stats.batch_dispatched(n);
+        // metas live outside the unwind boundary: a panic inside
+        // dispatch can never take the response channels with it
         let mut metas = Vec::with_capacity(n);
         let mut imgs = Vec::with_capacity(n);
         for req in batch {
-            metas.push((req.id, req.enqueued, req.tx));
+            metas.push(Meta {
+                id: req.id,
+                enqueued: req.enqueued,
+                tx: req.tx,
+            });
             imgs.push(req.img);
         }
-        let outs = if batch_threads <= 1 {
-            let ex = execs[ti].get_or_insert_with(|| {
-                Executor::with_sel(&t.plan, t.kernel)
-            });
-            ex.execute_batch(&imgs)
-        } else {
-            execute_batch_parallel(
-                &t.plan,
-                t.kernel,
-                &imgs,
-                batch_threads,
-            )
-        };
+        let outs = supervisor::dispatch(|| {
+            if faults.is_some() {
+                let ids: Vec<u64> =
+                    metas.iter().map(|m| m.id).collect();
+                faults::maybe_panic(&faults, &ids);
+                faults::maybe_stall(&faults, ids[0]);
+            }
+            if batch_threads <= 1 {
+                let ex = execs[ti].get_or_insert_with(|| {
+                    Executor::with_sel(&t.plan, t.kernel)
+                });
+                ex.execute_batch(&imgs)
+            } else {
+                execute_batch_parallel(
+                    &t.plan,
+                    t.kernel,
+                    &imgs,
+                    batch_threads,
+                )
+            }
+        });
         match outs {
-            Ok(outs) => {
-                for ((id, enqueued, tx), logits) in
-                    metas.into_iter().zip(outs)
-                {
+            Ok(Ok(outs)) => {
+                t.stats.batch_dispatched(n);
+                for (meta, logits) in metas.into_iter().zip(outs) {
                     let queue_us = formed
-                        .saturating_duration_since(enqueued)
+                        .saturating_duration_since(meta.enqueued)
                         .as_micros() as u64;
                     let total_us =
-                        enqueued.elapsed().as_micros() as u64;
+                        meta.enqueued.elapsed().as_micros() as u64;
                     t.stats.complete(total_us, queue_us);
-                    let _ = tx.send(ServeResponse {
-                        id,
+                    let _ = meta.tx.send(Ok(ServeResponse {
+                        id: meta.id,
                         logits,
                         queue_us,
                         total_us,
                         batch: n,
-                    });
+                    }));
                 }
             }
-            Err(_) => {
+            Ok(Err(_)) => {
+                t.stats.batch_dispatched(n);
                 t.stats.error_batch(n);
+            }
+            Err(_panic) => {
+                // every lazily-built executor may hold mid-batch arena
+                // garbage after an unwind; a respawned worker would
+                // start cold, so do the same here
+                execs.iter_mut().for_each(|e| *e = None);
+                let survivors = supervisor::recover_poisoned(
+                    metas, imgs, &faults, &t.stats,
+                );
+                let mut g = lock_clean(&shared.state);
+                for (meta, img) in survivors.into_iter().rev() {
+                    // deadline is cleared on requeue: once admitted and
+                    // dispatched, a survivor of a worker loss completes
+                    // rather than racing a wall-clock shed (which would
+                    // make chaos outcomes timing-dependent)
+                    g.queues[ti].push_front(GwRequest {
+                        id: meta.id,
+                        img,
+                        enqueued: meta.enqueued,
+                        deadline: None,
+                        tx: meta.tx,
+                    });
+                }
+                drop(g);
+                shared.work_cv.notify_all();
             }
         }
     }

@@ -338,6 +338,10 @@ pub struct GwOutcome {
     pub shed: bool,
     /// queue-full rejection (timing-dependent)
     pub rejected: bool,
+    /// failed typed [`ServeError::WorkerLost`] — the request was the
+    /// schedule-selected victim of a worker panic (deterministic under
+    /// seeded chaos)
+    pub lost: bool,
 }
 
 /// Per-tenant roll-up of a replayed trace.
@@ -348,6 +352,8 @@ pub struct TenantCounts {
     pub completed: u64,
     pub shed: u64,
     pub rejected: u64,
+    /// requests lost to worker panics (victims of the chaos schedule)
+    pub lost: u64,
 }
 
 /// Aggregate result of a gateway trace replay.
@@ -405,6 +411,7 @@ pub fn replay(
                 logits: None,
                 shed: true,
                 rejected: false,
+                lost: false,
             }),
             Err(ServeError::Rejected) => outcomes.push(GwOutcome {
                 tenant: ev.tenant,
@@ -413,18 +420,25 @@ pub fn replay(
                 logits: None,
                 shed: false,
                 rejected: true,
+                lost: false,
             }),
             Err(other) => return Err(other),
         }
     }
     for (ev, ticket) in pending {
+        let (logits, lost) = match ticket.wait() {
+            Ok(r) => (Some(r.logits), false),
+            Err(ServeError::WorkerLost { .. }) => (None, true),
+            Err(_) => (None, false),
+        };
         outcomes.push(GwOutcome {
             tenant: ev.tenant,
             trace_id: ev.id,
             vt_us: ev.vt_us,
-            logits: ticket.wait().ok().map(|r| r.logits),
+            logits,
             shed: false,
             rejected: false,
+            lost,
         });
     }
     let wall_secs = t0.elapsed().as_secs_f64();
@@ -441,12 +455,14 @@ pub fn replay(
                 completed: 0,
                 shed: 0,
                 rejected: 0,
+                lost: 0,
             };
             for o in mine {
                 c.issued += 1;
                 c.completed += o.logits.is_some() as u64;
                 c.shed += o.shed as u64;
                 c.rejected += o.rejected as u64;
+                c.lost += o.lost as u64;
             }
             c
         })

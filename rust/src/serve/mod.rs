@@ -25,7 +25,16 @@
 //! * [`loadgen`] — seeded open/closed-loop and multi-tenant trace load
 //!   generation for benches, tests, and the `repro serve` CLI;
 //! * [`stats`] — latency percentiles, batch histograms, and the shared
-//!   bench harness.
+//!   bench harness;
+//! * [`faults`] — the deterministic chaos harness: a seeded
+//!   [`FaultPlan`](faults::FaultPlan) injects worker panics, artifact
+//!   corruption, slow executors and plan-build failures as a pure
+//!   function of `(seed, site, request id)`, so fault schedules are
+//!   bit-reproducible at any worker count;
+//! * `supervisor` — the worker supervision layer: dispatch runs inside
+//!   `catch_unwind`, a poisoned batch fails exactly one victim with a
+//!   typed [`ServeError::WorkerLost`], innocents are requeued, and the
+//!   worker restarts with executors rebuilt.
 //!
 //! Every fallible surface here reports the one public [`ServeError`]
 //! enum. Everything is artifact-free and PJRT-free: the CLI serves
@@ -34,11 +43,13 @@
 pub mod artifact;
 pub(crate) mod batcher;
 pub mod error;
+pub mod faults;
 pub mod gateway;
 pub mod loadgen;
 pub mod registry;
 pub mod server;
 pub mod stats;
+pub(crate) mod supervisor;
 
 use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::Duration;
@@ -80,6 +91,7 @@ pub(crate) fn wait_timeout_clean<'a, T>(
 
 pub use artifact::{load as load_plan, save as save_plan};
 pub use error::ServeError;
+pub use faults::{FaultPlan, FaultSite};
 pub use gateway::{
     Gateway, GatewayHandle, GatewayReport, Priority, TenantConfig,
     TenantReport,

@@ -19,6 +19,14 @@
 //! * **failure**: the builder's error surfaces as a typed
 //!   [`ServeError::Build`] to it alone, the in-flight marker is removed,
 //!   and blocked callers retry (the next one becomes the builder);
+//! * **circuit breaking**: consecutive build failures per key are
+//!   counted; after [`BREAK_AFTER`] in a row the key's circuit opens
+//!   and lookups fail fast (counted as `shed_broken`) for an
+//!   exponentially growing number of *lookup ticks* — a deterministic
+//!   logical clock, not wall time — so a permanently broken
+//!   configuration sheds its load instead of re-running a doomed
+//!   compile on every request. One probe build is admitted when the
+//!   window lapses (half-open); success resets the key;
 //! * **eviction**: beyond `capacity` ready plans — or beyond the
 //!   registry's byte budget, measured by [`plan_bytes`] — the
 //!   least-recently-used entry is dropped (in-flight builds are never
@@ -124,6 +132,23 @@ enum Slot {
     Building,
 }
 
+/// Consecutive build failures open a key's circuit after this many in a
+/// row.
+pub const BREAK_AFTER: u64 = 3;
+
+/// Base open-window length, in lookup ticks; doubles per additional
+/// consecutive failure (capped at `<< 6`).
+pub const BREAK_BACKOFF: u64 = 8;
+
+/// Per-key consecutive-failure record (the circuit breaker's state).
+#[derive(Clone, Copy, Debug, Default)]
+struct FailState {
+    /// consecutive failures; reset to 0 by any successful build
+    failures: u64,
+    /// circuit is open (lookups fail fast) until this lookup tick
+    open_until: Option<u64>,
+}
+
 /// Clears a key's in-flight `Building` marker (and wakes waiters) unless
 /// disarmed — the builder's panic-safety net.
 struct BuildGuard<'a> {
@@ -143,12 +168,15 @@ impl Drop for BuildGuard<'_> {
 #[derive(Default)]
 struct Inner {
     slots: BTreeMap<PlanKey, Slot>,
+    fail: BTreeMap<PlanKey, FailState>,
     tick: u64,
     resident_bytes: u64,
     hits: u64,
     misses: u64,
     coalesced: u64,
     evictions: u64,
+    build_failures: u64,
+    shed_broken: u64,
 }
 
 /// Point-in-time registry counters. `hits + misses + coalesced` always
@@ -170,6 +198,12 @@ pub struct RegistryStats {
     /// its plan
     pub coalesced: u64,
     pub evictions: u64,
+    /// builds that returned an error (feeds the per-key circuit breaker)
+    pub build_failures: u64,
+    /// keys whose circuit is currently open (failing fast)
+    pub broken: usize,
+    /// lookups failed fast by an open circuit, without running a build
+    pub shed_broken: u64,
 }
 
 impl RegistryStats {
@@ -185,10 +219,15 @@ impl RegistryStats {
         self.misses += other.misses;
         self.coalesced += other.coalesced;
         self.evictions += other.evictions;
+        self.build_failures += other.build_failures;
+        self.broken += other.broken;
+        self.shed_broken += other.shed_broken;
     }
 
+    /// Every [`PlanRegistry::get_or_build`] call that has returned
+    /// resolves as exactly one of hit / miss / coalesced / shed-broken.
     pub fn lookups(&self) -> u64 {
-        self.hits + self.misses + self.coalesced
+        self.hits + self.misses + self.coalesced + self.shed_broken
     }
 }
 
@@ -224,13 +263,39 @@ impl PlanRegistry {
 
     /// Fetch `key`, running `build` at most once across all concurrent
     /// callers when it is absent. Build failures come back as
-    /// [`ServeError::Build`] carrying the key and the underlying message.
+    /// [`ServeError::Build`] carrying the key and the underlying
+    /// message, and count toward the key's circuit breaker: after
+    /// [`BREAK_AFTER`] consecutive failures the circuit opens and
+    /// lookups fail fast (no build) for an exponentially-backed-off
+    /// number of lookup ticks.
     pub fn get_or_build(
         &self,
         key: &PlanKey,
         build: impl FnOnce() -> Result<ExecutionPlan, ServeError>,
     ) -> Result<Arc<ExecutionPlan>, ServeError> {
         let mut g = lock_clean(&self.inner);
+        // the lookup tick is the breaker's logical clock: deterministic
+        // in the lookup sequence, independent of wall time
+        g.tick += 1;
+        let entry_tick = g.tick;
+        if let Some(fs) = g.fail.get(key) {
+            if let Some(open_until) = fs.open_until {
+                if entry_tick < open_until {
+                    let failures = fs.failures;
+                    g.shed_broken += 1;
+                    return Err(ServeError::Build {
+                        key: key.to_string(),
+                        msg: format!(
+                            "circuit open after {failures} consecutive \
+                             build failures; retry admitted in {} \
+                             lookups",
+                            open_until - entry_tick
+                        ),
+                    });
+                }
+                // window lapsed: half-open, this caller probes
+            }
+        }
         let mut waited = false;
         loop {
             let cached = match g.slots.get(key) {
@@ -281,6 +346,22 @@ impl PlanRegistry {
         let plan = match build() {
             Ok(plan) => Arc::new(plan),
             Err(err) => {
+                {
+                    // consecutive-failure bookkeeping; scope the lock
+                    // so the BuildGuard's own lock (taken when it drops
+                    // armed, clearing the marker) cannot deadlock
+                    let mut g = lock_clean(&self.inner);
+                    g.build_failures += 1;
+                    let tick = g.tick;
+                    let fs = g.fail.entry(key.clone()).or_default();
+                    fs.failures += 1;
+                    if fs.failures >= BREAK_AFTER {
+                        let excess =
+                            (fs.failures - BREAK_AFTER).min(6);
+                        fs.open_until =
+                            Some(tick + (BREAK_BACKOFF << excess));
+                    }
+                }
                 // guard drops armed: marker cleared, waiters retry
                 return Err(match err {
                     b @ ServeError::Build { .. } => b,
@@ -295,6 +376,8 @@ impl PlanRegistry {
         let mut g = lock_clean(&self.inner);
         g.tick += 1;
         let tick = g.tick;
+        // a successful build closes the breaker and forgets the streak
+        g.fail.remove(key);
         g.slots.insert(
             key.clone(),
             Slot::Ready {
@@ -361,6 +444,48 @@ impl PlanRegistry {
         }
     }
 
+    /// Try `key` first; on a typed build failure (including a fast-fail
+    /// from its open circuit), fall back to `fb_key` — the degraded
+    /// path, e.g. an i8 plan falling back to its f32 twin. Returns the
+    /// plan and whether the fallback was taken (`true` = degraded).
+    /// Non-build errors surface unchanged.
+    pub fn get_or_build_with_fallback(
+        &self,
+        key: &PlanKey,
+        build: impl FnOnce() -> Result<ExecutionPlan, ServeError>,
+        fb_key: &PlanKey,
+        fb_build: impl FnOnce() -> Result<ExecutionPlan, ServeError>,
+    ) -> Result<(Arc<ExecutionPlan>, bool), ServeError> {
+        match self.get_or_build(key, build) {
+            Ok(plan) => Ok((plan, false)),
+            Err(ServeError::Build { .. }) => self
+                .get_or_build(fb_key, fb_build)
+                .map(|plan| (plan, true)),
+            Err(other) => Err(other),
+        }
+    }
+
+    /// Consecutive build failures recorded against `key` (0 once a
+    /// build succeeds).
+    pub fn failures(&self, key: &PlanKey) -> u64 {
+        lock_clean(&self.inner)
+            .fail
+            .get(key)
+            .map(|fs| fs.failures)
+            .unwrap_or(0)
+    }
+
+    /// Whether `key`'s circuit is open right now (the next lookup would
+    /// fail fast instead of building).
+    pub fn circuit_open(&self, key: &PlanKey) -> bool {
+        let g = lock_clean(&self.inner);
+        match g.fail.get(key).and_then(|fs| fs.open_until) {
+            // the probing lookup will run at tick + 1
+            Some(open_until) => g.tick + 1 < open_until,
+            None => false,
+        }
+    }
+
     /// Drop a specific entry (e.g. after its artifact was republished).
     /// No-op for in-flight builds.
     pub fn evict(&self, key: &PlanKey) -> bool {
@@ -384,6 +509,13 @@ impl PlanRegistry {
             .values()
             .filter(|s| matches!(s, Slot::Ready { .. }))
             .count();
+        let broken = g
+            .fail
+            .values()
+            .filter(|fs| {
+                fs.open_until.is_some_and(|until| g.tick + 1 < until)
+            })
+            .count();
         RegistryStats {
             ready,
             building: g.slots.len() - ready,
@@ -394,6 +526,9 @@ impl PlanRegistry {
             misses: g.misses,
             coalesced: g.coalesced,
             evictions: g.evictions,
+            build_failures: g.build_failures,
+            broken,
+            shed_broken: g.shed_broken,
         }
     }
 }
@@ -464,6 +599,20 @@ impl ShardedRegistry {
         build: impl FnOnce() -> Result<ExecutionPlan, ServeError>,
     ) -> Result<Arc<ExecutionPlan>, ServeError> {
         self.shard(tenant)?.get_or_build(key, build)
+    }
+
+    /// [`PlanRegistry::get_or_build_with_fallback`] on the tenant's
+    /// shard.
+    pub fn get_or_build_with_fallback(
+        &self,
+        tenant: &str,
+        key: &PlanKey,
+        build: impl FnOnce() -> Result<ExecutionPlan, ServeError>,
+        fb_key: &PlanKey,
+        fb_build: impl FnOnce() -> Result<ExecutionPlan, ServeError>,
+    ) -> Result<(Arc<ExecutionPlan>, bool), ServeError> {
+        self.shard(tenant)?
+            .get_or_build_with_fallback(key, build, fb_key, fb_build)
     }
 
     /// Per-tenant counters in deterministic (name) order.
@@ -758,6 +907,127 @@ mod tests {
             sharded.get_or_build("mallory", &k1, || build_plan(1)),
             Err(ServeError::UnknownTenant { .. })
         ));
+    }
+
+    fn failing_build() -> Result<ExecutionPlan, ServeError> {
+        Err(ServeError::Config {
+            msg: "synthetic: build always fails".into(),
+        })
+    }
+
+    #[test]
+    fn breaker_opens_after_consecutive_failures_and_sheds_fast() {
+        let reg = PlanRegistry::new(4);
+        let key = PlanKey::new("broken", "pattern", 8.0, 1);
+        let builds = AtomicUsize::new(0);
+        let mut shed_msgs = 0;
+        // hammer a permanently-broken key: the breaker must bound how
+        // many doomed builds actually run
+        for _ in 0..64 {
+            let err = reg
+                .get_or_build(&key, || {
+                    builds.fetch_add(1, Ordering::SeqCst);
+                    failing_build()
+                })
+                .unwrap_err();
+            match err {
+                ServeError::Build { msg, .. } => {
+                    if msg.contains("circuit open") {
+                        shed_msgs += 1;
+                    }
+                }
+                other => panic!("expected Build, got {other:?}"),
+            }
+        }
+        let ran = builds.load(Ordering::SeqCst);
+        assert!(
+            ran < 16,
+            "breaker must bound doomed builds, ran {ran}"
+        );
+        assert!(shed_msgs > 0, "some lookups must shed fast");
+        let s = reg.stats();
+        assert_eq!(s.build_failures, ran as u64);
+        assert_eq!(s.shed_broken, shed_msgs);
+        assert_eq!(s.broken, 1, "one key's circuit is open");
+        assert_eq!(
+            s.lookups(),
+            64,
+            "every lookup resolves exactly once (got {s:?})"
+        );
+        assert!(reg.circuit_open(&key));
+        assert_eq!(reg.failures(&key), ran as u64);
+    }
+
+    #[test]
+    fn breaker_closes_on_probe_success() {
+        let reg = PlanRegistry::new(4);
+        let key = PlanKey::new("flaky", "pattern", 8.0, 1);
+        // open the circuit with BREAK_AFTER straight failures
+        for _ in 0..BREAK_AFTER {
+            let _ = reg.get_or_build(&key, failing_build);
+        }
+        assert!(reg.circuit_open(&key));
+        // burn through the open window (fast-fails advance the tick)
+        let mut probes = 0;
+        for _ in 0..(2 * BREAK_BACKOFF) {
+            if reg
+                .get_or_build(&key, || {
+                    probes += 1;
+                    build_plan(1)
+                })
+                .is_ok()
+            {
+                break;
+            }
+        }
+        assert_eq!(probes, 1, "exactly one probe ran when half-open");
+        assert!(!reg.circuit_open(&key));
+        assert_eq!(reg.failures(&key), 0, "success resets the streak");
+        // and the plan is now a plain cache hit
+        let before = reg.stats().hits;
+        reg.get_or_build(&key, || build_plan(1)).unwrap();
+        assert_eq!(reg.stats().hits, before + 1);
+    }
+
+    #[test]
+    fn fallback_degrades_to_secondary_key() {
+        let reg = PlanRegistry::new(4);
+        let q = PlanKey::new("m", "pattern", 8.0, 1).quantized();
+        let f = PlanKey::new("m", "pattern", 8.0, 1);
+        // primary (i8) build fails -> fallback (f32) serves, degraded
+        let (plan, degraded) = reg
+            .get_or_build_with_fallback(
+                &q,
+                failing_build,
+                &f,
+                || build_plan(1),
+            )
+            .unwrap();
+        assert!(degraded);
+        assert_eq!(plan.elem, ElemType::F32);
+        // primary succeeding is not degraded
+        let (_, degraded) = reg
+            .get_or_build_with_fallback(
+                &q,
+                || build_quant_plan(1),
+                &f,
+                || build_plan(1),
+            )
+            .unwrap();
+        assert!(!degraded);
+        // any builder error is wrapped into Build by get_or_build, so
+        // every primary failure takes the degraded path — including
+        // non-compile errors like a missing artifact
+        let (plan, degraded) = reg
+            .get_or_build_with_fallback(
+                &PlanKey::new("x", "pattern", 8.0, 1),
+                || Err(ServeError::Closed),
+                &f,
+                || build_plan(1),
+            )
+            .unwrap();
+        assert!(degraded);
+        assert_eq!(plan.elem, ElemType::F32);
     }
 
     #[test]

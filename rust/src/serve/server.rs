@@ -33,7 +33,9 @@ use crate::mobile::plan::{ExecutionPlan, StepDims};
 
 use super::batcher::{BatchPolicy, BoundedQueue, PushError};
 use super::error::ServeError;
+use super::faults::{self, FaultPlan, Faults};
 use super::stats::{ServeReport, ServeStats};
+use super::supervisor::{self, Meta, RespTx};
 
 /// One queued inference request: the image plus everything needed to
 /// route and time its response.
@@ -41,7 +43,7 @@ pub struct ServeRequest {
     pub id: u64,
     pub img: Fmap,
     pub enqueued: Instant,
-    tx: mpsc::Sender<ServeResponse>,
+    tx: RespTx,
 }
 
 /// A completed inference.
@@ -61,24 +63,27 @@ pub struct ServeResponse {
 /// response.
 pub struct Ticket {
     pub id: u64,
-    rx: mpsc::Receiver<ServeResponse>,
+    rx: mpsc::Receiver<Result<ServeResponse, ServeError>>,
 }
 
 impl Ticket {
     pub(crate) fn new(
         id: u64,
-        rx: mpsc::Receiver<ServeResponse>,
+        rx: mpsc::Receiver<Result<ServeResponse, ServeError>>,
     ) -> Self {
         Ticket { id, rx }
     }
 
-    /// Block until the response arrives. Errs with
-    /// [`ServeError::Canceled`] if the request's batch failed or the
-    /// server dropped it during shutdown.
+    /// Block until the response arrives. The channel carries typed
+    /// errors — [`ServeError::WorkerLost`] from the supervisor,
+    /// [`ServeError::Canceled`] from a shutdown drain — and a dropped
+    /// sender (batch failed mid-flight) also maps to `Canceled`, so a
+    /// waiter can never hang and never sees an untyped disconnect.
     pub fn wait(self) -> Result<ServeResponse, ServeError> {
-        self.rx
-            .recv()
-            .map_err(|_| ServeError::Canceled { id: self.id })
+        match self.rx.recv() {
+            Ok(res) => res,
+            Err(_) => Err(ServeError::Canceled { id: self.id }),
+        }
     }
 }
 
@@ -173,7 +178,7 @@ impl ServeHandle {
 ///     .max_batch(8)
 ///     .max_wait_us(500)
 ///     .kernel(KernelSel::Auto)
-///     .spawn();
+///     .spawn()?;
 /// ```
 ///
 /// Defaults come from [`ServeConfig::default`]; [`ServerBuilder::config`]
@@ -185,6 +190,7 @@ pub struct ServerBuilder {
     plan: Arc<ExecutionPlan>,
     kernel: KernelSel,
     cfg: ServeConfig,
+    faults: Faults,
 }
 
 impl ServerBuilder {
@@ -236,9 +242,25 @@ impl ServerBuilder {
         self
     }
 
-    /// Spawn the worker pool and start serving.
-    pub fn spawn(self) -> Server {
-        let ServerBuilder { plan, kernel, cfg } = self;
+    /// Arm a seeded chaos schedule (see [`FaultPlan`]): worker panics,
+    /// executor stalls, and friends fire deterministically from
+    /// `(seed, site, request id)`. Off by default — without this call
+    /// the fault hooks are a single `None` branch.
+    pub fn chaos(mut self, plan: Arc<FaultPlan>) -> Self {
+        self.faults = Some(plan);
+        self
+    }
+
+    /// Spawn the worker pool and start serving. A failed OS thread
+    /// spawn tears the partial pool back down and returns a typed
+    /// [`ServeError::Spawn`] instead of panicking mid-construction.
+    pub fn spawn(self) -> Result<Server, ServeError> {
+        let ServerBuilder {
+            plan,
+            kernel,
+            cfg,
+            faults,
+        } = self;
         let shared = Arc::new(Shared {
             queue: BoundedQueue::new(cfg.queue_cap),
             stats: ServeStats::new(),
@@ -247,29 +269,42 @@ impl ServerBuilder {
         });
         let policy = BatchPolicy::new(cfg.max_batch, cfg.max_wait_us);
         let batch_threads = cfg.batch_threads.max(1);
-        let workers = (0..cfg.workers.max(1))
-            .map(|i| {
-                let plan = plan.clone();
-                let shared = shared.clone();
-                std::thread::Builder::new()
-                    .name(format!("serve-worker-{i}"))
-                    .spawn(move || {
-                        worker_loop(
-                            &plan,
-                            kernel,
-                            &shared,
-                            &policy,
-                            batch_threads,
-                        )
-                    })
-                    .expect("spawning serve worker")
-            })
-            .collect();
-        Server {
+        let mut workers = Vec::with_capacity(cfg.workers.max(1));
+        for i in 0..cfg.workers.max(1) {
+            let plan = plan.clone();
+            let shared = shared.clone();
+            let faults = faults.clone();
+            let spawned = std::thread::Builder::new()
+                .name(format!("serve-worker-{i}"))
+                .spawn(move || {
+                    worker_loop(
+                        &plan,
+                        kernel,
+                        &shared,
+                        &policy,
+                        batch_threads,
+                        faults,
+                    )
+                });
+            match spawned {
+                Ok(h) => workers.push(h),
+                Err(e) => {
+                    // drain the partial pool so no thread leaks
+                    shared.queue.close();
+                    for w in workers {
+                        let _ = w.join();
+                    }
+                    return Err(ServeError::Spawn {
+                        msg: e.to_string(),
+                    });
+                }
+            }
+        }
+        Ok(Server {
             shared,
             workers,
             started: Instant::now(),
-        }
+        })
     }
 }
 
@@ -291,6 +326,7 @@ impl Server {
             plan,
             kernel: KernelSel::Auto,
             cfg: ServeConfig::default(),
+            faults: None,
         }
     }
 
@@ -302,10 +338,21 @@ impl Server {
 
     /// Stop accepting requests, drain the queue, join the workers, and
     /// return the final report over the whole serving window.
+    ///
+    /// The drain guarantee holds under active faults: the supervisor
+    /// keeps workers alive through dispatch panics, and anything still
+    /// queued after the joins (possible only if a worker died outside
+    /// the supervised scope) is failed with a typed `Canceled` — an
+    /// admitted request never ends as a silently dropped channel.
     pub fn shutdown(self) -> ServeReport {
         self.shared.queue.close();
         for w in self.workers {
-            w.join().expect("serve worker panicked");
+            // a worker lost outside the supervised dispatch scope must
+            // not panic the caller; its queued work is drained below
+            let _ = w.join();
+        }
+        for req in self.shared.queue.drain() {
+            supervisor::fail_canceled(req.id, &req.tx);
         }
         self.shared
             .stats
@@ -319,15 +366,15 @@ fn worker_loop(
     shared: &Shared,
     policy: &BatchPolicy,
     batch_threads: usize,
+    faults: Faults,
 ) {
     // the long-lived executor (arena allocated once) only serves the
     // sequential path; the parallel path shards each batch across fresh
-    // scoped executors inside execute_batch_parallel
-    let mut ex = if batch_threads <= 1 {
-        Some(Executor::with_sel(plan, kernel))
-    } else {
-        None
-    };
+    // scoped executors inside execute_batch_parallel. Built lazily so
+    // the supervisor can drop and rebuild it after a dispatch panic
+    // (the arena is mid-batch garbage once an unwind crossed it).
+    let seq = batch_threads <= 1;
+    let mut ex: Option<Executor<'_>> = None;
     // window anchored at the first request's enqueue time: a backlogged
     // request is never further delayed by the straggler window
     while let Some(batch) =
@@ -336,46 +383,88 @@ fn worker_loop(
         if batch.is_empty() {
             continue;
         }
+        if seq && ex.is_none() {
+            ex = Some(Executor::with_sel(plan, kernel));
+        }
         let formed = Instant::now();
         let n = batch.len();
-        shared.stats.batch_dispatched(n);
         let mut metas = Vec::with_capacity(n);
         let mut imgs = Vec::with_capacity(n);
         for req in batch {
-            metas.push((req.id, req.enqueued, req.tx));
+            metas.push(Meta {
+                id: req.id,
+                enqueued: req.enqueued,
+                tx: req.tx,
+            });
             imgs.push(req.img);
         }
-        let outs = match ex.as_mut() {
-            Some(ex) => ex.execute_batch(&imgs),
-            None => {
-                execute_batch_parallel(plan, kernel, &imgs, batch_threads)
+        // metas stay outside the unwind boundary: a panic below can
+        // never take the response channels down with it
+        let outs = supervisor::dispatch(|| {
+            if faults.is_some() {
+                let ids: Vec<u64> =
+                    metas.iter().map(|m| m.id).collect();
+                faults::maybe_panic(&faults, &ids);
+                faults::maybe_stall(&faults, ids[0]);
             }
-        };
+            match ex.as_mut() {
+                Some(ex) => ex.execute_batch(&imgs),
+                None => execute_batch_parallel(
+                    plan,
+                    kernel,
+                    &imgs,
+                    batch_threads,
+                ),
+            }
+        });
         match outs {
-            Ok(outs) => {
-                for ((id, enqueued, tx), logits) in
-                    metas.into_iter().zip(outs)
-                {
+            Ok(Ok(outs)) => {
+                shared.stats.batch_dispatched(n);
+                for (meta, logits) in metas.into_iter().zip(outs) {
                     let queue_us = formed
-                        .saturating_duration_since(enqueued)
-                        .as_micros() as u64;
+                        .saturating_duration_since(meta.enqueued)
+                        .as_micros()
+                        as u64;
                     let total_us =
-                        enqueued.elapsed().as_micros() as u64;
+                        meta.enqueued.elapsed().as_micros() as u64;
                     shared.stats.complete(total_us, queue_us);
                     // a departed client is not an error: drop its response
-                    let _ = tx.send(ServeResponse {
-                        id,
+                    let _ = meta.tx.send(Ok(ServeResponse {
+                        id: meta.id,
                         logits,
                         queue_us,
                         total_us,
                         batch: n,
-                    });
+                    }));
                 }
             }
-            Err(_) => {
+            Ok(Err(_)) => {
                 // shape errors are caught at submit; an execute error here
                 // cancels the whole batch (clients see recv disconnect)
+                shared.stats.batch_dispatched(n);
                 shared.stats.error_batch(n);
+            }
+            Err(_panic) => {
+                // supervision: the executor's arena is untrustworthy
+                // after an unwind — rebuild lazily on the next batch
+                ex = None;
+                let survivors = supervisor::recover_poisoned(
+                    metas,
+                    imgs,
+                    &faults,
+                    &shared.stats,
+                );
+                // requeue front-most last so FIFO order is preserved;
+                // this worker is still in its pop loop, so a
+                // shutdown-drain in progress picks these back up
+                for (meta, img) in survivors.into_iter().rev() {
+                    shared.queue.requeue(ServeRequest {
+                        id: meta.id,
+                        img,
+                        enqueued: meta.enqueued,
+                        tx: meta.tx,
+                    });
+                }
             }
         }
     }
@@ -426,7 +515,8 @@ mod tests {
             .queue_cap(32)
             .batch_threads(1)
             .kernel(KernelKind::PatternScalar)
-            .spawn();
+            .spawn()
+            .unwrap();
         let handle = server.handle();
         let mut direct =
             Executor::new(&plan, KernelKind::PatternScalar);
@@ -454,7 +544,8 @@ mod tests {
             .max_batch(4)
             .max_wait_us(200)
             .queue_cap(32)
-            .spawn();
+            .spawn()
+            .unwrap();
         let handle = server.handle();
         let mut direct = Executor::auto(&plan);
         for seed in 0..6u64 {
@@ -476,7 +567,8 @@ mod tests {
             .max_batch(4)
             .max_wait_us(200)
             .queue_cap(32)
-            .spawn();
+            .spawn()
+            .unwrap();
         let handle = server.handle();
         // same-image requests are bit-identical no matter which worker
         // or batch shape served them: i8 accumulation is exact
@@ -498,7 +590,8 @@ mod tests {
         let server = Server::builder(plan.clone())
             .config(&ServeConfig::preset(crate::config::Preset::Smoke))
             .kernel(KernelKind::PatternScalar)
-            .spawn();
+            .spawn()
+            .unwrap();
         let handle = server.handle();
         let bad = Fmap::zeros(1, 3);
         match handle.submit(bad) {
@@ -534,7 +627,8 @@ mod tests {
             .max_wait_us(0)
             .queue_cap(64)
             .kernel(KernelKind::PatternScalar)
-            .spawn();
+            .spawn()
+            .unwrap();
         let handle = server.handle();
         let tickets: Vec<Ticket> = (0..16)
             .map(|s| handle.submit(img_for(&plan, s)).unwrap())
@@ -552,7 +646,8 @@ mod tests {
         let server = Server::builder(plan.clone())
             .config(&ServeConfig::preset(crate::config::Preset::Smoke))
             .kernel(KernelKind::PatternScalar)
-            .spawn();
+            .spawn()
+            .unwrap();
         let handle = server.handle();
         server.shutdown();
         match handle.submit(Fmap::zeros(3, 8)) {

@@ -94,6 +94,8 @@ struct StatsInner {
     errors: u64,
     shed: u64,
     shed_deadline: u64,
+    worker_lost: u64,
+    restarts: u64,
 }
 
 impl Default for StatsInner {
@@ -109,6 +111,8 @@ impl Default for StatsInner {
             errors: 0,
             shed: 0,
             shed_deadline: 0,
+            worker_lost: 0,
+            restarts: 0,
         }
     }
 }
@@ -168,6 +172,20 @@ impl ServeStats {
         lock_clean(&self.inner).shed_deadline += 1;
     }
 
+    /// `n` in-flight requests were lost to a worker panic and failed
+    /// with a typed `WorkerLost`. Under seeded chaos the loss set is a
+    /// pure function of request ids, so this counter *is* in the
+    /// deterministic set.
+    pub fn worker_lost(&self, n: usize) {
+        lock_clean(&self.inner).worker_lost += n as u64;
+    }
+
+    /// The supervisor recovered from one worker panic (executors were
+    /// rebuilt and the worker re-entered its loop).
+    pub fn restart(&self) {
+        lock_clean(&self.inner).restarts += 1;
+    }
+
     /// One response completed: end-to-end and queue-wait micros
     /// (reservoir-sampled past [`SAMPLE_CAP`]).
     pub fn complete(&self, total_us: u64, queue_us: u64) {
@@ -201,6 +219,8 @@ impl ServeStats {
             errors: g.errors,
             shed: g.shed,
             shed_deadline: g.shed_deadline,
+            worker_lost: g.worker_lost,
+            restarts: g.restarts,
             elapsed_secs,
             throughput_rps: if elapsed_secs > 0.0 {
                 g.completed as f64 / elapsed_secs
@@ -231,6 +251,11 @@ pub struct ServeReport {
     pub shed: u64,
     /// deadline sheds of already-admitted requests (wall-clock dependent)
     pub shed_deadline: u64,
+    /// in-flight requests failed typed after a worker panic; under
+    /// seeded chaos a pure function of request ids (deterministic)
+    pub worker_lost: u64,
+    /// supervisor recoveries: one per worker panic, executors rebuilt
+    pub restarts: u64,
     pub elapsed_secs: f64,
     pub throughput_rps: f64,
     /// end-to-end latency (submit -> response)
@@ -244,7 +269,7 @@ pub struct ServeReport {
 
 impl ServeReport {
     /// Requests dispatched through the batcher (must equal `completed +
-    /// errors` once the server drained).
+    /// errors + worker_lost` once the server drained).
     pub fn dispatched(&self) -> u64 {
         self.batch_hist.iter().map(|&(s, c)| s as u64 * c).sum()
     }
@@ -253,9 +278,11 @@ impl ServeReport {
     /// worker counts (the serving determinism tests assert on this).
     /// Admission `shed` is included — it is a pure function of the trace
     /// under virtual-time replay; `shed_deadline` is not (wall clock).
+    /// `worker_lost` and `restarts` are included because the chaos
+    /// schedule selects victims by request id, never by batch or timing.
     pub fn deterministic_counters(
         &self,
-    ) -> (u64, u64, u64, u64, u64, u64) {
+    ) -> (u64, u64, u64, u64, u64, u64, u64, u64) {
         (
             self.submitted,
             self.completed,
@@ -263,6 +290,8 @@ impl ServeReport {
             self.errors,
             self.shed,
             self.dispatched(),
+            self.worker_lost,
+            self.restarts,
         )
     }
 
@@ -271,8 +300,9 @@ impl ServeReport {
         let mut t = Table::new(
             title,
             &[
-                "completed", "rejected", "shed", "errors", "rps",
-                "mean batch", "p50", "p95", "p99", "max",
+                "completed", "rejected", "shed", "errors", "lost",
+                "restarts", "rps", "mean batch", "p50", "p95", "p99",
+                "max",
             ],
         );
         t.row(&[
@@ -280,6 +310,8 @@ impl ServeReport {
             format!("{}", self.rejected),
             format!("{}", self.shed + self.shed_deadline),
             format!("{}", self.errors),
+            format!("{}", self.worker_lost),
+            format!("{}", self.restarts),
             format!("{:.1}", self.throughput_rps),
             format!("{:.2}", self.mean_batch),
             format!("{} us", self.latency.p50_us),
@@ -785,6 +817,8 @@ mod tests {
         st.shed();
         st.shed();
         st.shed_deadline();
+        st.worker_lost(1);
+        st.restart();
         let r = st.report(2.0);
         assert_eq!(r.submitted, 5);
         assert_eq!(r.completed, 4);
@@ -792,9 +826,15 @@ mod tests {
         assert_eq!(r.errors, 1);
         assert_eq!(r.shed, 2);
         assert_eq!(r.shed_deadline, 1);
+        assert_eq!(r.worker_lost, 1);
+        assert_eq!(r.restarts, 1);
         assert_eq!(r.dispatched(), 4);
-        // admission sheds are deterministic; deadline sheds are not
-        assert_eq!(r.deterministic_counters(), (5, 4, 1, 1, 2, 4));
+        // admission sheds and chaos losses are deterministic; deadline
+        // sheds are not
+        assert_eq!(
+            r.deterministic_counters(),
+            (5, 4, 1, 1, 2, 4, 1, 1)
+        );
         assert!((r.throughput_rps - 2.0).abs() < 1e-9);
         assert!((r.mean_batch - 2.0).abs() < 1e-9);
         assert_eq!(r.latency.max_us, 400);

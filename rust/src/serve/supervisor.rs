@@ -1,0 +1,221 @@
+//! Worker supervision: catch panics at the dispatch boundary, fail the
+//! poisoned request typed, requeue the innocent batch-mates, restart.
+//!
+//! Both worker loops (single-model server and multi-tenant gateway)
+//! follow the same contract:
+//!
+//! 1. Pop a batch; split it into metas (identity + response channel)
+//!    and images **outside** the unwind boundary, so a panic can never
+//!    take the response channels down with it.
+//! 2. Run the executor (plus any chaos hooks) inside
+//!    [`dispatch`](dispatch)'s `catch_unwind`.
+//! 3. On unwind, hand the batch to [`recover_poisoned`]: exactly one
+//!    victim — the lowest poisoned request id under the fault plan, or
+//!    the lowest id overall for an organic panic — is failed with a
+//!    typed [`ServeError::WorkerLost`]; everyone else is returned for
+//!    requeue. The worker then drops its lazy executors (their arenas
+//!    are mid-batch garbage after an unwind) and re-enters the loop.
+//!
+//! The supervisor *is* the outer worker loop: dispatch runs in a
+//! sacrificial unwind scope, and recovery rebuilds per-worker state
+//! exactly as a kill-and-respawn would — without losing the thread
+//! slot, so `shutdown`'s joins and the drain guarantee are unaffected.
+//! Restarts are counted in [`ServeReport`](super::stats::ServeReport).
+//!
+//! One victim per unwind is what keeps chaos deterministic: batch
+//! composition is timing-dependent, but "which requests end up
+//! `WorkerLost`" must not be. Failing only the schedule-selected
+//! victim and requeueing the rest makes the outcome of every request a
+//! pure function of its id, at any worker count.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc;
+use std::time::Instant;
+
+use super::error::ServeError;
+use super::faults::{FaultSite, Faults};
+use super::server::ServeResponse;
+use super::stats::ServeStats;
+
+/// Response channel payload: a completed response or a typed error.
+/// A dropped sender still maps to `Canceled` on the ticket side, so
+/// the channel can never hang a waiting client.
+pub(crate) type RespTx = mpsc::Sender<Result<ServeResponse, ServeError>>;
+
+/// Identity + response channel of one in-flight request, held outside
+/// the unwind boundary while its image is dispatched.
+pub(crate) struct Meta {
+    pub id: u64,
+    pub enqueued: Instant,
+    pub tx: RespTx,
+}
+
+/// Run one dispatch attempt inside `catch_unwind`, mapping a panic
+/// payload to its message. The closure borrows executors and images;
+/// `AssertUnwindSafe` is justified because the caller rebuilds every
+/// touched executor after an `Err` before reusing it.
+pub(crate) fn dispatch<R>(
+    f: impl FnOnce() -> R,
+) -> Result<R, String> {
+    catch_unwind(AssertUnwindSafe(f)).map_err(|payload| {
+        if let Some(s) = payload.downcast_ref::<&str>() {
+            (*s).to_string()
+        } else if let Some(s) = payload.downcast_ref::<String>() {
+            s.clone()
+        } else {
+            "worker panicked (non-string payload)".to_string()
+        }
+    })
+}
+
+/// Triage a batch whose dispatch unwound. Exactly one victim is failed
+/// with [`ServeError::WorkerLost`] (and counted as a worker loss + one
+/// restart); the rest come back paired with their images for requeue.
+pub(crate) fn recover_poisoned<T>(
+    metas: Vec<Meta>,
+    imgs: Vec<T>,
+    faults: &Faults,
+    stats: &ServeStats,
+) -> Vec<(Meta, T)> {
+    debug_assert_eq!(metas.len(), imgs.len());
+    let poisoned = |id: u64| match faults {
+        Some(p) => p.fires(FaultSite::WorkerPanic, id),
+        None => false,
+    };
+    // the victim is the lowest *poisoned* id so the loss set is the
+    // fault schedule's, independent of batch composition; an organic
+    // panic (no schedule match) consumes the lowest id, which bounds
+    // retries: every unwind shrinks the batch by one
+    let victim = metas
+        .iter()
+        .enumerate()
+        .filter(|(_, m)| poisoned(m.id))
+        .map(|(i, m)| (i, m.id))
+        .min_by_key(|&(_, id)| id)
+        .or_else(|| {
+            metas
+                .iter()
+                .enumerate()
+                .map(|(i, m)| (i, m.id))
+                .min_by_key(|&(_, id)| id)
+        });
+    let mut survivors = Vec::with_capacity(metas.len());
+    if let Some((vi, vid)) = victim {
+        if poisoned(vid) {
+            if let Some(p) = faults {
+                p.record(FaultSite::WorkerPanic);
+            }
+        }
+        stats.batch_dispatched(1);
+        stats.worker_lost(1);
+        stats.restart();
+        for (i, (meta, img)) in
+            metas.into_iter().zip(imgs).enumerate()
+        {
+            if i == vi {
+                // typed, never a hung or silently dropped channel; a
+                // gone client (recv side dropped) is fine to ignore
+                let _ = meta
+                    .tx
+                    .send(Err(ServeError::WorkerLost { id: meta.id }));
+            } else {
+                survivors.push((meta, img));
+            }
+        }
+    }
+    survivors
+}
+
+/// Shutdown-drain helper: a request still queued after every worker
+/// has exited gets a typed `Canceled`, never a dropped channel.
+pub(crate) fn fail_canceled(id: u64, tx: &RespTx) {
+    let _ = tx.send(Err(ServeError::Canceled { id }));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::faults::FaultPlan;
+    use std::sync::Arc;
+
+    fn meta(
+        id: u64,
+    ) -> (Meta, mpsc::Receiver<Result<ServeResponse, ServeError>>)
+    {
+        let (tx, rx) = mpsc::channel();
+        (
+            Meta {
+                id,
+                enqueued: Instant::now(),
+                tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn dispatch_catches_and_stringifies_panics() {
+        assert_eq!(dispatch(|| 7).unwrap(), 7);
+        let err = dispatch(|| panic!("kernel exploded")).unwrap_err();
+        assert!(err.contains("kernel exploded"), "{err}");
+    }
+
+    #[test]
+    fn organic_panic_consumes_lowest_id_only() {
+        let (m3, rx3) = meta(3);
+        let (m1, rx1) = meta(1);
+        let (m2, rx2) = meta(2);
+        let stats = ServeStats::new();
+        let survivors = recover_poisoned(
+            vec![m3, m1, m2],
+            vec![30u8, 10, 20],
+            &None,
+            &stats,
+        );
+        // id 1 is the victim; 3 and 2 survive with their images
+        match rx1.recv().unwrap() {
+            Err(ServeError::WorkerLost { id: 1 }) => {}
+            other => panic!("expected WorkerLost(1), got {other:?}"),
+        }
+        let ids: Vec<(u64, u8)> =
+            survivors.iter().map(|(m, i)| (m.id, *i)).collect();
+        assert_eq!(ids, vec![(3, 30), (2, 20)]);
+        // survivors' channels are still open (senders alive)
+        assert!(rx3.try_recv().is_err());
+        assert!(rx2.try_recv().is_err());
+        let r = stats.report(0.0);
+        assert_eq!((r.worker_lost, r.restarts), (1, 1));
+    }
+
+    #[test]
+    fn poisoned_victim_wins_over_lower_innocent_ids() {
+        // schedule poisons every id; victim = lowest poisoned = lowest
+        let plan = Arc::new(
+            FaultPlan::new(5).rate(FaultSite::WorkerPanic, 1000),
+        );
+        let faults: Faults = Some(plan.clone());
+        let (m9, rx9) = meta(9);
+        let (m4, _rx4) = meta(4);
+        let stats = ServeStats::new();
+        let survivors = recover_poisoned(
+            vec![m9, m4],
+            vec![(), ()],
+            &faults,
+            &stats,
+        );
+        assert_eq!(survivors.len(), 1);
+        assert_eq!(survivors[0].0.id, 9);
+        assert!(rx9.try_recv().is_err(), "9 must not be failed");
+        assert_eq!(plan.injected()[0].1, 1, "injection recorded once");
+    }
+
+    #[test]
+    fn fail_canceled_delivers_typed_error() {
+        let (m, rx) = meta(12);
+        fail_canceled(m.id, &m.tx);
+        match rx.recv().unwrap() {
+            Err(ServeError::Canceled { id: 12 }) => {}
+            other => panic!("expected Canceled(12), got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,572 @@
+//! Deterministic chaos: the fault-injection harness (ISSUE acceptance
+//! criteria).
+//!
+//! The house invariant — bit-identical results at any worker count —
+//! extends to injected faults: a [`FaultPlan`] decides panics, stalls,
+//! and corruption as a pure function of `(seed, site, request id)`, so
+//! the set of chaos victims, every survivor's logits, and the
+//! supervision counters must all replay bit-identically at 1, 2, and 4
+//! workers. Separately: a fully-poisoned run must resolve every request
+//! with a typed error (never a hang), a flood of build failures must
+//! trip the registry circuit breaker without starving a healthy
+//! co-tenant, a failed i8 build must degrade to its f32 twin, and every
+//! single-byte artifact corruption must surface as a typed
+//! [`ServeError::Artifact`].
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+use repro::config::ServeConfig;
+use repro::mobile::engine::{Executor, KernelKind};
+use repro::mobile::ir::ModelIR;
+use repro::mobile::plan::{compile_plan, ExecutionPlan};
+use repro::mobile::synth;
+use repro::rng::Pcg32;
+use repro::serve::artifact;
+use repro::serve::error::ServeError;
+use repro::serve::faults::{FaultPlan, FaultSite};
+use repro::serve::gateway::{Gateway, TenantConfig};
+use repro::serve::loadgen::{self, LoadGenConfig, LoadMode, TenantLoad};
+use repro::serve::registry::{PlanKey, ShardedRegistry};
+use repro::serve::server::Server;
+
+const SEED: u64 = 0xBAD5EED;
+const CHAOS_SEED: u64 = 42;
+
+fn tenant_plan(id: &str, seed: u64) -> ExecutionPlan {
+    let (spec, mut params) = synth::vgg_style(id, 8, 4, &[4, 6], seed);
+    synth::pattern_prune(&spec, &mut params, 0.25);
+    compile_plan(ModelIR::build(&spec, &params).unwrap(), 1).unwrap()
+}
+
+type Counters = (u64, u64, u64, u64, u64, u64, u64, u64);
+
+// ---------------------------------------------------------------------------
+// Gateway: fault schedule and recovery identical across worker counts
+// ---------------------------------------------------------------------------
+
+/// Panic often enough that a ~60-event trace sees several victims, and
+/// stall occasionally (timing-only noise that must not leak into any
+/// deterministic output).
+fn chaos_plan() -> Arc<FaultPlan> {
+    Arc::new(
+        FaultPlan::new(CHAOS_SEED)
+            .rate(FaultSite::WorkerPanic, 150)
+            .rate(FaultSite::SlowExec, 30)
+            .stall_us(200),
+    )
+}
+
+fn chaos_loads() -> Vec<TenantLoad> {
+    vec![
+        TenantLoad::new("alpha", 80.0, 40),
+        TenantLoad::new("beta", 40.0, 20),
+    ]
+}
+
+struct ChaosRun {
+    /// (tenant, trace id, lost, logits bits) sorted by (tenant, id)
+    outcomes: Vec<(usize, u64, bool, Option<Vec<u32>>)>,
+    counters: Vec<Counters>,
+}
+
+fn chaos_trace(workers: usize) -> ChaosRun {
+    let loads = chaos_loads();
+    let mut builder = Gateway::builder()
+        .workers(workers)
+        .max_batch(4)
+        .max_wait_us(200)
+        .chaos(chaos_plan());
+    for (ti, load) in loads.iter().enumerate() {
+        let plan = Arc::new(tenant_plan(&load.tenant, 60 + ti as u64));
+        builder = builder.tenant(
+            // caps sized to never reject: queue-full rejection is
+            // timing-dependent and would break the determinism claim
+            TenantConfig::new(&load.tenant).queue_cap(256),
+            plan,
+            KernelKind::PatternScalar,
+        );
+    }
+    let trace = loadgen::multi_tenant_trace(&loads, None, SEED);
+    let gateway = builder.spawn().unwrap();
+    let load =
+        loadgen::replay(&gateway.handle(), &loads, &trace, SEED, 0.0)
+            .unwrap();
+    let report = gateway.shutdown();
+    assert_eq!(load.rejected, 0, "queues were sized to never reject");
+    assert_eq!(load.shed, 0, "no admission control configured");
+    ChaosRun {
+        outcomes: load
+            .outcomes
+            .iter()
+            .map(|o| {
+                (
+                    o.tenant,
+                    o.trace_id,
+                    o.lost,
+                    o.logits.as_ref().map(|l| {
+                        l.iter().map(|x| x.to_bits()).collect()
+                    }),
+                )
+            })
+            .collect(),
+        counters: report
+            .tenants
+            .iter()
+            .map(|t| t.report.deterministic_counters())
+            .collect(),
+    }
+}
+
+#[test]
+fn chaos_schedule_and_recovery_identical_at_1_2_and_4_workers() {
+    let base = chaos_trace(1);
+    let lost: BTreeSet<(usize, u64)> = base
+        .outcomes
+        .iter()
+        .filter(|o| o.2)
+        .map(|o| (o.0, o.1))
+        .collect();
+    assert!(!lost.is_empty(), "chaos rate chosen to kill several");
+    assert!(base.outcomes.iter().any(|o| o.3.is_some()));
+
+    // the victim set is exactly the schedule's poisoned ids: replay
+    // submits single-threaded in trace order, so event k holds gateway
+    // id k, and `fires` is pure in (seed, site, id)
+    let schedule = chaos_plan();
+    let trace = loadgen::multi_tenant_trace(&chaos_loads(), None, SEED);
+    let want_lost: BTreeSet<(usize, u64)> = trace
+        .iter()
+        .enumerate()
+        .filter(|(k, _)| {
+            schedule.fires(FaultSite::WorkerPanic, *k as u64)
+        })
+        .map(|(_, ev)| (ev.tenant, ev.id))
+        .collect();
+    assert_eq!(lost, want_lost, "victims != poisoned schedule");
+
+    // every survivor's logits bit-match a bare executor on the same
+    // tenant-salted image: recovery re-executes innocents exactly
+    let plans: Vec<ExecutionPlan> = ["alpha", "beta"]
+        .iter()
+        .enumerate()
+        .map(|(ti, name)| tenant_plan(name, 60 + ti as u64))
+        .collect();
+    for (ti, id, _, logits) in &base.outcomes {
+        let Some(bits) = logits else { continue };
+        let plan = &plans[*ti];
+        let mut ex = Executor::new(plan, KernelKind::PatternScalar);
+        let img = loadgen::tenant_request_image(
+            plan.in_dims,
+            SEED,
+            ["alpha", "beta"][*ti],
+            *id,
+        );
+        let want: Vec<u32> =
+            ex.execute(&img).iter().map(|x| x.to_bits()).collect();
+        assert_eq!(&want, bits, "tenant {ti} trace {id}");
+    }
+
+    // supervision counters: one restart per victim, and the dispatch
+    // ledger balances per tenant
+    let total_lost: u64 = base.counters.iter().map(|c| c.6).sum();
+    assert_eq!(total_lost, want_lost.len() as u64);
+    for (ti, c) in base.counters.iter().enumerate() {
+        let (sub, comp, rej, err, shed, disp, wl, rs) = *c;
+        assert_eq!(wl, rs, "tenant {ti}: one restart per victim");
+        assert_eq!(
+            disp,
+            comp + err + wl,
+            "tenant {ti}: dispatched = completed + errors + lost"
+        );
+        assert_eq!((rej, err, shed), (0, 0, 0), "tenant {ti}");
+        assert_eq!(sub, comp + wl, "tenant {ti}: every request resolved");
+    }
+
+    for workers in [2usize, 4] {
+        let run = chaos_trace(workers);
+        assert_eq!(
+            run.outcomes, base.outcomes,
+            "chaos outcomes differ at {workers} workers"
+        );
+        assert_eq!(
+            run.counters, base.counters,
+            "chaos counters differ at {workers} workers"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server: victims are a pure function of request id
+// ---------------------------------------------------------------------------
+
+#[test]
+fn server_chaos_victims_are_a_pure_function_of_request_id() {
+    const REQUESTS: usize = 48;
+    let plan = Arc::new(tenant_plan("chaos_srv", 11));
+    let schedule = || {
+        Arc::new(
+            FaultPlan::new(7).rate(FaultSite::WorkerPanic, 200),
+        )
+    };
+    let run = |workers: usize| {
+        let cfg = ServeConfig {
+            workers,
+            max_batch: 4,
+            max_wait_us: 300,
+            queue_cap: 64,
+            batch_threads: 1,
+        };
+        let server = Server::builder(plan.clone())
+            .config(&cfg)
+            .kernel(KernelKind::PatternScalar)
+            .chaos(schedule())
+            .spawn()
+            .unwrap();
+        // open loop: one submitting thread, so server id k == trace id
+        // k and the poisoned set is computable up front
+        let load = loadgen::run(
+            &server.handle(),
+            plan.in_dims,
+            &LoadGenConfig {
+                mode: LoadMode::Open { qps: 1e6 },
+                requests: REQUESTS,
+                seed: SEED,
+            },
+        );
+        let report = server.shutdown();
+        let outcomes: Vec<(u64, Option<Vec<u32>>)> = load
+            .outcomes
+            .iter()
+            .map(|o| {
+                (
+                    o.trace_id,
+                    o.logits.as_ref().map(|l| {
+                        l.iter().map(|x| x.to_bits()).collect()
+                    }),
+                )
+            })
+            .collect();
+        (outcomes, report.deterministic_counters())
+    };
+
+    let fp = schedule();
+    let poisoned: Vec<u64> = (0..REQUESTS as u64)
+        .filter(|id| fp.fires(FaultSite::WorkerPanic, *id))
+        .collect();
+    assert!(!poisoned.is_empty(), "rate chosen to kill several");
+    assert!(poisoned.len() < REQUESTS, "and spare the rest");
+
+    let mut direct = Executor::new(&plan, KernelKind::PatternScalar);
+    let (base, base_counters) = run(1);
+    for (id, logits) in &base {
+        if poisoned.contains(id) {
+            assert!(logits.is_none(), "poisoned {id} completed");
+        } else {
+            let img = loadgen::request_image(plan.in_dims, SEED, *id);
+            let want: Vec<u32> = direct
+                .execute(&img)
+                .iter()
+                .map(|x| x.to_bits())
+                .collect();
+            assert_eq!(Some(&want), logits.as_ref(), "trace {id}");
+        }
+    }
+    let (sub, comp, rej, err, shed, disp, wl, rs) = base_counters;
+    assert_eq!(sub, REQUESTS as u64);
+    assert_eq!(wl, poisoned.len() as u64);
+    assert_eq!(rs, wl, "one worker restart per victim");
+    assert_eq!(comp, sub - wl);
+    assert_eq!((rej, err, shed), (0, 0, 0));
+    assert_eq!(disp, comp + wl);
+
+    for workers in [2usize, 4] {
+        let (out, counters) = run(workers);
+        assert_eq!(out, base, "outcomes differ at {workers} workers");
+        assert_eq!(counters, base_counters, "{workers} workers");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// An armed-but-inert FaultPlan must not perturb the serve path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn disarmed_sites_leave_the_serve_path_byte_identical() {
+    const REQUESTS: usize = 24;
+    let plan = Arc::new(tenant_plan("chaos_inert", 17));
+    let run = |chaos: Option<Arc<FaultPlan>>| {
+        let cfg = ServeConfig {
+            workers: 2,
+            max_batch: 4,
+            max_wait_us: 200,
+            queue_cap: 64,
+            batch_threads: 1,
+        };
+        let mut sb = Server::builder(plan.clone())
+            .config(&cfg)
+            .kernel(KernelKind::PatternScalar);
+        if let Some(fp) = chaos {
+            sb = sb.chaos(fp);
+        }
+        let server = sb.spawn().unwrap();
+        let load = loadgen::run(
+            &server.handle(),
+            plan.in_dims,
+            &LoadGenConfig {
+                mode: LoadMode::Closed { clients: 4 },
+                requests: REQUESTS,
+                seed: SEED,
+            },
+        );
+        let report = server.shutdown();
+        let bits: Vec<(u64, Option<Vec<u32>>)> = load
+            .outcomes
+            .iter()
+            .map(|o| {
+                (
+                    o.trace_id,
+                    o.logits.as_ref().map(|l| {
+                        l.iter().map(|x| x.to_bits()).collect()
+                    }),
+                )
+            })
+            .collect();
+        (bits, report.deterministic_counters())
+    };
+    // all-zero rates: every hook runs, nothing ever fires
+    let inert = Arc::new(
+        FaultPlan::new(9)
+            .rate(FaultSite::WorkerPanic, 0)
+            .rate(FaultSite::ArtifactCorrupt, 0)
+            .rate(FaultSite::SlowExec, 0)
+            .rate(FaultSite::BuildFail, 0),
+    );
+    let (with_bits, with_counters) = run(Some(inert));
+    let (bare_bits, bare_counters) = run(None);
+    assert_eq!(with_bits, bare_bits, "inert chaos changed outputs");
+    assert_eq!(with_counters, bare_counters);
+    assert_eq!(with_counters.6, 0, "no victims");
+    assert_eq!(with_counters.7, 0, "no restarts");
+}
+
+// ---------------------------------------------------------------------------
+// A fully-poisoned run still resolves every request: no hangs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fully_poisoned_run_resolves_every_request_with_typed_errors() {
+    let plan = Arc::new(tenant_plan("chaos_all", 23));
+    let chaos =
+        Arc::new(FaultPlan::new(3).rate(FaultSite::WorkerPanic, 1000));
+    let cfg = ServeConfig {
+        workers: 2,
+        max_batch: 4,
+        max_wait_us: 200,
+        queue_cap: 32,
+        batch_threads: 1,
+    };
+    let server = Server::builder(plan.clone())
+        .config(&cfg)
+        .kernel(KernelKind::PatternScalar)
+        .chaos(chaos)
+        .spawn()
+        .unwrap();
+    let handle = server.handle();
+    let tickets: Vec<_> = (0..16u64)
+        .map(|id| {
+            handle
+                .submit(loadgen::request_image(plan.in_dims, SEED, id))
+                .unwrap()
+        })
+        .collect();
+    // every dispatch panics; the supervisor must fail each admitted
+    // request with the typed error — a dropped channel (Canceled) or a
+    // hang here is the bug this test exists to catch
+    for t in tickets {
+        match t.wait() {
+            Err(ServeError::WorkerLost { .. }) => {}
+            Ok(_) => panic!("poisoned request completed"),
+            Err(e) => panic!("expected WorkerLost, got {e}"),
+        }
+    }
+    let report = server.shutdown();
+    let (sub, comp, _, _, _, disp, wl, rs) =
+        report.deterministic_counters();
+    assert_eq!(
+        (sub, comp, disp, wl, rs),
+        (16, 0, 16, 16, 16),
+        "every request dispatched once and lost exactly once"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Registry circuit breaker: a broken tenant sheds fast, neighbors live
+// ---------------------------------------------------------------------------
+
+#[test]
+fn broken_tenant_sheds_fast_without_starving_its_neighbor() {
+    let mut reg = ShardedRegistry::new();
+    reg.add_tenant("broken", 2, u64::MAX).unwrap();
+    reg.add_tenant("steady", 2, u64::MAX).unwrap();
+    let reg = Arc::new(reg);
+    let steady_key = PlanKey::new("steady", "pattern", 4.0, 1);
+    let steady_plan = reg
+        .get_or_build("steady", &steady_key, || {
+            Ok(tenant_plan("steady", 5))
+        })
+        .unwrap();
+    let gateway = Gateway::builder()
+        .workers(2)
+        .max_batch(4)
+        .max_wait_us(200)
+        .registry(reg.clone())
+        .tenant(
+            TenantConfig::new("steady"),
+            steady_plan,
+            KernelKind::PatternScalar,
+        )
+        .spawn()
+        .unwrap();
+
+    // flood the broken tenant's shard from a side thread while the
+    // neighbor serves: every build fails slowly, so unbounded retries
+    // would burn ~128 ms of builder time — the breaker must cut the
+    // admitted attempts to a handful and shed the rest instantly
+    let reg2 = reg.clone();
+    let flood = std::thread::spawn(move || {
+        let key = PlanKey::new("broken", "pattern", 4.0, 1);
+        let mut attempts = 0u64;
+        for _ in 0..64 {
+            let r = reg2.get_or_build("broken", &key, || {
+                attempts += 1;
+                std::thread::sleep(
+                    std::time::Duration::from_millis(2),
+                );
+                Err(ServeError::Config {
+                    msg: "flooded builder always fails".into(),
+                })
+            });
+            assert!(matches!(r, Err(ServeError::Build { .. })));
+        }
+        attempts
+    });
+
+    let loads = [TenantLoad::new("steady", 50.0, 40)];
+    let trace = loadgen::multi_tenant_trace(&loads, None, SEED);
+    let load =
+        loadgen::replay(&gateway.handle(), &loads, &trace, SEED, 0.0)
+            .unwrap();
+    let attempts = flood.join().unwrap();
+    let report = gateway.shutdown();
+
+    assert!(
+        attempts < 16,
+        "breaker admitted {attempts} of 64 flood builds"
+    );
+    let stats = reg.stats();
+    let broken = &stats.iter().find(|(n, _)| n == "broken").unwrap().1;
+    assert_eq!(broken.build_failures, attempts);
+    assert!(
+        broken.shed_broken >= 48,
+        "only {} of 64 lookups shed fast",
+        broken.shed_broken
+    );
+    assert_eq!(broken.broken, 1, "one permanently-broken key");
+
+    // the co-tenant is untouched: all requests served, bounded tail
+    let steady = &report.tenant("steady").unwrap().report;
+    assert_eq!(steady.completed, 40);
+    assert_eq!(load.per_tenant[0].completed, 40);
+    assert!(
+        steady.latency.p99_us < 5_000_000,
+        "steady p99 {} us",
+        steady.latency.p99_us
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Degraded mode: a failed i8 build falls back to the f32 twin
+// ---------------------------------------------------------------------------
+
+#[test]
+fn quantized_build_failure_degrades_to_the_f32_twin() {
+    let mut reg = ShardedRegistry::new();
+    reg.add_tenant("q", 2, u64::MAX).unwrap();
+    let reg = Arc::new(reg);
+    let key_i8 = PlanKey::new("q", "pattern", 4.0, 1).quantized();
+    let key_f32 = PlanKey::new("q", "pattern", 4.0, 1);
+    let (plan, degraded) = reg
+        .get_or_build_with_fallback(
+            "q",
+            &key_i8,
+            || {
+                Err(ServeError::Config {
+                    msg: "quantizer exploded".into(),
+                })
+            },
+            &key_f32,
+            || Ok(tenant_plan("q", 21)),
+        )
+        .unwrap();
+    assert!(degraded, "fallback must report the degraded mode");
+
+    let gateway = Gateway::builder()
+        .workers(1)
+        .max_batch(2)
+        .max_wait_us(100)
+        .registry(reg.clone())
+        .tenant(
+            TenantConfig::new("q").degraded(degraded),
+            plan.clone(),
+            KernelKind::PatternScalar,
+        )
+        .spawn()
+        .unwrap();
+    let handle = gateway.handle();
+    for id in 0..6u64 {
+        let img = loadgen::request_image(plan.in_dims, SEED, id);
+        handle.infer("q", img).unwrap();
+    }
+    let report = gateway.shutdown();
+    let tr = report.tenant("q").unwrap();
+    assert!(tr.degraded, "degraded flag lost on the way to the report");
+    assert_eq!(tr.report.completed, 6, "the f32 twin serves fine");
+    // the shard remembers the failed i8 build for the breaker
+    let stats = reg.stats();
+    assert_eq!(stats[0].1.build_failures, 1);
+}
+
+// ---------------------------------------------------------------------------
+// Artifact fuzz: every single-byte flip is a typed error, never a panic
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_single_byte_flip_of_an_artifact_is_a_typed_error() {
+    let plan = tenant_plan("chaos_fuzz", 13);
+    let bytes = artifact::encode_plan(&plan);
+    let total = bytes.len();
+    assert!(total > 160, "artifact too small to sweep");
+
+    // full sweep of the header region plus seeded positions across the
+    // whole body (including the trailing checksum itself)
+    let mut positions: Vec<usize> = (0..160).collect();
+    let mut rng = Pcg32::split_stream(0xF1A5, 0);
+    for _ in 0..256 {
+        positions.push(rng.below(total));
+    }
+    for (i, pos) in positions.into_iter().enumerate() {
+        let mut corrupted = bytes.clone();
+        // nonzero mask with bit 0 set: the byte always changes
+        let mut mrng = Pcg32::split_stream(0xF1A6, i as u64);
+        let mask = 1u8 | (mrng.below(255) as u8);
+        corrupted[pos] ^= mask;
+        match artifact::decode_plan(&corrupted) {
+            Err(ServeError::Artifact { .. }) => {}
+            Ok(_) => panic!(
+                "flip of byte {pos} (mask {mask:#04x}) decoded silently"
+            ),
+            Err(e) => panic!("flip of byte {pos}: wrong error kind {e}"),
+        }
+    }
+}

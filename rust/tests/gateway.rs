@@ -26,7 +26,7 @@ fn tenant_plan(id: &str, seed: u64) -> ExecutionPlan {
     compile_plan(ModelIR::build(&spec, &params).unwrap(), 1).unwrap()
 }
 
-type Counters = (u64, u64, u64, u64, u64, u64);
+type Counters = (u64, u64, u64, u64, u64, u64, u64, u64);
 
 /// Everything about a gateway run that must be identical across worker
 /// counts: the sorted replay outcomes (logits as bit patterns), each

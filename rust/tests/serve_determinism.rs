@@ -21,7 +21,7 @@ const REQUESTS: usize = 48;
 fn serve_trace(
     plan: &Arc<ExecutionPlan>,
     workers: usize,
-) -> (Vec<Vec<f32>>, (u64, u64, u64, u64, u64, u64)) {
+) -> (Vec<Vec<f32>>, (u64, u64, u64, u64, u64, u64, u64, u64)) {
     let cfg = ServeConfig {
         workers,
         max_batch: 4,
@@ -34,7 +34,8 @@ fn serve_trace(
     let server = Server::builder(plan.clone())
         .config(&cfg)
         .kernel(KernelKind::PatternScalar)
-        .spawn();
+        .spawn()
+        .unwrap();
     let load = loadgen::run(
         &server.handle(),
         plan.in_dims,
@@ -94,14 +95,24 @@ fn outputs_and_counters_identical_across_worker_counts() {
 
         let (base_out, base_counters) = serve_trace(&plan, 1);
         assert_eq!(base_out, want, "{name}: served != direct executor");
-        let (submitted, completed, rejected, errors, shed, dispatched) =
-            base_counters;
+        let (
+            submitted,
+            completed,
+            rejected,
+            errors,
+            shed,
+            dispatched,
+            worker_lost,
+            restarts,
+        ) = base_counters;
         assert_eq!(submitted, REQUESTS as u64, "{name}");
         assert_eq!(completed, REQUESTS as u64, "{name}");
         assert_eq!(rejected, 0, "{name}");
         assert_eq!(errors, 0, "{name}");
         assert_eq!(shed, 0, "{name}");
         assert_eq!(dispatched, REQUESTS as u64, "{name}");
+        assert_eq!(worker_lost, 0, "{name}: no chaos armed");
+        assert_eq!(restarts, 0, "{name}: no chaos armed");
 
         for workers in [2usize, 4] {
             let (out, counters) = serve_trace(&plan, workers);

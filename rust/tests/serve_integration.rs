@@ -126,7 +126,8 @@ fn registry_serves_artifact_loaded_plans() {
             batch_threads: 1,
         })
         .kernel(KernelKind::PatternScalar)
-        .spawn();
+        .spawn()
+        .unwrap();
     let load = loadgen::run(
         &server.handle(),
         fresh.in_dims,
@@ -167,7 +168,8 @@ fn open_loop_backpressure_is_explicit() {
             batch_threads: 1,
         })
         .kernel(KernelKind::PatternScalar)
-        .spawn();
+        .spawn()
+        .unwrap();
     let handle = server.handle();
     let load = loadgen::run(
         &handle,
