@@ -13,7 +13,13 @@
 //!    differently-pruned tenants through the multi-tenant gateway
 //!    (priority classes + per-tenant reports) and print the
 //!    latency/batch reports.
-//! 2. **PJRT pipeline (needs `artifacts/`)** — dataset generation,
+//! 2. **Privacy tier (artifact-free, always runs)** — a miniature of
+//!    `repro exp mia`: train a dense host target on a small member set,
+//!    attack it with the confidence-threshold and shadow-model
+//!    membership-inference attacks, prune+retrain one variant, and
+//!    print the privacy-vs-compression table (pruning should lower the
+//!    measured attack advantage).
+//! 3. **PJRT pipeline (needs `artifacts/`)** — dataset generation,
 //!    pre-training, the four pruning schemes of Fig. 1 (ASCII),
 //!    privacy-preserving ADMM pruning on synthetic data, and masked
 //!    retraining. Skipped with a note when no artifacts are present.
@@ -37,6 +43,7 @@ use repro::mobile::engine::{Executor, Fmap, KernelKind};
 use repro::mobile::ir::ModelIR;
 use repro::mobile::plan::{compile_plan, compile_plan_quant};
 use repro::mobile::synth;
+use repro::privacy::{self, MiaConfig};
 use repro::pruning::{self, LayerShape, Scheme};
 use repro::rng::Pcg32;
 use repro::runtime::Runtime;
@@ -245,8 +252,44 @@ fn serve_walkthrough() -> Result<()> {
     Ok(())
 }
 
+/// Privacy tier walkthrough: membership-inference attacks against a
+/// dense host-trained target and one pruned+retrained variant — the
+/// `repro exp mia` experiment in miniature. All datasets are carved
+/// from one data seed by PCG *split* id (members / non-member probes /
+/// each shadow's train + held-out sets), so they share a task
+/// distribution but no samples.
+fn privacy_walkthrough() -> Result<()> {
+    println!("=== privacy tier (repro exp mia, miniature) ===");
+    let mut cfg = MiaConfig::preset(Preset::Smoke);
+    cfg.classes = 6;
+    cfg.hw = 8;
+    cfg.widths = vec![4, 6];
+    cfg.n_members = 32;
+    cfg.n_non = 32;
+    cfg.n_shadows = 1;
+    cfg.train.steps = 80;
+    cfg.train.batch = 8;
+    cfg.retrain.steps = 30;
+    cfg.retrain.batch = 8;
+    cfg.schemes = vec![Scheme::Pattern];
+    cfg.rates = vec![8.0];
+    cfg.threads = 2;
+    let report = privacy::run_mia(&cfg)?;
+    println!("{}", privacy::report::mia_table(&report).render());
+    println!(
+        "[privacy] confidence-attack advantage: dense {:.3} -> pruned \
+         {:.3} — pruning the model also prunes its memorization \
+         (`repro exp mia --preset smoke` runs the full grid; \
+         --progressive N prunes through an N-rung rate ladder)\n",
+        report.dense().conf.advantage,
+        report.mean_pruned_advantage()
+    );
+    Ok(())
+}
+
 fn main() -> Result<()> {
     serve_walkthrough()?;
+    privacy_walkthrough()?;
 
     let rt = match Runtime::new("artifacts") {
         Ok(rt) => rt,

@@ -84,9 +84,11 @@ impl SchedulerCfg {
 
 /// Geometry of one conv layer's host compute. Forward accumulation streams
 /// taps in the same order as the mobile executor's dense reference kernel,
-/// so host activations match the deployed numerics.
+/// so host activations match the deployed numerics. Shared with the
+/// host-native trainer ([`crate::train::host`]), which adds full backprop
+/// on top of the same substrate.
 #[derive(Clone, Copy, Debug)]
-struct ConvGeom {
+pub(crate) struct ConvGeom {
     a: usize,
     c: usize,
     kh: usize,
@@ -98,7 +100,7 @@ struct ConvGeom {
 }
 
 impl ConvGeom {
-    fn from_op(cv: &ConvOp) -> Self {
+    pub(crate) fn from_op(cv: &ConvOp) -> Self {
         let (out_hw, pad) = same_pad_lo(cv.in_hw, cv.kh, cv.stride);
         debug_assert_eq!(out_hw, cv.out_hw);
         ConvGeom {
@@ -115,7 +117,13 @@ impl ConvGeom {
 
     /// Dense direct convolution: bias fill then per-tap accumulation;
     /// pre-activation output.
-    fn fwd(&self, w: &[f32], bias: &[f32], x: &[f32], out: &mut [f32]) {
+    pub(crate) fn fwd(
+        &self,
+        w: &[f32],
+        bias: &[f32],
+        x: &[f32],
+        out: &mut [f32],
+    ) {
         let ihw = self.in_hw as i64;
         let plane = self.out_hw * self.out_hw;
         let in_plane = self.in_hw * self.in_hw;
@@ -167,7 +175,7 @@ impl ConvGeom {
     /// factor 2, applied by the caller's normalization):
     /// grad[f,ch,ky,kx] += Σ resid[f,oy,ox] · x[ch, oy·s+ky−pad, ox·s+kx−pad]
     /// over valid output positions.
-    fn grad_w(&self, resid: &[f32], x: &[f32], grad: &mut [f32]) {
+    pub(crate) fn grad_w(&self, resid: &[f32], x: &[f32], grad: &mut [f32]) {
         let ihw = self.in_hw as i64;
         let plane = self.out_hw * self.out_hw;
         let in_plane = self.in_hw * self.in_hw;
@@ -197,6 +205,49 @@ impl ConvGeom {
                             }
                         }
                         grad[wbase + ky * self.kw + kx] += acc;
+                    }
+                }
+            }
+        }
+    }
+
+    /// d/dX of the squared reconstruction error for one image (without the
+    /// factor 2): the backward-data scatter
+    /// gx[ch,iy,ix] += Σ w[f,ch,ky,kx] · resid[f,oy,ox]
+    /// over the output positions whose receptive field covers (iy,ix).
+    /// Streams the same tap ranges as `fwd`, in the same order, so the host
+    /// trainer's backprop is deterministic by construction.
+    pub(crate) fn grad_x(&self, w: &[f32], resid: &[f32], gx: &mut [f32]) {
+        let ihw = self.in_hw as i64;
+        let plane = self.out_hw * self.out_hw;
+        let in_plane = self.in_hw * self.in_hw;
+        for f in 0..self.a {
+            let r = &resid[f * plane..(f + 1) * plane];
+            for ch in 0..self.c {
+                let gxin =
+                    &mut gx[ch * in_plane..(ch + 1) * in_plane];
+                let wbase = (f * self.c + ch) * self.kh * self.kw;
+                for ky in 0..self.kh {
+                    let dy = ky as i64 - self.pad;
+                    for kx in 0..self.kw {
+                        let wv = w[wbase + ky * self.kw + kx];
+                        let dx = kx as i64 - self.pad;
+                        for oy in 0..self.out_hw {
+                            let iy = (oy * self.stride) as i64 + dy;
+                            if iy < 0 || iy >= ihw {
+                                continue;
+                            }
+                            let irow = iy as usize * self.in_hw;
+                            let orow = oy * self.out_hw;
+                            let (ox0, ox1) =
+                                x_range(self.out_hw, self.stride, dx, ihw);
+                            let mut ix = (ox0 * self.stride) as i64 + dx;
+                            for ox in ox0..ox1 {
+                                gxin[irow + ix as usize] +=
+                                    wv * r[orow + ox];
+                                ix += self.stride as i64;
+                            }
+                        }
                     }
                 }
             }
@@ -853,6 +904,98 @@ pub fn prune_layerwise_par(
     })
 }
 
+// ---------------------------------------------------------------------------
+// Progressive multi-round pruning (rate ladder, arxiv 1810.07378)
+// ---------------------------------------------------------------------------
+
+/// One rung of a progressive schedule.
+#[derive(Clone, Debug)]
+pub struct ProgressiveRound {
+    pub round: usize,
+    /// keep-fraction target of this rung
+    pub alpha: f64,
+    /// compression rate measured after this rung's hard projection
+    pub comp_rate: f64,
+    /// final ADMM feasibility residual of this rung
+    pub residual: f64,
+}
+
+/// Final outcome of a progressive run plus the per-rung trail.
+pub struct ProgressiveOutcome {
+    pub outcome: PruneOutcome,
+    /// scheduler trace of the last (tightest) rung
+    pub sched: SchedTrace,
+    pub rounds: Vec<ProgressiveRound>,
+}
+
+/// The rate ladder: geometric interpolation from dense (α = 1) down to the
+/// final keep fraction, so each rung removes roughly the same *ratio* of
+/// what survived the previous one — the schedule of arxiv 1810.07378 that
+/// keeps the network retrainable between rungs.
+pub fn progressive_alphas(final_alpha: f64, rounds: usize) -> Vec<f64> {
+    let r = rounds.max(1);
+    (1..=r)
+        .map(|k| final_alpha.powf(k as f64 / r as f64))
+        .collect()
+}
+
+/// Progressive multi-round pruning: walk the [`progressive_alphas`] ladder,
+/// running one full [`prune_layerwise_par`] pass per rung (each rung's
+/// synthetic batches and job streams reseeded with `seed + rung` so rungs
+/// are decorrelated but deterministic), then hand the rung's params and
+/// masks to `retrain` for masked fine-tuning before the next rung tightens
+/// the constraint. The callback keeps this module free of any training-data
+/// dependency: the privacy tier passes the host SGD trainer, a no-op
+/// closure gives pure multi-round ADMM. Determinism: with a deterministic
+/// callback the outcome is bit-identical at any `cfg.threads`.
+pub fn prune_progressive_par<F>(
+    spec: &ModelSpec,
+    pretrained: &[Tensor],
+    scheme: Scheme,
+    final_alpha: f64,
+    rounds: usize,
+    cfg: &SchedulerCfg,
+    mut retrain: F,
+) -> Result<ProgressiveOutcome>
+where
+    F: FnMut(&mut Vec<Tensor>, &[Tensor], usize) -> Result<()>,
+{
+    let ladder = progressive_alphas(final_alpha, rounds);
+    let mut cur = pretrained.to_vec();
+    let mut trail = Vec::with_capacity(ladder.len());
+    let mut last: Option<ParPruneOutcome> = None;
+    for (r, &alpha) in ladder.iter().enumerate() {
+        let mut rung_cfg = cfg.clone();
+        rung_cfg.admm.seed = cfg.admm.seed.wrapping_add(r as u64);
+        let out =
+            prune_layerwise_par(spec, &cur, scheme, alpha, &rung_cfg)?;
+        cur = out.outcome.params.clone();
+        retrain(&mut cur, &out.outcome.masks, r)?;
+        trail.push(ProgressiveRound {
+            round: r,
+            alpha,
+            comp_rate: out.outcome.comp_rate,
+            residual: out
+                .outcome
+                .trace
+                .residual
+                .last()
+                .copied()
+                .unwrap_or(0.0),
+        });
+        last = Some(out);
+    }
+    let last = last.expect("ladder has at least one rung");
+    let mut outcome = last.outcome;
+    // the retrained (still mask-respecting) params are the deliverable
+    outcome.params = cur;
+    Ok(ProgressiveOutcome {
+        outcome,
+        sched: last.sched,
+        rounds: trail,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -970,5 +1113,70 @@ mod tests {
                 "tap {i}: numeric {num} vs analytic {a}"
             );
         }
+    }
+
+    /// The backward-data gradient matches central finite differences of
+    /// the squared reconstruction error wrt the input feature map.
+    #[test]
+    fn conv_grad_x_matches_finite_differences() {
+        let g = ConvGeom {
+            a: 2,
+            c: 2,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+            in_hw: 5,
+            out_hw: 5,
+        };
+        let mut rng = Pcg32::seeded(77);
+        let nw = g.a * g.c * g.kh * g.kw;
+        let nx = g.c * g.in_hw * g.in_hw;
+        let w: Vec<f32> = (0..nw).map(|_| rng.normal() * 0.3).collect();
+        let bias: Vec<f32> = (0..g.a).map(|_| rng.normal() * 0.1).collect();
+        let x: Vec<f32> = (0..nx).map(|_| rng.normal()).collect();
+        let tgt: Vec<f32> = (0..g.a * g.out_hw * g.out_hw)
+            .map(|_| rng.normal())
+            .collect();
+        let loss = |x: &[f32]| -> f64 {
+            let mut out = vec![0.0f32; g.a * g.out_hw * g.out_hw];
+            g.fwd(&w, &bias, x, &mut out);
+            out.iter()
+                .zip(&tgt)
+                .map(|(o, t)| ((o - t) as f64).powi(2))
+                .sum()
+        };
+        let mut out = vec![0.0f32; g.a * g.out_hw * g.out_hw];
+        g.fwd(&w, &bias, &x, &mut out);
+        for (o, t) in out.iter_mut().zip(&tgt) {
+            *o -= t;
+        }
+        let mut ana = vec![0.0f32; nx];
+        g.grad_x(&w, &out, &mut ana);
+        let eps = 1e-2f32;
+        for i in (0..nx).step_by(5) {
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let mut xm = x.clone();
+            xm[i] -= eps;
+            let num = (loss(&xp) - loss(&xm)) / (2.0 * eps as f64);
+            let a = 2.0 * ana[i] as f64;
+            assert!(
+                (num - a).abs() <= 1e-2 * a.abs().max(1.0),
+                "pixel {i}: numeric {num} vs analytic {a}"
+            );
+        }
+    }
+
+    #[test]
+    fn progressive_ladder_descends_to_final_alpha() {
+        let ladder = progressive_alphas(0.125, 3);
+        assert_eq!(ladder.len(), 3);
+        for pair in ladder.windows(2) {
+            assert!(pair[0] > pair[1], "ladder not descending: {ladder:?}");
+        }
+        assert!((ladder[2] - 0.125).abs() < 1e-12);
+        // single round degenerates to one-shot at the final rate
+        assert_eq!(progressive_alphas(0.25, 1), vec![0.25]);
     }
 }

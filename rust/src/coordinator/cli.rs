@@ -221,8 +221,19 @@ commands:
             synthetic pruned model so no artifacts are needed;
             --quantize also compiles the INT8 twin and prints its
             payload shrink, logits error vs f32, and speed delta
-  exp       <table1|table2|table3|table4|table5|fig3|sweep|all> [--preset ..]
+  exp       <table1|table2|table3|table4|table5|fig3|sweep|mia|all>
+            [--preset ..]
             (sweep = host-engine parallel prune sweep; no artifacts needed)
+  exp mia   [--preset smoke|quick|full] [--progressive N] [--threads N]
+            privacy evaluation tier: membership-inference attacks
+            (confidence-threshold + shadow-model) against the dense
+            host-trained target and every (scheme x rate) pruned+
+            retrained variant; prints the privacy-vs-compression table,
+            saves runs/tables/mia.*, writes BENCH_privacy.json;
+            --progressive N prunes each row through an N-rung
+            progressive ADMM rate ladder with masked retraining
+            between rungs; artifact-free and bit-identical at any
+            --threads
   pipeline  --model <id> [--scheme ..] [--rate N]   end-to-end demo
   serve     [--spec vgg|res] [--hw N] [--classes N] [--scheme ..]
             [--rate N] [--threads N] [--workers N] [--batch N]
@@ -257,6 +268,10 @@ commands:
             compare two BENCH_*.json logs series-by-series (default
             threshold 5%); exits nonzero when any series worsened
             beyond the threshold in its bad direction
+  bench baseline [--dir <path>]
+            capture every BENCH_*.json in the current directory under
+            benches/baselines/<os>-<arch>/ (the checked-in per-runner
+            baselines that CI gates against when present)
   models                                            list models in manifest
   help
 common flags: --artifacts <dir> (default ./artifacts), --preset (default quick),
@@ -723,13 +738,20 @@ fn serve_tenants_cmd(
 
     let ramp =
         (ramp_us > 0).then(|| loadgen::DiurnalRamp::new(ramp_us, 0.25));
-    let trace = loadgen::multi_tenant_trace(&loads, ramp, seed);
     if let Some(fp) = &chaos {
         builder = builder.chaos(fp.clone());
     }
     let gateway = builder.spawn()?;
     let handle = gateway.handle();
-    let load = loadgen::replay(&handle, &loads, &trace, seed, pace)?;
+    // the lazy trace streams straight into replay — O(tenants) memory
+    // regardless of --requests
+    let load = loadgen::replay(
+        &handle,
+        &loads,
+        loadgen::trace_stream(&loads, ramp, seed),
+        seed,
+        pace,
+    )?;
     let report = gateway.shutdown();
     println!(
         "{}",
@@ -751,10 +773,11 @@ fn serve_tenants_cmd(
             c.tenant, c.issued, c.completed, c.shed, c.rejected, c.lost
         );
     }
+    let issued: u64 =
+        load.per_tenant.iter().map(|c| c.issued).sum();
     println!(
-        "replay: {} events, {} completed, {} shed, {} rejected \
+        "replay: {issued} events, {} completed, {} shed, {} rejected \
          in {:.2} s",
-        trace.len(),
         load.completed,
         load.shed,
         load.rejected,
@@ -1016,15 +1039,93 @@ fn deploy_quant_report(
     Ok(())
 }
 
+/// `repro exp mia [--preset ..] [--progressive N] [--threads N]`: the
+/// privacy evaluation tier. Trains the dense host target, builds the
+/// shadow-model pool, prunes+retrains the (scheme × rate) grid
+/// (progressively when `--progressive > 1`), and prints the
+/// privacy-vs-compression table. Entirely artifact-free (host engine
+/// only); results are bit-identical at any `--threads`.
+fn exp_mia_cmd(args: &Args) -> Result<()> {
+    let mut cfg = crate::privacy::MiaConfig::preset(args.preset()?);
+    cfg.threads = args.threads()?;
+    cfg.progressive_rounds = args.flag_usize("progressive", 0)?;
+    let report = crate::privacy::run_mia(&cfg)?;
+    let table = crate::privacy::report::mia_table(&report);
+    println!("{}", table.render());
+    table.save("runs/tables", "mia")?;
+    let log = crate::privacy::report::privacy_bench_log(&report);
+    log.write("BENCH_privacy.json")?;
+    let dense = report.dense().conf.advantage;
+    let pruned = report.mean_pruned_advantage();
+    println!(
+        "confidence-attack advantage: dense {dense:.3} -> mean pruned \
+         {pruned:.3} (privacy gain {:+.3}) in {:.1} s",
+        dense - pruned,
+        report.secs
+    );
+    println!("wrote BENCH_privacy.json and runs/tables/mia.*");
+    Ok(())
+}
+
+/// `repro bench baseline [--dir <path>]`: capture every `BENCH_*.json`
+/// in the current directory as the checked-in baseline for this runner
+/// class (`<os>-<arch>`). CI diffs fresh logs against these with
+/// `repro bench diff` when a baseline directory exists for its runner.
+fn bench_baseline_cmd(args: &Args) -> Result<()> {
+    let runner = format!(
+        "{}-{}",
+        std::env::consts::OS,
+        std::env::consts::ARCH
+    );
+    let dir = args
+        .flags
+        .get("dir")
+        .cloned()
+        .unwrap_or_else(|| format!("benches/baselines/{runner}"));
+    std::fs::create_dir_all(&dir)
+        .with_context(|| format!("creating baseline dir {dir}"))?;
+    let mut copied = Vec::new();
+    for entry in std::fs::read_dir(".")? {
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if name.starts_with("BENCH_") && name.ends_with(".json") {
+            let dst = format!("{dir}/{name}");
+            std::fs::copy(entry.path(), &dst)
+                .with_context(|| format!("copying {name} to {dst}"))?;
+            copied.push(name);
+        }
+    }
+    if copied.is_empty() {
+        bail!(
+            "no BENCH_*.json logs in the current directory; run \
+             `cargo bench` and/or `repro exp mia` first"
+        );
+    }
+    copied.sort();
+    for name in &copied {
+        println!("  {name} -> {dir}/{name}");
+    }
+    println!(
+        "captured {} baseline log(s) for runner class {runner}",
+        copied.len()
+    );
+    Ok(())
+}
+
 /// `repro bench diff <baseline.json> <current.json> [--threshold pct]`:
 /// compare two `BENCH_*.json` logs series-by-series and exit nonzero if
 /// any series worsened beyond the threshold in its bad direction.
+/// `repro bench baseline` captures the current logs as the checked-in
+/// baseline for this runner class.
 fn bench_cmd(args: &Args) -> Result<()> {
     let sub = args.positional.first().map(|s| s.as_str());
+    if sub == Some("baseline") {
+        return bench_baseline_cmd(args);
+    }
     if sub != Some("diff") {
         bail!(
             "usage: repro bench diff <baseline.json> <current.json> \
-             [--threshold pct]"
+             [--threshold pct] | repro bench baseline [--dir <path>]"
         );
     }
     let [base_path, cur_path] = &args.positional[1..] else {
@@ -1162,6 +1263,9 @@ pub fn main() -> Result<()> {
                 )?;
                 println!("{}\n{}", table.render(), timing.render());
                 return Ok(());
+            }
+            if which == "mia" {
+                return exp_mia_cmd(&args);
             }
             let ctx = args.ctx()?;
             match which {

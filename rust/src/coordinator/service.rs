@@ -91,39 +91,50 @@ impl PruneService {
         configs: &[PruneConfig],
     ) -> Result<Vec<SweepRow>> {
         let inner = SchedulerCfg::new(admm.clone(), self.batch, 1);
-        let t = self.threads.min(configs.len().max(1));
+        self.shard_map(configs, |&c| {
+            solve_row(spec, pretrained, &inner, c)
+        })
+    }
+
+    /// Shard arbitrary independent jobs across the service's worker pool:
+    /// `items` split into contiguous chunks, one scoped thread per chunk,
+    /// results reassembled in item order on the caller's thread. As long
+    /// as each job is internally deterministic and self-contained (the
+    /// sweep's single-threaded scheduler runs, the privacy tier's MIA grid
+    /// rows and shadow-model trainings), the output vector is bit-identical
+    /// at any `threads` — sharding only decides *where* a job runs.
+    pub fn shard_map<T, R, F>(&self, items: &[T], f: F) -> Result<Vec<R>>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(&T) -> Result<R> + Sync,
+    {
+        let t = self.threads.min(items.len().max(1));
         if t <= 1 {
-            return configs
-                .iter()
-                .map(|&c| solve_row(spec, pretrained, &inner, c))
-                .collect();
+            return items.iter().map(&f).collect();
         }
-        let chunk = configs.len().div_ceil(t);
-        let inner_ref = &inner;
-        let mut per_chunk: Vec<Result<Vec<SweepRow>>> = Vec::new();
+        let chunk = items.len().div_ceil(t);
+        let fr = &f;
+        let mut per_chunk: Vec<Result<Vec<R>>> = Vec::new();
         std::thread::scope(|s| {
-            let handles: Vec<_> = configs
+            let handles: Vec<_> = items
                 .chunks(chunk)
-                .map(|cs| {
+                .map(|ch| {
                     s.spawn(move || {
-                        cs.iter()
-                            .map(|&c| {
-                                solve_row(spec, pretrained, inner_ref, c)
-                            })
-                            .collect::<Result<Vec<_>>>()
+                        ch.iter().map(fr).collect::<Result<Vec<R>>>()
                     })
                 })
                 .collect();
             per_chunk = handles
                 .into_iter()
-                .map(|h| h.join().expect("sweep worker panicked"))
+                .map(|h| h.join().expect("shard worker panicked"))
                 .collect();
         });
-        let mut rows = Vec::with_capacity(configs.len());
-        for chunk in per_chunk {
-            rows.extend(chunk?);
+        let mut out = Vec::with_capacity(items.len());
+        for c in per_chunk {
+            out.extend(c?);
         }
-        Ok(rows)
+        Ok(out)
     }
 
     /// Render sweep rows as a paper-style table.

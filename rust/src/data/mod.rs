@@ -104,7 +104,8 @@ impl SynthVision {
         }
     }
 
-    fn sample_len(&self) -> usize {
+    /// Flat f32 length of one (3, hw, hw) sample.
+    pub fn sample_len(&self) -> usize {
         3 * self.hw * self.hw
     }
 

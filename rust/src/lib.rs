@@ -18,4 +18,5 @@ pub mod baselines;
 pub mod mobile;
 pub mod serve;
 pub mod coordinator;
+pub mod privacy;
 pub mod report;

@@ -1,0 +1,174 @@
+//! Membership-inference attack metrics: ROC machinery over per-sample
+//! membership scores.
+//!
+//! The attacker holds a score for every probe sample (here: the model's
+//! softmax confidence on the true class,
+//! [`confidence_scores`](crate::train::host::confidence_scores)) and
+//! predicts "member" when the score clears a threshold. Sweeping the threshold over the pooled member/non-member
+//! score sets yields the ROC curve; we report the three standard summary
+//! numbers:
+//!
+//! * **attack advantage** — max over thresholds of (TPR − FPR), the
+//!   membership experiment's distinguishing advantage (Yeom et al.);
+//! * **AUC** — threshold-free ranking quality of the score;
+//! * **TPR at FPR ≤ 0.1** — the low-false-positive operating point that
+//!   actually matters for a realistic attacker.
+//!
+//! Everything is exact and deterministic: scores sort by `f32::total_cmp`,
+//! equal scores collapse into one threshold group (so ties cannot make the
+//! curve order-dependent), and all accumulation runs in f64 in sorted
+//! order.
+
+use anyhow::{bail, Result};
+
+/// Summary of one threshold-sweep attack.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AttackResult {
+    /// max over thresholds of TPR − FPR
+    pub advantage: f64,
+    /// area under the ROC curve (0.5 = chance)
+    pub auc: f64,
+    /// best TPR among operating points with FPR ≤ 0.1
+    pub tpr_at_fpr10: f64,
+    /// score threshold attaining `advantage` ("member" iff score ≥ t)
+    pub threshold: f32,
+}
+
+/// Sweep every distinct score as a threshold over the two score sets and
+/// summarize the resulting ROC curve.
+pub fn threshold_attack(
+    member: &[f32],
+    non_member: &[f32],
+) -> Result<AttackResult> {
+    if member.is_empty() || non_member.is_empty() {
+        bail!(
+            "threshold attack needs non-empty score sets \
+             ({} member, {} non-member)",
+            member.len(),
+            non_member.len()
+        );
+    }
+    let mut scored: Vec<(f32, bool)> = member
+        .iter()
+        .map(|&s| (s, true))
+        .chain(non_member.iter().map(|&s| (s, false)))
+        .collect();
+    scored.sort_by(|a, b| b.0.total_cmp(&a.0));
+
+    let nm = member.len() as f64;
+    let nn = non_member.len() as f64;
+    let mut tp = 0.0f64;
+    let mut fp = 0.0f64;
+    let mut prev = (0.0f64, 0.0f64); // (fpr, tpr)
+    let mut auc = 0.0f64;
+    let mut best_adv = 0.0f64;
+    let mut best_thr = f32::INFINITY;
+    let mut tpr10 = 0.0f64;
+    let mut i = 0;
+    while i < scored.len() {
+        let t = scored[i].0;
+        // consume the whole tie group at this threshold
+        let mut j = i;
+        while j < scored.len() && scored[j].0.total_cmp(&t).is_eq() {
+            if scored[j].1 {
+                tp += 1.0;
+            } else {
+                fp += 1.0;
+            }
+            j += 1;
+        }
+        i = j;
+        let tpr = tp / nm;
+        let fpr = fp / nn;
+        auc += (fpr - prev.0) * (tpr + prev.1) * 0.5;
+        if tpr - fpr > best_adv {
+            best_adv = tpr - fpr;
+            best_thr = t;
+        }
+        if fpr <= 0.1 && tpr > tpr10 {
+            tpr10 = tpr;
+        }
+        prev = (fpr, tpr);
+    }
+    Ok(AttackResult {
+        advantage: best_adv,
+        auc,
+        tpr_at_fpr10: tpr10,
+        threshold: best_thr,
+    })
+}
+
+/// Evaluate a *fixed* threshold (e.g. one transferred from shadow models)
+/// against the two score sets; returns (TPR, FPR).
+pub fn attack_at_threshold(
+    member: &[f32],
+    non_member: &[f32],
+    threshold: f32,
+) -> (f64, f64) {
+    let frac = |scores: &[f32]| -> f64 {
+        let hits = scores.iter().filter(|&&s| s >= threshold).count();
+        hits as f64 / scores.len().max(1) as f64
+    };
+    (frac(member), frac(non_member))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_separation_scores_one() {
+        let m = [0.9f32, 0.95, 0.99];
+        let n = [0.1f32, 0.2, 0.3];
+        let r = threshold_attack(&m, &n).unwrap();
+        assert!((r.advantage - 1.0).abs() < 1e-12);
+        assert!((r.auc - 1.0).abs() < 1e-12);
+        assert!((r.tpr_at_fpr10 - 1.0).abs() < 1e-12);
+        assert!(r.threshold >= 0.9 - 1e-6);
+    }
+
+    #[test]
+    fn identical_sets_score_chance() {
+        let s = [0.5f32, 0.6, 0.7, 0.8];
+        let r = threshold_attack(&s, &s).unwrap();
+        assert!(r.advantage.abs() < 1e-12);
+        assert!((r.auc - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_small_roc() {
+        // member 0.9, 0.4; non 0.6, 0.1 → points (0,.5) (.5,.5) (.5,1) (1,1)
+        let m = [0.9f32, 0.4];
+        let n = [0.6f32, 0.1];
+        let r = threshold_attack(&m, &n).unwrap();
+        assert!((r.advantage - 0.5).abs() < 1e-12);
+        assert!((r.auc - 0.75).abs() < 1e-12);
+        // FPR ≤ 0.1 only holds before any non-member crosses: TPR 0.5
+        assert!((r.tpr_at_fpr10 - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tie_groups_are_order_independent() {
+        // all scores equal → single group at (1,1): chance metrics
+        let m = [0.5f32; 6];
+        let n = [0.5f32; 4];
+        let r = threshold_attack(&m, &n).unwrap();
+        assert!(r.advantage.abs() < 1e-12);
+        assert!((r.auc - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fixed_threshold_counts_rates() {
+        let m = [0.9f32, 0.8, 0.2];
+        let n = [0.85f32, 0.1, 0.1, 0.1];
+        let (tpr, fpr) = attack_at_threshold(&m, &n, 0.8);
+        assert!((tpr - 2.0 / 3.0).abs() < 1e-12);
+        assert!((fpr - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_sets_rejected() {
+        assert!(threshold_attack(&[], &[0.5]).is_err());
+        assert!(threshold_attack(&[0.5], &[]).is_err());
+    }
+}

@@ -1,0 +1,350 @@
+//! Privacy evaluation tier: does pruning actually reduce membership
+//! leakage?
+//!
+//! The paper's framework is *privacy-preserving-oriented* — the designer
+//! prunes against synthetic data so the client's confidential set never
+//! leaves the client — but the deployed model itself can still leak
+//! membership through its confidences. This tier quantifies that leakage
+//! with two standard membership-inference attacks (DESIGN.md §16):
+//!
+//! * the **confidence-threshold attack** ([`mia`]): sweep a threshold
+//!   over the model's true-class softmax confidence on member vs
+//!   non-member probes; report advantage / AUC / TPR@0.1FPR;
+//! * the **shadow-model attack** ([`shadow`]): learn the threshold on a
+//!   fleet of shadow models trained like the target, then transfer it —
+//!   the attacker never sees the target's membership labels.
+//!
+//! [`run_mia`] scores a dense target and a (scheme × rate) grid of
+//! pruned-and-retrained variants ([`progressive`]) and emits the
+//! privacy-vs-compression table ([`report`]). The expected shape, per
+//! "Against Membership Inference Attack: Pruning is All You Need"
+//! (arxiv 2008.13578): the dense model overfits its small member set and
+//! leaks; pruning removes memorization capacity, so pruned rows show
+//! lower measured advantage at mild accuracy cost.
+//!
+//! **Split-stream seeding.** All datasets share one `data_seed` (same
+//! class signatures) and differ only in the PCG *split* id of
+//! [`SynthVision::generate`]: members = split [`MEMBER_SPLIT`],
+//! non-member probes = [`NON_MEMBER_SPLIT`], shadow k's member/out sets =
+//! [`shadow_member_split`]`(k)` / [`shadow_out_split`]`(k)`. Distinct
+//! split ids select disjoint Pcg32 streams, so every set is sampled from
+//! the same task distribution while sharing no samples — the
+//! member-disjointness the attack definition requires (asserted in
+//! `tests/privacy.rs`).
+//!
+//! **Determinism.** Target and shadow training are sequential per model;
+//! grid rows and shadow fleets shard over
+//! [`PruneService::shard_map`] with results reassembled in
+//! item order. The whole report is bit-identical at any thread count.
+
+pub mod mia;
+pub mod progressive;
+pub mod report;
+pub mod shadow;
+
+use anyhow::Result;
+
+use crate::config::{AdmmConfig, Preset};
+use crate::coordinator::service::{PruneConfig, PruneService};
+use crate::data::SynthVision;
+use crate::mobile::synth::vgg_style;
+use crate::pruning::Scheme;
+use crate::tensor::Tensor;
+use crate::train::host::{
+    confidence_scores, evaluate_host, train_host, HostTrainCfg,
+};
+use crate::util::Stopwatch;
+
+use mia::{threshold_attack, AttackResult};
+use shadow::{ShadowCfg, ShadowPool, ShadowResult};
+
+/// Split id of the client's confidential member set.
+pub const MEMBER_SPLIT: u64 = 0;
+/// Split id of the non-member probe set.
+pub const NON_MEMBER_SPLIT: u64 = 1;
+/// Shadow splits start far from the member/non-member/test ids.
+pub const SHADOW_SPLIT_BASE: u64 = 100;
+
+/// Split id of shadow `k`'s member set.
+pub fn shadow_member_split(k: usize) -> u64 {
+    SHADOW_SPLIT_BASE + 2 * k as u64
+}
+
+/// Split id of shadow `k`'s held-out (non-member) set.
+pub fn shadow_out_split(k: usize) -> u64 {
+    SHADOW_SPLIT_BASE + 2 * k as u64 + 1
+}
+
+/// Full configuration of one MIA experiment.
+#[derive(Clone, Debug)]
+pub struct MiaConfig {
+    pub classes: usize,
+    pub hw: usize,
+    /// per-stage conv widths of the VGG-style target
+    pub widths: Vec<usize>,
+    /// member-set size — small on purpose, so the dense target overfits
+    pub n_members: usize,
+    /// non-member probe count
+    pub n_non: usize,
+    pub n_shadows: usize,
+    /// dense target (and shadow) training recipe
+    pub train: HostTrainCfg,
+    /// masked-retrain recipe for pruned rows
+    pub retrain: HostTrainCfg,
+    pub admm: AdmmConfig,
+    /// synthetic images per ADMM round
+    pub admm_batch: usize,
+    pub schemes: Vec<Scheme>,
+    /// target CONV compression rates (the grid's columns)
+    pub rates: Vec<f64>,
+    /// 0 or 1 = one-shot pruning; otherwise progressive ladder rungs
+    pub progressive_rounds: usize,
+    /// addresses class signatures + every split stream
+    pub data_seed: u64,
+    /// addresses target/shadow weight inits
+    pub weight_seed: u64,
+    pub threads: usize,
+}
+
+impl MiaConfig {
+    /// Preset-scaled experiment. The dense target is trained long on a
+    /// deliberately small member set (each member is revisited dozens of
+    /// times — the overfit regime where membership leaks); pruned rows
+    /// get a much shorter masked retrain.
+    pub fn preset(p: Preset) -> Self {
+        let mut admm = AdmmConfig::preset(p);
+        // host primal runs generic SGD — same scale the host sweep uses
+        admm.lr_layer = 5e-3;
+        let (classes, hw, widths, n_members, n_shadows) = match p {
+            Preset::Smoke => (6, 8, vec![4, 6], 48, 2),
+            Preset::Quick => (10, 16, vec![8, 16], 96, 3),
+            Preset::Full => (10, 16, vec![8, 16], 128, 5),
+        };
+        let train_steps = match p {
+            Preset::Smoke => 160,
+            Preset::Quick => 400,
+            Preset::Full => 700,
+        };
+        let retrain_steps = match p {
+            Preset::Smoke => 60,
+            Preset::Quick => 120,
+            Preset::Full => 200,
+        };
+        let rates = match p {
+            Preset::Smoke => vec![8.0],
+            Preset::Quick => vec![4.0, 8.0],
+            Preset::Full => vec![2.0, 4.0, 8.0],
+        };
+        MiaConfig {
+            classes,
+            hw,
+            widths,
+            n_members,
+            n_non: n_members,
+            n_shadows,
+            train: HostTrainCfg {
+                steps: train_steps,
+                batch: 16.min(n_members),
+                lr: 0.05,
+                seed: 0x7EA1_0001,
+            },
+            retrain: HostTrainCfg {
+                steps: retrain_steps,
+                batch: 16.min(n_members),
+                lr: 0.04,
+                seed: 0x2E72_0001,
+            },
+            admm,
+            admm_batch: 8,
+            schemes: Scheme::all().to_vec(),
+            rates,
+            progressive_rounds: 0,
+            data_seed: 0x5EED_31A0,
+            weight_seed: 0xBA5E_31A0,
+            threads: crate::coordinator::default_threads(),
+        }
+    }
+}
+
+/// One row of the privacy-vs-compression table.
+#[derive(Clone, Debug)]
+pub struct MiaRow {
+    /// "dense" or the pruning scheme name
+    pub label: String,
+    pub scheme: Option<Scheme>,
+    /// target CONV compression rate (1 for the dense baseline)
+    pub rate: f64,
+    /// measured CONV compression rate
+    pub comp_rate: f64,
+    /// accuracy on the member set (the memorization signal)
+    pub train_acc: f64,
+    /// accuracy on the non-member probes (generalization)
+    pub test_acc: f64,
+    /// confidence-threshold attack summary
+    pub conf: AttackResult,
+    /// shadow-transferred attack summary
+    pub shadow: ShadowResult,
+}
+
+/// Full MIA experiment result: dense baseline row first, then the grid.
+pub struct MiaReport {
+    pub model: String,
+    pub threads: usize,
+    pub progressive_rounds: usize,
+    /// attack quality on the pooled shadow scores (the transfer source)
+    pub shadow_pool: AttackResult,
+    pub rows: Vec<MiaRow>,
+    pub secs: f64,
+}
+
+impl MiaReport {
+    /// The dense baseline row.
+    pub fn dense(&self) -> &MiaRow {
+        &self.rows[0]
+    }
+
+    /// Grid rows (everything but the dense baseline).
+    pub fn pruned(&self) -> &[MiaRow] {
+        &self.rows[1..]
+    }
+
+    /// Mean confidence-attack advantage over the pruned rows.
+    pub fn mean_pruned_advantage(&self) -> f64 {
+        let p = self.pruned();
+        if p.is_empty() {
+            return 0.0;
+        }
+        p.iter().map(|r| r.conf.advantage).sum::<f64>()
+            / p.len() as f64
+    }
+}
+
+/// Identity of a row under scoring.
+struct RowMeta {
+    label: String,
+    scheme: Option<Scheme>,
+    rate: f64,
+    comp_rate: f64,
+}
+
+fn score_row(
+    spec: &crate::config::ModelSpec,
+    params: &[Tensor],
+    probes: (&SynthVision, &SynthVision),
+    pool: &ShadowPool,
+    meta: RowMeta,
+) -> Result<MiaRow> {
+    let (members, non) = probes;
+    let ms = confidence_scores(spec, params, members)?;
+    let ns = confidence_scores(spec, params, non)?;
+    Ok(MiaRow {
+        label: meta.label,
+        scheme: meta.scheme,
+        rate: meta.rate,
+        comp_rate: meta.comp_rate,
+        train_acc: evaluate_host(spec, params, members)?,
+        test_acc: evaluate_host(spec, params, non)?,
+        conf: threshold_attack(&ms, &ns)?,
+        shadow: pool.apply(&ms, &ns),
+    })
+}
+
+/// Run the full experiment: train the dense target, build the shadow
+/// pool, then attack dense + every (scheme × rate) pruned variant.
+pub fn run_mia(cfg: &MiaConfig) -> Result<MiaReport> {
+    let sw = Stopwatch::start();
+    let (spec, init) = vgg_style(
+        "mia_vgg",
+        cfg.hw,
+        cfg.classes,
+        &cfg.widths,
+        cfg.weight_seed,
+    );
+    let members = SynthVision::generate(
+        cfg.classes,
+        cfg.hw,
+        cfg.n_members,
+        cfg.data_seed,
+        MEMBER_SPLIT,
+    );
+    let non = SynthVision::generate(
+        cfg.classes,
+        cfg.hw,
+        cfg.n_non,
+        cfg.data_seed,
+        NON_MEMBER_SPLIT,
+    );
+
+    let mut dense = init;
+    train_host(&spec, &mut dense, &members, &cfg.train)?;
+
+    let svc = PruneService::new(cfg.threads, cfg.admm_batch);
+    let pool = shadow::build_pool(
+        &spec,
+        &ShadowCfg {
+            n_shadows: cfg.n_shadows,
+            n_train: cfg.n_members,
+            n_out: cfg.n_non,
+            train: cfg.train,
+        },
+        cfg.data_seed,
+        cfg.weight_seed,
+        &svc,
+    )?;
+
+    let mut rows = vec![score_row(
+        &spec,
+        &dense,
+        (&members, &non),
+        &pool,
+        RowMeta {
+            label: "dense".into(),
+            scheme: None,
+            rate: 1.0,
+            comp_rate: 1.0,
+        },
+    )?];
+
+    let grid: Vec<PruneConfig> = cfg
+        .schemes
+        .iter()
+        .flat_map(|&scheme| {
+            cfg.rates
+                .iter()
+                .map(move |&rate| PruneConfig { scheme, rate })
+        })
+        .collect();
+    let recipe = progressive::RowRecipe {
+        admm: &cfg.admm,
+        admm_batch: cfg.admm_batch,
+        rounds: cfg.progressive_rounds,
+        retrain: &cfg.retrain,
+    };
+    let pruned_rows = svc.shard_map(&grid, |&pc| {
+        let pm = progressive::prune_and_retrain(
+            &spec, &dense, pc, &recipe, &members,
+        )?;
+        score_row(
+            &spec,
+            &pm.params,
+            (&members, &non),
+            &pool,
+            RowMeta {
+                label: pc.scheme.name().into(),
+                scheme: Some(pc.scheme),
+                rate: pc.rate,
+                comp_rate: pm.comp_rate,
+            },
+        )
+    })?;
+    rows.extend(pruned_rows);
+
+    Ok(MiaReport {
+        model: spec.id.clone(),
+        threads: cfg.threads,
+        progressive_rounds: cfg.progressive_rounds,
+        shadow_pool: pool.pool,
+        rows,
+        secs: sw.secs(),
+    })
+}

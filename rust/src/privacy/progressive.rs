@@ -1,0 +1,105 @@
+//! Prune-and-retrain drivers for the privacy grid: one-shot and
+//! progressive.
+//!
+//! Each MIA grid row needs "the pruned model the client would actually
+//! deploy": ADMM-prune the dense target, then masked-retrain on the
+//! *member* set (the client's confidential data — retraining on anything
+//! else would be a different threat model). With `rounds > 1` the row
+//! instead walks the progressive rate ladder
+//! ([`crate::admm::scheduler::prune_progressive_par`], arxiv 1810.07378),
+//! masked-retraining between rungs; the retrain budget is split evenly
+//! across rungs so progressive and one-shot rows spend comparable
+//! optimizer steps and stay comparable in the report.
+//!
+//! Everything here runs single-threaded per row (`SchedulerCfg` with
+//! `threads = 1`, sequential host SGD): rows are the unit of parallelism,
+//! sharded by the caller over [`PruneService::shard_map`] — the house
+//! bit-identical-at-any-thread-count invariant holds because a row's
+//! result never depends on where it runs.
+
+use anyhow::Result;
+
+use crate::admm::scheduler::{
+    prune_layerwise_par, prune_progressive_par, SchedulerCfg,
+};
+use crate::config::{AdmmConfig, ModelSpec};
+use crate::coordinator::service::PruneConfig;
+use crate::data::SynthVision;
+use crate::tensor::Tensor;
+use crate::train::host::{retrain_masked_host, HostTrainCfg};
+
+#[allow(unused_imports)] // doc link
+use crate::coordinator::service::PruneService;
+
+/// Everything a grid row's prune+retrain shares across configurations.
+#[derive(Clone, Copy, Debug)]
+pub struct RowRecipe<'a> {
+    pub admm: &'a AdmmConfig,
+    /// synthetic images per ADMM round
+    pub admm_batch: usize,
+    /// 0 or 1 = one-shot; otherwise progressive ladder rungs
+    pub rounds: usize,
+    pub retrain: &'a HostTrainCfg,
+}
+
+/// Deployed-model artifacts of one grid row.
+pub struct PrunedModel {
+    pub params: Vec<Tensor>,
+    pub masks: Vec<Tensor>,
+    pub comp_rate: f64,
+}
+
+/// Prune `dense` per `pc` and masked-retrain on `members`.
+/// `recipe.rounds <= 1` is the one-shot path; otherwise the progressive
+/// ladder with per-rung retraining.
+pub fn prune_and_retrain(
+    spec: &ModelSpec,
+    dense: &[Tensor],
+    pc: PruneConfig,
+    recipe: &RowRecipe,
+    members: &SynthVision,
+) -> Result<PrunedModel> {
+    let alpha = 1.0 / pc.rate;
+    let cfg =
+        SchedulerCfg::new(recipe.admm.clone(), recipe.admm_batch, 1);
+    if recipe.rounds <= 1 {
+        let out =
+            prune_layerwise_par(spec, dense, pc.scheme, alpha, &cfg)?;
+        let mut params = out.outcome.params;
+        retrain_masked_host(
+            spec,
+            &mut params,
+            &out.outcome.masks,
+            members,
+            recipe.retrain,
+        )?;
+        return Ok(PrunedModel {
+            params,
+            masks: out.outcome.masks,
+            comp_rate: out.outcome.comp_rate,
+        });
+    }
+    // split the retrain budget evenly across rungs (at least one step
+    // each) so total optimizer work matches the one-shot path
+    let mut rung_cfg = *recipe.retrain;
+    rung_cfg.steps = (recipe.retrain.steps / recipe.rounds).max(1);
+    let out = prune_progressive_par(
+        spec,
+        dense,
+        pc.scheme,
+        alpha,
+        recipe.rounds,
+        &cfg,
+        |params, masks, rung| {
+            let mut rc = rung_cfg;
+            rc.seed = rung_cfg.seed.wrapping_add(rung as u64);
+            retrain_masked_host(spec, params, masks, members, &rc)?;
+            Ok(())
+        },
+    )?;
+    Ok(PrunedModel {
+        params: out.outcome.params,
+        masks: out.outcome.masks,
+        comp_rate: out.outcome.comp_rate,
+    })
+}

@@ -1,0 +1,108 @@
+//! Rendering of one MIA experiment: the privacy-vs-compression table and
+//! the `BENCH_privacy.json` bench log.
+//!
+//! Metric naming carries direction for `repro bench diff`
+//! ([`crate::serve::stats`]): raw leakage series are prefixed `mia_`
+//! (lower is better — less measured attack advantage), while the derived
+//! `privacy_gain_*` series (dense-minus-pruned advantage) keep the
+//! grow-is-better default. A future PR that *increases* any `mia_*`
+//! number or *shrinks* a `privacy_gain_*` number past the threshold fails
+//! the gate.
+
+use crate::report::{pct, rate, Table};
+use crate::serve::stats::{BenchLog, BenchResult};
+
+use super::{MiaReport, MiaRow};
+
+fn row_key(r: &MiaRow) -> String {
+    match r.scheme {
+        None => "dense".into(),
+        Some(s) => {
+            let rk = if r.rate.fract().abs() < 1e-9 {
+                format!("{:.0}", r.rate)
+            } else {
+                format!("{}", r.rate).replace('.', "p")
+            };
+            format!("{}_x{rk}", s.name())
+        }
+    }
+}
+
+/// The privacy-vs-compression table: dense baseline row first, then one
+/// row per (scheme × rate) pruned variant.
+pub fn mia_table(r: &MiaReport) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "membership inference vs compression — {} \
+             ({} threads, progressive rounds {}, shadow pool adv {:.3})",
+            r.model,
+            r.threads,
+            r.progressive_rounds,
+            r.shadow_pool.advantage
+        ),
+        &[
+            "Variant",
+            "Target Rate",
+            "CONV Comp.",
+            "Member Acc",
+            "Probe Acc",
+            "Conf Adv",
+            "Conf AUC",
+            "TPR@.1FPR",
+            "Shadow Adv",
+        ],
+    );
+    for row in &r.rows {
+        t.row(&[
+            row.label.clone(),
+            if row.scheme.is_none() {
+                "--".into()
+            } else {
+                rate(row.rate)
+            },
+            rate(row.comp_rate),
+            pct(row.train_acc),
+            pct(row.test_acc),
+            format!("{:.3}", row.conf.advantage),
+            format!("{:.3}", row.conf.auc),
+            format!("{:.3}", row.conf.tpr_at_fpr10),
+            format!("{:.3}", row.shadow.advantage),
+        ]);
+    }
+    t
+}
+
+/// `BENCH_privacy.json` contents: per-row leakage series plus the derived
+/// privacy gains and total wall time.
+pub fn privacy_bench_log(r: &MiaReport) -> BenchLog {
+    let mut log = BenchLog::new("privacy");
+    log.push(BenchResult {
+        name: "exp_mia_total".into(),
+        mean_ms: r.secs * 1e3,
+        median_ms: r.secs * 1e3,
+        std_ms: 0.0,
+        reps: 1,
+    });
+    for row in &r.rows {
+        let key = row_key(row);
+        log.metric(&format!("mia_adv_{key}"), row.conf.advantage);
+        log.metric(&format!("mia_auc_{key}"), row.conf.auc);
+        log.metric(
+            &format!("mia_shadow_adv_{key}"),
+            row.shadow.advantage,
+        );
+    }
+    log.metric("mia_tpr10_dense", r.dense().conf.tpr_at_fpr10);
+    let dense = r.dense().conf;
+    let pruned = r.pruned();
+    if !pruned.is_empty() {
+        let mean_auc = pruned.iter().map(|p| p.conf.auc).sum::<f64>()
+            / pruned.len() as f64;
+        log.metric(
+            "privacy_gain_adv_mean",
+            dense.advantage - r.mean_pruned_advantage(),
+        );
+        log.metric("privacy_gain_auc_mean", dense.auc - mean_auc);
+    }
+    log
+}

@@ -1,0 +1,131 @@
+//! Shadow-model membership inference (Shokri et al. style, simplified to
+//! a global-threshold attack).
+//!
+//! The attacker cannot threshold on the *target's* scores — that would
+//! assume knowledge of the membership labels it is trying to infer.
+//! Instead it trains `n_shadows` stand-in models with the **same
+//! architecture and training recipe** as the target, each on its own
+//! member set drawn from a disjoint PCG split stream
+//! ([`crate::privacy::shadow_member_split`]), where membership *is* known
+//! by construction. Pooling every shadow's member/non-member confidence
+//! scores and sweeping a threshold over the pool
+//! ([`super::mia::threshold_attack`]) yields one transferred threshold
+//! τ*; the attack on the target just applies τ* to the target's scores.
+//!
+//! Shadow trainings are mutually independent, so they shard across the
+//! [`crate::coordinator::service::PruneService`] worker pool; scores are
+//! reassembled in shadow order on the caller's thread, keeping the pooled
+//! threshold bit-identical at any thread count.
+
+use anyhow::Result;
+
+use crate::config::ModelSpec;
+use crate::coordinator::service::PruneService;
+use crate::data::SynthVision;
+use crate::train::host::{
+    confidence_scores, train_host, HostTrainCfg,
+};
+use crate::train::params::init_params;
+
+use super::mia::{attack_at_threshold, threshold_attack, AttackResult};
+use super::{shadow_member_split, shadow_out_split};
+
+/// Shadow-attack knobs. Shadow member/out set sizes mirror the target's
+/// so the pooled score distribution matches the attack surface.
+#[derive(Clone, Copy, Debug)]
+pub struct ShadowCfg {
+    pub n_shadows: usize,
+    /// members per shadow model
+    pub n_train: usize,
+    /// held-out (non-member) probes per shadow model
+    pub n_out: usize,
+    /// shadow training recipe — should match the target's
+    pub train: HostTrainCfg,
+}
+
+/// The transferred attack state: one threshold learned on the pooled
+/// shadow scores, plus the pool's own ROC summary (attack quality *on the
+/// shadows*, an upper bound on what transfers).
+#[derive(Clone, Copy, Debug)]
+pub struct ShadowPool {
+    pub threshold: f32,
+    pub pool: AttackResult,
+}
+
+/// Result of applying the transferred threshold to one target model.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShadowResult {
+    /// TPR − FPR at the transferred threshold (can go negative when the
+    /// shadow threshold does not transfer)
+    pub advantage: f64,
+    pub tpr: f64,
+    pub fpr: f64,
+    pub threshold: f32,
+}
+
+/// Train the shadow fleet and learn the pooled threshold. `data_seed`
+/// addresses the class signatures shared with the target's dataset;
+/// `weight_seed` decorrelates shadow inits from the target's.
+pub fn build_pool(
+    spec: &ModelSpec,
+    cfg: &ShadowCfg,
+    data_seed: u64,
+    weight_seed: u64,
+    svc: &PruneService,
+) -> Result<ShadowPool> {
+    let ks: Vec<usize> = (0..cfg.n_shadows.max(1)).collect();
+    let per_shadow: Vec<(Vec<f32>, Vec<f32>)> =
+        svc.shard_map(&ks, |&k| {
+            let tr = SynthVision::generate(
+                spec.classes,
+                spec.in_hw,
+                cfg.n_train,
+                data_seed,
+                shadow_member_split(k),
+            );
+            let out = SynthVision::generate(
+                spec.classes,
+                spec.in_hw,
+                cfg.n_out,
+                data_seed,
+                shadow_out_split(k),
+            );
+            let mut params = init_params(
+                spec,
+                weight_seed.wrapping_add(0x5AD0_0000 + k as u64),
+            );
+            let mut tc = cfg.train;
+            tc.seed = tc.seed.wrapping_add(k as u64);
+            train_host(spec, &mut params, &tr, &tc)?;
+            Ok((
+                confidence_scores(spec, &params, &tr)?,
+                confidence_scores(spec, &params, &out)?,
+            ))
+        })?;
+    let mut member = Vec::new();
+    let mut non = Vec::new();
+    for (m, o) in per_shadow {
+        member.extend(m);
+        non.extend(o);
+    }
+    let pool = threshold_attack(&member, &non)?;
+    Ok(ShadowPool {
+        threshold: pool.threshold,
+        pool,
+    })
+}
+
+impl ShadowPool {
+    /// Attack one target model's score sets with the transferred
+    /// threshold.
+    pub fn apply(&self, member: &[f32], non: &[f32]) -> ShadowResult {
+        let (tpr, fpr) =
+            attack_at_threshold(member, non, self.threshold);
+        ShadowResult {
+            advantage: tpr - fpr,
+            tpr,
+            fpr,
+            threshold: self.threshold,
+        }
+    }
+}

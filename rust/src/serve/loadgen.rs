@@ -12,18 +12,22 @@
 //!   and admission-control rejections.
 //!
 //! Against a multi-tenant [`GatewayHandle`], a **trace** model:
-//! [`multi_tenant_trace`] draws per-tenant Poisson arrival streams
+//! [`trace_stream`] lazily merges per-tenant Poisson arrival streams
 //! (independent [`Pcg32::split_stream`] streams, optional diurnal ramp,
-//! Zipf hot-key skew via [`skewed_qps`]) and stamps every event with a
-//! *virtual-time* microsecond timestamp; [`replay`] feeds the merged
-//! trace through [`GatewayHandle::submit_at`] in trace order, so the
-//! gateway's admission decisions are a pure function of the trace — the
-//! property the gateway determinism tests assert at 1/2/4 workers.
+//! Zipf hot-key skew via [`skewed_qps`]) in O(tenants) memory, stamping
+//! every event with a *virtual-time* microsecond timestamp
+//! ([`multi_tenant_trace`] is its materialized form); [`replay`] feeds
+//! the merged trace — slice or stream — through
+//! [`GatewayHandle::submit_at`] in trace order, so the gateway's
+//! admission decisions are a pure function of the trace — the property
+//! the gateway determinism tests assert at 1/2/4 workers.
 //!
 //! Every request image is a pure function of `(seed, tenant, id)` via
 //! [`request_image`] / [`tenant_request_image`], so a trace is bit-for-bit
 //! reproducible regardless of client or worker interleaving.
 
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
@@ -289,42 +293,113 @@ pub struct TraceEvent {
     pub id: u64,
 }
 
+/// One tenant's in-flight Poisson generator state inside a
+/// [`TraceStream`].
+struct TenantGen {
+    rng: Pcg32,
+    vt_us: u64,
+    next_id: u64,
+    remaining: u64,
+    qps: f64,
+}
+
+impl TenantGen {
+    /// Draw this tenant's next arrival, advancing its virtual clock.
+    fn draw(&mut self, ti: usize, ramp: Option<DiurnalRamp>) -> Option<TraceEvent> {
+        if self.remaining == 0 {
+            return None;
+        }
+        // thinning-free modulation: scale the mean gap by the ramp at
+        // the current virtual time
+        let rate = match ramp {
+            Some(r) => self.qps * r.multiplier(self.vt_us),
+            None => self.qps,
+        };
+        let gap_secs =
+            self.rng.exponential(1.0) as f64 / rate.max(1e-9);
+        // strictly advancing stamps keep per-tenant virtual time
+        // monotone for the admission bucket
+        self.vt_us += ((gap_secs * 1e6).round() as u64).max(1);
+        let ev = TraceEvent {
+            vt_us: self.vt_us,
+            tenant: ti,
+            id: self.next_id,
+        };
+        self.next_id += 1;
+        self.remaining -= 1;
+        Some(ev)
+    }
+}
+
+/// Lazy merged multi-tenant arrival stream: yields the exact
+/// `(vt_us, tenant, id)`-ordered event sequence of
+/// [`multi_tenant_trace`] without ever materializing it. Memory is
+/// O(tenants) — one Poisson generator plus one heap slot per tenant — so
+/// million-request traces stream in constant space.
+///
+/// The k-way merge is exact because each tenant's stream is strictly
+/// `vt`-monotone (stamps advance by ≥ 1 µs per event): the heap's
+/// smallest pending `(vt_us, tenant, id)` key is always the globally next
+/// event of the fully-sorted trace.
+pub struct TraceStream {
+    gens: Vec<TenantGen>,
+    ramp: Option<DiurnalRamp>,
+    heap: BinaryHeap<Reverse<(u64, usize, u64)>>,
+}
+
+/// Open the lazy stream over every tenant's Poisson arrivals. Pure in
+/// `(loads, ramp, seed)` — same per-tenant [`Pcg32::split_stream`]
+/// streams as the materialized trace.
+pub fn trace_stream(
+    loads: &[TenantLoad],
+    ramp: Option<DiurnalRamp>,
+    seed: u64,
+) -> TraceStream {
+    let mut gens: Vec<TenantGen> = loads
+        .iter()
+        .enumerate()
+        .map(|(ti, load)| TenantGen {
+            rng: Pcg32::split_stream(seed, ti as u64),
+            vt_us: 0,
+            next_id: 0,
+            remaining: load.requests as u64,
+            qps: load.qps,
+        })
+        .collect();
+    let mut heap = BinaryHeap::with_capacity(gens.len());
+    for (ti, g) in gens.iter_mut().enumerate() {
+        if let Some(ev) = g.draw(ti, ramp) {
+            heap.push(Reverse((ev.vt_us, ev.tenant, ev.id)));
+        }
+    }
+    TraceStream { gens, ramp, heap }
+}
+
+impl Iterator for TraceStream {
+    type Item = TraceEvent;
+
+    fn next(&mut self) -> Option<TraceEvent> {
+        let Reverse((vt_us, tenant, id)) = self.heap.pop()?;
+        if let Some(next) = self.gens[tenant].draw(tenant, self.ramp) {
+            self.heap
+                .push(Reverse((next.vt_us, next.tenant, next.id)));
+        }
+        Some(TraceEvent { vt_us, tenant, id })
+    }
+}
+
 /// Draw every tenant's Poisson arrival stream (its own
-/// [`Pcg32::split_stream`] stream, optionally diurnally modulated) and
-/// merge-sort them by `(vt_us, tenant, id)`. Pure in
-/// `(loads, ramp, seed)` — the foundation of gateway replay
-/// determinism.
+/// [`Pcg32::split_stream`] stream, optionally diurnally modulated)
+/// merged by `(vt_us, tenant, id)`. Pure in `(loads, ramp, seed)` — the
+/// foundation of gateway replay determinism. Materializes
+/// [`trace_stream`]; callers that never need the whole trace at once
+/// (replay, counting) should iterate the stream instead.
 pub fn multi_tenant_trace(
     loads: &[TenantLoad],
     ramp: Option<DiurnalRamp>,
     seed: u64,
 ) -> Vec<TraceEvent> {
-    let mut events = Vec::with_capacity(
-        loads.iter().map(|l| l.requests).sum::<usize>(),
-    );
-    for (ti, load) in loads.iter().enumerate() {
-        let mut rng = Pcg32::split_stream(seed, ti as u64);
-        let mut vt_us = 0u64;
-        for id in 0..load.requests as u64 {
-            // thinning-free modulation: scale the mean gap by the ramp
-            // at the current virtual time
-            let rate = match ramp {
-                Some(r) => load.qps * r.multiplier(vt_us),
-                None => load.qps,
-            };
-            let gap_secs = rng.exponential(1.0) as f64 / rate.max(1e-9);
-            // strictly advancing stamps keep per-tenant virtual time
-            // monotone for the admission bucket
-            vt_us += ((gap_secs * 1e6).round() as u64).max(1);
-            events.push(TraceEvent {
-                vt_us,
-                tenant: ti,
-                id,
-            });
-        }
-    }
-    events.sort_by_key(|e| (e.vt_us, e.tenant, e.id));
-    events
+    trace_stream(loads, ramp, seed).collect()
 }
 
 /// Outcome of one replayed trace event.
@@ -374,21 +449,30 @@ pub struct GatewayLoadReport {
 /// possible (virtual time still drives admission — the deterministic
 /// mode), `1` paces arrivals in real time, `2` at double speed, etc.
 /// Blocks until every admitted request resolved.
-pub fn replay(
+///
+/// `trace` is anything iterable over [`TraceEvent`]s — a materialized
+/// `&[TraceEvent]` slice or a lazy [`TraceStream`] — so arbitrarily long
+/// traces replay without being held in memory.
+pub fn replay<I>(
     handle: &GatewayHandle,
     loads: &[TenantLoad],
-    trace: &[TraceEvent],
+    trace: I,
     seed: u64,
     pace: f64,
-) -> Result<GatewayLoadReport, ServeError> {
+) -> Result<GatewayLoadReport, ServeError>
+where
+    I: IntoIterator,
+    I::Item: std::borrow::Borrow<TraceEvent>,
+{
     let t0 = Instant::now();
     let dims: Vec<StepDims> = loads
         .iter()
         .map(|l| handle.in_dims(&l.tenant))
         .collect::<Result<_, _>>()?;
     let mut pending = Vec::new();
-    let mut outcomes = Vec::with_capacity(trace.len());
+    let mut outcomes = Vec::new();
     for ev in trace {
+        let ev = *std::borrow::Borrow::borrow(&ev);
         if pace > 0.0 {
             let target = t0
                 + Duration::from_micros(
@@ -403,7 +487,7 @@ pub fn replay(
         let img =
             tenant_request_image(dims[ev.tenant], seed, name, ev.id);
         match handle.submit_at(name, img, ev.vt_us) {
-            Ok(ticket) => pending.push((*ev, ticket)),
+            Ok(ticket) => pending.push((ev, ticket)),
             Err(ServeError::Shed { .. }) => outcomes.push(GwOutcome {
                 tenant: ev.tenant,
                 trace_id: ev.id,
@@ -552,6 +636,43 @@ mod tests {
             .unwrap();
         // 40 reqs at ~100qps ≪ 20 reqs at ~10qps in virtual time
         assert!(last_hot < last_warm);
+    }
+
+    #[test]
+    fn trace_stream_matches_materialize_then_sort() {
+        let loads = vec![
+            TenantLoad::new("hot", 120.0, 50),
+            TenantLoad::new("warm", 15.0, 25),
+            TenantLoad::new("cold", 2.0, 10),
+        ];
+        for ramp in [None, Some(DiurnalRamp::new(1_500_000, 0.3))] {
+            // reference: draw each tenant independently, then sort —
+            // the pre-stream implementation of multi_tenant_trace
+            let mut want = Vec::new();
+            for (ti, load) in loads.iter().enumerate() {
+                let mut rng = Pcg32::split_stream(7, ti as u64);
+                let mut vt_us = 0u64;
+                for id in 0..load.requests as u64 {
+                    let rate = match ramp {
+                        Some(r) => load.qps * r.multiplier(vt_us),
+                        None => load.qps,
+                    };
+                    let gap =
+                        rng.exponential(1.0) as f64 / rate.max(1e-9);
+                    vt_us += ((gap * 1e6).round() as u64).max(1);
+                    want.push(TraceEvent {
+                        vt_us,
+                        tenant: ti,
+                        id,
+                    });
+                }
+            }
+            want.sort_by_key(|e| (e.vt_us, e.tenant, e.id));
+            let got: Vec<TraceEvent> =
+                trace_stream(&loads, ramp, 7).collect();
+            assert_eq!(got, want, "lazy merge must equal sort");
+            assert_eq!(got, multi_tenant_trace(&loads, ramp, 7));
+        }
     }
 
     #[test]

@@ -550,11 +550,15 @@ impl BenchDiff {
 }
 
 /// Whether a scalar metric improves by shrinking. Timings, footprints,
-/// and compression ratios shrink; speedups and throughput grow.
+/// and compression ratios shrink; speedups and throughput grow. Raw
+/// membership-inference leakage series (`mia_*` in `BENCH_privacy.json`)
+/// shrink — less measured attack advantage is better — while the derived
+/// `privacy_gain_*` series keep the grow-is-better default.
 fn metric_lower_is_better(name: &str) -> bool {
-    ["ms", "us", "bytes", "ratio", "latency"]
-        .iter()
-        .any(|k| name.contains(k))
+    name.starts_with("mia_")
+        || ["ms", "us", "bytes", "ratio", "latency"]
+            .iter()
+            .any(|k| name.contains(k))
 }
 
 /// Pull the comparable series out of one bench-log document: every
@@ -764,6 +768,33 @@ mod tests {
             .unwrap()
             .regressions()
             .is_empty());
+    }
+
+    #[test]
+    fn privacy_metric_directions() {
+        // raw leakage shrinking is an improvement; the derived gain
+        // shrinking is a regression
+        assert!(metric_lower_is_better("mia_adv_dense"));
+        assert!(metric_lower_is_better("mia_auc_pattern_x8"));
+        assert!(!metric_lower_is_better("privacy_gain_adv_mean"));
+        let base = log_with(
+            &[],
+            &[("mia_adv_dense", 0.40), ("privacy_gain_adv_mean", 0.25)],
+        );
+        let cur = log_with(
+            &[],
+            &[("mia_adv_dense", 0.60), ("privacy_gain_adv_mean", 0.10)],
+        );
+        let d = diff_bench_logs(&base, &cur, 5.0).unwrap();
+        let names: Vec<&str> = d
+            .regressions()
+            .iter()
+            .map(|r| r.name.as_str())
+            .collect();
+        assert_eq!(
+            names,
+            ["mia_adv_dense", "privacy_gain_adv_mean"]
+        );
     }
 
     #[test]

@@ -1,0 +1,659 @@
+//! Host-native SGD trainer: full forward/backward on the CPU, no PJRT
+//! artifacts required.
+//!
+//! The privacy evaluation tier ([`crate::privacy`]) has to train target
+//! and shadow models *inside* the harness — including in CI where no XLA
+//! runtime exists — so this module reimplements the training loop of
+//! [`crate::train`] on top of the scheduler's host conv substrate
+//! (`ConvGeom`): the same tap-streaming forward as `fwd_logits_host`,
+//! plus an explicit per-image tape (conv inputs, post-activation outputs,
+//! pool argmax routes, saved-map gradients) driving exact backprop through
+//! every `Op` kind, softmax cross-entropy at the head.
+//!
+//! **Determinism:** everything here is sequential per model — batch
+//! sampling comes from one seeded [`Pcg32`], gradients accumulate in image
+//! order, and pool ties break toward the first maximum in scan order — so
+//! a training run is a pure function of (spec, init params, dataset, cfg).
+//! Callers parallelize across *models* (shadow models, grid rows), never
+//! inside one.
+//!
+//! Masked retraining (paper Fig. 2(b) right side) re-applies the pruning
+//! masks to both gradients and weights every step, keeping pruned
+//! positions exactly zero — the host twin of the PJRT `masked_train_step`
+//! artifact.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::admm::scheduler::ConvGeom;
+use crate::config::{Act, ConvOp, ModelSpec, Op};
+use crate::data::SynthVision;
+use crate::rng::Pcg32;
+use crate::tensor::Tensor;
+
+/// Knobs of one host training run. Much smaller than
+/// [`crate::config::TrainConfig`] on purpose: the host path has no
+/// artifact manifest to read batch sizes from.
+#[derive(Clone, Copy, Debug)]
+pub struct HostTrainCfg {
+    pub steps: usize,
+    pub batch: usize,
+    pub lr: f32,
+    /// batch-sampling stream seed
+    pub seed: u64,
+}
+
+/// Loss trace of a host training run.
+#[derive(Clone, Debug, Default)]
+pub struct HostTrainTrace {
+    /// mean cross-entropy per step
+    pub losses: Vec<f32>,
+}
+
+/// Per-op tape record of one forward pass; indices parallel `spec.ops`.
+enum Rec {
+    Conv { x: Vec<f32>, post: Vec<f32> },
+    /// `arg[o]` = flat input index feeding output `o`; `in_len` sizes the
+    /// input gradient buffer
+    Pool { arg: Vec<usize>, in_len: usize },
+    Save,
+    Proj { x: Vec<f32>, post: Vec<f32> },
+    Add,
+    Relu { post: Vec<f32> },
+    Gap { c: usize, hw: usize },
+    Fc { x: Vec<f32> },
+}
+
+fn relu_mask(g: &mut [f32], post: &[f32]) {
+    for (gv, pv) in g.iter_mut().zip(post) {
+        if *pv <= 0.0 {
+            *gv = 0.0;
+        }
+    }
+}
+
+/// Conv/Proj backward: activation mask, then grad_b, grad_w, grad_x.
+/// Returns the gradient wrt the op's input feature map.
+fn conv_backward(
+    cv: &ConvOp,
+    params: &[Tensor],
+    grads: &mut [Vec<f32>],
+    x: &[f32],
+    post: &[f32],
+    mut g: Vec<f32>,
+) -> Vec<f32> {
+    if cv.act == Act::Relu {
+        relu_mask(&mut g, post);
+    }
+    let plane = cv.out_hw * cv.out_hw;
+    for f in 0..cv.a {
+        let mut s = 0.0f32;
+        for v in &g[f * plane..(f + 1) * plane] {
+            s += v;
+        }
+        grads[cv.b][f] += s;
+    }
+    let geom = ConvGeom::from_op(cv);
+    geom.grad_w(&g, x, &mut grads[cv.w]);
+    let mut gx = vec![0.0f32; cv.c * cv.in_hw * cv.in_hw];
+    geom.grad_x(params[cv.w].data(), &g, &mut gx);
+    gx
+}
+
+/// One image's forward + backward: accumulates parameter gradients into
+/// `grads` (flat, parallel to `params`) and returns the cross-entropy
+/// loss. The tape mirrors `fwd_image_acts`' forward exactly, so host
+/// training and host evaluation share numerics.
+fn fwd_backward(
+    spec: &ModelSpec,
+    params: &[Tensor],
+    img: &[f32],
+    label: usize,
+    grads: &mut [Vec<f32>],
+) -> Result<f32> {
+    let mut tape: Vec<Rec> = Vec::with_capacity(spec.ops.len());
+    let mut cur = img.to_vec();
+    let mut cur_c = spec
+        .ops
+        .iter()
+        .find_map(|op| match op {
+            Op::Conv(cv) => Some(cv.c),
+            _ => None,
+        })
+        .unwrap_or(3);
+    let mut cur_hw = spec.in_hw;
+    let mut saved: BTreeMap<&str, Vec<f32>> = BTreeMap::new();
+    let mut logits = Vec::new();
+    for op in &spec.ops {
+        match op {
+            Op::Conv(cv) => {
+                let geom = ConvGeom::from_op(cv);
+                let mut out = vec![0.0f32; cv.a * cv.out_hw * cv.out_hw];
+                geom.fwd(
+                    params[cv.w].data(),
+                    params[cv.b].data(),
+                    &cur,
+                    &mut out,
+                );
+                if cv.act == Act::Relu {
+                    for v in &mut out {
+                        *v = v.max(0.0);
+                    }
+                }
+                tape.push(Rec::Conv {
+                    x: std::mem::take(&mut cur),
+                    post: out.clone(),
+                });
+                cur = out;
+                cur_c = cv.a;
+                cur_hw = cv.out_hw;
+            }
+            Op::Pool => {
+                let oh = cur_hw / 2;
+                let mut out = vec![0.0f32; cur_c * oh * oh];
+                let mut arg = vec![0usize; cur_c * oh * oh];
+                for ch in 0..cur_c {
+                    let pb = ch * cur_hw * cur_hw;
+                    let p = &cur[pb..pb + cur_hw * cur_hw];
+                    let ob = ch * oh * oh;
+                    for y in 0..oh {
+                        for xx in 0..oh {
+                            let i = 2 * y * cur_hw + 2 * xx;
+                            // first max in scan order wins ties — the
+                            // deterministic route for backprop
+                            let cand =
+                                [i, i + 1, i + cur_hw, i + cur_hw + 1];
+                            let mut best = cand[0];
+                            for &c in &cand[1..] {
+                                if p[c] > p[best] {
+                                    best = c;
+                                }
+                            }
+                            out[ob + y * oh + xx] = p[best];
+                            arg[ob + y * oh + xx] = pb + best;
+                        }
+                    }
+                }
+                tape.push(Rec::Pool {
+                    arg,
+                    in_len: cur.len(),
+                });
+                cur = out;
+                cur_hw = oh;
+            }
+            Op::Save { tag } => {
+                saved.insert(tag.as_str(), cur.clone());
+                tape.push(Rec::Save);
+            }
+            Op::Proj(cv) => {
+                let src = saved.get(cv.tag.as_str()).with_context(|| {
+                    format!("proj: no saved fmap {:?}", cv.tag)
+                })?;
+                let geom = ConvGeom::from_op(cv);
+                let mut out = vec![0.0f32; cv.a * cv.out_hw * cv.out_hw];
+                geom.fwd(
+                    params[cv.w].data(),
+                    params[cv.b].data(),
+                    src,
+                    &mut out,
+                );
+                if cv.act == Act::Relu {
+                    for v in &mut out {
+                        *v = v.max(0.0);
+                    }
+                }
+                tape.push(Rec::Proj {
+                    x: src.clone(),
+                    post: out.clone(),
+                });
+                saved.insert(cv.tag.as_str(), out);
+            }
+            Op::Add { tag } => {
+                let src = saved.get(tag.as_str()).with_context(|| {
+                    format!("add: no saved fmap {tag:?}")
+                })?;
+                if src.len() != cur.len() {
+                    bail!(
+                        "add {tag:?}: fmap len {} vs {}",
+                        src.len(),
+                        cur.len()
+                    );
+                }
+                for (a, b) in cur.iter_mut().zip(src) {
+                    *a += b;
+                }
+                tape.push(Rec::Add);
+            }
+            Op::Relu => {
+                for v in &mut cur {
+                    *v = v.max(0.0);
+                }
+                tape.push(Rec::Relu { post: cur.clone() });
+            }
+            Op::Gap => {
+                let plane = cur_hw * cur_hw;
+                let inv = 1.0 / plane as f32;
+                let pooled: Vec<f32> = (0..cur_c)
+                    .map(|ch| {
+                        cur[ch * plane..(ch + 1) * plane]
+                            .iter()
+                            .sum::<f32>()
+                            * inv
+                    })
+                    .collect();
+                tape.push(Rec::Gap {
+                    c: cur_c,
+                    hw: cur_hw,
+                });
+                cur = pooled;
+                cur_hw = 1;
+            }
+            Op::Fc { w, b, a, c } => {
+                let wt = &params[*w];
+                let bt = &params[*b];
+                logits = (0..*a)
+                    .map(|k| {
+                        bt.data()[k]
+                            + wt.row(k)
+                                .iter()
+                                .zip(&cur[..*c])
+                                .map(|(wv, v)| wv * v)
+                                .sum::<f32>()
+                    })
+                    .collect();
+                tape.push(Rec::Fc {
+                    x: std::mem::take(&mut cur),
+                });
+            }
+        }
+    }
+    if logits.is_empty() {
+        bail!("spec {:?} has no Fc head", spec.id);
+    }
+
+    // softmax cross-entropy and its gradient wrt the logits
+    let p = softmax(&logits);
+    let loss = -(p[label].max(1e-12)).ln();
+    let mut g: Vec<f32> = p;
+    g[label] -= 1.0;
+
+    // reverse walk; gradients flowing through Save/Proj/Add ride a
+    // tag-keyed side map, mirroring the forward's saved-fmap map
+    let mut gsaved: BTreeMap<&str, Vec<f32>> = BTreeMap::new();
+    for (op, rec) in spec.ops.iter().zip(&tape).rev() {
+        match (op, rec) {
+            (Op::Fc { w, b, a, c }, Rec::Fc { x }) => {
+                let wt = &params[*w];
+                for k in 0..*a {
+                    let gk = g[k];
+                    grads[*b][k] += gk;
+                    let gw = &mut grads[*w][k * c..(k + 1) * c];
+                    for (gv, xv) in gw.iter_mut().zip(&x[..*c]) {
+                        *gv += gk * xv;
+                    }
+                }
+                let mut gx = vec![0.0f32; *c];
+                for k in 0..*a {
+                    let gk = g[k];
+                    for (gv, wv) in gx.iter_mut().zip(wt.row(k)) {
+                        *gv += gk * wv;
+                    }
+                }
+                g = gx;
+            }
+            (Op::Gap, Rec::Gap { c, hw }) => {
+                let plane = hw * hw;
+                let inv = 1.0 / plane as f32;
+                let mut gx = vec![0.0f32; c * plane];
+                for ch in 0..*c {
+                    let gv = g[ch] * inv;
+                    gx[ch * plane..(ch + 1) * plane].fill(gv);
+                }
+                g = gx;
+            }
+            (Op::Relu, Rec::Relu { post }) => {
+                relu_mask(&mut g, post);
+            }
+            (Op::Add { tag }, Rec::Add) => {
+                let e = gsaved
+                    .entry(tag.as_str())
+                    .or_insert_with(|| vec![0.0f32; g.len()]);
+                for (ev, gv) in e.iter_mut().zip(&g) {
+                    *ev += gv;
+                }
+            }
+            (Op::Proj(cv), Rec::Proj { x, post }) => {
+                let gp = gsaved
+                    .remove(cv.tag.as_str())
+                    .unwrap_or_else(|| {
+                        vec![0.0f32; cv.a * cv.out_hw * cv.out_hw]
+                    });
+                let gx = conv_backward(cv, params, grads, x, post, gp);
+                gsaved.insert(cv.tag.as_str(), gx);
+            }
+            (Op::Save { tag }, Rec::Save) => {
+                if let Some(gs) = gsaved.remove(tag.as_str()) {
+                    for (gv, sv) in g.iter_mut().zip(&gs) {
+                        *gv += sv;
+                    }
+                }
+            }
+            (Op::Conv(cv), Rec::Conv { x, post }) => {
+                g = conv_backward(cv, params, grads, x, post, g);
+            }
+            (Op::Pool, Rec::Pool { arg, in_len }) => {
+                let mut gx = vec![0.0f32; *in_len];
+                for (o, &src) in arg.iter().enumerate() {
+                    gx[src] += g[o];
+                }
+                g = gx;
+            }
+            _ => bail!("op/tape mismatch in spec {:?}", spec.id),
+        }
+    }
+    Ok(loss)
+}
+
+fn softmax(logits: &[f32]) -> Vec<f32> {
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = logits.iter().map(|&v| (v - m).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    exps.iter().map(|&e| e / sum.max(1e-12)).collect()
+}
+
+/// Zero the pruned positions of every prunable conv weight (and of its
+/// gradient when given). The [P, Q] mask layout is the GEMM view of the
+/// [A, C, kh, kw] weight — identical element order — so the mask applies
+/// elementwise.
+fn apply_masks(
+    spec: &ModelSpec,
+    masks: &[Tensor],
+    bufs: &mut [impl AsMut<[f32]>],
+) -> Result<()> {
+    let convs = spec.prunable_convs();
+    if convs.len() != masks.len() {
+        bail!(
+            "mask count {} vs {} prunable convs",
+            masks.len(),
+            convs.len()
+        );
+    }
+    for ((_, op), m) in convs.iter().zip(masks) {
+        let buf = bufs[op.w].as_mut();
+        if buf.len() != m.len() {
+            bail!("mask len {} vs weight len {}", m.len(), buf.len());
+        }
+        for (v, mv) in buf.iter_mut().zip(m.data()) {
+            *v *= mv;
+        }
+    }
+    Ok(())
+}
+
+fn run_sgd_host(
+    spec: &ModelSpec,
+    params: &mut [Tensor],
+    masks: Option<&[Tensor]>,
+    train: &SynthVision,
+    cfg: &HostTrainCfg,
+) -> Result<HostTrainTrace> {
+    if train.n == 0 {
+        bail!("host training set is empty");
+    }
+    let bsz = cfg.batch.max(1);
+    let sl = train.sample_len();
+    let mut rng = Pcg32::seeded(cfg.seed);
+    let mut trace = HostTrainTrace::default();
+    let mut grads: Vec<Vec<f32>> =
+        params.iter().map(|p| vec![0.0f32; p.len()]).collect();
+    if let Some(ms) = masks {
+        // start from a mask-consistent point
+        let mut views: Vec<&mut [f32]> =
+            params.iter_mut().map(|p| p.data_mut()).collect();
+        apply_masks(spec, ms, &mut views)?;
+    }
+    for _step in 0..cfg.steps {
+        for gbuf in &mut grads {
+            gbuf.fill(0.0);
+        }
+        let mut loss = 0.0f64;
+        for _ in 0..bsz {
+            let s = rng.below(train.n);
+            let img = &train.images[s * sl..(s + 1) * sl];
+            loss += fwd_backward(
+                spec,
+                params,
+                img,
+                train.labels[s],
+                &mut grads,
+            )? as f64;
+        }
+        if let Some(ms) = masks {
+            apply_masks(spec, ms, &mut grads)?;
+        }
+        let scale = cfg.lr / bsz as f32;
+        for (p, gbuf) in params.iter_mut().zip(&grads) {
+            for (pv, gv) in p.data_mut().iter_mut().zip(gbuf) {
+                *pv -= scale * gv;
+            }
+        }
+        if let Some(ms) = masks {
+            let mut views: Vec<&mut [f32]> =
+                params.iter_mut().map(|p| p.data_mut()).collect();
+            apply_masks(spec, ms, &mut views)?;
+        }
+        trace.losses.push((loss / bsz as f64) as f32);
+    }
+    Ok(trace)
+}
+
+/// Plain SGD on the host — the no-artifact twin of
+/// [`crate::train::pretrain`].
+pub fn train_host(
+    spec: &ModelSpec,
+    params: &mut [Tensor],
+    train: &SynthVision,
+    cfg: &HostTrainCfg,
+) -> Result<HostTrainTrace> {
+    run_sgd_host(spec, params, None, train, cfg)
+}
+
+/// Masked SGD on the host — the no-artifact twin of
+/// [`crate::train::retrain_masked`]: pruned weights and their gradients
+/// are zeroed every step.
+pub fn retrain_masked_host(
+    spec: &ModelSpec,
+    params: &mut [Tensor],
+    masks: &[Tensor],
+    train: &SynthVision,
+    cfg: &HostTrainCfg,
+) -> Result<HostTrainTrace> {
+    run_sgd_host(spec, params, Some(masks), train, cfg)
+}
+
+/// Top-1 accuracy of `params` on `data`, via the host forward pass.
+/// Argmax ties break toward the lower class index.
+pub fn evaluate_host(
+    spec: &ModelSpec,
+    params: &[Tensor],
+    data: &SynthVision,
+) -> Result<f64> {
+    let sl = data.sample_len();
+    let mut correct = 0usize;
+    for s in 0..data.n {
+        let img = &data.images[s * sl..(s + 1) * sl];
+        let logits =
+            crate::admm::scheduler::fwd_logits_host(spec, params, img)?;
+        let mut best = 0usize;
+        for (k, &v) in logits.iter().enumerate() {
+            if v > logits[best] {
+                best = k;
+            }
+        }
+        if best == data.labels[s] {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / data.n.max(1) as f64)
+}
+
+/// Per-sample softmax probability of the *true* class — the membership
+/// signal the confidence attack thresholds (members of an overfit model
+/// score systematically higher than non-members).
+pub fn confidence_scores(
+    spec: &ModelSpec,
+    params: &[Tensor],
+    data: &SynthVision,
+) -> Result<Vec<f32>> {
+    let sl = data.sample_len();
+    let mut out = Vec::with_capacity(data.n);
+    for s in 0..data.n {
+        let img = &data.images[s * sl..(s + 1) * sl];
+        let logits =
+            crate::admm::scheduler::fwd_logits_host(spec, params, img)?;
+        let p = softmax(&logits);
+        out.push(p[data.labels[s]]);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mobile::synth::{res_style, vgg_style};
+
+    fn tiny() -> (ModelSpec, Vec<Tensor>, SynthVision) {
+        let (spec, params) = vgg_style("host_t", 8, 4, &[4], 0x11);
+        let data = SynthVision::generate(4, 8, 24, 0x22, 0);
+        (spec, params, data)
+    }
+
+    /// Full-model parameter gradients match central finite differences of
+    /// the cross-entropy loss — exercises every Op kind's backward via the
+    /// residual spec.
+    #[test]
+    fn backward_matches_finite_differences() {
+        for (spec, params) in [
+            vgg_style("fd_v", 8, 3, &[3], 0x31),
+            res_style("fd_r", 8, 3, &[3, 4], 0x32),
+        ] {
+            let data = SynthVision::generate(3, 8, 3, 0x33, 0);
+            let sl = data.sample_len();
+            let img = &data.images[..sl];
+            let label = data.labels[0];
+            let mut grads: Vec<Vec<f32>> =
+                params.iter().map(|p| vec![0.0f32; p.len()]).collect();
+            fwd_backward(&spec, &params, img, label, &mut grads)
+                .unwrap();
+            let loss_of = |ps: &[Tensor]| -> f64 {
+                let mut g: Vec<Vec<f32>> = ps
+                    .iter()
+                    .map(|p| vec![0.0f32; p.len()])
+                    .collect();
+                fwd_backward(&spec, ps, img, label, &mut g).unwrap()
+                    as f64
+            };
+            let eps = 1e-2f32;
+            for pi in 0..params.len() {
+                for i in (0..params[pi].len()).step_by(17) {
+                    let mut pp = params.clone();
+                    pp[pi].data_mut()[i] += eps;
+                    let mut pm = params.clone();
+                    pm[pi].data_mut()[i] -= eps;
+                    let num = (loss_of(&pp) - loss_of(&pm))
+                        / (2.0 * eps as f64);
+                    let ana = grads[pi][i] as f64;
+                    assert!(
+                        (num - ana).abs() <= 2e-2 * ana.abs().max(1.0),
+                        "{} param {pi}[{i}]: numeric {num} vs \
+                         analytic {ana}",
+                        spec.id
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn training_reduces_loss_and_learns() {
+        let (spec, mut params, data) = tiny();
+        let cfg = HostTrainCfg {
+            steps: 60,
+            batch: 8,
+            lr: 0.05,
+            seed: 0x44,
+        };
+        let trace =
+            train_host(&spec, &mut params, &data, &cfg).unwrap();
+        let head = trace.losses[..5].iter().sum::<f32>() / 5.0;
+        let tail =
+            trace.losses[trace.losses.len() - 5..].iter().sum::<f32>()
+                / 5.0;
+        assert!(tail < head, "loss head {head} tail {tail}");
+        let acc = evaluate_host(&spec, &params, &data).unwrap();
+        assert!(acc > 0.5, "train acc {acc}");
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        let (spec, params0, data) = tiny();
+        let cfg = HostTrainCfg {
+            steps: 10,
+            batch: 4,
+            lr: 0.05,
+            seed: 0x55,
+        };
+        let mut a = params0.clone();
+        let mut b = params0.clone();
+        train_host(&spec, &mut a, &data, &cfg).unwrap();
+        train_host(&spec, &mut b, &data, &cfg).unwrap();
+        for (ta, tb) in a.iter().zip(&b) {
+            assert_eq!(ta.data(), tb.data());
+        }
+    }
+
+    #[test]
+    fn masked_retraining_keeps_pruned_weights_zero() {
+        let (spec, mut params, data) = tiny();
+        let cfg = HostTrainCfg {
+            steps: 15,
+            batch: 4,
+            lr: 0.05,
+            seed: 0x66,
+        };
+        train_host(&spec, &mut params, &data, &cfg).unwrap();
+        let out = crate::admm::scheduler::prune_layerwise_par(
+            &spec,
+            &params,
+            crate::pruning::Scheme::Irregular,
+            0.5,
+            &crate::admm::scheduler::SchedulerCfg::new(
+                crate::config::AdmmConfig::preset(
+                    crate::config::Preset::Smoke,
+                ),
+                4,
+                1,
+            ),
+        )
+        .unwrap();
+        let mut pruned = out.outcome.params.clone();
+        retrain_masked_host(
+            &spec,
+            &mut pruned,
+            &out.outcome.masks,
+            &data,
+            &cfg,
+        )
+        .unwrap();
+        for ((_, op), m) in
+            spec.prunable_convs().iter().zip(&out.outcome.masks)
+        {
+            for (wv, mv) in pruned[op.w].data().iter().zip(m.data()) {
+                if *mv == 0.0 {
+                    assert_eq!(*wv, 0.0);
+                }
+            }
+        }
+    }
+}

@@ -1,8 +1,9 @@
 //! Training substrate: parameter init, the client's pre-training loop, the
 //! masked retraining loop (paper Fig. 2(b) right side), the evaluator, and
-//! a checkpoint store. All compute runs through PJRT artifacts; this module
-//! only orchestrates.
+//! a checkpoint store. The loops in this file run through PJRT artifacts;
+//! [`host`] is the artifact-free CPU twin used by the privacy tier.
 
+pub mod host;
 pub mod params;
 
 use anyhow::{Context, Result};
